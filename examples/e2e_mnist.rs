@@ -1,0 +1,94 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//! Pipeline exercised here (requires `make artifacts` to have run once):
+//!   1. Load the JAX-trained net-1 artifacts (weights + recorded spike
+//!      traces) produced by the L2/L1 Python build path.
+//!   2. Spike-to-spike validate the L3 cycle-accurate simulator against the
+//!      recorded JAX traces, bit for bit, on every trace sample.
+//!   3. Load the AOT-compiled HLO (Pallas LIF + spike-matmul kernels lowered
+//!      through StableHLO) and execute it via PJRT from Rust; validate the
+//!      simulator against the live kernel output too.
+//!   4. Run inference on all trace samples through the simulator, report
+//!      classification results and the headline metric: cycles/inference
+//!      across Table-I LHR mappings, vs the prior-work baseline.
+//!
+//! Run: `cargo run --release --example e2e_mnist` (after `make artifacts`)
+
+use snn_dse::baselines::prior_for;
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::runtime::NetArtifacts;
+use snn_dse::sim::{CostModel, NetworkSim};
+use snn_dse::util::{commas, kfmt};
+use snn_dse::validate;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let art_dir = Path::new("artifacts/net1");
+    if !art_dir.exists() {
+        anyhow::bail!("artifacts/net1 missing — run `make artifacts` first");
+    }
+
+    // ---- 1. load trained model ------------------------------------------
+    let art = NetArtifacts::load(art_dir)?;
+    println!("== E2E: {} ({}), trained acc {:.1}%, {} trace samples, T={}",
+        art.net.name, art.net.topology_string(), art.accuracy * 100.0,
+        art.traces.len(), art.trace_t);
+    println!("   per-layer mean spikes/step (JAX): {:?}",
+        art.avg_spikes_per_layer.iter().map(|x| (x * 10.0).round() / 10.0)
+            .collect::<Vec<_>>());
+
+    // ---- 2. spike-to-spike validation vs JAX traces ----------------------
+    let r = validate::validate_against_traces(&art, &[1, 1, 1])?;
+    println!("\n== spike-to-spike vs JAX traces: {} ({} samples, {} bits compared)",
+        if r.passed() { "PASS — bit-exact" } else { "FAIL" },
+        r.samples,
+        commas(r.bits_per_layer.iter().sum::<u64>()));
+    anyhow::ensure!(r.passed(), "simulator diverged from the JAX reference");
+
+    // ---- 3. live PJRT execution of the AOT HLO ---------------------------
+    let hlo = Path::new("artifacts/net1_T25.hlo.txt");
+    if hlo.exists() {
+        let r2 = validate::validate_against_hlo(&art, hlo, 0)?;
+        println!("== simulator vs PJRT-executed Pallas/HLO: {}",
+            if r2.passed() { "PASS — bit-exact" } else { "FAIL" });
+        anyhow::ensure!(r2.passed(), "simulator diverged from the AOT kernels");
+    } else {
+        println!("== (skipping PJRT validation: {} not built)", hlo.display());
+    }
+
+    // ---- 4. inference + headline metric ----------------------------------
+    let mut net = art.net.clone();
+    net.t_steps = art.trace_t;
+    let mut correct = 0usize;
+    let cfg = ExperimentConfig::new(net.clone(), HwConfig::fully_parallel(3))?;
+    let mut sim = NetworkSim::new(&cfg, art.weights.clone(), CostModel::default());
+    for s in &art.traces {
+        sim.reset();
+        let r = sim.run(&s.input);
+        if r.predicted_class == Some(s.label) {
+            correct += 1;
+        }
+    }
+    println!("\n== simulated inference: {}/{} trace samples classified correctly",
+        correct, art.traces.len());
+
+    let prior = prior_for("net1");
+    println!("\n== Table-I headline (workload: trace sample 0):");
+    println!("   {:>12} {:>12} {:>10} {:>18}", "LHR", "cycles", "LUT", "vs [12] (lut,lat)");
+    for lhr in [vec![1, 1, 1], vec![2, 1, 1], vec![1, 2, 1], vec![4, 4, 4], vec![4, 8, 8]] {
+        let cfg = ExperimentConfig::new(net.clone(), HwConfig::with_lhr(lhr.clone()))?;
+        let mut sim = NetworkSim::new(&cfg, art.weights.clone(), CostModel::default());
+        let r = sim.run(&art.traces[0].input);
+        let est = snn_dse::resources::estimate(&cfg);
+        println!("   {:>12} {:>12} {:>10} {:>10}",
+            cfg.hw.label(),
+            commas(r.total_cycles),
+            kfmt(est.total.lut),
+            format!("x{:.2}, x{:.2}",
+                est.total.lut / prior.lut,
+                r.total_cycles as f64 / prior.cycles as f64));
+    }
+    println!("\nE2E OK — all layers compose: JAX/Pallas training -> AOT HLO -> \
+              PJRT runtime -> cycle-accurate DSE simulator.");
+    Ok(())
+}

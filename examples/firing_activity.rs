@@ -1,0 +1,65 @@
+//! Fig. 1 reproduction: ratio of firing neurons to layer size for the
+//! 784-600-600-600 motivation model, on MNIST-like and FMNIST-like data.
+//!
+//! The paper's takeaway: firing density *declines* with depth (static-to-
+//! firing ratio 2.4 -> 3.4 -> 10 on MNIST), which is exactly the slack the
+//! LHR knob converts into area savings. We print the trained JAX ratios
+//! (from `artifacts/fig1_firing.json`) and cross-check layer-wise activity
+//! with the Rust functional simulator on a trained net-1.
+//!
+//! Run: `cargo run --release --example firing_activity` (after `make artifacts`)
+
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::runtime::NetArtifacts;
+use snn_dse::sim::{CostModel, NetworkSim};
+use snn_dse::util::json::Json;
+use std::path::Path;
+
+fn bar(ratio: f64, width: usize) -> String {
+    let n = (ratio * width as f64).round() as usize;
+    format!("{}{}", "#".repeat(n.min(width)), " ".repeat(width - n.min(width)))
+}
+
+fn main() -> anyhow::Result<()> {
+    let fig1 = Path::new("artifacts/fig1_firing.json");
+    match Json::parse_file(fig1) {
+        Ok(j) => {
+            println!("== Fig. 1: firing-neuron ratio per layer (784-600-600-600)\n");
+            for ds in ["mnist", "fmnist"] {
+                let e = j.at(ds);
+                let ratios = e.at("firing_ratio").f64_vec();
+                println!("{ds} (model acc {:.1}%):", e.at("accuracy").as_f64().unwrap_or(0.0) * 100.0);
+                for (l, r) in ratios.iter().enumerate() {
+                    println!("  layer {l}: {:.3} |{}|  static/firing = {:.1}",
+                        r, bar(*r, 40), if *r > 0.0 { 1.0 / r } else { f64::INFINITY });
+                }
+            }
+            println!("Takeaway: deeper layers fire more sparsely -> allocate fewer\n\
+                      hardware neurons (higher LHR) there.\n");
+        }
+        Err(_) => println!("(artifacts/fig1_firing.json missing — run `make artifacts`)\n"),
+    }
+
+    // Cross-check with the cycle-accurate simulator on trained net-1.
+    let art_dir = Path::new("artifacts/net1");
+    if art_dir.exists() {
+        let art = NetArtifacts::load(art_dir)?;
+        let mut net = art.net.clone();
+        net.t_steps = art.trace_t;
+        let sizes: Vec<usize> = net.layers.iter().map(|l| l.output_bits()).collect();
+        let cfg = ExperimentConfig::new(net, HwConfig::fully_parallel(
+            art.net.parametric_layers().len()))?;
+        let mut sim = NetworkSim::new(&cfg, art.weights.clone(), CostModel::default());
+        let r = sim.run(&art.traces[0].input);
+        println!("== net-1 layer activity, JAX vs simulator (sample 0):");
+        for (l, (act, size)) in r.mean_activity().iter().zip(&sizes).enumerate() {
+            let jax = art.avg_spikes_per_layer.get(l + 1).copied().unwrap_or(f64::NAN);
+            println!(
+                "  layer {l} ({size:4} neurons): sim {act:7.1} spikes/step, \
+                 JAX {jax:7.1}, ratio {:.3}",
+                act / *size as f64
+            );
+        }
+    }
+    Ok(())
+}

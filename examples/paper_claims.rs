@@ -1,0 +1,119 @@
+//! Checks the paper's §VI-B headline claims against our reproduction:
+//!
+//!   (i)   up to 76% reduction in hardware resources with similar latency
+//!         for MNIST (net-1 TW-(4,8,8) vs Fang et al. [12]);
+//!   (ii)  up to 31.25x speedup with 27% fewer resources for FashionMNIST
+//!         (net-4 TW-(32,16,8,16,64) vs Ye et al. [34]);
+//!   (iii) 2.34x speedup for DVSGesture (net-5 best mapping vs SNE [35]);
+//!   (iv)  64% inference-energy reduction on net-5 via LHR tuning at equal
+//!         latency (TW-(16,1,16,256) vs the resource-maximal baseline).
+//!
+//! We print paper-claimed vs measured values; shapes should agree even
+//! though the substrate is a calibrated model, not the authors' testbed.
+//!
+//! Run: `cargo run --release --example paper_claims`
+
+use snn_dse::config::HwConfig;
+use snn_dse::dse::{evaluate, EvalMode};
+use snn_dse::sim::CostModel;
+use snn_dse::snn::table1_net;
+use snn_dse::baselines::prior_for;
+
+struct Claim {
+    what: &'static str,
+    paper: f64,
+    measured: f64,
+}
+
+fn eval(net: &str, lhr: Vec<usize>) -> snn_dse::dse::DsePoint {
+    evaluate(
+        &table1_net(net),
+        &HwConfig::with_lhr(lhr),
+        &EvalMode::Activity { seed: 42 },
+        &CostModel::default(),
+    )
+}
+
+fn main() {
+    let mut claims = Vec::new();
+
+    // (i) net-1 (4,8,8): LUT reduction vs [12] at similar latency.
+    let p = eval("net1", vec![4, 8, 8]);
+    let base = prior_for("net1");
+    claims.push(Claim {
+        what: "(i) net1 TW-(4,8,8) LUT reduction vs [12] (%)",
+        paper: 76.0,
+        measured: (1.0 - p.resources.lut / base.lut) * 100.0,
+    });
+    claims.push(Claim {
+        what: "(i) net1 TW-(4,8,8) latency ratio vs [12] (x, ~similar)",
+        paper: 0.82,
+        measured: p.cycles as f64 / base.cycles as f64,
+    });
+
+    // (ii) net-4 (32,16,8,16,64): speedup and LUT saving vs [34].
+    // NOTE: the abstract claims 31.25x, but the paper's own Table-I row
+    // (843,518 cycles vs [34]'s 1,562K) yields 1.85x — we validate against
+    // the table-derived ratio, which is what the data supports.
+    let p = eval("net4", vec![32, 16, 8, 16, 64]);
+    let base = prior_for("net4");
+    claims.push(Claim {
+        what: "(ii) net4 TW-(32,16,8,16,64) speedup vs [34] (x, table-derived)",
+        paper: 1.85,
+        measured: base.cycles as f64 / p.cycles as f64,
+    });
+    claims.push(Claim {
+        what: "(ii) net4 LUT reduction vs [34] (%)",
+        paper: 27.0,
+        measured: (1.0 - p.resources.lut / base.lut) * 100.0,
+    });
+
+    // (iii) net-5 best mapping cycles vs SNE [35].
+    let p = eval("net5", vec![1, 1, 8, 32, 1]);
+    let base = prior_for("net5");
+    claims.push(Claim {
+        what: "(iii) net5 TW-(1,1,8,32) speedup vs [35] (x)",
+        paper: 2.44, // 6044K / 2481K
+        measured: base.cycles as f64 / p.cycles as f64,
+    });
+
+    // (iv) net-5 energy: best LHR vs resource-maximal, same latency.
+    let best = eval("net5", vec![16, 1, 16, 256, 1]);
+    let maximal = eval("net5", vec![1, 1, 8, 32, 1]);
+    claims.push(Claim {
+        what: "(iv) net5 energy reduction best-vs-baseline LHR (%)",
+        paper: 58.0, // 14.93 -> 6.24 mJ in Table I
+        measured: (1.0 - best.energy_mj / maximal.energy_mj) * 100.0,
+    });
+    claims.push(Claim {
+        what: "(iv) net5 latency penalty for that energy win (x, ~1.0)",
+        paper: 1.002, // 2486K / 2481K
+        measured: best.cycles as f64 / maximal.cycles as f64,
+    });
+
+    println!("{:<55} {:>10} {:>10}  {}", "claim", "paper", "measured", "verdict");
+    println!("{}", "-".repeat(92));
+    let mut ok = 0;
+    for c in &claims {
+        // shape agreement: same sign and within 2.5x in magnitude
+        let agree = (c.paper - c.measured).abs() / c.paper.abs().max(1e-9) < 0.6
+            || (c.paper.signum() == c.measured.signum()
+                && (c.measured / c.paper).abs() < 2.5
+                && (c.measured / c.paper).abs() > 0.4);
+        if agree {
+            ok += 1;
+        }
+        println!(
+            "{:<55} {:>10.2} {:>10.2}  {}",
+            c.what,
+            c.paper,
+            c.measured,
+            if agree { "SHAPE OK" } else { "DIVERGES" }
+        );
+    }
+    println!("{}", "-".repeat(92));
+    println!("{ok}/{} claims reproduce in shape", claims.len());
+    if ok < claims.len() {
+        std::process::exit(1);
+    }
+}

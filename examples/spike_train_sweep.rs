@@ -1,0 +1,80 @@
+//! Fig. 7 reproduction: spike-train length vs population-coding ratio.
+//!
+//! Sweeps T in {4..25} for population sizes {1, 10, 30} on net-1 and prints
+//! (a) hardware latency in clock cycles (Fig. 7b, from the cycle-accurate
+//! simulator) and (b) model accuracy (Fig. 7a, from the Python training
+//! sweep artifact if `make fig7` has been run).
+//!
+//! Run: `cargo run --release --example spike_train_sweep`
+
+use snn_dse::config::HwConfig;
+use snn_dse::dse::{evaluate, report, EvalMode};
+use snn_dse::sim::CostModel;
+use snn_dse::snn::{table1_net, Layer};
+use snn_dse::util::json::Json;
+use std::path::Path;
+
+fn main() {
+    let t_values = [4usize, 6, 8, 10, 15, 20, 25];
+    let pops = [1usize, 10, 30];
+    let mut series = Vec::new();
+    for &pop in &pops {
+        let mut lat = Vec::new();
+        for &t in &t_values {
+            let mut net = table1_net("net1");
+            net.population = pop;
+            net.t_steps = t;
+            let out = net.layers.len() - 1;
+            if let Layer::Fc { n, .. } = &mut net.layers[out] {
+                *n = net.classes * pop; // 10, 100 or 300 output neurons
+            }
+            // One hardware neuron per class: LHR_out = pop, so higher PCR
+            // costs serial shifting in the classification layer (§VI-C).
+            let mut lhr = vec![1; net.parametric_layers().len()];
+            *lhr.last_mut().unwrap() = pop;
+            let hw = HwConfig::with_lhr(lhr);
+            let p = evaluate(&net, &hw, &EvalMode::Activity { seed: 42 }, &CostModel::default());
+            lat.push(p.cycles);
+        }
+        series.push((format!("TW_pop_{pop}"), lat));
+    }
+
+    println!("== Fig. 7b: latency (cycles) vs spike-train length, net-1\n");
+    println!("{}", report::fig7b_table(&t_values, &series));
+    println!("Observations (cf. paper §VI-C):");
+    for (name, lat) in &series {
+        let growth = lat.last().unwrap() / lat.first().unwrap().max(&1);
+        println!("  {name}: x{growth} latency from T=4 to T=25 (linear in T)");
+    }
+    let p1 = series[0].1.last().unwrap();
+    let p30 = series[2].1.last().unwrap();
+    println!(
+        "  pop_30 costs x{:.2} the cycles of pop_1 at T=25 — the output layer\n  \
+         is small and sparse, so population coding is cheap (paper's argument).",
+        *p30 as f64 / *p1 as f64
+    );
+
+    // Fig. 7a accuracy series from the Python sweep, if present.
+    let path = Path::new("artifacts/fig7_accuracy.json");
+    match Json::parse_file(path) {
+        Ok(j) => {
+            println!("\n== Fig. 7a: accuracy vs spike-train length (JAX training sweep)\n");
+            let ts = j.at("t_values").usize_vec();
+            println!("T        : {ts:?}");
+            for pop in pops {
+                let key = format!("pop_{pop}");
+                let accs: Vec<f64> = j
+                    .at("series")
+                    .at(&key)
+                    .f64_vec()
+                    .iter()
+                    .map(|a| (a * 1000.0).round() / 1000.0)
+                    .collect();
+                println!("TW_{key:7}: {accs:?}");
+            }
+            println!("\nExpected shape: pop_1 needs long trains; pop_10/pop_30 reach\n\
+                      their accuracy plateau with much shorter spike trains.");
+        }
+        Err(_) => println!("\n(run `make fig7` to generate the Fig. 7a accuracy series)"),
+    }
+}

@@ -1,0 +1,124 @@
+"""AOT bridge: lower the L2 inference graph (with L1 Pallas kernels) to HLO.
+
+Emits HLO **text** (NOT ``lowered.compile().serialize()``): jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the xla_extension 0.5.1
+bundled with the published ``xla`` crate rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The exported module is the *functional reference* for the hardware: it runs
+one sample's full spike train through the SNN (Pallas LIF + spike-matmul
+kernels, interpret=True so the lowering is plain HLO) and returns every
+layer's output spike train plus the population-decoded class rates. The Rust
+framework executes it via PJRT for spike-to-spike validation of the
+cycle-accurate simulator (the paper's "Simulation & Validation Phase").
+
+Calling convention (all f32):
+  parameters: spikes [T, n_in], then per parametric layer: w, b
+  result:     tuple( layer0_spikes [T, n0], ..., class_rates [classes] )
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.lif import lif_step as pallas_lif_step
+from .kernels.spike_matmul import spike_matmul as pallas_spike_matmul
+
+
+def build_infer_fn(spec: model.NetSpec, use_pallas: bool = True):
+    """Single-sample FC inference: spikes [T, n_in] + flat params -> traces."""
+    dims = model.layer_dims(spec)
+    assert all(k == "dense" for k, _ in dims), \
+        "AOT export supports FC topologies (net-5 validated via traces)"
+
+    def infer(spikes, *flat_params):
+        t = spikes.shape[0]
+        ws = flat_params[0::2]
+        bs = flat_params[1::2]
+        v0 = [jnp.zeros((1, shape[1])) for _, shape in dims]
+
+        def one_step(v_all, s_t):
+            x = s_t[None, :]  # [1, n]
+            new_v = []
+            outs = []
+            for i in range(len(dims)):
+                if use_pallas:
+                    cur = pallas_spike_matmul(x, ws[i])
+                    v_next, spk = pallas_lif_step(
+                        v_all[i], cur, bs[i],
+                        beta=spec.beta, theta=spec.theta)
+                else:
+                    cur = x @ ws[i]
+                    v_new = spec.beta * v_all[i] + cur + bs[i]
+                    spk = (v_new >= spec.theta).astype(v_new.dtype)
+                    v_next = v_new - spk * spec.theta
+                new_v.append(v_next)
+                x = spk
+                outs.append(spk[0])
+            return new_v, outs
+
+        _, traces = jax.lax.scan(one_step, v0, spikes)
+        out = traces[-1]  # [T, out_neurons]
+        pool = out.sum(axis=0).reshape(spec.classes, spec.population)
+        rates = pool.sum(axis=-1) / (t * spec.population)
+        return tuple(traces) + (rates,)
+
+    return infer
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def export_net(name: str, out_dir: str, t: int | None = None,
+               use_pallas: bool = True) -> str:
+    spec = model.NETS[name]
+    t = t or spec.t_steps
+    dims = model.layer_dims(spec)
+    arg_specs = [jax.ShapeDtypeStruct((t, spec.input_shape[0]), jnp.float32)]
+    for _, shape in dims:
+        arg_specs.append(jax.ShapeDtypeStruct(shape, jnp.float32))
+        arg_specs.append(jax.ShapeDtypeStruct((shape[1],), jnp.float32))
+    fn = build_infer_fn(spec, use_pallas=use_pallas)
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}_T{t}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    # Sidecar so the Rust runtime knows the calling convention.
+    with open(os.path.join(out_dir, f"{name}_T{t}.hlo.json"), "w") as f:
+        json.dump({
+            "net": name, "t": t,
+            "input_shape": [t, spec.input_shape[0]],
+            "param_shapes": [list(s.shape) for s in arg_specs[1:]],
+            "outputs": [[t, shape[1]] for _, shape in dims] +
+                       [[spec.classes]],
+        }, f, indent=1)
+    print(f"  [aot] {path} ({len(text)} chars)")
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--nets", default="net1")
+    ap.add_argument("--t", type=int, default=None)
+    ap.add_argument("--no-pallas", action="store_true")
+    args = ap.parse_args()
+    for name in [n for n in args.nets.split(",") if n]:
+        export_net(name, args.out, t=args.t, use_pallas=not args.no_pallas)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Synthetic stand-ins for the paper's datasets (DESIGN.md §Substitutions).
+
+No network access is available in this environment, so we build deterministic
+procedural datasets with the same tensor contracts as the originals:
+
+  * ``mnist_like``    — 28x28 grayscale, 10 classes: stroke-rendered digit
+    glyphs from a 7x5 bitmap font, with random affine jitter + pixel noise.
+  * ``fmnist_like``   — 28x28 grayscale, 10 classes: garment-ish silhouettes
+    (procedural masks), jittered. Harder than mnist_like (overlapping shapes),
+    mirroring the MNIST-vs-FashionMNIST accuracy gap in the paper.
+  * ``dvs_like``      — HxW binary event frames over T steps, 11 classes:
+    moving-edge "gestures" (direction x arm pattern), mirroring DVS128
+    Gesture's sparse event statistics.
+
+Everything is seeded and pure-numpy so the Rust side can regenerate identical
+workloads (rust/src/data mirrors the DVS generator for simulator-only runs).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# --------------------------------------------------------------------------
+# 7x5 bitmap font for digits 0-9 (classic seven-segment-ish glyphs).
+_FONT = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00110", "01000", "10000", "11111"],
+    3: ["11110", "00001", "00001", "01110", "00001", "00001", "11110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+
+def _glyph(digit: int) -> np.ndarray:
+    rows = _FONT[digit]
+    return np.array([[float(c) for c in r] for r in rows], dtype=np.float32)
+
+
+def _render28(mask: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Upscale a small mask to 28x28 with random placement, blur and noise."""
+    h, w = mask.shape
+    sy = rng.integers(2, max(3, min(4, 28 // h)) + 1)  # scale factors
+    sx = rng.integers(2, max(3, min(4, 28 // w)) + 1)
+    sy = min(sy, 28 // h)
+    sx = min(sx, 28 // w)
+    big = np.kron(mask, np.ones((sy, sx), dtype=np.float32))
+    bh, bw = big.shape
+    img = np.zeros((28, 28), dtype=np.float32)
+    oy = rng.integers(0, 28 - bh + 1)
+    ox = rng.integers(0, 28 - bw + 1)
+    img[oy : oy + bh, ox : ox + bw] = big
+    # cheap 3x3 box blur for anti-aliased strokes (like pen thickness)
+    p = np.pad(img, 1)
+    img = (
+        p[:-2, :-2] + p[:-2, 1:-1] + p[:-2, 2:]
+        + p[1:-1, :-2] + p[1:-1, 1:-1] * 2.0 + p[1:-1, 2:]
+        + p[2:, :-2] + p[2:, 1:-1] + p[2:, 2:]
+    ) / 10.0
+    img = np.clip(img * (0.8 + 0.4 * rng.random()), 0.0, 1.0)
+    img += rng.normal(0.0, 0.05, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0)
+
+
+def mnist_like(n: int, seed: int = 0):
+    """Return (images [n,28,28] f32 in [0,1], labels [n] i32)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    imgs = np.stack([_render28(_glyph(int(y)), rng) for y in labels])
+    return imgs.astype(np.float32), labels
+
+
+# --------------------------------------------------------------------------
+# FashionMNIST-like: 10 garment silhouette generators on a 12x10 grid.
+def _garment_mask(cls: int, rng: np.random.Generator) -> np.ndarray:
+    m = np.zeros((12, 10), dtype=np.float32)
+    j = lambda a, b: int(rng.integers(a, b + 1))  # noqa: E731
+    if cls == 0:  # t-shirt: body + short sleeves
+        m[2:10, 2:8] = 1; m[2:4, 0:2] = 1; m[2:4, 8:10] = 1
+    elif cls == 1:  # trouser: two legs
+        m[0:3, 2:8] = 1; m[3:12, 2:4 + j(0, 1)] = 1; m[3:12, 6:8] = 1
+    elif cls == 2:  # pullover: body + long sleeves
+        m[2:10, 2:8] = 1; m[2:8, 0:2] = 1; m[2:8, 8:10] = 1
+    elif cls == 3:  # dress: flare
+        for r in range(12):
+            w = 2 + r // 2
+            m[r, max(0, 5 - w // 2) : min(10, 5 + (w + 1) // 2)] = 1
+    elif cls == 4:  # coat: body + sleeves + collar notch
+        m[1:11, 2:8] = 1; m[1:9, 0:2] = 1; m[1:9, 8:10] = 1; m[0:2, 4:6] = 0
+    elif cls == 5:  # sandal: strappy wedge
+        m[8:10, 0:10] = 1; m[10:12, 2:10] = 1; m[4:8, 6:8] = 1; m[2:4, 3:9] = 1
+    elif cls == 6:  # shirt: slim body + sleeves + placket line
+        m[1:11, 3:7] = 1; m[1:7, 1:3] = 1; m[1:7, 7:9] = 1; m[2:10, 5] = 0.4
+    elif cls == 7:  # sneaker: low profile
+        m[7:10, 0:10] = 1; m[5:7, 4:10] = 1; m[10:12, 0:10] = 1
+    elif cls == 8:  # bag: box + handle
+        m[4:11, 1:9] = 1; m[1:4, 3:7] = 1; m[2:3, 4:6] = 0
+    else:  # ankle boot: shaft + foot
+        m[1:8, 5:9] = 1; m[6:10, 0:9] = 1; m[10:12, 0:9] = 1
+    return m
+
+
+def fmnist_like(n: int, seed: int = 1):
+    """Return (images [n,28,28] f32, labels [n] i32) of garment silhouettes."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n).astype(np.int32)
+    imgs = np.stack([_render28(_garment_mask(int(y), rng), rng) for y in labels])
+    return imgs.astype(np.float32), labels
+
+
+# --------------------------------------------------------------------------
+# DVS-Gesture-like event streams: 11 classes, each a motion signature of a
+# bright bar/blob sweeping the frame. Events are binary per (t, y, x).
+_GESTURES = [
+    ("clap", 0), ("wave_lr", 1), ("wave_ud", 2), ("circle_cw", 3),
+    ("circle_ccw", 4), ("roll_l", 5), ("roll_r", 6), ("drum_l", 7),
+    ("drum_r", 8), ("guitar", 9), ("other", 10),
+]
+
+
+def dvs_like(n: int, *, size: int = 128, t: int = 124, seed: int = 2,
+             rate_scale: float = 1.0):
+    """Return (events [n, t, size, size] u8 in {0,1}, labels [n] i32).
+
+    ``rate_scale`` scales event density; the default is calibrated so the
+    *first layer's* mean events/step ~ 135 at size=128 (Table I caption).
+    """
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 11, size=n).astype(np.int32)
+    out = np.zeros((n, t, size, size), dtype=np.uint8)
+    yy, xx = np.meshgrid(np.arange(size), np.arange(size), indexing="ij")
+    for i, y in enumerate(labels):
+        cx, cy = size / 2 + rng.normal(0, size / 8), size / 2 + rng.normal(0, size / 8)
+        r = size / 4 * (0.7 + 0.6 * rng.random())
+        phase = rng.random() * 2 * np.pi
+        w = rng.uniform(1.5, 3.0)  # edge thickness
+        for step in range(t):
+            ph = phase + 2 * np.pi * step / max(t / (1 + y % 3), 1)
+            if y in (1, 5, 6):      # horizontal sweeps
+                px = cx + r * np.cos(ph); py = cy
+                d = np.abs(xx - px)
+            elif y in (2, 7, 8):    # vertical sweeps
+                px = cx; py = cy + r * np.sin(ph)
+                d = np.abs(yy - py)
+            elif y in (3, 4):       # circular edge
+                px = cx + r * np.cos(ph); py = cy + r * np.sin(ph)
+                d = np.sqrt((xx - px) ** 2 + (yy - py) ** 2)
+            else:                   # blob pulses (clap/guitar/other)
+                px, py = cx, cy
+                rr = r * (0.5 + 0.5 * np.sin(ph * (1 + y % 2)))
+                d = np.abs(np.sqrt((xx - cx) ** 2 + (yy - cy) ** 2) - rr)
+            p = np.exp(-(d / w) ** 2) * 0.55 * rate_scale
+            out[i, step] = (rng.random((size, size)) < p).astype(np.uint8)
+    return out, labels
+
+
+def rate_encode(images: np.ndarray, t: int, seed: int = 0) -> np.ndarray:
+    """Bernoulli rate coding: P(spike at step) = pixel intensity.
+
+    Args:
+      images: [n, h, w] (or [n, d]) f32 in [0,1].
+    Returns:
+      [n, t, ...] u8 spike trains — the paper's standard rate coding.
+    """
+    rng = np.random.default_rng(seed)
+    p = images[:, None, ...]
+    return (rng.random((images.shape[0], t) + images.shape[1:]) < p).astype(np.uint8)

@@ -1,0 +1,77 @@
+"""Layer-1 Pallas kernel: fused LIF membrane update.
+
+The per-time-step LIF update is the element-wise hot spot of SNN inference:
+it runs once per (layer, time step) over every neuron. On TPU this is a VPU
+workload; we tile (batch, neuron) blocks into VMEM with BlockSpec.
+
+TPU adaptation notes (see DESIGN.md §Hardware-Adaptation):
+  * Block shape (B_BLK, N_BLK) = (8, 512) f32 keeps the double-buffered
+    working set (v, cur, out_v, out_s = 4 buffers x 8*512*4B = 64 KiB) far
+    below VMEM capacity, leaving the rest for the producer matmul.
+  * interpret=True is mandatory on this CPU-PJRT image — real TPU lowering
+    emits a Mosaic custom-call the CPU plugin cannot execute. Structure
+    (BlockSpec schedule) is unchanged between the two.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block shape for the (batch, neuron) grid. Neuron axis uses the 128-lane
+# VPU-friendly multiple; batch axis matches the f32 sublane count.
+B_BLK = 8
+N_BLK = 512
+
+
+def _lif_kernel(beta, theta, v_ref, cur_ref, bias_ref, v_out_ref, s_out_ref):
+    """Pallas kernel body: one VMEM block of the LIF update.
+
+    beta/theta arrive as Python floats (static), closed over at trace time —
+    they are model constants in the paper's configuration file, so burning
+    them into the kernel saves two scalar operands per grid step.
+    """
+    v = v_ref[...]
+    cur = cur_ref[...]
+    bias = bias_ref[...]
+    v_new = beta * v + cur + bias[None, :]
+    spk = (v_new >= theta).astype(v_new.dtype)
+    v_out_ref[...] = v_new - spk * theta
+    s_out_ref[...] = spk
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "theta", "interpret"))
+def lif_step(v, cur, bias, *, beta: float, theta: float, interpret: bool = True):
+    """Fused LIF update over a [b, n] block of neurons.
+
+    Matches ``ref.lif_step_ref`` exactly (same op order, so bit-identical in
+    interpret mode). Shapes not divisible by the block are padded by Pallas'
+    grid masking: we pad explicitly to keep the index map trivial, then slice.
+    """
+    b, n = v.shape
+    bp = -(-b // B_BLK) * B_BLK
+    np_ = -(-n // N_BLK) * N_BLK
+    pad = ((0, bp - b), (0, np_ - n))
+    vp = jnp.pad(v, pad)
+    cp = jnp.pad(cur, pad)
+    biasp = jnp.pad(bias, (0, np_ - n))
+
+    grid = (bp // B_BLK, np_ // N_BLK)
+    out_shape = [
+        jax.ShapeDtypeStruct((bp, np_), v.dtype),
+        jax.ShapeDtypeStruct((bp, np_), v.dtype),
+    ]
+    block = pl.BlockSpec((B_BLK, N_BLK), lambda i, j: (i, j))
+    bias_block = pl.BlockSpec((N_BLK,), lambda i, j: (j,))
+    v_out, s_out = pl.pallas_call(
+        functools.partial(_lif_kernel, beta, theta),
+        grid=grid,
+        in_specs=[block, block, bias_block],
+        out_specs=[block, block],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(vp, cp, biasp)
+    return v_out[:b, :n], s_out[:b, :n]

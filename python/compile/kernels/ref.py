@@ -1,0 +1,59 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness contracts for Layer 1: every Pallas kernel in
+this package must agree with its oracle here to float tolerance across shapes
+and dtypes (enforced by ``python/tests/test_kernel.py`` with hypothesis).
+
+The LIF discretization mirrors snntorch's ``Leaky`` neuron with
+reset-by-subtraction (the configuration the paper trains with):
+
+    V[t]   = beta * V[t-1] + I[t] + b
+    S[t]   = 1{ V[t] >= theta }
+    V[t]  <- V[t] - S[t] * theta        (soft reset)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lif_step_ref(v, cur, bias, beta, theta):
+    """One LIF membrane update step.
+
+    Args:
+      v:     [..., n] membrane potential carried from the previous step.
+      cur:   [..., n] synaptic input current accumulated this step (I = S @ W).
+      bias:  [n] per-neuron bias (broadcast over leading dims).
+      beta:  scalar leak constant in [0, 1).
+      theta: scalar firing threshold.
+
+    Returns:
+      (v_next, spikes) with spikes in {0, 1} of ``v.dtype``.
+    """
+    v_new = beta * v + cur + bias
+    spk = (v_new >= theta).astype(v.dtype)
+    v_next = v_new - spk * theta
+    return v_next, spk
+
+
+def spike_matmul_ref(spikes, w):
+    """Reference synaptic accumulation: binary spike vector times weights.
+
+    Args:
+      spikes: [b, n_pre] in {0, 1}.
+      w:      [n_pre, n_post].
+
+    Returns:
+      [b, n_post] accumulated currents.
+
+    On real SNN hardware this is the *sparse* accumulate the paper's PENC +
+    shift-register datapath implements; densely it is just a matmul, which is
+    also the right TPU adaptation (MXU-friendly).
+    """
+    return spikes.astype(w.dtype) @ w
+
+
+def lif_fused_ref(v, spikes_in, w, bias, beta, theta):
+    """Fused accumulate + LIF step: the whole per-time-step layer update."""
+    cur = spike_matmul_ref(spikes_in, w)
+    return lif_step_ref(v, cur, bias, beta, theta)

@@ -1,0 +1,366 @@
+"""Layer-2 JAX SNN model: forward/backward graphs for the paper's networks.
+
+Mirrors the paper's snntorch setup: LIF (``Leaky``) neurons with soft reset,
+rate-coded inputs, population-coded classification layer, trained with
+surrogate gradient descent (fast-sigmoid surrogate, slope 25).
+
+Inference forward passes call the Layer-1 Pallas kernels
+(``kernels.lif.lif_step`` / ``kernels.spike_matmul.spike_matmul``) so the AOT
+export in ``aot.py`` lowers kernel + graph into one HLO module. The training
+path uses the pure-jnp surrogate-gradient formulation (the hardware never
+trains; snntorch plays the same role in the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.lif import lif_step as pallas_lif_step
+from .kernels.spike_matmul import spike_matmul as pallas_spike_matmul
+
+SURROGATE_SLOPE = 25.0
+
+
+# --------------------------------------------------------------------------
+# Topology description (mirrors rust/src/config::NetworkSpec).
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    n: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    channels: int
+    kernel: int  # square
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    size: int  # non-overlapping, OR-gated in hardware
+
+
+@dataclasses.dataclass(frozen=True)
+class NetSpec:
+    """A network in the paper's Table I."""
+
+    name: str
+    dataset: str                   # mnist | fmnist | dvs
+    input_shape: Tuple[int, ...]   # (784,) or (H, W)
+    layers: Tuple[object, ...]     # Dense/Conv/Pool sequence; last Dense is output
+    classes: int
+    population: int                # neurons per class in the output layer (PCR)
+    beta: float = 0.9
+    theta: float = 1.0
+    t_steps: int = 25
+
+    @property
+    def output_neurons(self) -> int:
+        return self.classes * self.population
+
+
+NETS = {
+    # Table I topologies. Output-layer sizes from the Pop. Cod. column.
+    "net1": NetSpec("net1", "mnist", (784,),
+                    (Dense(500), Dense(500), Dense(300)), 10, 30, t_steps=25),
+    "net2": NetSpec("net2", "mnist", (784,),
+                    (Dense(300), Dense(300), Dense(300), Dense(200)), 10, 20,
+                    t_steps=25),
+    "net3": NetSpec("net3", "fmnist", (784,),
+                    (Dense(1024), Dense(1024), Dense(300)), 10, 30, t_steps=25),
+    "net4": NetSpec("net4", "fmnist", (784,),
+                    (Dense(512), Dense(256), Dense(128), Dense(64), Dense(150)),
+                    10, 15, t_steps=25),
+    # net5 trains at 32x32 (CPU budget); the Rust hardware model simulates
+    # the paper's full 128x128 topology with spike activity calibrated to
+    # the Table I caption (DESIGN.md §Substitutions #3).
+    "net5": NetSpec("net5", "dvs", (32, 32),
+                    (Conv(32, 3), Pool(2), Conv(32, 3), Pool(2),
+                     Dense(512), Dense(256), Dense(11)),
+                    11, 1, beta=0.23, t_steps=124),
+    # Fig. 1 motivation model: 784-600-600-600 with population-coded output.
+    "net600": NetSpec("net600", "mnist", (784,),
+                      (Dense(600), Dense(600), Dense(600)), 10, 60, t_steps=25),
+}
+
+
+def with_population(spec: NetSpec, population: int) -> NetSpec:
+    """Return spec with a different output population size (Fig. 7 sweeps)."""
+    out = spec.classes * population
+    layers = list(spec.layers[:-1]) + [Dense(out)]
+    return dataclasses.replace(spec, population=population, layers=tuple(layers))
+
+
+def with_t(spec: NetSpec, t: int) -> NetSpec:
+    return dataclasses.replace(spec, t_steps=t)
+
+
+# --------------------------------------------------------------------------
+# Surrogate spike function (training path).
+@jax.custom_jvp
+def spike_surrogate(v_shift):
+    """Heaviside(v - theta) with fast-sigmoid surrogate gradient."""
+    return (v_shift >= 0.0).astype(v_shift.dtype)
+
+
+@spike_surrogate.defjvp
+def _spike_jvp(primals, tangents):
+    (v,), (dv,) = primals, tangents
+    s = (v >= 0.0).astype(v.dtype)
+    grad = 1.0 / (1.0 + SURROGATE_SLOPE * jnp.abs(v)) ** 2
+    return s, grad * dv
+
+
+def lif_step_train(v, cur, bias, beta, theta):
+    """Differentiable LIF step (surrogate through the threshold)."""
+    v_new = beta * v + cur + bias
+    spk = spike_surrogate(v_new - theta)
+    return v_new - jax.lax.stop_gradient(spk) * theta, spk
+
+
+# --------------------------------------------------------------------------
+# Parameter init / layer plumbing.
+def layer_dims(spec: NetSpec) -> List[Tuple[str, tuple]]:
+    """Resolve per-layer parameter shapes given the input shape."""
+    dims = []
+    if len(spec.input_shape) == 1:
+        feat = spec.input_shape[0]
+        chw = None
+    else:
+        h, w = spec.input_shape
+        chw = (1, h, w)
+        feat = None
+    for layer in spec.layers:
+        if isinstance(layer, Conv):
+            cin = chw[0]
+            dims.append(("conv", (layer.kernel, layer.kernel, cin, layer.channels)))
+            chw = (layer.channels, chw[1], chw[2])
+        elif isinstance(layer, Pool):
+            dims.append(("pool", (layer.size,)))
+            chw = (chw[0], chw[1] // layer.size, chw[2] // layer.size)
+        else:
+            if feat is None:
+                feat = chw[0] * chw[1] * chw[2]
+                chw = None
+            dims.append(("dense", (feat, layer.n)))
+            feat = layer.n
+    return dims
+
+
+def conv_fmaps(spec: NetSpec) -> List[tuple]:
+    """Per-layer (C, H, W) fmap after each Conv/Pool layer (None for dense)."""
+    fmap = []
+    if len(spec.input_shape) != 2:
+        return [None] * len(spec.layers)
+    chw = (1,) + spec.input_shape
+    for kind, shape in layer_dims(spec):
+        if kind == "conv":
+            chw = (shape[3], chw[1], chw[2])
+            fmap.append(chw)
+        elif kind == "pool":
+            chw = (chw[0], chw[1] // shape[0], chw[2] // shape[0])
+            fmap.append(chw)
+        else:
+            fmap.append(None)
+    return fmap
+
+
+def init_params(key, spec: NetSpec):
+    """Kaiming-ish init scaled up for spiking activity regimes."""
+    params = []
+    for kind, shape in layer_dims(spec):
+        if kind == "pool":
+            params.append(None)
+            continue
+        key, k1, k2 = jax.random.split(key, 3)
+        if kind == "dense":
+            fan_in, nw = shape[0], shape[1]
+        else:
+            fan_in, nw = shape[0] * shape[1] * shape[2], shape[3]
+        w = jax.random.normal(k1, shape) * (2.0 / fan_in) ** 0.5
+        b = jax.random.normal(k2, (nw,)) * 0.01
+        params.append({"w": w, "b": b})
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward passes.
+def _pool_or(spikes, size):
+    """Hardware maxpool = OR over non-overlapping windows of binary spikes."""
+    *lead, c, h, w = spikes.shape
+    x = spikes.reshape(*lead, c, h // size, size, w // size, size)
+    return x.max(axis=(-3, -1))
+
+
+def _conv_same(spikes_bchw, w):
+    """'same' conv over binary spikes (NCHW activations, HWIO weights)."""
+    return jax.lax.conv_general_dilated(
+        spikes_bchw, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "HWIO", "NCHW"))
+
+
+def snn_apply(params, spec: NetSpec, spikes_in, *, train: bool,
+              use_pallas: bool = False, record: bool = False):
+    """Run the SNN over a full spike train.
+
+    Args:
+      spikes_in: [B, T, *input_shape] f32 in {0,1}.
+      train:     use the surrogate-differentiable step (pure jnp); otherwise
+                 the inference step (optionally through the Pallas kernels).
+      use_pallas: route dense accumulation + LIF through Layer-1 kernels.
+      record:    also return every layer's full output spike train.
+
+    Returns:
+      (class_rates [B, classes], layer_counts [L] mean spikes/step, traces)
+      where traces is a list of [T, B, ...] spike arrays (or None).
+    """
+    dims = layer_dims(spec)
+    fmaps = conv_fmaps(spec)
+    b = spikes_in.shape[0]
+    t = spikes_in.shape[1]
+
+    v0 = []
+    for i, (kind, shape) in enumerate(dims):
+        if kind == "dense":
+            v0.append(jnp.zeros((b, shape[1])))
+        elif kind == "conv":
+            v0.append(jnp.zeros((b,) + fmaps[i]))
+        else:
+            v0.append(jnp.zeros((0,)))  # pool: stateless
+
+    def one_step(v_all, s_t):
+        """s_t: [B, *input_shape] spikes at one time step."""
+        x = s_t
+        new_v = []
+        spikes_per_layer = []
+        counts = []
+        for i, (kind, shape) in enumerate(dims):
+            if kind == "pool":
+                x = _pool_or(x, shape[0])
+                new_v.append(v_all[i])
+            else:
+                p = params[i]
+                if kind == "conv":
+                    if x.ndim == 3:
+                        x = x[:, None, :, :]  # raw input gains channel dim
+                    cur = _conv_same(x, p["w"]) + p["b"][None, :, None, None]
+                    v_new = spec.beta * v_all[i] + cur
+                    if train:
+                        spk = spike_surrogate(v_new - spec.theta)
+                        v_next = v_new - jax.lax.stop_gradient(spk) * spec.theta
+                    else:
+                        spk = (v_new >= spec.theta).astype(v_new.dtype)
+                        v_next = v_new - spk * spec.theta
+                else:
+                    if x.ndim > 2:
+                        x = x.reshape(b, -1)
+                    if train:
+                        cur = x @ p["w"]
+                        v_next, spk = lif_step_train(
+                            v_all[i], cur, p["b"], spec.beta, spec.theta)
+                    elif use_pallas:
+                        cur = pallas_spike_matmul(x, p["w"])
+                        v_next, spk = pallas_lif_step(
+                            v_all[i], cur, p["b"],
+                            beta=spec.beta, theta=spec.theta)
+                    else:
+                        cur = x @ p["w"]
+                        v_next, spk = ref.lif_step_ref(
+                            v_all[i], cur, p["b"], spec.beta, spec.theta)
+                new_v.append(v_next)
+                x = spk
+            spikes_per_layer.append(x)
+            counts.append(x.sum(axis=tuple(range(1, x.ndim))).mean())
+        if record:
+            return new_v, (x, jnp.stack(counts), spikes_per_layer)
+        return new_v, (x, jnp.stack(counts))
+
+    s_tb = jnp.moveaxis(spikes_in, 1, 0)  # [T, B, ...]
+    if record:
+        _, (out_spikes, counts, traces) = jax.lax.scan(one_step, v0, s_tb)
+    else:
+        _, (out_spikes, counts) = jax.lax.scan(one_step, v0, s_tb)
+        traces = None
+    # out_spikes: [T, B, out_neurons]; population-coded class rates:
+    pool = out_spikes.sum(axis=0).reshape(b, spec.classes, spec.population)
+    rates = pool.sum(axis=-1) / (t * spec.population)
+    return rates, counts.mean(axis=0), traces
+
+
+# --------------------------------------------------------------------------
+# Training (hand-rolled Adam; optax is not in the image).
+def loss_fn(params, spec, spikes_in, labels):
+    rates, _, _ = snn_apply(params, spec, spikes_in, train=True)
+    # Rate cross-entropy on population-pooled spike rates (snntorch ce_rate).
+    logits = rates * 10.0
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    return nll, rates
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def train_step(params, opt_state, spec, spikes_in, labels, lr):
+    """One Adam step. opt_state = (m, v, step)."""
+    (loss, rates), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, spec, spikes_in, labels)
+    m, v, step = opt_state
+    step = step + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def upd(p, g, m_, v_):
+        if p is None:
+            return None, None, None
+        m2 = jax.tree.map(lambda a, b_: b1 * a + (1 - b1) * b_, m_, g)
+        v2 = jax.tree.map(lambda a, b_: b2 * a + (1 - b2) * b_ * b_, v_, g)
+        mh = jax.tree.map(lambda a: a / (1 - b1 ** step), m2)
+        vh = jax.tree.map(lambda a: a / (1 - b2 ** step), v2)
+        p2 = jax.tree.map(lambda a, mm, vv: a - lr * mm / (jnp.sqrt(vv) + eps),
+                          p, mh, vh)
+        return p2, m2, v2
+
+    new = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(params, grads, m, v)]
+    params2 = [n[0] for n in new]
+    acc = (jnp.argmax(rates, axis=-1) == labels).mean()
+    return params2, ([n[1] for n in new], [n[2] for n in new], step), loss, acc
+
+
+def init_opt(params):
+    def z():
+        return [None if p is None else jax.tree.map(jnp.zeros_like, p)
+                for p in params]
+    return (z(), z(), jnp.zeros((), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def eval_batch(params, spec, spikes_in, labels):
+    rates, counts, _ = snn_apply(params, spec, spikes_in, train=False)
+    return (jnp.argmax(rates, axis=-1) == labels).mean(), counts
+
+
+# --------------------------------------------------------------------------
+# Weight quantization (paper §III: "weight quantization size ... greatly
+# affects the system's memory requirements"). Symmetric uniform quantizer;
+# the Rust resource model prices the corresponding BRAM savings.
+def quantize_params(params, bits: int):
+    """Quantize every weight tensor to `bits`-bit symmetric integers
+    (dequantized back to f32 — simulates the precision loss)."""
+    if bits >= 32:
+        return params
+    qmax = float(2 ** (bits - 1) - 1)
+
+    def q(x):
+        scale = jnp.maximum(jnp.abs(x).max(), 1e-9) / qmax
+        return jnp.round(x / scale).clip(-qmax - 1, qmax) * scale
+
+    out = []
+    for p in params:
+        if p is None:
+            out.append(None)
+        else:
+            out.append({"w": q(p["w"]), "b": q(p["b"])})
+    return out

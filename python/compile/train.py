@@ -1,0 +1,248 @@
+"""Training + artifact dump orchestrator (the paper's "Training Phase").
+
+Trains each Table-I network with surrogate gradient descent on the synthetic
+datasets, then dumps everything the Rust Layer-3 framework consumes:
+
+  artifacts/<net>/manifest.json   — topology, constants, accuracy, stats
+  artifacts/<net>/weights.bin     — f32 LE, per layer: W row-major then b
+  artifacts/<net>/trace.bin       — u8 spike traces for validation workloads:
+                                    per sample: input [T][n_in] then each
+                                    layer's output [T][n] (conv flattened CHW)
+  artifacts/fig1_firing.json      — Fig. 1 firing-ratio data (net600)
+  artifacts/fig7_accuracy.json    — Fig. 7a accuracy sweep data
+
+Run once via ``make artifacts``; never on the Rust request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, model
+
+# Per-net training budgets (kept small: synthetic data converges quickly).
+TRAIN_CFG = {
+    # name: (n_train, batch, steps, lr, train_t)
+    "net1":   (1024, 64, 300, 3e-3, 15),
+    "net2":   (1024, 64, 300, 3e-3, 15),
+    "net3":   (1024, 64, 300, 3e-3, 15),
+    "net4":   (1024, 64, 350, 3e-3, 15),
+    "net5":   (192, 16, 60, 2e-3, 12),
+    "net600": (1024, 64, 250, 3e-3, 15),
+}
+TRACE_SAMPLES = 8
+TRACE_SAMPLES_DVS = 2  # event traces are large; 2 samples suffice to validate
+
+
+def _dataset_for(spec: model.NetSpec, n: int, seed: int):
+    if spec.dataset == "mnist":
+        imgs, labels = datasets.mnist_like(n, seed=seed)
+        return imgs.reshape(n, -1), labels
+    if spec.dataset == "fmnist":
+        imgs, labels = datasets.fmnist_like(n, seed=seed)
+        return imgs.reshape(n, -1), labels
+    raise ValueError(spec.dataset)
+
+
+def _encode(spec: model.NetSpec, imgs: np.ndarray, t: int, seed: int):
+    return datasets.rate_encode(imgs, t, seed=seed).astype(np.float32)
+
+
+def _batches_dvs(spec, n, t, seed):
+    ev, labels = datasets.dvs_like(n, size=spec.input_shape[0], t=t, seed=seed)
+    return ev.astype(np.float32), labels
+
+
+def train_net(spec: model.NetSpec, *, seed: int = 0, quiet: bool = False):
+    """Train one network; returns (params, test_accuracy, mean spike counts)."""
+    n, batch, steps, lr, train_t = TRAIN_CFG.get(
+        spec.name, (1024, 64, 60, 2e-3, 15))
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key, spec)
+    opt = model.init_opt(params)
+    spec_t = model.with_t(spec, train_t)
+
+    if spec.dataset == "dvs":
+        x_all, y_all = _batches_dvs(spec, n, train_t, seed)
+    else:
+        imgs, y_all = _dataset_for(spec, n, seed)
+        x_all = _encode(spec, imgs, train_t, seed)
+
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for i in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        params, opt, loss, acc = model.train_step(
+            params, opt, spec_t, jnp.asarray(x_all[idx]),
+            jnp.asarray(y_all[idx]), lr)
+        if not quiet and (i % 10 == 0 or i == steps - 1):
+            print(f"  [{spec.name}] step {i:3d} loss {float(loss):.4f} "
+                  f"acc {float(acc):.3f} ({time.time()-t0:.1f}s)")
+
+    # held-out eval at the *deployment* T (spec.t_steps)
+    n_test = min(256, n) if spec.dataset != "dvs" else 32
+    eval_t = spec.t_steps if spec.dataset != "dvs" else min(spec.t_steps, 24)
+    if spec.dataset == "dvs":
+        x_te, y_te = _batches_dvs(spec, n_test, eval_t, seed + 1)
+    else:
+        imgs_te, y_te = _dataset_for(spec, n_test, seed + 1)
+        x_te = _encode(spec, imgs_te, eval_t, seed + 1)
+    spec_ev = model.with_t(spec, eval_t)
+    acc, counts = model.eval_batch(
+        params, spec_ev, jnp.asarray(x_te), jnp.asarray(y_te))
+    return params, float(acc), np.asarray(counts), (x_te, y_te, eval_t)
+
+
+def dump_artifacts(spec: model.NetSpec, params, acc, counts, test_set,
+                   out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    dims = model.layer_dims(spec)
+    fmaps = model.conv_fmaps(spec)
+
+    # weights.bin
+    blobs = []
+    layers_meta = []
+    for i, (kind, shape) in enumerate(dims):
+        if kind == "pool":
+            layers_meta.append({"kind": "pool", "size": shape[0],
+                                "fmap": list(fmaps[i])})
+            continue
+        w = np.asarray(params[i]["w"], dtype="<f4")
+        b = np.asarray(params[i]["b"], dtype="<f4")
+        meta = {"kind": kind, "shape": list(w.shape),
+                "w_offset": sum(x.size for x in blobs)}
+        blobs.append(w.ravel())
+        meta["b_offset"] = sum(x.size for x in blobs)
+        blobs.append(b.ravel())
+        if kind == "conv":
+            meta["fmap"] = list(fmaps[i])
+        layers_meta.append(meta)
+    weights = np.concatenate(blobs) if blobs else np.zeros(0, "<f4")
+    weights.tofile(os.path.join(out_dir, "weights.bin"))
+
+    # trace.bin — validation workloads with recorded per-layer spikes.
+    x_te, y_te, eval_t = test_set
+    n_trace = TRACE_SAMPLES_DVS if spec.dataset == "dvs" else TRACE_SAMPLES
+    xs = jnp.asarray(x_te[:n_trace])
+    spec_ev = model.with_t(spec, eval_t)
+    _, _, traces = model.snn_apply(params, spec_ev, xs, train=False,
+                                   record=True)
+    parts = []
+    n_samples = xs.shape[0]
+    for s in range(n_samples):
+        parts.append(np.asarray(xs[s]).reshape(eval_t, -1).astype(np.uint8))
+        for tr in traces:  # tr: [T, B, ...]
+            parts.append(np.asarray(tr[:, s]).reshape(eval_t, -1)
+                         .astype(np.uint8))
+    trace = np.concatenate([p.ravel() for p in parts])
+    trace.tofile(os.path.join(out_dir, "trace.bin"))
+
+    # Per-time-step layer spike counts for trace sample 0 (sim cross-check).
+    per_step_counts = [
+        np.asarray(xs[0]).reshape(eval_t, -1).sum(axis=1).tolist()
+    ] + [np.asarray(tr[:, 0]).reshape(eval_t, -1).sum(axis=1).tolist()
+         for tr in traces]
+
+    manifest = {
+        "name": spec.name,
+        "dataset": spec.dataset,
+        "input_shape": list(spec.input_shape),
+        "classes": spec.classes,
+        "population": spec.population,
+        "beta": spec.beta,
+        "theta": spec.theta,
+        "t_steps": spec.t_steps,
+        "trace_t": int(eval_t),
+        "trace_samples": int(n_samples),
+        "trace_labels": [int(v) for v in np.asarray(y_te[:n_samples])],
+        "accuracy": acc,
+        "avg_spikes_per_layer": [float(np.asarray(xs).reshape(
+            n_samples, eval_t, -1).sum(axis=2).mean())] +
+            [float(c) for c in counts],
+        "per_step_counts_sample0": per_step_counts,
+        "layers": layers_meta,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  [{spec.name}] artifacts -> {out_dir} (acc {acc:.3f}, "
+          f"spikes/layer {[round(float(c),1) for c in counts]})")
+
+
+def fig1_firing(out_path: str, seed: int = 0):
+    """Fig. 1: firing-neuron ratio per layer for net600 on MNIST + FMNIST."""
+    result = {}
+    for ds in ("mnist", "fmnist"):
+        spec = model.NETS["net600"]
+        spec = model.NetSpec(**{**spec.__dict__, "dataset": ds})
+        params, acc, counts, _ = train_net(spec, seed=seed, quiet=True)
+        sizes = [600, 600, 600]
+        result[ds] = {
+            "accuracy": acc,
+            "layer_sizes": sizes,
+            "firing_per_layer": [float(c) for c in counts],
+            "firing_ratio": [float(c) / s for c, s in zip(counts, sizes)],
+        }
+        print(f"  [fig1/{ds}] acc {acc:.3f} ratios "
+              f"{[round(float(c)/s, 3) for c, s in zip(counts, sizes)]}")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def fig7_accuracy(out_path: str, seed: int = 0):
+    """Fig. 7a: accuracy vs spike-train length for PCR in {1, 10, 30}.
+
+    One model is trained per PCR (at T=15) and evaluated across T — the
+    train-per-(T,PCR) grid of the paper is collapsed to keep `make artifacts`
+    tractable; the accuracy-vs-T *shape* is produced by eval-time T.
+    """
+    t_values = [4, 6, 8, 10, 15, 20, 25]
+    out = {"t_values": t_values, "series": {}}
+    for pcr in (1, 10, 30):
+        spec = model.with_population(model.NETS["net1"], pcr)
+        params, _, _, _ = train_net(spec, seed=seed, quiet=True)
+        imgs, labels = _dataset_for(spec, 256, seed + 7)
+        accs = []
+        for t in t_values:
+            x = _encode(spec, imgs, t, seed + t)
+            acc, _ = model.eval_batch(params, model.with_t(spec, t),
+                                      jnp.asarray(x), jnp.asarray(labels))
+            accs.append(float(acc))
+        out["series"][f"pop_{pcr}"] = accs
+        print(f"  [fig7/pop_{pcr}] acc vs T: "
+              f"{[round(a, 3) for a in accs]}")
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--nets", default="net1,net2,net3,net4,net5")
+    ap.add_argument("--fig1", action="store_true")
+    ap.add_argument("--fig7", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for name in [n for n in args.nets.split(",") if n]:
+        spec = model.NETS[name]
+        t0 = time.time()
+        params, acc, counts, test_set = train_net(spec, seed=args.seed)
+        dump_artifacts(spec, params, acc, counts, test_set,
+                       os.path.join(args.out, name))
+        print(f"  [{name}] total {time.time()-t0:.1f}s")
+    if args.fig1:
+        fig1_firing(os.path.join(args.out, "fig1_firing.json"), args.seed)
+    if args.fig7:
+        fig7_accuracy(os.path.join(args.out, "fig7_accuracy.json"), args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compile path: hypothesis sweeps
+shapes, dtypes, and LIF constants; every case must match the oracle to
+float tolerance (and bit-exactly for the spike outputs).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lif import lif_step
+from compile.kernels.spike_matmul import spike_matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# LIF kernel
+class TestLifKernel:
+    @settings(**SET)
+    @given(
+        b=st.integers(1, 17),
+        n=st.integers(1, 1200),
+        beta=st.floats(0.0, 0.99),
+        theta=st.floats(0.25, 4.0),
+    )
+    def test_matches_oracle_across_shapes(self, b, n, beta, theta):
+        v = rand(0, (b, n))
+        cur = rand(1, (b, n))
+        bias = rand(2, (n,)) * 0.1
+        v2, s2 = lif_step(v, cur, bias, beta=beta, theta=theta)
+        vr, sr = ref.lif_step_ref(v, cur, bias, beta, theta)
+        np.testing.assert_allclose(v2, vr, rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(s2), np.asarray(sr))
+
+    def test_spikes_are_binary(self):
+        v = rand(3, (4, 300)) * 5
+        v2, s = lif_step(v, rand(4, (4, 300)), jnp.zeros(300), beta=0.9, theta=1.0)
+        assert set(np.unique(np.asarray(s))) <= {0.0, 1.0}
+
+    def test_soft_reset_subtracts_theta(self):
+        v = jnp.zeros((1, 8))
+        cur = jnp.full((1, 8), 2.5)
+        v2, s = lif_step(v, cur, jnp.zeros(8), beta=0.9, theta=1.0)
+        np.testing.assert_allclose(np.asarray(v2), 1.5, rtol=1e-6)
+        assert np.asarray(s).sum() == 8
+
+    def test_subthreshold_never_fires(self):
+        v = jnp.zeros((2, 64))
+        cur = jnp.full((2, 64), 0.3)
+        _, s = lif_step(v, cur, jnp.zeros(64), beta=0.5, theta=1.0)
+        assert np.asarray(s).sum() == 0
+
+    def test_block_boundary_shapes(self):
+        # exactly at / around the (8, 512) BlockSpec tile
+        for b, n in [(8, 512), (9, 513), (7, 511), (16, 1024), (1, 1)]:
+            v = rand(5, (b, n))
+            cur = rand(6, (b, n))
+            bias = rand(7, (n,))
+            v2, s2 = lif_step(v, cur, bias, beta=0.9, theta=1.0)
+            vr, sr = ref.lif_step_ref(v, cur, bias, 0.9, 1.0)
+            np.testing.assert_allclose(v2, vr, rtol=1e-5, atol=1e-5)
+            np.testing.assert_array_equal(np.asarray(s2), np.asarray(sr))
+
+    def test_grad_path_through_train_step(self):
+        # the surrogate (train path) must produce finite nonzero grads
+        from compile.model import lif_step_train
+
+        def loss(cur):
+            v, s = lif_step_train(jnp.zeros((1, 16)), cur, jnp.zeros(16), 0.9, 1.0)
+            return s.sum()
+
+        g = jax.grad(loss)(jnp.full((1, 16), 0.99))
+        assert np.isfinite(np.asarray(g)).all()
+        assert np.abs(np.asarray(g)).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# Spike-matmul kernel
+class TestSpikeMatmul:
+    @settings(**SET)
+    @given(
+        b=st.integers(1, 9),
+        n_pre=st.integers(1, 900),
+        n_post=st.integers(1, 700),
+        density=st.floats(0.0, 0.6),
+    )
+    def test_matches_oracle_across_shapes(self, b, n_pre, n_post, density):
+        key = jax.random.PRNGKey(n_pre * 7 + n_post)
+        s = (jax.random.uniform(key, (b, n_pre)) < density).astype(jnp.float32)
+        w = rand(9, (n_pre, n_post))
+        got = spike_matmul(s, w)
+        want = ref.spike_matmul_ref(s, w)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_zero_spikes_zero_current(self):
+        s = jnp.zeros((3, 128))
+        w = rand(10, (128, 64))
+        assert np.abs(np.asarray(spike_matmul(s, w))).max() == 0.0
+
+    def test_single_spike_selects_row(self):
+        s = jnp.zeros((1, 128)).at[0, 17].set(1.0)
+        w = rand(11, (128, 64))
+        np.testing.assert_allclose(
+            np.asarray(spike_matmul(s, w))[0], np.asarray(w)[17], rtol=1e-5, atol=1e-6
+        )
+
+    def test_exact_block_multiple(self):
+        s = (rand(12, (128, 256)) > 0.5).astype(jnp.float32)
+        w = rand(13, (256, 128))
+        np.testing.assert_allclose(
+            spike_matmul(s, w), ref.spike_matmul_ref(s, w), rtol=2e-4, atol=2e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fused step
+@settings(**SET)
+@given(n_pre=st.integers(4, 600), n=st.integers(4, 600))
+def test_fused_layer_step_matches(n_pre, n):
+    key = jax.random.PRNGKey(n_pre + n)
+    s = (jax.random.uniform(key, (2, n_pre)) < 0.15).astype(jnp.float32)
+    w = rand(14, (n_pre, n)) * 0.1
+    bias = rand(15, (n,)) * 0.01
+    v = rand(16, (2, n))
+    cur = spike_matmul(s, w)
+    v2, spk = lif_step(v, cur, bias, beta=0.9, theta=1.0)
+    vr, sr = ref.lif_fused_ref(v, s, w, bias, 0.9, 1.0)
+    np.testing.assert_allclose(v2, vr, rtol=2e-4, atol=2e-4)
+    # spikes may differ only where the membrane is within float tolerance of
+    # theta; for these magnitudes that band is empty, so require equality
+    np.testing.assert_array_equal(np.asarray(spk), np.asarray(sr))

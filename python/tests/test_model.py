@@ -1,0 +1,190 @@
+"""Layer-2 tests: SNN model semantics, training step, topology plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def small_spec(**kw):
+    base = dict(
+        name="tiny", dataset="mnist", input_shape=(20,),
+        layers=(model.Dense(12), model.Dense(8)), classes=4, population=2,
+        beta=0.9, theta=1.0, t_steps=5,
+    )
+    base.update(kw)
+    return model.NetSpec(**base)
+
+
+class TestTopology:
+    def test_layer_dims_fc(self):
+        dims = model.layer_dims(small_spec())
+        assert dims == [("dense", (20, 12)), ("dense", (12, 8))]
+
+    def test_layer_dims_conv_chain(self):
+        spec = model.NETS["net5"]
+        dims = model.layer_dims(spec)
+        assert dims[0] == ("conv", (3, 3, 1, 32))
+        assert dims[1] == ("pool", (2,))
+        assert dims[2] == ("conv", (3, 3, 32, 32))
+        # fc input = 32ch x 8x8 after two pools at 32x32 input
+        assert dims[4] == ("dense", (32 * 8 * 8, 512))
+
+    def test_with_population_resizes_output(self):
+        spec = model.with_population(model.NETS["net1"], 10)
+        assert spec.output_neurons == 100
+        assert model.layer_dims(spec)[-1] == ("dense", (500, 100))
+
+    def test_table1_specs_match_paper(self):
+        assert model.layer_dims(model.NETS["net1"]) == [
+            ("dense", (784, 500)), ("dense", (500, 500)), ("dense", (500, 300))]
+        assert model.NETS["net3"].dataset == "fmnist"
+        assert model.NETS["net5"].beta == 0.23
+
+
+class TestForward:
+    def test_output_shapes(self):
+        spec = small_spec()
+        params = model.init_params(jax.random.PRNGKey(0), spec)
+        x = jnp.zeros((3, 5, 20))
+        rates, counts, traces = model.snn_apply(params, spec, x, train=False)
+        assert rates.shape == (3, 4)
+        assert counts.shape == (2,)
+        assert traces is None
+
+    def test_record_returns_all_layer_traces(self):
+        spec = small_spec()
+        params = model.init_params(jax.random.PRNGKey(0), spec)
+        x = (jax.random.uniform(jax.random.PRNGKey(1), (2, 5, 20)) < 0.4).astype(jnp.float32)
+        _, _, traces = model.snn_apply(params, spec, x, train=False, record=True)
+        assert len(traces) == 2
+        assert traces[0].shape == (5, 2, 12)
+        assert traces[1].shape == (5, 2, 8)
+        assert set(np.unique(np.asarray(traces[0]))) <= {0.0, 1.0}
+
+    def test_zero_input_zero_rates_without_bias(self):
+        spec = small_spec()
+        params = model.init_params(jax.random.PRNGKey(0), spec)
+        params = [{"w": p["w"], "b": jnp.zeros_like(p["b"])} for p in params]
+        rates, counts, _ = model.snn_apply(
+            params, spec, jnp.zeros((2, 5, 20)), train=False)
+        assert float(jnp.abs(rates).max()) == 0.0
+        assert float(counts.max()) == 0.0
+
+    def test_pallas_path_equals_jnp_path(self):
+        spec = small_spec()
+        params = model.init_params(jax.random.PRNGKey(0), spec)
+        x = (jax.random.uniform(jax.random.PRNGKey(2), (2, 5, 20)) < 0.3).astype(jnp.float32)
+        r1, c1, _ = model.snn_apply(params, spec, x, train=False, use_pallas=False)
+        r2, c2, _ = model.snn_apply(params, spec, x, train=False, use_pallas=True)
+        np.testing.assert_allclose(r1, r2, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-6)
+
+    def test_train_inference_spikes_agree(self):
+        # surrogate only changes gradients, not the forward spikes
+        spec = small_spec()
+        params = model.init_params(jax.random.PRNGKey(0), spec)
+        x = (jax.random.uniform(jax.random.PRNGKey(3), (2, 5, 20)) < 0.3).astype(jnp.float32)
+        r1, _, _ = model.snn_apply(params, spec, x, train=True)
+        r2, _, _ = model.snn_apply(params, spec, x, train=False)
+        np.testing.assert_allclose(r1, r2, rtol=1e-6)
+
+
+class TestTraining:
+    def test_loss_decreases_on_tiny_problem(self):
+        spec = small_spec(t_steps=6)
+        params = model.init_params(jax.random.PRNGKey(0), spec)
+        opt = model.init_opt(params)
+        imgs = np.zeros((32, 20), np.float32)
+        labels = np.arange(32) % 4
+        for i in range(32):  # one bright region per class
+            imgs[i, labels[i] * 5:(labels[i] + 1) * 5] = 1.0
+        x = jnp.asarray(datasets.rate_encode(imgs, 6).astype(np.float32))
+        y = jnp.asarray(labels.astype(np.int32))
+        first = None
+        for i in range(30):
+            params, opt, loss, acc = model.train_step(params, opt, spec, x, y, 5e-3)
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first, (first, float(loss))
+
+    def test_grads_flow_to_all_layers(self):
+        spec = small_spec()
+        params = model.init_params(jax.random.PRNGKey(0), spec)
+        x = (jax.random.uniform(jax.random.PRNGKey(4), (4, 5, 20)) < 0.4).astype(jnp.float32)
+        y = jnp.array([0, 1, 2, 3])
+        grads = jax.grad(lambda p: model.loss_fn(p, spec, x, y)[0])(params)
+        for g in grads:
+            assert float(jnp.abs(g["w"]).max()) > 0
+
+
+class TestDatasets:
+    def test_mnist_like_deterministic_and_bounded(self):
+        a, la = datasets.mnist_like(16, seed=3)
+        b, lb = datasets.mnist_like(16, seed=3)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(la, lb)
+        assert a.shape == (16, 28, 28)
+        assert a.min() >= 0.0 and a.max() <= 1.0
+        assert set(la) <= set(range(10))
+
+    def test_fmnist_like_classes_differ(self):
+        imgs, labels = datasets.fmnist_like(64, seed=1)
+        assert imgs.shape == (64, 28, 28)
+        by_class = {}
+        for img, y in zip(imgs, labels):
+            by_class.setdefault(int(y), img)
+        # different classes produce visibly different silhouettes
+        keys = sorted(by_class)[:2]
+        assert np.abs(by_class[keys[0]] - by_class[keys[1]]).mean() > 0.01
+
+    def test_rate_encode_statistics(self):
+        imgs = np.full((4, 10), 0.3, np.float32)
+        sp = datasets.rate_encode(imgs, 500, seed=0)
+        assert sp.shape == (4, 500, 10)
+        assert abs(sp.mean() - 0.3) < 0.02
+
+    def test_dvs_like_shapes_and_sparsity(self):
+        ev, labels = datasets.dvs_like(2, size=64, t=10, seed=0)
+        assert ev.shape == (2, 10, 64, 64)
+        density = ev.mean()
+        assert 0.0005 < density < 0.2, density
+        assert set(labels) <= set(range(11))
+
+
+class TestQuantization:
+    def test_high_bits_lossless_shape(self):
+        spec = small_spec()
+        params = model.init_params(jax.random.PRNGKey(0), spec)
+        q = model.quantize_params(params, 32)
+        assert q is params  # identity at full precision
+
+    def test_low_bits_reduce_distinct_values(self):
+        spec = small_spec()
+        params = model.init_params(jax.random.PRNGKey(0), spec)
+        q = model.quantize_params(params, 4)
+        uniq = np.unique(np.asarray(q[0]["w"]))
+        assert len(uniq) <= 16, len(uniq)
+
+    def test_quantized_model_still_classifies(self):
+        # 8-bit weights should barely move the decision rates
+        spec = small_spec()
+        params = model.init_params(jax.random.PRNGKey(0), spec)
+        x = (jax.random.uniform(jax.random.PRNGKey(5), (4, 5, 20)) < 0.4).astype(jnp.float32)
+        r32, _, _ = model.snn_apply(params, spec, x, train=False)
+        r8, _, _ = model.snn_apply(model.quantize_params(params, 8), spec, x, train=False)
+        assert np.abs(np.asarray(r32) - np.asarray(r8)).max() < 0.25
+
+    def test_quantization_error_monotone_in_bits(self):
+        spec = small_spec()
+        params = model.init_params(jax.random.PRNGKey(0), spec)
+        w = np.asarray(params[0]["w"])
+        errs = []
+        for bits in (4, 8, 16):
+            qw = np.asarray(model.quantize_params(params, bits)[0]["w"])
+            errs.append(np.abs(qw - w).mean())
+        assert errs[0] > errs[1] > errs[2], errs

@@ -1,0 +1,93 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!   A1  PENC chunk width (the paper's <=100-bit practicality bound)
+//!   A2  memory blocks per layer (port contention vs area)
+//!   A3  layer-wise pipelining on/off (serial vs pipelined latency)
+//!   A4  sparsity-aware vs sparsity-oblivious execution
+//!   A5  weight quantization width vs BRAM footprint
+//!   A6  static vs dynamic (future-work) neuron allocation
+//!
+//! Run: `cargo bench --bench ablations`
+
+use snn_dse::baselines::oblivious_latency;
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::data::ActivityModel;
+use snn_dse::dse::{evaluate, EvalMode};
+use snn_dse::resources::estimate;
+use snn_dse::sim::{compare_static_dynamic, CostModel, NetworkSim};
+use snn_dse::snn::table1_net;
+use snn_dse::util::{commas, kfmt, rng::Rng};
+
+fn main() {
+    let costs = CostModel::default();
+    let net = table1_net("net1");
+
+    println!("== A1: PENC chunk width (net1, LHR (4,4,4)) ==");
+    for width in [16, 32, 64, 100] {
+        let mut hw = HwConfig::with_lhr(vec![4, 4, 4]);
+        hw.penc_width = width;
+        let p = evaluate(&net, &hw, &EvalMode::Activity { seed: 42 }, &costs);
+        println!("  width {width:3}: {:>9} cycles  {:>8} LUT",
+            commas(p.cycles), kfmt(p.resources.lut));
+    }
+
+    println!("\n== A2: memory blocks per layer (net1, LHR (4,4,4)) ==");
+    for blocks in [1usize, 8, 32, 0] {
+        let mut hw = HwConfig::with_lhr(vec![4, 4, 4]);
+        hw.mem_blocks = vec![blocks; 3];
+        let p = evaluate(&net, &hw, &EvalMode::Activity { seed: 42 }, &costs);
+        println!("  blocks {:>4}: {:>10} cycles  {:>6} BRAM36",
+            if blocks == 0 { "auto".into() } else { blocks.to_string() },
+            commas(p.cycles), p.resources.bram_36k as u64);
+    }
+
+    println!("\n== A3: pipelining win (per network, fully parallel) ==");
+    for name in ["net1", "net2", "net3", "net4", "net5"] {
+        let n = table1_net(name);
+        let hw = HwConfig::fully_parallel(n.parametric_layers().len());
+        let p = evaluate(&n, &hw, &EvalMode::Activity { seed: 42 }, &costs);
+        println!("  {name}: pipelined {:>11}  serial {:>12}  win x{:.2}",
+            commas(p.cycles), commas(p.serial_cycles),
+            p.serial_cycles as f64 / p.cycles as f64);
+    }
+
+    println!("\n== A4: sparsity-aware vs oblivious (fully parallel) ==");
+    for name in ["net1", "net2", "net3", "net4"] {
+        let n = table1_net(name);
+        let hw = HwConfig::fully_parallel(n.parametric_layers().len());
+        let sparse = evaluate(&n, &hw, &EvalMode::Activity { seed: 42 }, &costs);
+        let dense = oblivious_latency(&n, &hw, &costs);
+        println!("  {name}: sparse {:>10}  oblivious {:>12}  speedup x{:.1}",
+            commas(sparse.cycles), commas(dense.total_cycles),
+            dense.total_cycles as f64 / sparse.cycles as f64);
+    }
+
+    println!("\n== A5: weight quantization vs BRAM (net3, LHR (8,2,4)) ==");
+    for bits in [32usize, 16, 8, 4] {
+        let mut hw = HwConfig::with_lhr(vec![8, 2, 4]);
+        hw.weight_bits = bits;
+        let cfg = ExperimentConfig::new(table1_net("net3"), hw).unwrap();
+        let est = estimate(&cfg);
+        println!("  {bits:2}-bit weights: {:>6} BRAM36  {:>8} LUT",
+            est.total.bram_36k as u64, kfmt(est.total.lut));
+    }
+
+    println!("\n== A6: static vs dynamic allocation (net1, NU budget sweep) ==");
+    let model = ActivityModel::for_net(&net);
+    for budget in [16usize, 64, 256] {
+        let mut rng = Rng::new(42);
+        let activity = model.sample(net.t_steps, &mut rng);
+        let r = compare_static_dynamic(&net, &activity, budget, &costs);
+        println!("  budget {budget:4}: static {:>10}  dynamic {:>10}  x{:.3}",
+            commas(r.static_cycles), commas(r.dynamic_cycles), r.speedup());
+    }
+
+    // A3 companion: verify the functional path agrees on the win
+    let cfg = ExperimentConfig::new(net.clone(), HwConfig::with_lhr(vec![1, 1, 1])).unwrap();
+    let mut sim = NetworkSim::with_random_weights(&cfg, 3, costs);
+    let mut rng = Rng::new(9);
+    let input = snn_dse::sim::random_spike_train(784, 25, 0.12, &mut rng);
+    let r = sim.run(&input);
+    println!("\n[functional cross-check] net1 pipelined {} serial {} (win x{:.2})",
+        commas(r.total_cycles), commas(r.serial_cycles),
+        r.serial_cycles as f64 / r.total_cycles as f64);
+}

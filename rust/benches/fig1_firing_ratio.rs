@@ -1,0 +1,47 @@
+//! Bench: regenerate Fig. 1 (firing-neuron ratio per layer, 784-600-600-600
+//! on MNIST + FMNIST) from the trained artifacts, cross-checked against the
+//! functional simulator, and time the functional simulation throughput.
+//!
+//! Run: `cargo bench --bench fig1_firing_ratio` (after `make artifacts`)
+
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::runtime::NetArtifacts;
+use snn_dse::sim::{CostModel, NetworkSim};
+use snn_dse::util::json::Json;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() {
+    match Json::parse_file(Path::new("artifacts/fig1_firing.json")) {
+        Ok(j) => {
+            println!("Fig. 1 — ratio of firing neurons to layer size (784-600-600-600):");
+            for ds in ["mnist", "fmnist"] {
+                let e = j.at(ds);
+                println!("  {ds:6} acc {:5.1}%  ratios {:?}  (static/firing {:?})",
+                    e.at("accuracy").as_f64().unwrap_or(0.0) * 100.0,
+                    e.at("firing_ratio").f64_vec().iter().map(|r| (r * 1000.0).round() / 1000.0).collect::<Vec<_>>(),
+                    e.at("firing_ratio").f64_vec().iter().map(|r| (10.0 / r).round() / 10.0).collect::<Vec<_>>());
+            }
+            println!("  paper: MNIST static/firing 2.4 -> 3.4 -> 10 (declining with depth)\n");
+        }
+        Err(_) => println!("artifacts/fig1_firing.json missing — run `make artifacts`\n"),
+    }
+    // functional-simulation throughput on trained net1 (used as the perf
+    // baseline for EXPERIMENTS.md §Perf)
+    if let Ok(art) = NetArtifacts::load(Path::new("artifacts/net1")) {
+        let mut net = art.net.clone();
+        net.t_steps = art.trace_t;
+        let cfg = ExperimentConfig::new(net, HwConfig::fully_parallel(3)).unwrap();
+        let mut sim = NetworkSim::new(&cfg, art.weights.clone(), CostModel::default());
+        let iters = 20;
+        let t0 = Instant::now();
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            sim.reset();
+            acc += sim.run(&art.traces[0].input).total_cycles;
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        println!("[bench] functional sim net1 (T=25): {:.2} ms/inference ({} simulated cycles, {:.0} Mcycle/s)",
+            dt * 1e3, acc / iters, acc as f64 / iters as f64 / dt / 1e6);
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate Fig. 6 — the latency-LUT trend across the LHR design
+//! space for every Table-I topology. Sweeps a power-of-two LHR lattice per
+//! network (capped), prints the ASCII scatter + Pareto frontier, dumps
+//! `fig6.csv`, and times the sweep (the paper's core "rapid DSE" claim).
+//!
+//! Run: `cargo bench --bench fig6_latency_lut` (env CAP=128 THREADS=8)
+
+use snn_dse::dse::{self};
+use snn_dse::sim::CostModel;
+use snn_dse::snn::{table1_net, TABLE1_NETS};
+use std::time::Instant;
+
+fn main() {
+    let cap: usize = std::env::var("CAP").ok().and_then(|v| v.parse().ok()).unwrap_or(128);
+    let threads: usize = std::env::var("THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(8);
+    let mut all = Vec::new();
+    let t_all = Instant::now();
+    for name in TABLE1_NETS {
+        let net = table1_net(name);
+        let configs = dse::enumerate_capped(&net, 32, cap);
+        let t0 = Instant::now();
+        let points = dse::sweep(&net, &configs, 42, &CostModel::default(), threads);
+        let dt = t0.elapsed();
+        println!("{}", dse::report::fig6_ascii(name, &points, 72, 16));
+        let front = dse::pareto_front(&points);
+        println!("  {} configs in {:.1} ms ({:.2} ms/config), Pareto front {} points",
+            configs.len(), dt.as_secs_f64() * 1e3,
+            dt.as_secs_f64() * 1e3 / configs.len() as f64, front.len());
+        if let Some(k) = dse::knee_point(&points) {
+            println!("  knee: {} ({} cycles, {:.0} LUT)\n",
+                points[k].label, points[k].cycles, points[k].resources.lut);
+        }
+        all.push((name.to_string(), points));
+    }
+    std::fs::write("fig6.csv", dse::report::fig6_csv(&all)).expect("write fig6.csv");
+    let n: usize = all.iter().map(|(_, p)| p.len()).sum();
+    println!("[bench] fig6: {} design points across 5 networks in {:.2} s -> fig6.csv",
+        n, t_all.elapsed().as_secs_f64());
+}

@@ -1,0 +1,56 @@
+//! Bench: regenerate Fig. 7 — (a) accuracy vs spike-train length from the
+//! Python training-sweep artifact, (b) hardware latency vs T for population
+//! ratios {1, 10, 30} from the cycle-accurate simulator.
+//!
+//! Run: `cargo bench --bench fig7_sweep`
+
+use snn_dse::config::HwConfig;
+use snn_dse::dse::{evaluate, report, EvalMode};
+use snn_dse::sim::CostModel;
+use snn_dse::snn::{table1_net, Layer};
+use snn_dse::util::json::Json;
+use std::time::Instant;
+
+fn main() {
+    let t_values = [4usize, 6, 8, 10, 15, 20, 25];
+    let pops = [1usize, 10, 30];
+    let t0 = Instant::now();
+    let mut series = Vec::new();
+    for &pop in &pops {
+        let mut lat = Vec::new();
+        for &t in &t_values {
+            let mut net = table1_net("net1");
+            net.population = pop;
+            net.t_steps = t;
+            let out = net.layers.len() - 1;
+            if let Layer::Fc { n, .. } = &mut net.layers[out] {
+                *n = net.classes * pop;
+            }
+            let mut lhr = vec![1; net.parametric_layers().len()];
+            *lhr.last_mut().unwrap() = pop; // one hardware neuron per class
+            let p = evaluate(&net, &HwConfig::with_lhr(lhr),
+                &EvalMode::Activity { seed: 42 }, &CostModel::default());
+            lat.push(p.cycles);
+        }
+        series.push((format!("TW_pop_{pop}"), lat));
+    }
+    println!("Fig. 7b — latency (cycles) vs spike-train length, net-1:");
+    println!("{}", report::fig7b_table(&t_values, &series));
+    println!("paper anchors: best-accuracy latency 29,008 cycles (TW_pop_30 @ T=15);");
+    println!("ours @ (pop_30, T=15): {} cycles\n",
+        snn_dse::util::commas(series[2].1[4]));
+    match Json::parse_file(std::path::Path::new("artifacts/fig7_accuracy.json")) {
+        Ok(j) => {
+            println!("Fig. 7a — accuracy vs T (from the JAX training sweep):");
+            println!("  T: {:?}", j.at("t_values").usize_vec());
+            for pop in pops {
+                let k = format!("pop_{pop}");
+                println!("  {k}: {:?}",
+                    j.at("series").at(&k).f64_vec().iter().map(|a| (a * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+            }
+        }
+        Err(_) => println!("Fig. 7a accuracy series not built — run `make fig7`"),
+    }
+    println!("\n[bench] fig7 sweep ({} points) in {:.1} ms",
+        t_values.len() * pops.len(), t0.elapsed().as_secs_f64() * 1e3);
+}

@@ -1,0 +1,90 @@
+//! Microbenchmarks of the simulator hot paths — the profile targets of the
+//! EXPERIMENTS.md §Perf pass. Times (a) PENC compression, (b) FC layer
+//! step, (c) CONV layer step, (d) full pipelined inference, at realistic
+//! activity levels, reporting ns/op and derived throughput.
+//!
+//! Run: `cargo bench --bench sim_microbench`
+
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::sim::{random_spike_train, CostModel, LayerSim, LayerWeights, NetworkSim, Penc};
+use snn_dse::snn::{table1_net, BitVec, Layer};
+use snn_dse::util::rng::Rng;
+use std::hint::black_box;
+use std::time::Instant;
+
+fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters.min(3) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("  {name:<44} {:>10.2} us/op", per * 1e6);
+    per
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+    println!("[sim_microbench]");
+
+    // (a) PENC compression of a 784-bit train at Fig-1-like density
+    let bits = BitVec::from_bools(
+        &(0..784).map(|_| rng.bernoulli(0.12)).collect::<Vec<_>>());
+    let penc = Penc::new(64);
+    let costs = CostModel::default();
+    let mut buf = Vec::new();
+    time("penc.compress 784b @12% density", 20_000, || {
+        black_box(penc.compress(black_box(&bits), &costs, &mut buf));
+    });
+
+    // (b) FC layer step: 784 -> 500, ~95 spikes
+    let mut fc = LayerSim::new(0, Layer::Fc { n_pre: 784, n: 500 }, 1, 0, 64,
+        0.9, 1.0,
+        LayerWeights::Fc {
+            w: (0..784 * 500).map(|_| (rng.normal() * 0.05) as f32).collect(),
+            b: vec![0.0; 500],
+        }, costs.clone());
+    let train = random_spike_train(784, 1, 0.12, &mut rng);
+    time("fc_layer.step 784->500 @95 spikes", 5_000, || {
+        black_box(fc.step(black_box(&train[0])));
+    });
+
+    // (c) CONV layer step: 32ch 64x64, k=3, ~200 spikes
+    let mut conv = LayerSim::new(0,
+        Layer::Conv { in_ch: 32, out_ch: 32, kernel: 3, height: 64, width: 64 },
+        1, 0, 64, 0.23, 1.0,
+        LayerWeights::Conv {
+            w: (0..9 * 32 * 32).map(|_| (rng.normal() * 0.05) as f32).collect(),
+            b: vec![0.0; 32],
+        }, costs.clone());
+    let ctrain = random_spike_train(32 * 64 * 64, 1, 200.0 / (32.0 * 64.0 * 64.0), &mut rng);
+    time("conv_layer.step 32ch 64x64 @~200 spikes", 200, || {
+        black_box(conv.step(black_box(&ctrain[0])));
+    });
+
+    // (d) full net-1 functional inference (T=25)
+    let net = table1_net("net1");
+    let cfg = ExperimentConfig::new(net, HwConfig::with_lhr(vec![1, 1, 1])).unwrap();
+    let mut sim = NetworkSim::with_random_weights(&cfg, 3, costs.clone());
+    let input = random_spike_train(784, 25, 0.12, &mut rng);
+    let per = time("net1 functional inference T=25", 100, || {
+        sim.reset();
+        black_box(sim.run(black_box(&input)));
+    });
+    println!("  => {:.0} inferences/s functional", 1.0 / per);
+
+    // (e) activity-driven net-5 (the heavy Table-I row)
+    let net5 = table1_net("net5");
+    let cfg5 = ExperimentConfig::new(net5.clone(), HwConfig::with_lhr(vec![1, 1, 8, 32, 1])).unwrap();
+    let model = snn_dse::data::ActivityModel::for_net(&net5);
+    let activity = model.sample(124, &mut rng);
+    let mut sim5 = NetworkSim::with_random_weights(&cfg5, 3, costs);
+    let per5 = time("net5 activity-driven inference T=124", 200, || {
+        sim5.reset();
+        black_box(sim5.run_activity(black_box(&activity)));
+    });
+    println!("  => {:.0} net5 configs/s activity-driven", 1.0 / per5);
+}

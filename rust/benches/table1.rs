@@ -1,0 +1,38 @@
+//! Bench: regenerate the paper's Table I (all five networks, all TW rows)
+//! and time the full evaluation — the end-to-end DSE throughput metric.
+//!
+//! Run: `cargo bench --bench table1` (optionally NETS=net1,net3)
+
+use snn_dse::config::HwConfig;
+use snn_dse::dse::{self, table1_lhr_sets};
+use snn_dse::runtime::NetArtifacts;
+use snn_dse::sim::CostModel;
+use snn_dse::snn::table1_net;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() {
+    let nets: Vec<String> = std::env::var("NETS")
+        .map(|v| v.split(',').map(String::from).collect())
+        .unwrap_or_else(|_| {
+            ["net1", "net2", "net3", "net4", "net5"].iter().map(|s| s.to_string()).collect()
+        });
+    let mut total_cfgs = 0usize;
+    let t_all = Instant::now();
+    for name in &nets {
+        let net = table1_net(name);
+        let configs: Vec<HwConfig> = table1_lhr_sets(name).into_iter().map(HwConfig::with_lhr).collect();
+        total_cfgs += configs.len();
+        let t0 = Instant::now();
+        let points = dse::sweep(&net, &configs, 42, &CostModel::default(), configs.len());
+        let dt = t0.elapsed();
+        let acc = NetArtifacts::load(Path::new("artifacts").join(name).as_path())
+            .ok()
+            .map(|a| a.accuracy);
+        println!("{}\n", dse::report::table1_block(name, &points, acc));
+        println!("[bench] {name}: {} configs evaluated in {:.1} ms ({:.2} ms/config)\n",
+            configs.len(), dt.as_secs_f64() * 1e3, dt.as_secs_f64() * 1e3 / configs.len() as f64);
+    }
+    println!("[bench] TOTAL: {} configurations across {} networks in {:.2} s",
+        total_cfgs, nets.len(), t_all.elapsed().as_secs_f64());
+}

@@ -1,0 +1,240 @@
+//! Hardware generator (paper §IV "Architecture Generation Phase"):
+//! configuration -> structural netlist.
+//!
+//! Mirrors the paper's flow: per layer it instantiates an Event Control
+//! Unit (state machine + chunked PENC + shift-register array), the
+//! LHR-determined number of Neural Units (each parameterized with its
+//! `base_addr` / `neural_size`), the memory blocks with mapping logic, and
+//! a top-level wrapper that couples layers through spike-train channels.
+//! The instance counts here are, by construction, exactly what the
+//! resource estimator prices — `rust/tests/` asserts that agreement.
+
+use crate::config::ExperimentConfig;
+use crate::resources::estimator::MAX_PARALLEL_PENC_CHUNKS;
+use crate::sim::memory::MemoryUnit;
+use crate::sim::neural_unit::NuMap;
+use crate::snn::Layer;
+use crate::arch::netlist::{Instance, Netlist};
+use std::collections::BTreeMap;
+
+fn params(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+    pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+}
+
+fn conns(pairs: &[(&str, String)]) -> BTreeMap<String, String> {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+}
+
+/// Generate the full accelerator netlist for a configuration.
+pub fn generate(cfg: &ExperimentConfig) -> Netlist {
+    let mut nl = Netlist::new(format!("snn_top_{}", cfg.net.name));
+    // input spike channel into layer 0
+    let mut upstream = nl.add_net("spikes_input", cfg.net.input_bits);
+    let mut upstream_valid = nl.add_net("spikes_input_valid", 1);
+    let mut k = 0usize; // parametric index
+
+    for (li, layer) in cfg.net.layers.iter().enumerate() {
+        let out_bits = layer.output_bits();
+        let out_net = nl.add_net(format!("spikes_l{li}"), out_bits);
+        let out_valid = nl.add_net(format!("spikes_l{li}_valid"), 1);
+
+        match layer {
+            Layer::Pool {
+                ch,
+                size,
+                height,
+                width,
+            } => {
+                nl.add_instance(Instance {
+                    name: format!("pool{li}"),
+                    module: "or_pool".into(),
+                    params: params(&[
+                        ("CHANNELS", *ch as i64),
+                        ("POOL", *size as i64),
+                        ("HEIGHT", *height as i64),
+                        ("WIDTH", *width as i64),
+                    ]),
+                    connections: conns(&[
+                        ("spikes_in", upstream.clone()),
+                        ("valid_in", upstream_valid.clone()),
+                        ("spikes_out", out_net.clone()),
+                        ("valid_out", out_valid.clone()),
+                    ]),
+                });
+            }
+            _ => {
+                let lhr = cfg.hw.lhr[k];
+                let blocks_cfg = cfg.hw.mem_blocks.get(k).copied().unwrap_or(0);
+                k += 1;
+                let logical = layer.logical_units();
+                let nu = NuMap::from_lhr(logical, lhr);
+                let in_bits = layer.input_bits();
+                let row_words = match layer {
+                    Layer::Fc { n_pre, .. } => *n_pre,
+                    Layer::Conv { in_ch, kernel, .. } => kernel * kernel * in_ch,
+                    Layer::Pool { .. } => unreachable!(),
+                };
+                let mem = MemoryUnit::new(blocks_cfg, nu.units, row_words, logical);
+
+                // -- ECU: FSM + PENC array + shift register ------------------
+                let addr_bits = (usize::BITS - (in_bits.max(2) - 1).leading_zeros()) as usize;
+                let shift_net = nl.add_net(format!("l{li}_shift_addr"), addr_bits);
+                let accum_en = nl.add_net(format!("l{li}_accum_en"), 1);
+                let activ_en = nl.add_net(format!("l{li}_activ_en"), 1);
+                let chunks = in_bits.div_ceil(cfg.hw.penc_width);
+                nl.add_instance(Instance {
+                    name: format!("ecu{li}"),
+                    module: if matches!(layer, Layer::Conv { .. }) {
+                        "event_control_conv".into()
+                    } else {
+                        "event_control_fc".into()
+                    },
+                    params: params(&[
+                        ("IN_BITS", in_bits as i64),
+                        ("PENC_WIDTH", cfg.hw.penc_width as i64),
+                        ("PENC_CHUNKS", chunks.min(MAX_PARALLEL_PENC_CHUNKS) as i64),
+                        ("SERIAL_CHUNK_PASSES",
+                            chunks.div_ceil(MAX_PARALLEL_PENC_CHUNKS) as i64),
+                        ("SHIFT_DEPTH",
+                            crate::resources::estimator::shift_depth(in_bits) as i64),
+                    ]),
+                    connections: conns(&[
+                        ("spikes_in", upstream.clone()),
+                        ("valid_in", upstream_valid.clone()),
+                        ("shifted_spike_addr", shift_net.clone()),
+                        ("accumulation_en", accum_en.clone()),
+                        ("activation_en", activ_en.clone()),
+                        ("valid_out", out_valid.clone()),
+                    ]),
+                });
+
+                // -- Neural units with base_addr / neural_size ----------------
+                let rd_data = nl.add_net(format!("l{li}_mem_rdata"), 32);
+                let rd_en = nl.add_net(format!("l{li}_mem_ren"), 1);
+                for u in 0..nu.units {
+                    let (base, size) = nu.range(u);
+                    nl.add_instance(Instance {
+                        name: format!("nu_l{li}_{u}"),
+                        module: if matches!(layer, Layer::Conv { .. }) {
+                            "neural_unit_conv".into()
+                        } else {
+                            "neural_unit_fc".into()
+                        },
+                        params: params(&[
+                            ("BASE_ADDR", base as i64),
+                            ("NEURAL_SIZE", size as i64),
+                            ("BETA_Q16", (cfg.net.beta as f64 * 65536.0) as i64),
+                            ("THETA_Q16", (cfg.net.theta as f64 * 65536.0) as i64),
+                        ]),
+                        connections: conns(&[
+                            ("shifted_spike_addr", shift_net.clone()),
+                            ("accumulation_en", accum_en.clone()),
+                            ("activation_en", activ_en.clone()),
+                            ("read_data", rd_data.clone()),
+                            ("read_en", rd_en.clone()),
+                            ("spike_out", out_net.clone()),
+                        ]),
+                    });
+                }
+
+                // -- Memory blocks -------------------------------------------
+                for b in 0..mem.n_blocks {
+                    nl.add_instance(Instance {
+                        name: format!("mem_l{li}_{b}"),
+                        module: "synapse_mem_block".into(),
+                        params: params(&[
+                            ("DEPTH", mem.block_depth() as i64),
+                            ("NEURONS_PER_BLOCK", mem.neurons_per_block() as i64),
+                        ]),
+                        connections: conns(&[
+                            ("read_data", rd_data.clone()),
+                            ("read_en", rd_en.clone()),
+                        ]),
+                    });
+                }
+            }
+        }
+        upstream = out_net;
+        upstream_valid = out_valid;
+    }
+    nl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, HwConfig};
+    use crate::snn::table1_net;
+
+    fn gen(net: &str, lhr: Vec<usize>) -> Netlist {
+        let cfg = ExperimentConfig::new(table1_net(net), HwConfig::with_lhr(lhr)).unwrap();
+        generate(&cfg)
+    }
+
+    #[test]
+    fn net1_fully_parallel_instance_counts() {
+        let nl = gen("net1", vec![1, 1, 1]);
+        assert!(nl.check().is_ok());
+        // one NU per logical neuron: 500 + 500 + 300
+        assert_eq!(nl.count_of("neural_unit_fc"), 1300);
+        assert_eq!(nl.count_of("event_control_fc"), 3);
+        assert_eq!(nl.count_of("synapse_mem_block"), 1300); // auto: 1/NU
+    }
+
+    #[test]
+    fn lhr_reduces_units() {
+        let nl = gen("net1", vec![4, 8, 8]);
+        assert_eq!(nl.count_of("neural_unit_fc"), 125 + 63 + 38);
+    }
+
+    #[test]
+    fn conv_net_uses_conv_modules() {
+        let nl = gen("net5", vec![1, 1, 8, 32, 1]);
+        assert!(nl.check().is_ok());
+        assert_eq!(nl.count_of("event_control_conv"), 2);
+        assert_eq!(nl.count_of("neural_unit_conv"), 64); // 32 + 32 channels
+        assert_eq!(nl.count_of("or_pool"), 2);
+        assert_eq!(nl.count_of("event_control_fc"), 3);
+    }
+
+    #[test]
+    fn nu_parameters_partition_address_space() {
+        let nl = gen("net1", vec![4, 4, 4]);
+        let mut covered = vec![false; 500];
+        for i in &nl.instances {
+            if i.module == "neural_unit_fc" && i.name.starts_with("nu_l0_") {
+                let base = i.params["BASE_ADDR"] as usize;
+                let size = i.params["NEURAL_SIZE"] as usize;
+                for x in base..base + size {
+                    assert!(!covered[x], "neuron {x} double-mapped");
+                    covered[x] = true;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "layer-0 neurons not fully covered");
+    }
+
+    #[test]
+    fn verilog_emits_and_mentions_all_layers() {
+        let nl = gen("net2", vec![1, 1, 1, 1]);
+        let v = nl.to_verilog_stub();
+        for li in 0..4 {
+            assert!(v.contains(&format!("spikes_l{li}")), "missing layer {li} net");
+        }
+        assert!(v.contains("module snn_top_net2"));
+    }
+
+    #[test]
+    fn generator_matches_estimator_unit_counts() {
+        // the netlist and the resource estimator must agree on NU counts
+        let cfg = ExperimentConfig::new(
+            table1_net("net3"),
+            HwConfig::with_lhr(vec![8, 2, 4]),
+        )
+        .unwrap();
+        let nl = generate(&cfg);
+        let est = crate::resources::estimate(&cfg);
+        let est_units: usize = est.per_layer.iter().map(|l| l.units).sum();
+        assert_eq!(nl.count_of("neural_unit_fc"), est_units);
+    }
+}

@@ -1,0 +1,9 @@
+//! Hardware generator: configuration -> structural netlist -> SystemVerilog
+//! stub (the paper's "Architecture Generation Phase"). The instance tree
+//! produced here is the ground truth the resource estimator prices.
+
+pub mod generator;
+pub mod netlist;
+
+pub use generator::generate;
+pub use netlist::{Dir, Instance, Net, Netlist, Port};

@@ -1,0 +1,256 @@
+//! Baselines: (a) published numbers of the prior accelerators Table I
+//! compares against, and (b) a sparsity-oblivious execution model of *our*
+//! hardware (no PENC compression — every neuron integrates every
+//! pre-synaptic input each step), used for the paper's "64% energy
+//! reduction vs the sparsity-oblivious baseline" claim and ablations.
+
+use crate::config::{ExperimentConfig, HwConfig};
+use crate::sim::costs::CostModel;
+use crate::sim::stats::{LayerStats, PhaseCycles, SimResult};
+use crate::snn::{Layer, NetDef};
+
+/// Published comparison row (from the paper's Table I).
+#[derive(Debug, Clone)]
+pub struct PriorWork {
+    pub net: &'static str,
+    pub citation: &'static str,
+    pub device: &'static str,
+    pub lut: f64,
+    pub reg: f64,
+    pub cycles: u64,
+    pub energy_mj: Option<f64>,
+    pub accuracy: f64,
+}
+
+/// The five baselines of Table I.
+pub fn prior_works() -> Vec<PriorWork> {
+    vec![
+        PriorWork {
+            net: "net1",
+            citation: "[12] Fang et al., ICCAD'20",
+            device: "Zynq US+",
+            lut: 124_600.0,
+            reg: 185_200.0,
+            cycles: 65_000,
+            energy_mj: Some(2.34),
+            accuracy: 98.96,
+        },
+        PriorWork {
+            net: "net2",
+            citation: "[11] Abderrahmane et al., Neural Networks'20",
+            device: "Cyclone V",
+            lut: 22_800.0,
+            reg: 9_300.0,
+            cycles: 1_660_000, // 1,660K cycles (serial layers)
+            energy_mj: None,
+            accuracy: 98.96,
+        },
+        PriorWork {
+            net: "net3",
+            citation: "[33] Liu et al., TCAS-I'22 (FPGA-NHAP)",
+            device: "Kintex-7",
+            lut: 124_600.0,
+            reg: 185_200.0,
+            cycles: 1_600_000,
+            energy_mj: Some(2.23),
+            accuracy: 86.97,
+        },
+        PriorWork {
+            net: "net4",
+            citation: "[34] Ye et al., TCAD'22",
+            device: "Kintex-7",
+            lut: 13_700.0,
+            reg: 12_400.0,
+            cycles: 1_562_000,
+            energy_mj: None,
+            accuracy: 85.38,
+        },
+        PriorWork {
+            net: "net5",
+            citation: "[35] Di Mauro et al., DATE'22 (SNE)",
+            device: "22nm ASIC",
+            lut: f64::NAN,
+            reg: f64::NAN,
+            cycles: 6_044_000,
+            energy_mj: Some(0.17),
+            accuracy: 92.42,
+        },
+    ]
+}
+
+pub fn prior_for(net: &str) -> PriorWork {
+    prior_works()
+        .into_iter()
+        .find(|p| p.net == net)
+        .unwrap_or_else(|| panic!("no prior work for '{net}'"))
+}
+
+/// Sparsity-oblivious latency model: the same LHR-mapped hardware but
+/// without spike compression — the accumulate phase walks *all* n_pre
+/// inputs for every assigned neuron, every time step, regardless of spike
+/// activity. (This is how a dense, activity-blind mapping executes; cf.
+/// prior works with fixed dense schedules.)
+pub fn oblivious_latency(net: &NetDef, hw: &HwConfig, costs: &CostModel) -> SimResult {
+    let cfg = ExperimentConfig::new(net.clone(), hw.clone()).expect("invalid config");
+    let mut finish: Vec<u64> = vec![0; net.layers.len()];
+    let mut per_layer: Vec<LayerStats> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| LayerStats::new(format!("{}{}", l.kind_str(), i)))
+        .collect();
+    let mut serial = 0u64;
+    let mut k = 0usize;
+    let mut per_step = Vec::with_capacity(net.layers.len());
+    for layer in net.layers.iter() {
+        let lhr = if layer.is_parametric() {
+            let v = cfg.hw.lhr[k];
+            k += 1;
+            v
+        } else {
+            1
+        };
+        let nu = crate::sim::NuMap::from_lhr(layer.logical_units().max(1), lhr);
+        let c: u64 = match layer {
+            Layer::Fc { n_pre, .. } => {
+                // all n_pre inputs accumulated serially per assigned neuron
+                *n_pre as u64 * nu.per_unit() as u64 * costs.fc_accum
+                    + nu.per_unit() as u64 * costs.act_fc
+                    + costs.phase_overhead
+            }
+            Layer::Conv {
+                in_ch,
+                kernel,
+                height,
+                width,
+                ..
+            } => {
+                // dense conv: every input position convolved
+                (*in_ch * height * width) as u64
+                    * (kernel * kernel) as u64
+                    * nu.per_unit() as u64
+                    * costs.conv_rmw
+                    + (height * width) as u64 * nu.per_unit() as u64 * costs.act_conv
+                    + costs.phase_overhead
+            }
+            Layer::Pool {
+                ch, height, width, ..
+            } => (*ch * height * width) as u64 * costs.pool_per_spike + costs.phase_overhead,
+        };
+        per_step.push(c);
+    }
+    for _t in 0..net.t_steps {
+        let mut prev = 0u64;
+        for (l, &c) in per_step.iter().enumerate() {
+            serial += c;
+            finish[l] = finish[l].max(prev) + c;
+            prev = finish[l];
+            let phases = PhaseCycles {
+                compress: 0,
+                accumulate: c.saturating_sub(1),
+                activate: 1,
+                overhead: 0,
+            };
+            // dense accumulate touches every weight
+            per_layer[l].add_step(&phases, 0, 0);
+            per_layer[l].weight_reads += match &net.layers[l] {
+                Layer::Fc { n_pre, n } => (*n_pre * *n) as u64,
+                Layer::Conv {
+                    in_ch,
+                    out_ch,
+                    kernel,
+                    height,
+                    width,
+                } => (*in_ch * height * width * kernel * kernel * out_ch) as u64,
+                Layer::Pool { .. } => 0,
+            };
+            per_layer[l].accum_ops = per_layer[l].weight_reads;
+        }
+    }
+    SimResult {
+        total_cycles: finish.last().copied().unwrap_or(0),
+        serial_cycles: serial,
+        per_layer,
+        t_steps: net.t_steps,
+        output_counts: Vec::new(),
+        predicted_class: None,
+    }
+}
+
+/// The three fixed schemes of Abderrahmane et al. [11] expressed as LHR
+/// vectors for an FC network: fully parallel, time-multiplexed (one NU per
+/// layer), and hybrid (first hidden layer parallel, rest serial).
+pub fn abderrahmane_schemes(net: &NetDef) -> Vec<(&'static str, HwConfig)> {
+    let sizes: Vec<usize> = net
+        .parametric_layers()
+        .iter()
+        .map(|&i| net.layers[i].logical_units())
+        .collect();
+    let fully: Vec<usize> = sizes.iter().map(|_| 1).collect();
+    let serial: Vec<usize> = sizes.to_vec(); // LHR = layer size -> 1 NU
+    let mut hybrid = sizes.to_vec();
+    hybrid[0] = 1;
+    vec![
+        ("fully-parallel", HwConfig::with_lhr(fully)),
+        ("time-multiplexed", HwConfig::with_lhr(serial)),
+        ("hybrid", HwConfig::with_lhr(hybrid)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ActivityModel;
+    use crate::sim::NetworkSim;
+    use crate::snn::table1_net;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prior_works_cover_all_nets() {
+        for n in crate::snn::TABLE1_NETS {
+            let p = prior_for(n);
+            assert!(p.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn oblivious_slower_than_sparsity_aware() {
+        // The whole point of the paper: sparsity-aware execution beats the
+        // dense schedule at equal LHR.
+        let net = table1_net("net1");
+        let hw = HwConfig::with_lhr(vec![1, 1, 1]);
+        let costs = CostModel::default();
+        let dense = oblivious_latency(&net, &hw, &costs);
+        let cfg = ExperimentConfig::new(net.clone(), hw).unwrap();
+        let mut sim = NetworkSim::with_random_weights(&cfg, 1, costs);
+        let model = ActivityModel::for_net(&net);
+        let mut rng = Rng::new(1);
+        let sparse = sim.run_activity(&model.sample(net.t_steps, &mut rng));
+        assert!(
+            dense.total_cycles > 2 * sparse.total_cycles,
+            "dense {} vs sparse {}",
+            dense.total_cycles,
+            sparse.total_cycles
+        );
+    }
+
+    #[test]
+    fn abderrahmane_schemes_validate() {
+        let net = table1_net("net2");
+        for (name, hw) in abderrahmane_schemes(&net) {
+            hw.validate(&net).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn hybrid_between_parallel_and_serial() {
+        let net = table1_net("net2");
+        let costs = CostModel::default();
+        let lat = |hw: &HwConfig| oblivious_latency(&net, hw, &costs).total_cycles;
+        let schemes = abderrahmane_schemes(&net);
+        let full = lat(&schemes[0].1);
+        let serial = lat(&schemes[1].1);
+        let hybrid = lat(&schemes[2].1);
+        assert!(full < hybrid && hybrid <= serial);
+    }
+}

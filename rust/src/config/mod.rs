@@ -1,0 +1,233 @@
+//! Configuration system — the paper's "Configuration Phase" (§IV).
+//!
+//! A `HwConfig` carries the hardware knobs the DSE explores: the per-layer
+//! logical-to-hardware ratio (LHR), memory-block allocation, PENC chunk
+//! width and clock frequency. `ExperimentConfig` couples a network with a
+//! hardware config plus simulation options, and can be loaded from a JSON
+//! file (mirroring the paper's configuration file in Fig. 2).
+
+use crate::snn::{table1_net, NetDef};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Hardware knobs for one accelerator instance.
+#[derive(Debug, Clone)]
+pub struct HwConfig {
+    /// Logical-to-hardware neuron ratio per *parametric* layer
+    /// (neurons/NU for FC, output-channels/NU for CONV).
+    pub lhr: Vec<usize>,
+    /// Memory blocks per parametric layer. 0 = auto (one block per NU).
+    pub mem_blocks: Vec<usize>,
+    /// Priority-encoder chunk width in bits (paper: ideally <= 100).
+    pub penc_width: usize,
+    /// Clock frequency in Hz (paper synthesizes at 100 MHz).
+    pub clock_hz: f64,
+    /// Synapse weight width in bits (paper §III observes quantization as a
+    /// memory-dominant model parameter; 32 = unquantized f32).
+    pub weight_bits: usize,
+}
+
+impl HwConfig {
+    /// All-ones LHR (fully parallel — one hardware neuron per logical
+    /// neuron), the paper's highest-resource baseline mapping.
+    pub fn fully_parallel(n_layers: usize) -> Self {
+        HwConfig {
+            lhr: vec![1; n_layers],
+            mem_blocks: vec![0; n_layers],
+            penc_width: 64,
+            clock_hz: 100e6,
+            weight_bits: 32,
+        }
+    }
+
+    pub fn with_lhr(lhr: Vec<usize>) -> Self {
+        let n = lhr.len();
+        HwConfig {
+            lhr,
+            mem_blocks: vec![0; n],
+            penc_width: 64,
+            clock_hz: 100e6,
+            weight_bits: 32,
+        }
+    }
+
+    /// Short label like "(4,8,8)" used in the paper's TW-(...) rows.
+    pub fn label(&self) -> String {
+        format!(
+            "({})",
+            self.lhr
+                .iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        )
+    }
+
+    /// Validate against a network: LHR entry per parametric layer, each
+    /// ratio >= 1 and no larger than the layer's logical unit count.
+    pub fn validate(&self, net: &NetDef) -> Result<()> {
+        let param_layers = net.parametric_layers();
+        if self.lhr.len() != param_layers.len() {
+            bail!(
+                "network '{}' has {} parametric layers but LHR {} has {} entries",
+                net.name,
+                param_layers.len(),
+                self.label(),
+                self.lhr.len()
+            );
+        }
+        for (k, &li) in param_layers.iter().enumerate() {
+            let units = net.layers[li].logical_units();
+            if self.lhr[k] == 0 {
+                bail!("LHR[{k}] must be >= 1");
+            }
+            if self.lhr[k] > units {
+                bail!(
+                    "LHR[{k}]={} exceeds layer {li}'s logical units ({units})",
+                    self.lhr[k]
+                );
+            }
+        }
+        if self.penc_width == 0 || self.penc_width > 100 {
+            bail!(
+                "penc_width={} outside the practical FPGA range 1..=100 (paper §V-B)",
+                self.penc_width
+            );
+        }
+        if !self.mem_blocks.is_empty() && self.mem_blocks.len() != self.lhr.len() {
+            bail!("mem_blocks must be empty or match lhr length");
+        }
+        if !(1..=32).contains(&self.weight_bits) {
+            bail!("weight_bits={} outside 1..=32", self.weight_bits);
+        }
+        Ok(())
+    }
+}
+
+/// Simulation options (verbosity & trace collection — paper's config file).
+#[derive(Debug, Clone, Default)]
+pub struct SimOptions {
+    /// Record per-step per-layer cycle/spike breakdowns.
+    pub record_per_step: bool,
+    /// Verbosity: 0 silent, 1 per-inference, 2 per-step, 3 per-phase.
+    pub verbosity: u8,
+}
+
+/// A complete experiment: network x hardware x simulation options.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub net: NetDef,
+    pub hw: HwConfig,
+    pub sim: SimOptions,
+}
+
+impl ExperimentConfig {
+    pub fn new(net: NetDef, hw: HwConfig) -> Result<Self> {
+        hw.validate(&net)?;
+        Ok(ExperimentConfig {
+            net,
+            hw,
+            sim: SimOptions::default(),
+        })
+    }
+
+    /// Load from a JSON configuration file:
+    ///
+    /// ```json
+    /// { "net": "net1", "lhr": [4, 8, 8], "penc_width": 64,
+    ///   "clock_mhz": 100, "t_steps": 25, "mem_blocks": [0, 0, 0] }
+    /// ```
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let j = Json::parse_file(path)?;
+        let net_name = j
+            .at("net")
+            .as_str()
+            .context("config: missing \"net\" (net1..net5)")?;
+        let mut net = table1_net(net_name);
+        if let Some(t) = j.at("t_steps").as_usize() {
+            net.t_steps = t;
+        }
+        if let Some(p) = j.at("population").as_usize() {
+            let out_idx = net.layers.len() - 1;
+            if let crate::snn::Layer::Fc { n, .. } = &mut net.layers[out_idx] {
+                *n = net.classes * p;
+            }
+            net.population = p;
+        }
+        let n_param = net.parametric_layers().len();
+        let lhr = match j.get("lhr") {
+            Some(v) => v.usize_vec(),
+            None => vec![1; n_param],
+        };
+        let mem_blocks = match j.get("mem_blocks") {
+            Some(v) => v.usize_vec(),
+            None => vec![0; n_param],
+        };
+        let hw = HwConfig {
+            lhr,
+            mem_blocks,
+            penc_width: j.at("penc_width").as_usize().unwrap_or(64),
+            clock_hz: j.at("clock_mhz").as_f64().unwrap_or(100.0) * 1e6,
+            weight_bits: j.at("weight_bits").as_usize().unwrap_or(32),
+        };
+        let sim = SimOptions {
+            record_per_step: j.at("record_per_step").as_bool().unwrap_or(false),
+            verbosity: j.at("verbosity").as_usize().unwrap_or(0) as u8,
+        };
+        hw.validate(&net)?;
+        Ok(ExperimentConfig { net, hw, sim })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::table1_net;
+
+    #[test]
+    fn fully_parallel_validates() {
+        let net = table1_net("net1");
+        let hw = HwConfig::fully_parallel(net.parametric_layers().len());
+        assert!(hw.validate(&net).is_ok());
+        assert_eq!(hw.label(), "(1,1,1)");
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let net = table1_net("net1");
+        let hw = HwConfig::with_lhr(vec![1, 1]);
+        assert!(hw.validate(&net).is_err());
+    }
+
+    #[test]
+    fn oversized_lhr_rejected() {
+        let net = table1_net("net1");
+        let hw = HwConfig::with_lhr(vec![1024, 1, 1]);
+        assert!(hw.validate(&net).is_err());
+    }
+
+    #[test]
+    fn penc_width_bounds() {
+        let net = table1_net("net1");
+        let mut hw = HwConfig::fully_parallel(3);
+        hw.penc_width = 128; // beyond the paper's practical bound
+        assert!(hw.validate(&net).is_err());
+    }
+
+    #[test]
+    fn from_json_file() {
+        let dir = std::env::temp_dir().join("snn_dse_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(
+            &path,
+            r#"{"net": "net1", "lhr": [4, 8, 8], "t_steps": 15, "population": 10}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.hw.lhr, vec![4, 8, 8]);
+        assert_eq!(cfg.net.t_steps, 15);
+        assert_eq!(cfg.net.output_neurons(), 100);
+    }
+}

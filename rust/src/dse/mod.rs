@@ -1,0 +1,14 @@
+//! Design space exploration engine: space enumeration, parallel evaluation,
+//! Pareto pruning, and paper-shaped report emission (§IV's Evaluation
+//! Phase with the automation the paper's Makefile flow provides).
+
+pub mod auto;
+pub mod pareto;
+pub mod report;
+pub mod runner;
+pub mod space;
+
+pub use auto::{auto_search, Constraints, SearchResult};
+pub use pareto::{dominates, knee_point, pareto_front};
+pub use runner::{evaluate, sweep, DsePoint, EvalMode};
+pub use space::{enumerate_capped, enumerate_lhr, lhr_choices, table1_lhr_sets};

@@ -1,0 +1,95 @@
+//! Pareto-frontier extraction over (latency, LUT, energy) — the
+//! "Evaluation Phase" pruning that picks the paper's sweet spots.
+
+use crate::dse::runner::DsePoint;
+
+/// True if `a` dominates `b` (no worse in all objectives, better in one)
+/// over (cycles, LUT, energy).
+pub fn dominates(a: &DsePoint, b: &DsePoint) -> bool {
+    let le = a.cycles <= b.cycles
+        && a.resources.lut <= b.resources.lut
+        && a.energy_mj <= b.energy_mj;
+    let lt = a.cycles < b.cycles
+        || a.resources.lut < b.resources.lut
+        || a.energy_mj < b.energy_mj;
+    le && lt
+}
+
+/// Indices of the non-dominated points, in input order.
+pub fn pareto_front(points: &[DsePoint]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| !points.iter().enumerate().any(|(j, p)| j != i && dominates(p, &points[i])))
+        .collect()
+}
+
+/// Pick the knee point: the frontier point minimizing the normalized
+/// product latency x LUT (a balanced-efficiency heuristic).
+pub fn knee_point(points: &[DsePoint]) -> Option<usize> {
+    let front = pareto_front(points);
+    front
+        .into_iter()
+        .min_by(|&a, &b| {
+            let score = |i: usize| {
+                let p = &points[i];
+                (p.cycles as f64).ln() + p.resources.lut.ln()
+            };
+            score(a).partial_cmp(&score(b)).unwrap()
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::Resources;
+
+    fn pt(cycles: u64, lut: f64, e: f64) -> DsePoint {
+        DsePoint {
+            net: "t".into(),
+            label: format!("{cycles}/{lut}"),
+            lhr: vec![1],
+            cycles,
+            serial_cycles: cycles,
+            resources: Resources {
+                lut,
+                ..Default::default()
+            },
+            energy_mj: e,
+            latency_us: cycles as f64,
+            layer_activity: vec![],
+        }
+    }
+
+    #[test]
+    fn dominated_points_removed() {
+        let pts = vec![
+            pt(100, 50.0, 1.0),  // frontier
+            pt(200, 20.0, 0.5),  // frontier
+            pt(250, 60.0, 1.5),  // dominated by 0
+            pt(50, 100.0, 2.0),  // frontier (fastest)
+        ];
+        let f = pareto_front(&pts);
+        assert_eq!(f, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn identical_points_both_kept() {
+        let pts = vec![pt(10, 10.0, 1.0), pt(10, 10.0, 1.0)];
+        assert_eq!(pareto_front(&pts).len(), 2);
+    }
+
+    #[test]
+    fn knee_balances_objectives() {
+        let pts = vec![
+            pt(1000, 10.0, 1.0),  // ln sum ~ 9.2
+            pt(100, 80.0, 1.0),   // knee: ln sum ~ 9.0
+            pt(10, 10_000.0, 1.0), // ln sum ~ 11.5
+        ];
+        assert_eq!(knee_point(&pts), Some(1));
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(pareto_front(&[]).is_empty());
+        assert_eq!(knee_point(&[]), None);
+    }
+}

@@ -1,0 +1,235 @@
+//! Report emitters: render DSE results in the exact shapes of the paper's
+//! Table I, Fig. 6 (latency-LUT trend) and Fig. 7b (T x PCR latency),
+//! as markdown tables and CSV.
+
+use crate::baselines::prior_for;
+use crate::dse::runner::DsePoint;
+use crate::util::{kfmt, markdown_table};
+
+/// One rendered Table-I block (one network).
+pub fn table1_block(net_name: &str, points: &[DsePoint], accuracy: Option<f64>) -> String {
+    let prior = prior_for(net_name);
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    rows.push(vec![
+        prior.citation.to_string(),
+        prior.device.to_string(),
+        if prior.lut.is_nan() {
+            "—".into()
+        } else {
+            format!("{}/{}", kfmt(prior.lut), kfmt(prior.reg))
+        },
+        crate::util::commas(prior.cycles),
+        "—".into(),
+        prior
+            .energy_mj
+            .map(|e| format!("{e:.2} mJ"))
+            .unwrap_or_else(|| "—".into()),
+        format!("{:.2}", prior.accuracy),
+    ]);
+    for p in points {
+        let (lut_i, lat_i) = p.improvement_vs(prior.lut, prior.cycles);
+        rows.push(vec![
+            format!("TW-{}", p.label),
+            "Virtex US+ (modeled)".into(),
+            format!("{}/{}", kfmt(p.resources.lut), kfmt(p.resources.reg)),
+            crate::util::commas(p.cycles),
+            if prior.lut.is_nan() {
+                format!("—, x{lat_i:.2}")
+            } else {
+                format!("x{lut_i:.2}, x{lat_i:.2}")
+            },
+            format!("{:.2} mJ", p.energy_mj),
+            accuracy
+                .map(|a| format!("{:.2}", a * 100.0))
+                .unwrap_or_else(|| "—".into()),
+        ]);
+    }
+    format!(
+        "### {} — {}\n\n{}",
+        net_name,
+        topology_of(net_name),
+        markdown_table(
+            &[
+                "Work",
+                "Target Device",
+                "Est. Area LUT/REG",
+                "Cycles/Image",
+                "LUT-Lat. Impr.",
+                "Energy/Image",
+                "Acc. [%]",
+            ],
+            &rows,
+        )
+    )
+}
+
+fn topology_of(net_name: &str) -> String {
+    crate::snn::table1_net(net_name).topology_string()
+}
+
+/// CSV for Fig. 6: one line per configuration `net,label,lut,cycles`.
+pub fn fig6_csv(points_per_net: &[(String, Vec<DsePoint>)]) -> String {
+    let mut out = String::from("net,lhr,lut,reg,cycles,energy_mj\n");
+    for (net, pts) in points_per_net {
+        for p in pts {
+            out.push_str(&format!(
+                "{},\"{}\",{:.0},{:.0},{},{:.4}\n",
+                net, p.label, p.resources.lut, p.resources.reg, p.cycles, p.energy_mj
+            ));
+        }
+    }
+    out
+}
+
+/// ASCII scatter of the latency-LUT trend (Fig. 6 in terminal form):
+/// latency on x (log bins), LUT on y.
+pub fn fig6_ascii(net: &str, points: &[DsePoint], width: usize, height: usize) -> String {
+    if points.is_empty() {
+        return String::new();
+    }
+    let (min_c, max_c) = points
+        .iter()
+        .fold((u64::MAX, 0u64), |(lo, hi), p| (lo.min(p.cycles), hi.max(p.cycles)));
+    let (min_l, max_l) = points.iter().fold((f64::MAX, 0f64), |(lo, hi), p| {
+        (lo.min(p.resources.lut), hi.max(p.resources.lut))
+    });
+    let mut grid = vec![vec![' '; width]; height];
+    let lx = |c: u64| -> usize {
+        if max_c == min_c {
+            0
+        } else {
+            (((c as f64).ln() - (min_c as f64).ln()) / ((max_c as f64).ln() - (min_c as f64).ln())
+                * (width - 1) as f64)
+                .round() as usize
+        }
+    };
+    let ly = |l: f64| -> usize {
+        if (max_l - min_l).abs() < 1e-9 {
+            0
+        } else {
+            height - 1 - ((l.ln() - min_l.ln()) / (max_l.ln() - min_l.ln()) * (height - 1) as f64)
+                .round() as usize
+        }
+    };
+    for p in points {
+        grid[ly(p.resources.lut)][lx(p.cycles)] = 'o';
+    }
+    let mut s = format!(
+        "{net}: LUT (log, {} .. {}) vs cycles (log, {} .. {})\n",
+        kfmt(min_l),
+        kfmt(max_l),
+        crate::util::commas(min_c),
+        crate::util::commas(max_c)
+    );
+    for row in grid {
+        s.push('|');
+        s.extend(row);
+        s.push('\n');
+    }
+    s.push_str(&format!("+{}\n", "-".repeat(width)));
+    s
+}
+
+/// Fig. 7b-style table: latency vs spike-train length per population size.
+pub fn fig7b_table(t_values: &[usize], series: &[(String, Vec<u64>)]) -> String {
+    let mut headers: Vec<String> = vec!["T".into()];
+    headers.extend(series.iter().map(|(n, _)| n.clone()));
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let rows: Vec<Vec<String>> = t_values
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let mut row = vec![t.to_string()];
+            row.extend(series.iter().map(|(_, v)| crate::util::commas(v[i])));
+            row
+        })
+        .collect();
+    markdown_table(&header_refs, &rows)
+}
+
+/// Summary of the headline §VI-B claims derived from evaluated points.
+pub fn claims_summary(net: &str, points: &[DsePoint]) -> String {
+    let prior = prior_for(net);
+    let mut out = String::new();
+    for p in points {
+        let (lut_i, lat_i) = p.improvement_vs(prior.lut, prior.cycles);
+        let lut_red = (1.0 - lut_i) * 100.0;
+        let speedup = 1.0 / lat_i;
+        out.push_str(&format!(
+            "{} TW-{}: LUT {}{:.0}% vs {}, speedup x{:.2}\n",
+            net,
+            p.label,
+            if lut_red >= 0.0 { "-" } else { "+" },
+            lut_red.abs(),
+            prior.citation,
+            speedup
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+    use crate::dse::runner::{evaluate, EvalMode};
+    use crate::sim::CostModel;
+    use crate::snn::table1_net;
+
+    fn points() -> Vec<DsePoint> {
+        let net = table1_net("net1");
+        vec![
+            evaluate(
+                &net,
+                &HwConfig::with_lhr(vec![1, 1, 1]),
+                &EvalMode::Activity { seed: 1 },
+                &CostModel::default(),
+            ),
+            evaluate(
+                &net,
+                &HwConfig::with_lhr(vec![4, 8, 8]),
+                &EvalMode::Activity { seed: 1 },
+                &CostModel::default(),
+            ),
+        ]
+    }
+
+    #[test]
+    fn table1_block_contains_rows() {
+        let s = table1_block("net1", &points(), Some(0.78));
+        assert!(s.contains("TW-(1,1,1)"));
+        assert!(s.contains("TW-(4,8,8)"));
+        assert!(s.contains("Fang"));
+        assert!(s.contains("784-500-500-300"));
+    }
+
+    #[test]
+    fn fig6_csv_has_header_and_rows() {
+        let s = fig6_csv(&[("net1".into(), points())]);
+        assert!(s.starts_with("net,lhr,"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn fig6_ascii_renders() {
+        let s = fig6_ascii("net1", &points(), 40, 10);
+        assert!(s.contains('o'));
+        assert!(s.lines().count() >= 11);
+    }
+
+    #[test]
+    fn fig7b_table_shape() {
+        let s = fig7b_table(
+            &[4, 8],
+            &[("pop_1".into(), vec![100, 200]), ("pop_30".into(), vec![150, 400])],
+        );
+        assert!(s.contains("pop_1"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn claims_positive_reduction_formats() {
+        let s = claims_summary("net1", &points());
+        assert!(s.contains("speedup"));
+    }
+}

@@ -1,0 +1,195 @@
+//! DSE evaluation engine: configure -> simulate -> estimate -> score.
+//!
+//! One `DsePoint` per hardware configuration carries everything Table I
+//! reports (cycles, LUT/REG/BRAM, energy). Sweeps fan out across OS threads
+//! (`std::thread::scope`); the simulator is deterministic per seed so
+//! parallel and serial sweeps produce identical points.
+
+use crate::config::{ExperimentConfig, HwConfig};
+use crate::data::ActivityModel;
+use crate::resources::{estimate, EnergyModel, Resources};
+use crate::sim::{CostModel, LayerWeights, NetworkSim, SimResult};
+use crate::snn::{NetDef, SpikeTrain};
+use crate::util::rng::Rng;
+
+/// How to drive the simulator for each configuration.
+pub enum EvalMode<'a> {
+    /// Calibrated per-layer activity (fast; exact for cycle accounting).
+    Activity { seed: u64 },
+    /// Full functional simulation with explicit weights + input train.
+    Functional {
+        weights: &'a [LayerWeights],
+        input: &'a SpikeTrain,
+    },
+    /// Functional with random weights and a rate-coded random input.
+    RandomFunctional { seed: u64, input_rate: f64 },
+}
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub net: String,
+    pub label: String,
+    pub lhr: Vec<usize>,
+    pub cycles: u64,
+    pub serial_cycles: u64,
+    pub resources: Resources,
+    pub energy_mj: f64,
+    pub latency_us: f64,
+    /// Mean output spikes/step per layer (activity snapshot).
+    pub layer_activity: Vec<f64>,
+}
+
+impl DsePoint {
+    /// The paper's LUT-Latency improvement metric vs a baseline:
+    /// (TW_lut / base_lut, TW_cycles / base_cycles).
+    pub fn improvement_vs(&self, base_lut: f64, base_cycles: u64) -> (f64, f64) {
+        (
+            self.resources.lut / base_lut,
+            self.cycles as f64 / base_cycles as f64,
+        )
+    }
+}
+
+/// Evaluate one configuration.
+pub fn evaluate(net: &NetDef, hw: &HwConfig, mode: &EvalMode, costs: &CostModel) -> DsePoint {
+    let cfg = ExperimentConfig::new(net.clone(), hw.clone()).expect("invalid config");
+    let sim_result: SimResult = match mode {
+        EvalMode::Activity { seed } => {
+            let model = ActivityModel::for_net(net);
+            let mut rng = Rng::new(*seed);
+            let activity = model.sample(net.t_steps, &mut rng);
+            let mut sim = NetworkSim::cost_only(&cfg, costs.clone());
+            sim.run_activity(&activity)
+        }
+        EvalMode::Functional { weights, input } => {
+            let mut sim = NetworkSim::new(&cfg, weights.to_vec(), costs.clone());
+            sim.run(input)
+        }
+        EvalMode::RandomFunctional { seed, input_rate } => {
+            let mut sim = NetworkSim::with_random_weights(&cfg, *seed, costs.clone());
+            let mut rng = Rng::new(seed.wrapping_add(1));
+            let input = crate::sim::random_spike_train(
+                net.input_bits,
+                net.t_steps,
+                *input_rate,
+                &mut rng,
+            );
+            sim.run(&input)
+        }
+    };
+    let resources = estimate(&cfg).total;
+    let energy = EnergyModel::default().inference_energy(&resources, &sim_result, cfg.hw.clock_hz);
+    DsePoint {
+        net: net.name.clone(),
+        label: hw.label(),
+        lhr: hw.lhr.clone(),
+        cycles: sim_result.total_cycles,
+        serial_cycles: sim_result.serial_cycles,
+        resources,
+        energy_mj: energy.total_mj(),
+        latency_us: sim_result.total_cycles as f64 / cfg.hw.clock_hz * 1e6,
+        layer_activity: sim_result.mean_activity(),
+    }
+}
+
+/// Evaluate many configurations across `n_threads` OS threads.
+/// Order of results matches `configs`.
+pub fn sweep(
+    net: &NetDef,
+    configs: &[HwConfig],
+    seed: u64,
+    costs: &CostModel,
+    n_threads: usize,
+) -> Vec<DsePoint> {
+    let n_threads = n_threads.max(1).min(configs.len().max(1));
+    let mut results: Vec<Option<DsePoint>> = vec![None; configs.len()];
+    let chunk = configs.len().div_ceil(n_threads);
+    std::thread::scope(|s| {
+        for (tid, (cfg_chunk, res_chunk)) in configs
+            .chunks(chunk)
+            .zip(results.chunks_mut(chunk))
+            .enumerate()
+        {
+            let costs = costs.clone();
+            s.spawn(move || {
+                for (c, slot) in cfg_chunk.iter().zip(res_chunk.iter_mut()) {
+                    // same seed for every config: identical workload
+                    let _ = tid;
+                    *slot = Some(evaluate(net, c, &EvalMode::Activity { seed }, &costs));
+                }
+            });
+        }
+    });
+    results.into_iter().map(|p| p.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::space::table1_lhr_sets;
+    use crate::snn::table1_net;
+
+    #[test]
+    fn evaluate_produces_consistent_point() {
+        let net = table1_net("net1");
+        let hw = HwConfig::with_lhr(vec![4, 8, 8]);
+        let p = evaluate(&net, &hw, &EvalMode::Activity { seed: 1 }, &CostModel::default());
+        assert_eq!(p.label, "(4,8,8)");
+        assert!(p.cycles > 0);
+        assert!(p.cycles <= p.serial_cycles);
+        assert!(p.resources.lut > 0.0);
+        assert!(p.energy_mj > 0.0);
+        assert!((p.latency_us - p.cycles as f64 / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sweep_matches_serial_evaluation() {
+        let net = table1_net("net1");
+        let configs: Vec<HwConfig> = table1_lhr_sets("net1")
+            .into_iter()
+            .map(HwConfig::with_lhr)
+            .collect();
+        let costs = CostModel::default();
+        let par = sweep(&net, &configs, 42, &costs, 4);
+        for (c, p) in configs.iter().zip(&par) {
+            let q = evaluate(&net, c, &EvalMode::Activity { seed: 42 }, &costs);
+            assert_eq!(p.cycles, q.cycles, "config {}", c.label());
+            assert_eq!(p.resources, q.resources);
+        }
+    }
+
+    #[test]
+    fn lhr_monotone_in_latency_same_workload() {
+        let net = table1_net("net1");
+        let costs = CostModel::default();
+        let p1 = evaluate(
+            &net,
+            &HwConfig::with_lhr(vec![1, 1, 1]),
+            &EvalMode::Activity { seed: 3 },
+            &costs,
+        );
+        let p4 = evaluate(
+            &net,
+            &HwConfig::with_lhr(vec![4, 4, 4]),
+            &EvalMode::Activity { seed: 3 },
+            &costs,
+        );
+        assert!(p4.cycles > p1.cycles);
+        assert!(p4.resources.lut < p1.resources.lut);
+    }
+
+    #[test]
+    fn random_functional_runs_fc_net() {
+        let net = table1_net("net2");
+        let hw = HwConfig::with_lhr(vec![4, 4, 4, 1]);
+        let p = evaluate(
+            &net,
+            &hw,
+            &EvalMode::RandomFunctional { seed: 11, input_rate: 0.12 },
+            &CostModel::default(),
+        );
+        assert!(p.cycles > 0);
+        assert_eq!(p.layer_activity.len(), 4);
+    }
+}

@@ -1,0 +1,152 @@
+//! Design-space enumeration: the LHR lattice the paper sweeps (powers of
+//! two per layer, §VI-B) plus the spike-train-length x population-coding
+//! grid of §VI-C.
+
+use crate::config::HwConfig;
+use crate::snn::NetDef;
+
+/// Power-of-two LHR choices for one layer, capped at the layer size.
+pub fn lhr_choices(logical_units: usize, max_lhr: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut x = 1usize;
+    while x <= max_lhr && x <= logical_units {
+        v.push(x);
+        x *= 2;
+    }
+    if v.is_empty() {
+        v.push(1);
+    }
+    v
+}
+
+/// Full cartesian LHR lattice for a network (can be large: use
+/// `enumerate_capped` for bounded sweeps).
+pub fn enumerate_lhr(net: &NetDef, max_lhr: usize) -> Vec<HwConfig> {
+    let dims: Vec<Vec<usize>> = net
+        .parametric_layers()
+        .iter()
+        .map(|&i| lhr_choices(net.layers[i].logical_units(), max_lhr))
+        .collect();
+    let mut out = Vec::new();
+    let mut idx = vec![0usize; dims.len()];
+    loop {
+        out.push(HwConfig::with_lhr(
+            idx.iter().zip(&dims).map(|(&i, d)| d[i]).collect(),
+        ));
+        // odometer increment
+        let mut k = 0;
+        loop {
+            if k == dims.len() {
+                return out;
+            }
+            idx[k] += 1;
+            if idx[k] < dims[k].len() {
+                break;
+            }
+            idx[k] = 0;
+            k += 1;
+        }
+    }
+}
+
+/// Bounded enumeration: full lattice if it fits in `cap`, otherwise a
+/// deterministic stratified subsample (every ceil(total/cap)-th config).
+pub fn enumerate_capped(net: &NetDef, max_lhr: usize, cap: usize) -> Vec<HwConfig> {
+    let all = enumerate_lhr(net, max_lhr);
+    if all.len() <= cap {
+        return all;
+    }
+    let stride = all.len().div_ceil(cap);
+    all.into_iter().step_by(stride).collect()
+}
+
+/// The exact LHR sets of the paper's Table I (TW rows), per network.
+/// Conv networks (net5) get an implicit LHR 1 for the output layer, which
+/// the paper's 4-tuples leave fixed.
+pub fn table1_lhr_sets(net_name: &str) -> Vec<Vec<usize>> {
+    match net_name {
+        "net1" => vec![
+            vec![1, 1, 1],
+            vec![2, 1, 1],
+            vec![1, 2, 1],
+            vec![4, 4, 4],
+            vec![4, 8, 8],
+        ],
+        "net2" => vec![
+            vec![1, 1, 1, 1],
+            vec![4, 4, 4, 1],
+            vec![4, 4, 8, 1],
+            vec![2, 2, 16, 8],
+            vec![4, 4, 16, 8],
+        ],
+        "net3" => vec![
+            vec![1, 1, 1],
+            vec![2, 1, 1],
+            vec![8, 2, 4],
+            vec![16, 8, 4],
+            vec![32, 32, 8],
+        ],
+        "net4" => vec![
+            vec![1, 1, 1, 1, 1],
+            vec![1, 4, 4, 1, 1],
+            vec![2, 8, 4, 16, 8],
+            vec![4, 2, 8, 8, 64],
+            vec![32, 16, 8, 16, 64],
+        ],
+        "net5" => vec![
+            vec![1, 1, 8, 32, 1],
+            vec![1, 1, 16, 16, 1],
+            vec![1, 1, 32, 32, 1],
+            vec![1, 1, 16, 256, 1],
+            vec![16, 1, 16, 256, 1],
+        ],
+        other => panic!("no Table-I LHR sets for '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::{fc_net, table1_net};
+
+    #[test]
+    fn choices_capped_by_layer() {
+        assert_eq!(lhr_choices(500, 64), vec![1, 2, 4, 8, 16, 32, 64]);
+        assert_eq!(lhr_choices(8, 64), vec![1, 2, 4, 8]);
+        assert_eq!(lhr_choices(1, 64), vec![1]);
+    }
+
+    #[test]
+    fn lattice_size_is_product() {
+        let net = fc_net("t", "mnist", &[64, 16, 8], 4, 2, 0.9, 5);
+        // choices: 16 -> 5 (1..16), 8 -> 4 (1..8) with max 16
+        let cfgs = enumerate_lhr(&net, 16);
+        assert_eq!(cfgs.len(), 5 * 4);
+        // all unique
+        let mut labels: Vec<String> = cfgs.iter().map(|c| c.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 20);
+    }
+
+    #[test]
+    fn capped_enumeration_subsamples() {
+        let net = fc_net("t", "mnist", &[512, 256, 128], 4, 2, 0.9, 5);
+        let full = enumerate_lhr(&net, 64);
+        let capped = enumerate_capped(&net, 64, 10);
+        assert!(full.len() > 10);
+        assert!(capped.len() <= 10 + 1);
+    }
+
+    #[test]
+    fn table1_sets_validate() {
+        for name in ["net1", "net2", "net3", "net4", "net5"] {
+            let net = table1_net(name);
+            for lhr in table1_lhr_sets(name) {
+                HwConfig::with_lhr(lhr.clone())
+                    .validate(&net)
+                    .unwrap_or_else(|e| panic!("{name} {lhr:?}: {e}"));
+            }
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! # snn-dse
+//!
+//! Sparsity-aware application-specific SNN accelerator design space
+//! exploration — a full-system reproduction of Aliyev, Svoboda & Adegbija
+//! (2023) as a three-layer Rust + JAX + Pallas stack. See DESIGN.md for the
+//! architecture mapping and README.md for usage.
+
+pub mod arch;
+pub mod baselines;
+pub mod config;
+pub mod data;
+pub mod dse;
+pub mod resources;
+pub mod runtime;
+pub mod sim;
+pub mod snn;
+pub mod util;
+pub mod validate;

@@ -1,0 +1,371 @@
+//! snn-dse launcher: the paper's single-Makefile DSE flow as a CLI.
+//!
+//! Subcommands:
+//!   simulate     cycle-accurate simulation of one configuration
+//!   resources    FPGA resource + power estimate of one configuration
+//!   dse          LHR sweep with Pareto frontier (Fig. 6 data)
+//!   table1       reproduce the paper's Table I rows
+//!   sweep-t-pcr  spike-train length x population sweep (Fig. 7b)
+//!   validate     spike-to-spike validation vs JAX traces / PJRT HLO
+//!   infer        run the AOT HLO on a trace sample via PJRT
+//!   firing       layer-wise firing-ratio analysis (Fig. 1)
+
+use snn_dse::baselines::oblivious_latency;
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::dse::{self, EvalMode};
+use snn_dse::resources::{estimate, EnergyModel};
+use snn_dse::sim::{CostModel, NetworkSim};
+use snn_dse::snn::table1_net;
+use snn_dse::util::cli::Args;
+use snn_dse::util::{commas, kfmt};
+use snn_dse::{runtime, validate};
+use std::path::PathBuf;
+
+const USAGE: &str = "snn-dse <simulate|resources|dse|table1|sweep-t-pcr|validate|infer|firing|generate|auto|dynamic> [options]
+  common options:
+    --net <net1..net5>          network (default net1)
+    --lhr <a,b,c,...>           per-layer logical-to-hardware ratios
+    --t <steps>                 override spike-train length
+    --artifacts <dir>           artifacts root (default ./artifacts)
+    --seed <n>                  workload seed (default 42)
+  dse options:
+    --max-lhr <n>               lattice bound (default 32)
+    --cap <n>                   max configs (default 256)
+    --threads <n>               worker threads (default 8)
+    --csv <path>                dump swept points as CSV
+  sweep-t-pcr options:
+    --t-values <4,6,...>        spike-train lengths (default 4,6,8,10,15,20,25)
+    --pops <1,10,30>            population sizes";
+
+fn main() {
+    let args = Args::parse_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "simulate" => cmd_simulate(&args),
+        "resources" => cmd_resources(&args),
+        "dse" => cmd_dse(&args),
+        "table1" => cmd_table1(&args),
+        "sweep-t-pcr" => cmd_sweep_t_pcr(&args),
+        "validate" => cmd_validate(&args),
+        "infer" => cmd_infer(&args),
+        "firing" => cmd_firing(&args),
+        "generate" => cmd_generate(&args),
+        "auto" => cmd_auto(&args),
+        "dynamic" => cmd_dynamic(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn net_of(args: &Args) -> snn_dse::snn::NetDef {
+    let mut net = table1_net(args.get_or("net", "net1"));
+    if let Some(t) = args.get("t") {
+        net.t_steps = t.parse().expect("--t expects an integer");
+    }
+    net
+}
+
+fn hw_of(args: &Args, net: &snn_dse::snn::NetDef) -> HwConfig {
+    match args.usize_list("lhr") {
+        Some(lhr) => HwConfig::with_lhr(lhr),
+        None => HwConfig::fully_parallel(net.parametric_layers().len()),
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let net = net_of(args);
+    let hw = hw_of(args, &net);
+    let seed = args.usize_or("seed", 42) as u64;
+    let p = dse::evaluate(&net, &hw, &EvalMode::Activity { seed }, &CostModel::default());
+    println!("network   : {} ({})", net.name, net.topology_string());
+    println!("LHR       : {}", hw.label());
+    println!("latency   : {} cycles ({:.1} us @100MHz)", commas(p.cycles), p.latency_us);
+    println!("serial    : {} cycles (pipelining win x{:.2})",
+        commas(p.serial_cycles), p.serial_cycles as f64 / p.cycles as f64);
+    println!("area      : {} LUT / {} REG / {} BRAM36 / {} DSP",
+        kfmt(p.resources.lut), kfmt(p.resources.reg),
+        p.resources.bram_36k as u64, p.resources.dsp as u64);
+    println!("energy    : {:.3} mJ/inference", p.energy_mj);
+    let dense = oblivious_latency(&net, &hw, &CostModel::default());
+    println!("sparsity-oblivious baseline: {} cycles (x{:.1} slower)",
+        commas(dense.total_cycles), dense.total_cycles as f64 / p.cycles as f64);
+    Ok(())
+}
+
+fn cmd_resources(args: &Args) -> anyhow::Result<()> {
+    let net = net_of(args);
+    let hw = hw_of(args, &net);
+    let cfg = ExperimentConfig::new(net.clone(), hw.clone())?;
+    let est = estimate(&cfg);
+    println!("{} LHR {}:", net.name, hw.label());
+    for l in &est.per_layer {
+        println!("  {:8} units={:5}  LUT {:>9}  REG {:>9}  BRAM {:>5}",
+            l.name, l.units, kfmt(l.resources.lut), kfmt(l.resources.reg),
+            l.resources.bram_36k as u64);
+    }
+    println!("  {:8} {:12}LUT {:>9}  REG {:>9}  BRAM {:>5}  DSP {:>5}",
+        "TOTAL", "", kfmt(est.total.lut), kfmt(est.total.reg),
+        est.total.bram_36k as u64, est.total.dsp as u64);
+    let p = EnergyModel::default().static_power(&est.total);
+    println!("  static+clock power: {:.3} W @100MHz", p);
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> anyhow::Result<()> {
+    let net = net_of(args);
+    let max_lhr = args.usize_or("max-lhr", 32);
+    let cap = args.usize_or("cap", 256);
+    let threads = args.usize_or("threads", 8);
+    let seed = args.usize_or("seed", 42) as u64;
+    let configs = dse::enumerate_capped(&net, max_lhr, cap);
+    eprintln!("sweeping {} configurations on {} threads ...", configs.len(), threads);
+    let t0 = std::time::Instant::now();
+    let points = dse::sweep(&net, &configs, seed, &CostModel::default(), threads);
+    eprintln!("swept in {:.2}s", t0.elapsed().as_secs_f64());
+    let front = dse::pareto_front(&points);
+    println!("{}", dse::report::fig6_ascii(&net.name, &points, 72, 18));
+    println!("Pareto frontier ({} of {} configs):", front.len(), points.len());
+    let mut front_sorted: Vec<usize> = front;
+    front_sorted.sort_by_key(|&i| points[i].cycles);
+    for &i in &front_sorted {
+        let p = &points[i];
+        println!("  {:20} {:>12} cycles  {:>9} LUT  {:.3} mJ",
+            p.label, commas(p.cycles), kfmt(p.resources.lut), p.energy_mj);
+    }
+    if let Some(k) = dse::knee_point(&points) {
+        println!("knee point: {} ({} cycles, {} LUT)",
+            points[k].label, commas(points[k].cycles), kfmt(points[k].resources.lut));
+    }
+    if let Some(out) = args.get("csv") {
+        std::fs::write(out, dse::report::fig6_csv(&[(net.name.clone(), points)]))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> anyhow::Result<()> {
+    let nets: Vec<String> = args.str_list("nets").unwrap_or_else(|| {
+        vec!["net1".into(), "net2".into(), "net3".into(), "net4".into(), "net5".into()]
+    });
+    let seed = args.usize_or("seed", 42) as u64;
+    let art_root = artifacts_dir(args);
+    for name in nets {
+        let net = table1_net(&name);
+        let configs: Vec<HwConfig> = dse::table1_lhr_sets(&name)
+            .into_iter()
+            .map(HwConfig::with_lhr)
+            .collect();
+        let points = dse::sweep(&net, &configs, seed, &CostModel::default(), configs.len());
+        let acc = runtime::NetArtifacts::load(&art_root.join(&name))
+            .ok()
+            .map(|a| a.accuracy);
+        println!("{}\n", dse::report::table1_block(&name, &points, acc));
+    }
+    Ok(())
+}
+
+fn cmd_sweep_t_pcr(args: &Args) -> anyhow::Result<()> {
+    let t_values = args
+        .usize_list("t-values")
+        .unwrap_or_else(|| vec![4, 6, 8, 10, 15, 20, 25]);
+    let pops = args.usize_list("pops").unwrap_or_else(|| vec![1, 10, 30]);
+    let seed = args.usize_or("seed", 42) as u64;
+    let mut series = Vec::new();
+    for pop in &pops {
+        let mut lat = Vec::new();
+        for &t in &t_values {
+            let mut net = table1_net("net1");
+            net.population = *pop;
+            net.t_steps = t;
+            let out_idx = net.layers.len() - 1;
+            if let snn_dse::snn::Layer::Fc { n, .. } = &mut net.layers[out_idx] {
+                *n = net.classes * pop;
+            }
+            // One hardware neuron per class in the output layer: population
+            // coding multiplies the *logical* output neurons, so LHR_out =
+            // pop — the "more shifting iterations" of the paper's §VI-C.
+            let mut lhr = vec![1; net.parametric_layers().len()];
+            *lhr.last_mut().unwrap() = *pop;
+            let hw = HwConfig::with_lhr(lhr);
+            let p = dse::evaluate(&net, &hw, &EvalMode::Activity { seed }, &CostModel::default());
+            lat.push(p.cycles);
+        }
+        series.push((format!("pop_{pop}"), lat));
+    }
+    println!("Latency (cycles) vs spike-train length (Fig. 7b):");
+    println!("{}", dse::report::fig7b_table(&t_values, &series));
+    // Fig. 7a companion: accuracy from the Python sweep artifact, if built.
+    let acc_path = artifacts_dir(args).join("fig7_accuracy.json");
+    if let Ok(j) = snn_dse::util::json::Json::parse_file(&acc_path) {
+        println!("Accuracy vs T (Fig. 7a, from {}):", acc_path.display());
+        for pop in &pops {
+            let key = format!("pop_{pop}");
+            let accs = j.at("series").at(&key).f64_vec();
+            println!("  {key}: {accs:?}");
+        }
+    } else {
+        println!("(run `make fig7` to build the Fig. 7a accuracy series)");
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("net", "net1").to_string();
+    let art = runtime::NetArtifacts::load(&artifacts_dir(args).join(&name))?;
+    let n_param = art.net.parametric_layers().len();
+    let lhr = args.usize_list("lhr").unwrap_or_else(|| vec![1; n_param]);
+    let r = validate::validate_against_traces(&art, &lhr)?;
+    println!("trace validation ({} samples): {}", r.samples,
+        if r.passed() { "PASS (bit-exact)" } else { "FAIL" });
+    for (i, (m, b)) in r.mismatches_per_layer.iter().zip(&r.bits_per_layer).enumerate() {
+        println!("  layer {i}: {m}/{b} mismatched bits");
+    }
+    println!("  sample-0 latency: {} cycles", commas(r.total_cycles_sample0));
+    if !r.passed() {
+        anyhow::bail!("spike-to-spike validation failed");
+    }
+    let hlo = artifacts_dir(args).join(format!("{}_T{}.hlo.txt", name, art.trace_t));
+    if hlo.exists() && !args.flag("no-hlo") {
+        let r2 = validate::validate_against_hlo(&art, &hlo, 0)?;
+        println!("PJRT HLO validation: {}",
+            if r2.passed() { "PASS (bit-exact)" } else { "FAIL" });
+        if !r2.passed() {
+            anyhow::bail!("HLO validation failed");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> anyhow::Result<()> {
+    let name = args.get_or("net", "net1").to_string();
+    let art = runtime::NetArtifacts::load(&artifacts_dir(args).join(&name))?;
+    let hlo = artifacts_dir(args).join(format!("{}_T{}.hlo.txt", name, art.trace_t));
+    let rt = runtime::Runtime::cpu()?;
+    let exe = rt.load_snn(&hlo)?;
+    let sample = args.usize_or("sample", 0);
+    let mut params = Vec::new();
+    for lw in &art.weights {
+        if let snn_dse::sim::LayerWeights::Fc { w, b } = lw {
+            params.push(w.clone());
+            params.push(b.clone());
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let outs = exe.run(&art.traces[sample].input, &params)?;
+    let dt = t0.elapsed();
+    let rates = outs.last().unwrap();
+    let pred = rates
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    println!("sample {sample}: predicted class {pred} (label {}), rates {:?}",
+        art.traces[sample].label,
+        rates.iter().map(|r| (r * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+    println!("PJRT execution: {:.2} ms", dt.as_secs_f64() * 1e3);
+    Ok(())
+}
+
+fn cmd_firing(args: &Args) -> anyhow::Result<()> {
+    // Fig. 1: firing-neuron ratios per layer, from trained traces if
+    // available, plus the Python fig1 artifact.
+    let art_root = artifacts_dir(args);
+    let fig1 = art_root.join("fig1_firing.json");
+    if let Ok(j) = snn_dse::util::json::Json::parse_file(&fig1) {
+        println!("Fig. 1 firing ratios (784-600-600-600, population-coded):");
+        for ds in ["mnist", "fmnist"] {
+            let e = j.at(ds);
+            println!("  {ds}: acc {:.3}, ratio/layer {:?}",
+                e.at("accuracy").as_f64().unwrap_or(f64::NAN),
+                e.at("firing_ratio").f64_vec());
+        }
+    }
+    let name = args.get_or("net", "net1").to_string();
+    if let Ok(art) = runtime::NetArtifacts::load(&art_root.join(&name)) {
+        println!("{} trained activity (spikes/step): {:?}", name,
+            art.avg_spikes_per_layer.iter().map(|x| (x * 10.0).round() / 10.0).collect::<Vec<_>>());
+        let mut net = art.net.clone();
+        net.t_steps = art.trace_t;
+        let cfg = ExperimentConfig::new(
+            net,
+            HwConfig::fully_parallel(art.net.parametric_layers().len()),
+        )?;
+        let mut sim = NetworkSim::new(&cfg, art.weights.clone(), CostModel::default());
+        let r = sim.run(&art.traces[0].input);
+        println!("{} simulated activity (sample 0): {:?}", name,
+            r.mean_activity().iter().map(|x| (x * 10.0).round() / 10.0).collect::<Vec<_>>());
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    // Architecture Generation Phase: emit the structural netlist/RTL stub.
+    let net = net_of(args);
+    let hw = hw_of(args, &net);
+    let cfg = ExperimentConfig::new(net.clone(), hw.clone())?;
+    let nl = snn_dse::arch::generate(&cfg);
+    nl.check().map_err(|e| anyhow::anyhow!(e))?;
+    println!("// generated architecture for {} LHR {}", net.name, hw.label());
+    println!("// component summary:\n{}", nl.summary().lines()
+        .map(|l| format!("//   {l}")).collect::<Vec<_>>().join("\n"));
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, nl.to_verilog_stub())?;
+        println!("// wrote {out}");
+    } else {
+        println!("{}", nl.to_verilog_stub());
+    }
+    Ok(())
+}
+
+fn cmd_auto(args: &Args) -> anyhow::Result<()> {
+    // Constraint-driven automated DSE (Evaluation Phase loop).
+    let net = net_of(args);
+    let constraints = snn_dse::dse::Constraints {
+        max_lut: args.get("max-lut").map(|v| v.parse().expect("--max-lut")),
+        max_cycles: args.get("max-cycles").map(|v| v.parse().expect("--max-cycles")),
+        max_energy_mj: args.get("max-energy").map(|v| v.parse().expect("--max-energy")),
+    };
+    let seed = args.usize_or("seed", 42) as u64;
+    let r = snn_dse::dse::auto_search(&net, &constraints, seed, &CostModel::default());
+    println!("auto DSE on {} ({} iterations):", net.name, r.history.len());
+    for p in &r.history {
+        println!("  {:20} {:>12} cycles  {:>9} LUT  {:.3} mJ",
+            p.label, commas(p.cycles), kfmt(p.resources.lut), p.energy_mj);
+    }
+    println!("{}: {} ({} cycles, {} LUT, {:.3} mJ)",
+        if r.satisfied { "SATISFIED" } else { "NOT SATISFIABLE (frontier)" },
+        r.point.label, commas(r.point.cycles), kfmt(r.point.resources.lut),
+        r.point.energy_mj);
+    Ok(())
+}
+
+fn cmd_dynamic(args: &Args) -> anyhow::Result<()> {
+    // Future-work ablation: run-time sparsity-aware neuron allocation.
+    let net = net_of(args);
+    anyhow::ensure!(net.layers.iter().all(|l|
+        matches!(l, snn_dse::snn::Layer::Fc { .. })),
+        "dynamic allocation ablation covers FC networks (net1..net4)");
+    let budget = args.usize_or("budget", 64);
+    let seed = args.usize_or("seed", 42) as u64;
+    let model = snn_dse::data::ActivityModel::for_net(&net);
+    let mut rng = snn_dse::util::rng::Rng::new(seed);
+    let activity = model.sample(net.t_steps, &mut rng);
+    let r = snn_dse::sim::compare_static_dynamic(
+        &net, &activity, budget, &CostModel::default());
+    println!("dynamic vs static allocation on {} (budget {} NUs):", net.name, budget);
+    println!("  static : {} cycles", commas(r.static_cycles));
+    println!("  dynamic: {} cycles (x{:.3} speedup incl. reconfig cost)",
+        commas(r.dynamic_cycles), r.speedup());
+    Ok(())
+}

@@ -1,0 +1,160 @@
+//! Hardware component cost library (paper §IV "library of hardware
+//! component costs ... obtained by synthesizing the individual hardware
+//! components").
+//!
+//! No FPGA toolchain exists in this environment, so each component carries
+//! an analytical LUT/REG/DSP cost function whose coefficients were fit by
+//! least squares against the 20 FC rows of the paper's Table I (Virtex
+//! UltraScale+ synthesis; see DESIGN.md §Substitutions #1 and
+//! `rust/tests/calibration.rs`). The *structure* (what scales with what) is
+//! from the paper's datapath description; only the constants are fit.
+
+/// Resource vector for one component or aggregate.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Resources {
+    pub lut: f64,
+    pub reg: f64,
+    pub bram_36k: f64,
+    pub dsp: f64,
+}
+
+impl Resources {
+    pub fn add(&mut self, other: Resources) {
+        self.lut += other.lut;
+        self.reg += other.reg;
+        self.bram_36k += other.bram_36k;
+        self.dsp += other.dsp;
+    }
+    pub fn scaled(self, k: f64) -> Resources {
+        Resources {
+            lut: self.lut * k,
+            reg: self.reg * k,
+            bram_36k: self.bram_36k * k,
+            dsp: self.dsp * k,
+        }
+    }
+}
+
+/// Fitted coefficients (least squares over Table-I FC rows): the dominant
+/// term is ~120 LUT per hardware neural unit — re-fitting with per-layer
+/// fixed terms shows the paper's smallest configurations (e.g. net-4
+/// TW-(32,16,8,16,64) = 6.6K LUT for 55 NUs) leave almost no room for
+/// fixed ECU/PENC cost, so those are kept small and the NU coefficient
+/// carries the architecture.
+pub const NU_LUT: f64 = 120.2;
+pub const NU_REG: f64 = 74.0;
+pub const NU_DSP: f64 = 1.0; // beta multiply in the LIF datapath
+
+pub const PENC_CHUNK_LUT: f64 = 26.0;
+pub const PENC_CHUNK_REG: f64 = 12.0;
+
+pub const ECU_FIXED_LUT: f64 = 120.0;
+pub const ECU_FIXED_REG: f64 = 96.0;
+
+/// Shift-register array: depth x address width bits, 1 REG per bit plus
+/// mux LUTs (paper Fig. 4). Depth is sized to the observed max occupancy.
+pub const SHIFT_LUT_PER_BIT: f64 = 0.08;
+pub const SHIFT_REG_PER_BIT: f64 = 1.0;
+
+/// Memory mapping logic per block (address decode + arbitration mux).
+pub const MEM_MAP_LUT_PER_BLOCK: f64 = 3.0;
+pub const MEM_MAP_REG_PER_BLOCK: f64 = 2.0;
+
+/// Conv NU extra cost: 1-D<->2-D address conversion + filter walker
+/// (paper §V-C: "subtracting and adding" converters).
+pub const CONV_NU_EXTRA_LUT: f64 = 210.0;
+pub const CONV_NU_EXTRA_REG: f64 = 340.0;
+
+/// Conv layer line/frame buffering registers per fmap pixel of the input
+/// (explains net-5's large REG counts in Table I).
+pub const CONV_FRAME_REG_PER_PIXEL: f64 = 9.5;
+
+/// Priority encoder for one chunk of `width` bits.
+pub fn penc(width: usize) -> Resources {
+    // A width-w priority encoder is O(w) LUTs with a log-depth tree; the
+    // fitted chunk constant corresponds to the paper's 64-bit chunks.
+    let k = width as f64 / 64.0;
+    Resources {
+        lut: PENC_CHUNK_LUT * k,
+        reg: PENC_CHUNK_REG * k,
+        bram_36k: 0.0,
+        dsp: 0.0,
+    }
+}
+
+/// One hardware neural unit (FC).
+pub fn neural_unit_fc() -> Resources {
+    Resources {
+        lut: NU_LUT,
+        reg: NU_REG,
+        bram_36k: 0.0,
+        dsp: NU_DSP,
+    }
+}
+
+/// One hardware neural unit (CONV): FC datapath + address generation.
+pub fn neural_unit_conv() -> Resources {
+    Resources {
+        lut: NU_LUT + CONV_NU_EXTRA_LUT,
+        reg: NU_REG + CONV_NU_EXTRA_REG,
+        bram_36k: 0.0,
+        dsp: NU_DSP + 1.0, // address multiply
+    }
+}
+
+/// Event control unit fixed logic (state machine, sync handshakes).
+pub fn ecu_fixed() -> Resources {
+    Resources {
+        lut: ECU_FIXED_LUT,
+        reg: ECU_FIXED_REG,
+        bram_36k: 0.0,
+        dsp: 0.0,
+    }
+}
+
+/// Shift-register array of `depth` entries of `addr_bits` each.
+pub fn shift_register(depth: usize, addr_bits: usize) -> Resources {
+    let bits = (depth * addr_bits) as f64;
+    Resources {
+        lut: SHIFT_LUT_PER_BIT * bits,
+        reg: SHIFT_REG_PER_BIT * bits,
+        bram_36k: 0.0,
+        dsp: 0.0,
+    }
+}
+
+/// Memory mapping logic for `blocks` blocks.
+pub fn mem_mapping(blocks: usize) -> Resources {
+    Resources {
+        lut: MEM_MAP_LUT_PER_BLOCK * blocks as f64,
+        reg: MEM_MAP_REG_PER_BLOCK * blocks as f64,
+        bram_36k: 0.0,
+        dsp: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn penc_scales_with_width() {
+        assert!(penc(100).lut > penc(50).lut);
+        assert!((penc(64).lut - PENC_CHUNK_LUT).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conv_nu_heavier_than_fc() {
+        assert!(neural_unit_conv().lut > neural_unit_fc().lut);
+        assert!(neural_unit_conv().reg > neural_unit_fc().reg);
+    }
+
+    #[test]
+    fn resources_add_and_scale() {
+        let mut r = neural_unit_fc();
+        r.add(ecu_fixed());
+        assert!((r.lut - (NU_LUT + ECU_FIXED_LUT)).abs() < 1e-9);
+        let s = r.scaled(2.0);
+        assert!((s.lut - 2.0 * r.lut).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,11 @@
+//! FPGA resource + energy modelling (the paper's component cost library
+//! and Vivado-derived area/power reports, rebuilt analytically — see
+//! DESIGN.md §Substitutions #1).
+
+pub mod energy;
+pub mod estimator;
+pub mod library;
+
+pub use energy::{EnergyBreakdown, EnergyModel};
+pub use estimator::{estimate, LayerEstimate, ResourceEstimate};
+pub use library::Resources;

@@ -1,0 +1,270 @@
+//! Loader for the Python build-path outputs in `artifacts/<net>/`:
+//! `manifest.json` (topology + constants + stats), `weights.bin` (f32 LE)
+//! and `trace.bin` (u8 spike traces for spike-to-spike validation).
+//!
+//! Formats are defined by `python/compile/train.py::dump_artifacts`.
+
+use crate::sim::LayerWeights;
+use crate::snn::{BitVec, Layer, NetDef, SpikeTrain};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed manifest + loaded tensors for one trained network.
+pub struct NetArtifacts {
+    pub net: NetDef,
+    /// One entry per *parametric* layer, ordered.
+    pub weights: Vec<LayerWeights>,
+    /// Validation workloads: recorded input + per-layer reference outputs.
+    pub traces: Vec<TraceSample>,
+    /// Model accuracy reported by the training phase.
+    pub accuracy: f64,
+    /// Mean spikes/step: input + every layer (the Table-I caption stats).
+    pub avg_spikes_per_layer: Vec<f64>,
+    /// Time steps in the traces (may differ from net.t_steps).
+    pub trace_t: usize,
+    pub dir: PathBuf,
+}
+
+/// One recorded inference: the input spike train and every layer's
+/// reference output train from the JAX forward pass.
+pub struct TraceSample {
+    pub input: SpikeTrain,
+    pub layer_outputs: Vec<SpikeTrain>,
+    pub label: usize,
+}
+
+impl NetArtifacts {
+    pub fn load(dir: &Path) -> Result<NetArtifacts> {
+        let manifest = Json::parse_file(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let net = net_from_manifest(&manifest)?;
+
+        // ---- weights.bin ----
+        let wpath = dir.join("weights.bin");
+        let raw = std::fs::read(&wpath)
+            .with_context(|| format!("reading {}", wpath.display()))?;
+        if raw.len() % 4 != 0 {
+            bail!("weights.bin length {} not a multiple of 4", raw.len());
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut weights = Vec::new();
+        for lj in manifest.at("layers").as_arr().unwrap_or(&[]) {
+            let kind = lj.at("kind").as_str().unwrap_or("");
+            if kind == "pool" {
+                continue;
+            }
+            let shape = lj.at("shape").usize_vec();
+            let w_off = lj.at("w_offset").as_usize().context("w_offset")?;
+            let b_off = lj.at("b_offset").as_usize().context("b_offset")?;
+            let w_len: usize = shape.iter().product();
+            let b_len = *shape.last().context("empty shape")?;
+            if b_off + b_len > floats.len() {
+                bail!("weights.bin too short for layer {shape:?}");
+            }
+            let w = floats[w_off..w_off + w_len].to_vec();
+            let b = floats[b_off..b_off + b_len].to_vec();
+            weights.push(match kind {
+                "dense" => LayerWeights::Fc { w, b },
+                "conv" => LayerWeights::Conv { w, b },
+                other => bail!("unknown layer kind '{other}'"),
+            });
+        }
+
+        // ---- trace.bin ----
+        let trace_t = manifest
+            .at("trace_t")
+            .as_usize()
+            .unwrap_or_else(|| manifest.at("t_steps").as_usize().unwrap_or(25));
+        let n_samples = manifest.at("trace_samples").as_usize().unwrap_or(0);
+        let labels = manifest.at("trace_labels").usize_vec();
+        let tpath = dir.join("trace.bin");
+        let traw = std::fs::read(&tpath)
+            .with_context(|| format!("reading {}", tpath.display()))?;
+        // layer output sizes: every layer's output bits (incl. pool)
+        let layer_bits: Vec<usize> = net.layers.iter().map(|l| l.output_bits()).collect();
+        let per_sample = trace_t * (net.input_bits + layer_bits.iter().sum::<usize>());
+        if traw.len() < per_sample * n_samples {
+            bail!(
+                "trace.bin has {} bytes, need {} for {} samples",
+                traw.len(),
+                per_sample * n_samples,
+                n_samples
+            );
+        }
+        let mut traces = Vec::with_capacity(n_samples);
+        let mut off = 0usize;
+        for s in 0..n_samples {
+            let mut input = Vec::with_capacity(trace_t);
+            for _ in 0..trace_t {
+                input.push(BitVec::from_bytes(&traw[off..off + net.input_bits]));
+                off += net.input_bits;
+            }
+            let mut layer_outputs = Vec::with_capacity(layer_bits.len());
+            for &bits in &layer_bits {
+                let mut tr = Vec::with_capacity(trace_t);
+                for _ in 0..trace_t {
+                    tr.push(BitVec::from_bytes(&traw[off..off + bits]));
+                    off += bits;
+                }
+                layer_outputs.push(tr);
+            }
+            traces.push(TraceSample {
+                input,
+                layer_outputs,
+                label: labels.get(s).copied().unwrap_or(0),
+            });
+        }
+
+        Ok(NetArtifacts {
+            net,
+            weights,
+            traces,
+            accuracy: manifest.at("accuracy").as_f64().unwrap_or(f64::NAN),
+            avg_spikes_per_layer: manifest.at("avg_spikes_per_layer").f64_vec(),
+            trace_t,
+            dir: dir.to_path_buf(),
+        })
+    }
+}
+
+/// Rebuild a `NetDef` from a manifest (the topology as *trained*, which for
+/// net5 is the 32x32 training proxy — Table-I rows use `table1_net`).
+fn net_from_manifest(m: &Json) -> Result<NetDef> {
+    let name = m.at("name").as_str().unwrap_or("unknown").to_string();
+    let input_shape = m.at("input_shape").usize_vec();
+    let input_bits: usize = input_shape.iter().product();
+    let mut layers = Vec::new();
+    // track fmap through conv/pool stacks
+    let mut chw: Option<(usize, usize, usize)> = if input_shape.len() == 2 {
+        Some((1, input_shape[0], input_shape[1]))
+    } else {
+        None
+    };
+    let mut feat = if input_shape.len() == 1 {
+        Some(input_shape[0])
+    } else {
+        None
+    };
+    for lj in m.at("layers").as_arr().context("manifest layers")?.iter() {
+        match lj.at("kind").as_str().unwrap_or("") {
+            "dense" => {
+                let shape = lj.at("shape").usize_vec();
+                let n_pre = feat.unwrap_or_else(|| {
+                    let (c, h, w) = chw.take().unwrap();
+                    c * h * w
+                });
+                if n_pre != shape[0] {
+                    bail!("dense layer shape {shape:?} mismatches inferred n_pre {n_pre}");
+                }
+                layers.push(Layer::Fc {
+                    n_pre,
+                    n: shape[1],
+                });
+                feat = Some(shape[1]);
+            }
+            "conv" => {
+                let shape = lj.at("shape").usize_vec(); // [k,k,cin,cout]
+                let (cin, h, w) = chw.context("conv without fmap context")?;
+                if cin != shape[2] {
+                    bail!("conv cin mismatch: fmap {cin} vs shape {shape:?}");
+                }
+                layers.push(Layer::Conv {
+                    in_ch: cin,
+                    out_ch: shape[3],
+                    kernel: shape[0],
+                    height: h,
+                    width: w,
+                });
+                chw = Some((shape[3], h, w));
+            }
+            "pool" => {
+                let size = lj.at("size").as_usize().unwrap_or(2);
+                let (c, h, w) = chw.context("pool without fmap context")?;
+                layers.push(Layer::Pool {
+                    ch: c,
+                    size,
+                    height: h,
+                    width: w,
+                });
+                chw = Some((c, h / size, w / size));
+            }
+            other => bail!("unknown layer kind '{other}'"),
+        }
+    }
+    Ok(NetDef {
+        name,
+        dataset: m.at("dataset").as_str().unwrap_or("").to_string(),
+        input_bits,
+        layers,
+        classes: m.at("classes").as_usize().unwrap_or(10),
+        population: m.at("population").as_usize().unwrap_or(1),
+        beta: m.at("beta").as_f64().unwrap_or(0.9) as f32,
+        theta: m.at("theta").as_f64().unwrap_or(1.0) as f32,
+        t_steps: m.at("t_steps").as_usize().unwrap_or(25),
+    })
+}
+
+/// Default artifacts root: `$SNN_DSE_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("SNN_DSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration coverage lives in rust/tests/artifacts_roundtrip.rs
+    /// (needs `make artifacts`); here we test manifest parsing alone.
+    #[test]
+    fn manifest_roundtrip_fc() {
+        let m = Json::parse(
+            r#"{"name":"t","dataset":"mnist","input_shape":[4],
+                "classes":2,"population":1,"beta":0.9,"theta":1.0,
+                "t_steps":3,
+                "layers":[{"kind":"dense","shape":[4,2],"w_offset":0,
+                           "b_offset":8}]}"#,
+        )
+        .unwrap();
+        let net = net_from_manifest(&m).unwrap();
+        assert_eq!(net.input_bits, 4);
+        assert_eq!(net.layers.len(), 1);
+        assert_eq!(net.layers[0].output_bits(), 2);
+    }
+
+    #[test]
+    fn manifest_conv_chain() {
+        let m = Json::parse(
+            r#"{"name":"c","dataset":"dvs","input_shape":[8,8],
+                "classes":2,"population":1,
+                "layers":[
+                  {"kind":"conv","shape":[3,3,1,4],"w_offset":0,"b_offset":36},
+                  {"kind":"pool","size":2,"fmap":[4,8,8]},
+                  {"kind":"dense","shape":[64,2],"w_offset":40,"b_offset":168}
+                ]}"#,
+        )
+        .unwrap();
+        let net = net_from_manifest(&m).unwrap();
+        assert_eq!(net.layers.len(), 3);
+        assert_eq!(net.layers[0].output_bits(), 4 * 8 * 8);
+        assert_eq!(net.layers[1].output_bits(), 4 * 4 * 4);
+        assert_eq!(net.layers[2].input_bits(), 64);
+    }
+
+    #[test]
+    fn manifest_mismatch_rejected() {
+        let m = Json::parse(
+            r#"{"name":"t","dataset":"mnist","input_shape":[4],
+                "layers":[{"kind":"dense","shape":[5,2],"w_offset":0,
+                           "b_offset":10}]}"#,
+        )
+        .unwrap();
+        assert!(net_from_manifest(&m).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime layer: PJRT execution of the AOT-compiled L2 model
+//! (`client`) and the loader for the Python build-path artifacts
+//! (`artifacts`). Python never runs on this path — `make artifacts` is the
+//! only place the compile path executes.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{artifacts_root, NetArtifacts, TraceSample};
+pub use client::{Runtime, SnnExecutable};

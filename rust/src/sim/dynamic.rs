@@ -1,0 +1,226 @@
+//! Dynamic (run-time) sparsity-aware neuron allocation — the paper's §VII
+//! future work ("we aim to implement a dynamic scheme of sparsity-aware
+//! neuron allocation directly in hardware"), built here as a simulator
+//! extension and evaluated as an ablation bench.
+//!
+//! Model: a single global pool of `budget` hardware neural units is
+//! re-partitioned across layers **every time step**, proportionally to each
+//! layer's incoming spike count (its imminent workload). Reconfiguration
+//! costs `reconfig_cycles` per step (crossbar re-arm). Static allocation is
+//! the degenerate case with one partition chosen up front.
+
+use crate::sim::costs::CostModel;
+use crate::snn::{Layer, NetDef};
+
+/// Dynamic allocator over a global NU budget.
+#[derive(Debug, Clone)]
+pub struct DynamicAllocator {
+    pub budget: usize,
+    /// Cycles charged per reallocation event.
+    pub reconfig_cycles: u64,
+}
+
+impl DynamicAllocator {
+    pub fn new(budget: usize) -> Self {
+        DynamicAllocator {
+            budget,
+            reconfig_cycles: 8,
+        }
+    }
+
+    /// Split the budget across parametric layers proportionally to their
+    /// incoming spike counts (min 1 unit each). Returns units per
+    /// parametric layer.
+    pub fn allocate(&self, spikes_in: &[usize]) -> Vec<usize> {
+        let n = spikes_in.len();
+        assert!(n >= 1);
+        assert!(self.budget >= n, "budget must cover 1 unit per layer");
+        let total: usize = spikes_in.iter().sum::<usize>().max(1);
+        let spare = self.budget - n;
+        let mut units: Vec<usize> = spikes_in
+            .iter()
+            .map(|&s| 1 + spare * s / total)
+            .collect();
+        // distribute rounding remainder to the busiest layers
+        let mut leftover = self.budget - units.iter().sum::<usize>();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(spikes_in[i]));
+        for &i in order.iter().cycle().take(n * 4) {
+            if leftover == 0 {
+                break;
+            }
+            units[i] += 1;
+            leftover -= 1;
+        }
+        units
+    }
+}
+
+/// Per-step cost of one FC layer under an explicit unit count (the
+/// cost-only FC formula with per_unit = ceil(n/units)).
+fn fc_step_cost(
+    n_pre: usize,
+    n: usize,
+    units: usize,
+    s_in: usize,
+    penc_width: usize,
+    costs: &CostModel,
+) -> u64 {
+    let per_unit = n.div_ceil(units.max(1)) as u64;
+    let chunks = n_pre.div_ceil(penc_width) as u64;
+    costs.penc_chunk * chunks
+        + costs.penc_per_spike * s_in as u64
+        + s_in as u64 * per_unit * costs.fc_accum
+        + per_unit * costs.act_fc
+        + costs.phase_overhead
+}
+
+/// Outcome of a static-vs-dynamic comparison.
+#[derive(Debug, Clone)]
+pub struct DynamicResult {
+    pub static_cycles: u64,
+    pub dynamic_cycles: u64,
+    pub budget: usize,
+}
+
+impl DynamicResult {
+    pub fn speedup(&self) -> f64 {
+        self.static_cycles as f64 / self.dynamic_cycles as f64
+    }
+}
+
+/// Compare static proportional allocation (fixed partition sized by *mean*
+/// activity) against per-step dynamic allocation, on an FC network with
+/// per-step activity `activity[stage][t]` (input + per layer, as produced
+/// by `data::ActivityModel::sample`). Pipelined latency for both.
+pub fn compare_static_dynamic(
+    net: &NetDef,
+    activity: &[Vec<usize>],
+    budget: usize,
+    costs: &CostModel,
+) -> DynamicResult {
+    let fc: Vec<(usize, usize)> = net
+        .layers
+        .iter()
+        .map(|l| match l {
+            Layer::Fc { n_pre, n } => (*n_pre, *n),
+            _ => panic!("dynamic allocation ablation covers FC networks"),
+        })
+        .collect();
+    let n_layers = fc.len();
+    let t_steps = activity[0].len();
+    let alloc = DynamicAllocator::new(budget);
+
+    // static: allocate once from mean activity
+    let means: Vec<usize> = (0..n_layers)
+        .map(|l| {
+            (activity[l].iter().sum::<usize>() as f64 / t_steps as f64).round() as usize
+        })
+        .collect();
+    let static_units = alloc.allocate(&means);
+
+    let mut static_finish = vec![0u64; n_layers];
+    let mut dynamic_finish = vec![0u64; n_layers];
+    for t in 0..t_steps {
+        let spikes_t: Vec<usize> = (0..n_layers).map(|l| activity[l][t]).collect();
+        let dyn_units = alloc.allocate(&spikes_t);
+        let mut prev_s = 0u64;
+        let mut prev_d = 0u64;
+        for l in 0..n_layers {
+            let (n_pre, n) = fc[l];
+            let s_in = spikes_t[l];
+            let cs = fc_step_cost(n_pre, n, static_units[l], s_in, 64, costs);
+            let cd = fc_step_cost(n_pre, n, dyn_units[l], s_in, 64, costs)
+                + alloc.reconfig_cycles;
+            static_finish[l] = static_finish[l].max(prev_s) + cs;
+            dynamic_finish[l] = dynamic_finish[l].max(prev_d) + cd;
+            prev_s = static_finish[l];
+            prev_d = dynamic_finish[l];
+        }
+    }
+    DynamicResult {
+        static_cycles: *static_finish.last().unwrap(),
+        dynamic_cycles: *dynamic_finish.last().unwrap(),
+        budget,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ActivityModel;
+    use crate::snn::table1_net;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn allocation_exhausts_budget_and_covers_layers() {
+        let a = DynamicAllocator::new(100);
+        let u = a.allocate(&[90, 5, 5]);
+        assert_eq!(u.iter().sum::<usize>(), 100);
+        assert!(u.iter().all(|&x| x >= 1));
+        assert!(u[0] > u[1] && u[0] > u[2], "busiest layer gets most: {u:?}");
+    }
+
+    #[test]
+    fn zero_activity_still_valid() {
+        let a = DynamicAllocator::new(8);
+        let u = a.allocate(&[0, 0, 0]);
+        assert_eq!(u.iter().sum::<usize>(), 8);
+        assert!(u.iter().all(|&x| x >= 1));
+    }
+
+    #[test]
+    fn prop_allocation_invariants() {
+        prop_check(128, 0xDA11, |g| {
+            let n = g.usize_in(1, 8);
+            let budget = g.usize_in(n, 500);
+            let spikes: Vec<usize> = (0..n).map(|_| g.usize_in(0, 1000)).collect();
+            let u = DynamicAllocator::new(budget).allocate(&spikes);
+            if u.iter().sum::<usize>() != budget {
+                return Err(format!("budget not exhausted: {u:?} vs {budget}"));
+            }
+            if u.iter().any(|&x| x == 0) {
+                return Err("layer starved".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dynamic_beats_static_on_bursty_traffic() {
+        // Alternating bursts between layers: static splits the pool evenly,
+        // dynamic follows the burst — dynamic must win despite reconfig.
+        let net = table1_net("net1");
+        let t = 40;
+        let mut activity = vec![vec![0usize; t]; 4];
+        for step in 0..t {
+            activity[0][step] = if step % 2 == 0 { 400 } else { 5 };
+            activity[1][step] = if step % 2 == 0 { 5 } else { 400 };
+            activity[2][step] = 10;
+            activity[3][step] = 5;
+        }
+        let r = compare_static_dynamic(&net, &activity, 64, &CostModel::default());
+        assert!(
+            r.speedup() > 1.05,
+            "dynamic should win on bursty traffic: x{:.3}",
+            r.speedup()
+        );
+    }
+
+    #[test]
+    fn static_competitive_on_stationary_traffic() {
+        // With stationary activity the static partition is near-optimal and
+        // dynamic only pays reconfiguration: speedup ~<= 1.
+        let net = table1_net("net1");
+        let model = ActivityModel::for_net(&net);
+        let mut rng = Rng::new(3);
+        let activity = model.sample(40, &mut rng);
+        let r = compare_static_dynamic(&net, &activity, 64, &CostModel::default());
+        assert!(
+            r.speedup() < 1.1,
+            "stationary traffic shouldn't favor dynamic much: x{:.3}",
+            r.speedup()
+        );
+    }
+}

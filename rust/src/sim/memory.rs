@@ -1,0 +1,124 @@
+//! Memory Unit model (paper §V-D).
+//!
+//! Synapse weights live in block RAMs; `mem_blocks` configures how many
+//! physical blocks a layer gets, and the mapping logic arbitrates multiple
+//! hardware neurons (NUs) sharing one block. Block depth is
+//! `M x SIZE` where `M` is neurons per block and `SIZE` the pre-synaptic
+//! layer size. Fewer blocks than NUs serializes weight reads — the
+//! `stall_factor` the accumulate phase multiplies into its cycle count.
+
+/// Memory allocation for one layer.
+#[derive(Debug, Clone)]
+pub struct MemoryUnit {
+    /// Physical memory blocks allocated.
+    pub n_blocks: usize,
+    /// Hardware neural units that read from the blocks.
+    pub n_readers: usize,
+    /// Pre-synaptic layer size (words per logical neuron row).
+    pub row_words: usize,
+    /// Logical neurons whose weights are stored.
+    pub n_neurons: usize,
+    /// Running access counters (for the energy model).
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl MemoryUnit {
+    /// `n_blocks = 0` means auto: one block per reader (no contention),
+    /// the hardware generator's default.
+    pub fn new(n_blocks: usize, n_readers: usize, row_words: usize, n_neurons: usize) -> Self {
+        let n_blocks = if n_blocks == 0 { n_readers.max(1) } else { n_blocks };
+        MemoryUnit {
+            n_blocks,
+            n_readers: n_readers.max(1),
+            row_words,
+            n_neurons,
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    /// How many read cycles a 1-cycle parallel read actually takes when
+    /// blocks are shared: ceil(readers / blocks).
+    pub fn stall_factor(&self) -> u64 {
+        self.n_readers.div_ceil(self.n_blocks) as u64
+    }
+
+    /// Neurons mapped to each block (the `M` in the paper's depth formula).
+    pub fn neurons_per_block(&self) -> usize {
+        self.n_neurons.div_ceil(self.n_blocks)
+    }
+
+    /// Block depth in 32-bit words: M x SIZE.
+    pub fn block_depth(&self) -> usize {
+        self.neurons_per_block() * self.row_words
+    }
+
+    /// 36Kb BRAM primitives needed across all blocks (32-bit words).
+    pub fn bram_36k(&self) -> usize {
+        let bits_per_block = self.block_depth() * 32;
+        self.n_blocks * bits_per_block.div_ceil(36 * 1024)
+    }
+
+    pub fn record_reads(&mut self, n: u64) {
+        self.reads += n;
+    }
+    pub fn record_writes(&mut self, n: u64) {
+        self.writes += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn auto_allocation_matches_readers() {
+        let m = MemoryUnit::new(0, 8, 784, 512);
+        assert_eq!(m.n_blocks, 8);
+        assert_eq!(m.stall_factor(), 1);
+        assert_eq!(m.neurons_per_block(), 64);
+        assert_eq!(m.block_depth(), 64 * 784);
+    }
+
+    #[test]
+    fn sharing_stalls() {
+        let m = MemoryUnit::new(2, 8, 100, 64);
+        assert_eq!(m.stall_factor(), 4);
+        let m = MemoryUnit::new(3, 8, 100, 64);
+        assert_eq!(m.stall_factor(), 3);
+    }
+
+    #[test]
+    fn bram_counts() {
+        // 512 neurons x 784 weights x 32b = 12.8 Mb => ~357 BRAM36
+        let m = MemoryUnit::new(0, 1, 784, 512);
+        let total_bits: usize = 512 * 784 * 32;
+        assert_eq!(m.bram_36k(), total_bits.div_ceil(36 * 1024));
+    }
+
+    #[test]
+    fn prop_stall_and_depth_invariants() {
+        prop_check(256, 0x3E3, |g| {
+            let readers = g.usize_in(1, 128);
+            let blocks = g.usize_in(0, 64);
+            let neurons = g.usize_in(1, 2048);
+            let row = g.usize_in(1, 2048);
+            let m = MemoryUnit::new(blocks, readers, row, neurons);
+            if m.stall_factor() < 1 {
+                return Err("stall < 1".into());
+            }
+            // enough capacity for every neuron row
+            if m.n_blocks * m.neurons_per_block() < neurons {
+                return Err("blocks don't cover all neurons".into());
+            }
+            // more blocks never increases stall
+            let m2 = MemoryUnit::new(m.n_blocks + 1, readers, row, neurons);
+            if m2.stall_factor() > m.stall_factor() {
+                return Err("stall increased with more blocks".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,33 @@
+//! Cycle-accurate, sparsity-aware accelerator simulator — the paper's core
+//! contribution, re-hosted from SystemC/TLM into deterministic Rust (see
+//! DESIGN.md §Substitutions #5).
+//!
+//! Components mirror the paper's TLM platform (Fig. 3):
+//! * [`penc`] — chunked priority encoder (spike-train compression, Fig. 4)
+//! * [`neural_unit`] — logical-to-hardware neuron mapping (base address /
+//!   neural size), serial accumulate + LIF activate
+//! * [`memory`] — weight block allocation and port contention
+//! * [`layer`] — one layer's ECU + NUs + memory, functional and cost-only
+//! * [`pipeline`] — layer-wise pipelined network execution
+//! * [`costs`] — the named cycle-cost coefficients in one auditable place
+//! * [`stats`] — activity counters feeding the energy model and reports
+
+pub mod costs;
+pub mod dynamic;
+pub mod ecu;
+pub mod layer;
+pub mod memory;
+pub mod neural_unit;
+pub mod penc;
+pub mod pipeline;
+pub mod stats;
+
+pub use costs::CostModel;
+pub use dynamic::{compare_static_dynamic, DynamicAllocator, DynamicResult};
+pub use ecu::{EcuFsm, EcuState};
+pub use layer::{LayerSim, LayerWeights};
+pub use memory::MemoryUnit;
+pub use neural_unit::NuMap;
+pub use penc::Penc;
+pub use pipeline::{random_spike_train, random_weights, NetworkSim};
+pub use stats::{LayerStats, PhaseCycles, SimResult};

@@ -1,0 +1,131 @@
+//! Neural Unit (NU) model (paper §V-C).
+//!
+//! Each NU owns a contiguous range of logical neurons — `base_addr` to
+//! `base_addr + neural_size` — for FC layers, or a range of output channels
+//! for CONV layers. During accumulation the NU serially walks its assigned
+//! neurons per incoming spike address; during activation it serially
+//! applies the LIF update. NUs across a layer run in parallel, so the
+//! layer's phase time is the *maximum* over NUs, which the mapping below
+//! makes `ceil(n / n_units)` (balanced partition).
+
+/// The mapping of logical neurons (or conv output channels) onto hardware
+/// neural units for one layer.
+#[derive(Debug, Clone)]
+pub struct NuMap {
+    /// Logical units (neurons / output channels).
+    pub logical: usize,
+    /// Hardware NUs instantiated.
+    pub units: usize,
+}
+
+impl NuMap {
+    /// Build from the LHR knob: `units = ceil(logical / lhr)`.
+    pub fn from_lhr(logical: usize, lhr: usize) -> Self {
+        assert!(lhr >= 1, "LHR must be >= 1");
+        let lhr = lhr.min(logical.max(1));
+        NuMap {
+            logical,
+            units: logical.div_ceil(lhr).max(1),
+        }
+    }
+
+    /// Worst-case logical neurons per NU — the serial depth of each phase.
+    pub fn per_unit(&self) -> usize {
+        self.logical.div_ceil(self.units)
+    }
+
+    /// (base_addr, neural_size) of unit `u` — the module parameters the
+    /// hardware generator writes into each NU instance.
+    pub fn range(&self, u: usize) -> (usize, usize) {
+        let per = self.per_unit();
+        let base = u * per;
+        let size = per.min(self.logical.saturating_sub(base));
+        (base, size)
+    }
+
+    /// Which NU serves logical neuron `i`.
+    pub fn unit_of(&self, i: usize) -> usize {
+        i / self.per_unit()
+    }
+
+    /// Effective LHR realized by the mapping (>= requested when rounding).
+    pub fn effective_lhr(&self) -> usize {
+        self.per_unit()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn lhr_one_is_fully_parallel() {
+        let m = NuMap::from_lhr(500, 1);
+        assert_eq!(m.units, 500);
+        assert_eq!(m.per_unit(), 1);
+        assert_eq!(m.range(499), (499, 1));
+    }
+
+    #[test]
+    fn lhr_divides_units() {
+        let m = NuMap::from_lhr(500, 4);
+        assert_eq!(m.units, 125);
+        assert_eq!(m.per_unit(), 4);
+        assert_eq!(m.range(0), (0, 4));
+        assert_eq!(m.range(124), (496, 4));
+    }
+
+    #[test]
+    fn ragged_tail_handled() {
+        let m = NuMap::from_lhr(10, 4); // units = 3, per = 4, last gets 2
+        assert_eq!(m.units, 3);
+        assert_eq!(m.range(2), (8, 2));
+        assert_eq!(m.unit_of(9), 2);
+    }
+
+    #[test]
+    fn lhr_capped_at_layer_size() {
+        let m = NuMap::from_lhr(8, 64); // time-multiplexed single NU
+        assert_eq!(m.units, 1);
+        assert_eq!(m.per_unit(), 8);
+    }
+
+    #[test]
+    fn prop_partition_covers_all_neurons() {
+        prop_check(256, 0x4A11, |g| {
+            let logical = g.usize_in(1, 4096);
+            let lhr = g.pow2(8);
+            let m = NuMap::from_lhr(logical, lhr);
+            // every logical neuron belongs to exactly one in-range unit
+            let mut covered = 0usize;
+            for u in 0..m.units {
+                let (base, size) = m.range(u);
+                if base + size > logical && size > 0 {
+                    return Err(format!("range {u} spills: {base}+{size}>{logical}"));
+                }
+                covered += size;
+            }
+            if covered != logical {
+                return Err(format!("covered {covered} != logical {logical}"));
+            }
+            // unit_of agrees with range()
+            for &probe in &[0, logical / 2, logical - 1] {
+                let u = m.unit_of(probe);
+                let (base, size) = m.range(u);
+                if probe < base || probe >= base + size {
+                    return Err(format!("unit_of({probe}) = {u} out of its range"));
+                }
+            }
+            // serial depth never exceeds requested LHR
+            if m.per_unit() > lhr.min(logical) {
+                return Err(format!(
+                    "per_unit {} > lhr {}",
+                    m.per_unit(),
+                    lhr.min(logical)
+                ));
+            }
+            Ok(())
+        });
+    }
+}

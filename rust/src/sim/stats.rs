@@ -1,0 +1,166 @@
+//! Activity counters collected during simulation — the "peripheral
+//! execution data" the paper's framework records (§IV): spike counts,
+//! memory accesses, per-phase cycles. These drive the energy model and the
+//! Table-I / Fig-6 reports.
+
+/// Per-layer cycle breakdown for one time step.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseCycles {
+    pub compress: u64,
+    pub accumulate: u64,
+    pub activate: u64,
+    pub overhead: u64,
+}
+
+impl PhaseCycles {
+    pub fn total(&self) -> u64 {
+        self.compress + self.accumulate + self.activate + self.overhead
+    }
+}
+
+/// Accumulated statistics for one layer across a whole inference.
+#[derive(Debug, Clone, Default)]
+pub struct LayerStats {
+    pub name: String,
+    /// Busy cycles summed over time steps (not wall-clock: pipeline overlap
+    /// is accounted at network level).
+    pub busy_cycles: u64,
+    pub compress_cycles: u64,
+    pub accum_cycles: u64,
+    pub activate_cycles: u64,
+    pub overhead_cycles: u64,
+    /// Input spikes consumed / output spikes produced.
+    pub in_spikes: u64,
+    pub out_spikes: u64,
+    /// Weight-memory reads, membrane reads+writes.
+    pub weight_reads: u64,
+    pub membrane_accesses: u64,
+    /// PENC chunks scanned.
+    pub penc_chunks: u64,
+    /// Max shift-register occupancy observed (sizes the hardware FIFO).
+    pub max_shift_depth: usize,
+    /// Accumulate operations performed (adds).
+    pub accum_ops: u64,
+    /// LIF activations evaluated.
+    pub activations: u64,
+}
+
+impl LayerStats {
+    pub fn new(name: impl Into<String>) -> Self {
+        LayerStats {
+            name: name.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn add_step(&mut self, phases: &PhaseCycles, in_spikes: usize, out_spikes: usize) {
+        self.busy_cycles += phases.total();
+        self.compress_cycles += phases.compress;
+        self.accum_cycles += phases.accumulate;
+        self.activate_cycles += phases.activate;
+        self.overhead_cycles += phases.overhead;
+        self.in_spikes += in_spikes as u64;
+        self.out_spikes += out_spikes as u64;
+        self.max_shift_depth = self.max_shift_depth.max(in_spikes);
+    }
+}
+
+/// Whole-network simulation result.
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    /// End-to-end latency in clock cycles for one inference (pipelined).
+    pub total_cycles: u64,
+    /// Latency if layers executed strictly serially (no pipelining) —
+    /// reported to show the pipelining win.
+    pub serial_cycles: u64,
+    pub per_layer: Vec<LayerStats>,
+    /// Time steps simulated.
+    pub t_steps: usize,
+    /// Output spike counts per class-pool neuron summed over time.
+    pub output_counts: Vec<u32>,
+    /// Predicted class (argmax over population pools), if computed.
+    pub predicted_class: Option<usize>,
+}
+
+impl SimResult {
+    pub fn bottleneck_layer(&self) -> Option<&LayerStats> {
+        self.per_layer.iter().max_by_key(|l| l.busy_cycles)
+    }
+
+    pub fn total_weight_reads(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.weight_reads).sum()
+    }
+
+    pub fn total_accum_ops(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.accum_ops).sum()
+    }
+
+    /// Mean output spikes per step per layer (Fig.-1 style activity).
+    pub fn mean_activity(&self) -> Vec<f64> {
+        self.per_layer
+            .iter()
+            .map(|l| l.out_spikes as f64 / self.t_steps.max(1) as f64)
+            .collect()
+    }
+
+    /// Decode the population-coded output into a class.
+    pub fn decode(&mut self, classes: usize, population: usize) {
+        if self.output_counts.is_empty() || classes * population != self.output_counts.len() {
+            return;
+        }
+        let mut best = (0usize, -1i64);
+        for c in 0..classes {
+            let s: i64 = self.output_counts[c * population..(c + 1) * population]
+                .iter()
+                .map(|&x| x as i64)
+                .sum();
+            if s > best.1 {
+                best = (c, s);
+            }
+        }
+        self.predicted_class = Some(best.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_totals() {
+        let p = PhaseCycles {
+            compress: 10,
+            accumulate: 20,
+            activate: 5,
+            overhead: 4,
+        };
+        assert_eq!(p.total(), 39);
+    }
+
+    #[test]
+    fn layer_stats_accumulate() {
+        let mut s = LayerStats::new("fc0");
+        let p = PhaseCycles {
+            compress: 1,
+            accumulate: 2,
+            activate: 3,
+            overhead: 4,
+        };
+        s.add_step(&p, 7, 3);
+        s.add_step(&p, 11, 2);
+        assert_eq!(s.busy_cycles, 20);
+        assert_eq!(s.in_spikes, 18);
+        assert_eq!(s.out_spikes, 5);
+        assert_eq!(s.max_shift_depth, 11);
+    }
+
+    #[test]
+    fn decode_picks_max_pool() {
+        let mut r = SimResult {
+            output_counts: vec![1, 2, 9, 9, 0, 1],
+            ..Default::default()
+        };
+        r.decode(3, 2); // pools: [3, 18, 1]
+        assert_eq!(r.predicted_class, Some(1));
+    }
+}

@@ -1,0 +1,186 @@
+//! Packed spike-train bit vectors.
+//!
+//! A spike train at one time step is an `n`-bit vector (one bit per
+//! pre-synaptic neuron / pixel). The simulator's PENC model scans these in
+//! 64-bit words, which is also how we get fast popcounts for sparsity
+//! statistics. Layout: bit `i` of word `i / 64` at position `i % 64`.
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    pub fn zeros(len: usize) -> Self {
+        BitVec {
+            words: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut v = BitVec::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.set(i);
+            }
+        }
+        v
+    }
+
+    /// Build from a byte-per-bit buffer (the Python trace format).
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        let mut v = BitVec::zeros(bytes.len());
+        for (i, &b) in bytes.iter().enumerate() {
+            if b != 0 {
+                v.set(i);
+            }
+        }
+        v
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    /// Number of set bits (spike count) — the layer's per-step activity.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate over set-bit indices in ascending order — exactly the address
+    /// sequence the paper's priority encoder emits (first set bit first).
+    pub fn iter_ones(&self) -> OnesIter<'_> {
+        OnesIter {
+            words: &self.words,
+            word_idx: 0,
+            current: self.words.first().copied().unwrap_or(0),
+            len: self.len,
+        }
+    }
+
+    /// Bitwise OR in place (used by the hardware maxpool model).
+    pub fn or_assign(&mut self, other: &BitVec) {
+        debug_assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    pub fn raw_words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+pub struct OnesIter<'a> {
+    words: &'a [u64],
+    word_idx: usize,
+    current: u64,
+    len: usize,
+}
+
+impl<'a> Iterator for OnesIter<'a> {
+    type Item = usize;
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.current != 0 {
+                let bit = self.current.trailing_zeros() as usize;
+                self.current &= self.current - 1; // clear lowest set bit
+                let idx = self.word_idx * 64 + bit;
+                return if idx < self.len { Some(idx) } else { None };
+            }
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.current = self.words[self.word_idx];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn set_get_clear() {
+        let mut v = BitVec::zeros(130);
+        assert!(!v.get(129));
+        v.set(129);
+        v.set(0);
+        v.set(64);
+        assert!(v.get(129) && v.get(0) && v.get(64));
+        assert_eq!(v.count_ones(), 3);
+        v.clear(64);
+        assert!(!v.get(64));
+        assert_eq!(v.count_ones(), 2);
+    }
+
+    #[test]
+    fn iter_ones_ascending() {
+        let mut v = BitVec::zeros(200);
+        for i in [3, 63, 64, 65, 127, 128, 199] {
+            v.set(i);
+        }
+        let got: Vec<usize> = v.iter_ones().collect();
+        assert_eq!(got, vec![3, 63, 64, 65, 127, 128, 199]);
+    }
+
+    #[test]
+    fn or_assign_unions() {
+        let a0 = BitVec::from_bools(&[true, false, true, false]);
+        let mut a = a0;
+        let b = BitVec::from_bools(&[false, false, true, true]);
+        a.or_assign(&b);
+        assert_eq!(
+            (0..4).map(|i| a.get(i)).collect::<Vec<_>>(),
+            vec![true, false, true, true]
+        );
+    }
+
+    #[test]
+    fn prop_iter_matches_naive() {
+        prop_check(128, 0xB17, |g| {
+            let n = g.usize_in(1, 1500);
+            let p = g.f64_in(0.0, 0.5);
+            let bits = g.spike_bits(n, p);
+            let v = BitVec::from_bools(&bits);
+            let naive: Vec<usize> =
+                bits.iter().enumerate().filter(|(_, &b)| b).map(|(i, _)| i).collect();
+            let got: Vec<usize> = v.iter_ones().collect();
+            if got != naive {
+                return Err(format!("iter mismatch at n={n}"));
+            }
+            if v.count_ones() != naive.len() {
+                return Err("count mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

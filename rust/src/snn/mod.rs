@@ -1,0 +1,37 @@
+//! Core SNN domain types: packed spike trains, network topology, and the
+//! golden LIF arithmetic the cycle-accurate simulator computes with.
+
+pub mod bitvec;
+pub mod lif;
+pub mod topology;
+
+pub use bitvec::BitVec;
+pub use lif::LifState;
+pub use topology::{fc_net, table1_net, Layer, NetDef, TABLE1_NETS};
+
+/// A full spike train: one `BitVec` per time step.
+pub type SpikeTrain = Vec<BitVec>;
+
+/// Mean spikes per step of a train.
+pub fn mean_activity(train: &SpikeTrain) -> f64 {
+    if train.is_empty() {
+        return 0.0;
+    }
+    train.iter().map(|b| b.count_ones() as f64).sum::<f64>() / train.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_activity_counts() {
+        let mut t0 = BitVec::zeros(10);
+        t0.set(1);
+        t0.set(2);
+        let mut t1 = BitVec::zeros(10);
+        t1.set(0);
+        assert_eq!(mean_activity(&vec![t0, t1]), 1.5);
+        assert_eq!(mean_activity(&vec![]), 0.0);
+    }
+}

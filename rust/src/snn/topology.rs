@@ -1,0 +1,299 @@
+//! Network topology definitions — the "system specification" the paper's
+//! DSE starts from (§IV), including the five Table-I networks.
+
+/// One layer of the network, as the hardware generator sees it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    /// Fully connected: `n_pre` inputs -> `n` LIF neurons.
+    Fc { n_pre: usize, n: usize },
+    /// 2-D convolution over binary event frames, 'same' padding.
+    Conv {
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        height: usize,
+        width: usize,
+    },
+    /// Non-overlapping OR-gated maxpool (paper §V-C, [32]).
+    Pool {
+        ch: usize,
+        size: usize,
+        height: usize, // input fmap size
+        width: usize,
+    },
+}
+
+impl Layer {
+    /// Bits in the layer's *input* spike train per time step.
+    pub fn input_bits(&self) -> usize {
+        match self {
+            Layer::Fc { n_pre, .. } => *n_pre,
+            Layer::Conv {
+                in_ch,
+                height,
+                width,
+                ..
+            } => in_ch * height * width,
+            Layer::Pool {
+                ch, height, width, ..
+            } => ch * height * width,
+        }
+    }
+
+    /// Bits in the layer's *output* spike train per time step.
+    pub fn output_bits(&self) -> usize {
+        match self {
+            Layer::Fc { n, .. } => *n,
+            Layer::Conv {
+                out_ch,
+                height,
+                width,
+                ..
+            } => out_ch * height * width,
+            Layer::Pool {
+                ch,
+                size,
+                height,
+                width,
+            } => ch * (height / size) * (width / size),
+        }
+    }
+
+    /// Logical compute units the LHR knob divides: neurons for FC, output
+    /// channels for CONV (paper §VI-B). Pool has no neurons.
+    pub fn logical_units(&self) -> usize {
+        match self {
+            Layer::Fc { n, .. } => *n,
+            Layer::Conv { out_ch, .. } => *out_ch,
+            Layer::Pool { .. } => 0,
+        }
+    }
+
+    pub fn is_parametric(&self) -> bool {
+        !matches!(self, Layer::Pool { .. })
+    }
+
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            Layer::Fc { .. } => "fc",
+            Layer::Conv { .. } => "conv",
+            Layer::Pool { .. } => "pool",
+        }
+    }
+}
+
+/// A complete network + neuron-model constants.
+#[derive(Debug, Clone)]
+pub struct NetDef {
+    pub name: String,
+    pub dataset: String,
+    pub input_bits: usize,
+    pub layers: Vec<Layer>,
+    pub classes: usize,
+    pub population: usize,
+    pub beta: f32,
+    pub theta: f32,
+    pub t_steps: usize,
+}
+
+impl NetDef {
+    /// Layers that carry LHR knobs (parametric layers, in order).
+    pub fn parametric_layers(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.is_parametric())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn output_neurons(&self) -> usize {
+        self.classes * self.population
+    }
+
+    /// Human-readable topology string, e.g. "784-500-500-300".
+    pub fn topology_string(&self) -> String {
+        let mut parts = vec![self.input_bits.to_string()];
+        for l in &self.layers {
+            match l {
+                Layer::Fc { n, .. } => parts.push(n.to_string()),
+                Layer::Conv { out_ch, kernel, .. } => {
+                    parts.push(format!("{out_ch}C{kernel}"))
+                }
+                Layer::Pool { size, .. } => parts.push(format!("P{size}")),
+            }
+        }
+        parts.join("-")
+    }
+}
+
+/// Build an FC network: sizes = [input, h1, ..., output].
+pub fn fc_net(
+    name: &str,
+    dataset: &str,
+    sizes: &[usize],
+    classes: usize,
+    population: usize,
+    beta: f32,
+    t_steps: usize,
+) -> NetDef {
+    let layers = sizes
+        .windows(2)
+        .map(|w| Layer::Fc {
+            n_pre: w[0],
+            n: w[1],
+        })
+        .collect();
+    NetDef {
+        name: name.into(),
+        dataset: dataset.into(),
+        input_bits: sizes[0],
+        layers,
+        classes,
+        population,
+        beta,
+        theta: 1.0,
+        t_steps,
+    }
+}
+
+/// The Table-I networks. Population sizes from the "Pop. Cod." column;
+/// net-5 is the paper's full 128x128 DVS topology.
+pub fn table1_net(name: &str) -> NetDef {
+    match name {
+        "net1" => fc_net("net1", "mnist", &[784, 500, 500, 300], 10, 30, 0.9, 25),
+        "net2" => fc_net(
+            "net2",
+            "mnist",
+            &[784, 300, 300, 300, 200],
+            10,
+            20,
+            0.9,
+            25,
+        ),
+        "net3" => fc_net(
+            "net3",
+            "fmnist",
+            &[784, 1024, 1024, 300],
+            10,
+            30,
+            0.9,
+            25,
+        ),
+        "net4" => fc_net(
+            "net4",
+            "fmnist",
+            &[784, 512, 256, 128, 64, 150],
+            10,
+            15,
+            0.9,
+            25,
+        ),
+        "net5" => NetDef {
+            name: "net5".into(),
+            dataset: "dvs".into(),
+            input_bits: 128 * 128,
+            layers: vec![
+                Layer::Conv {
+                    in_ch: 1,
+                    out_ch: 32,
+                    kernel: 3,
+                    height: 128,
+                    width: 128,
+                },
+                Layer::Pool {
+                    ch: 32,
+                    size: 2,
+                    height: 128,
+                    width: 128,
+                },
+                Layer::Conv {
+                    in_ch: 32,
+                    out_ch: 32,
+                    kernel: 3,
+                    height: 64,
+                    width: 64,
+                },
+                Layer::Pool {
+                    ch: 32,
+                    size: 2,
+                    height: 64,
+                    width: 64,
+                },
+                Layer::Fc {
+                    n_pre: 32 * 32 * 32,
+                    n: 512,
+                },
+                Layer::Fc { n_pre: 512, n: 256 },
+                Layer::Fc { n_pre: 256, n: 11 },
+            ],
+            classes: 11,
+            population: 1,
+            beta: 0.23,
+            theta: 1.0,
+            t_steps: 124,
+        },
+        "net600" => fc_net(
+            "net600",
+            "mnist",
+            &[784, 600, 600, 600],
+            10,
+            60,
+            0.9,
+            25,
+        ),
+        other => panic!("unknown network '{other}' (net1..net5, net600)"),
+    }
+}
+
+pub const TABLE1_NETS: [&str; 5] = ["net1", "net2", "net3", "net4", "net5"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_topologies_match_paper() {
+        assert_eq!(table1_net("net1").topology_string(), "784-500-500-300");
+        assert_eq!(
+            table1_net("net2").topology_string(),
+            "784-300-300-300-200"
+        );
+        assert_eq!(table1_net("net3").topology_string(), "784-1024-1024-300");
+        assert_eq!(
+            table1_net("net4").topology_string(),
+            "784-512-256-128-64-150"
+        );
+        assert_eq!(
+            table1_net("net5").topology_string(),
+            "16384-32C3-P2-32C3-P2-512-256-11"
+        );
+    }
+
+    #[test]
+    fn net5_bit_plumbing() {
+        let net = table1_net("net5");
+        // conv1 output: 32ch x 128x128; pool1 halves to 64x64
+        assert_eq!(net.layers[0].output_bits(), 32 * 128 * 128);
+        assert_eq!(net.layers[1].output_bits(), 32 * 64 * 64);
+        assert_eq!(net.layers[2].output_bits(), 32 * 64 * 64);
+        assert_eq!(net.layers[3].output_bits(), 32 * 32 * 32);
+        // FC1 consumes the flattened pooled fmap
+        assert_eq!(net.layers[4].input_bits(), 32 * 32 * 32);
+        // LHR applies to 6 parametric layers (2 conv + 3 fc ... output incl.)
+        assert_eq!(net.parametric_layers().len(), 5);
+    }
+
+    #[test]
+    fn population_output() {
+        let net = table1_net("net1");
+        assert_eq!(net.output_neurons(), 300);
+        assert_eq!(net.t_steps, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown network")]
+    fn unknown_net_panics() {
+        table1_net("net9");
+    }
+}

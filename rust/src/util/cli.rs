@@ -1,0 +1,115 @@
+//! Tiny CLI argument parser (substrate — no `clap` in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and a generated usage string. Enough surface for the
+//! launcher's subcommands.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token NOT the program name).
+    pub fn parse_from(tokens: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    a.opts.insert(body.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn parse_env() -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse_from(&tokens)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+    /// Comma-separated list of usizes, e.g. `--lhr 4,8,8`.
+    pub fn usize_list(&self, name: &str) -> Option<Vec<usize>> {
+        self.get(name).map(|v| {
+            v.split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad integer '{s}'"))
+                })
+                .collect()
+        })
+    }
+    pub fn str_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|v| v.split(',').filter(|s| !s.is_empty()).map(|s| s.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = Args::parse_from(&toks("simulate --net net1 --lhr=4,8,8 --verbose --t 25"));
+        assert_eq!(a.positional, vec!["simulate"]);
+        assert_eq!(a.get("net"), Some("net1"));
+        assert_eq!(a.usize_list("lhr").unwrap(), vec![4, 8, 8]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("t", 10), 25);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_from(&toks("dse"));
+        assert_eq!(a.usize_or("t", 25), 25);
+        assert_eq!(a.get_or("net", "net1"), "net1");
+        assert!(!a.flag("verbose"));
+        assert!(a.usize_list("lhr").is_none());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse_from(&toks("run --fast"));
+        assert!(a.flag("fast"));
+    }
+}

@@ -1,0 +1,100 @@
+//! Shared substrates: JSON codec, PRNG, property-testing harness, CLI
+//! parsing, and small table-formatting helpers.
+//!
+//! These exist in-repo because the offline crate registry only carries the
+//! `xla` dependency closure (see DESIGN.md §Substitutions) — each module is
+//! a purpose-built replacement for the crate a networked build would use
+//! (`serde_json`, `rand`, `proptest`, `clap`).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Format a count with thousands separators: 1234567 -> "1,234,567".
+pub fn commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Format a LUT/REG count the way the paper does: 157600 -> "157.6K".
+pub fn kfmt(n: f64) -> String {
+    if n >= 1_000_000.0 {
+        format!("{:.1}M", n / 1_000_000.0)
+    } else if n >= 1000.0 {
+        format!("{:.1}K", n / 1000.0)
+    } else {
+        format!("{:.0}", n)
+    }
+}
+
+/// Render rows as a github-markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!(" {:w$} |", c, w = widths.get(i).copied().unwrap_or(c.len())));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push('|');
+    for w in &widths {
+        out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commas_formats() {
+        assert_eq!(commas(0), "0");
+        assert_eq!(commas(999), "999");
+        assert_eq!(commas(1000), "1,000");
+        assert_eq!(commas(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn kfmt_matches_paper_style() {
+        assert_eq!(kfmt(157_600.0), "157.6K");
+        assert_eq!(kfmt(1_562_000.0), "1.6M");
+        assert_eq!(kfmt(42.0), "42");
+    }
+
+    #[test]
+    fn markdown_table_renders() {
+        let t = markdown_table(
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("| a   | bb |"));
+        assert!(t.lines().count() == 4);
+    }
+}

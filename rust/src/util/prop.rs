@@ -1,0 +1,136 @@
+//! Minimal property-based testing harness (substrate — no `proptest` in the
+//! offline registry).
+//!
+//! Usage mirrors the proptest idiom we need for coordinator invariants:
+//!
+//! ```ignore
+//! prop_check(256, 0xC0FFEE, |g| {
+//!     let n = g.usize_in(1, 2048);
+//!     let lhr = 1 << g.usize_in(0, 6);
+//!     // ... build a case, return Err(String) on violation
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the harness re-reports the seed of the failing case so it can
+//! be replayed exactly (`prop_replay`). No shrinking — cases are built from
+//! bounded generators, which keeps counterexamples readable in practice.
+
+use super::rng::Rng;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    /// Seed that reproduces exactly this case.
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+    pub fn pow2(&mut self, max_exp: u32) -> usize {
+        1usize << self.rng.range(0, max_exp as usize)
+    }
+    /// Random bit pattern of length `n` with spike probability `p`.
+    pub fn spike_bits(&mut self, n: usize, p: f64) -> Vec<bool> {
+        (0..n).map(|_| self.rng.bernoulli(p)).collect()
+    }
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`; panic with the failing seed if any
+/// case returns `Err`.
+pub fn prop_check<F>(cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut meta = Rng::new(seed);
+    for i in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+            case_seed,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed on case {i}/{cases} (replay with seed \
+                 {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn prop_replay<F>(case_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen {
+        rng: Rng::new(case_seed),
+        case_seed,
+    };
+    if let Err(msg) = prop(&mut g) {
+        panic!("replayed property failure (seed {case_seed:#x}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check(64, 1, |g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            if a + b >= a {
+                Ok(())
+            } else {
+                Err("overflow".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        prop_check(64, 2, |g| {
+            if g.usize_in(0, 10) < 10 {
+                Ok(())
+            } else {
+                Err("hit ten".into())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        prop_check(256, 3, |g| {
+            let x = g.usize_in(5, 9);
+            if !(5..=9).contains(&x) {
+                return Err(format!("usize_in out of range: {x}"));
+            }
+            let p = g.pow2(6);
+            if !p.is_power_of_two() || p > 64 {
+                return Err(format!("pow2 out of range: {p}"));
+            }
+            let bits = g.spike_bits(100, 0.5);
+            if bits.len() != 100 {
+                return Err("wrong length".into());
+            }
+            Ok(())
+        });
+    }
+}

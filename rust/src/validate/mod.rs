@@ -1,0 +1,181 @@
+//! Spike-to-spike validation (paper §IV "Simulation & Validation Phase"):
+//! the simulated architecture's output spikes are checked against the
+//! reference spikes of the trained model — both the recorded JAX traces and
+//! a live PJRT execution of the AOT HLO.
+
+use crate::config::{ExperimentConfig, HwConfig};
+use crate::runtime::{NetArtifacts, Runtime};
+use crate::sim::{CostModel, LayerWeights, NetworkSim};
+use crate::snn::SpikeTrain;
+use anyhow::Result;
+use std::path::Path;
+
+/// Outcome of validating one sample.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub samples: usize,
+    /// Per-layer total bit mismatches across all samples and steps.
+    pub mismatches_per_layer: Vec<u64>,
+    /// Total bits compared per layer.
+    pub bits_per_layer: Vec<u64>,
+    pub total_cycles_sample0: u64,
+}
+
+impl ValidationReport {
+    pub fn passed(&self) -> bool {
+        self.mismatches_per_layer.iter().all(|&m| m == 0)
+    }
+    pub fn mismatch_rate(&self) -> f64 {
+        let m: u64 = self.mismatches_per_layer.iter().sum();
+        let b: u64 = self.bits_per_layer.iter().sum();
+        if b == 0 {
+            0.0
+        } else {
+            m as f64 / b as f64
+        }
+    }
+}
+
+fn diff_trains(a: &SpikeTrain, b: &SpikeTrain) -> (u64, u64) {
+    let mut mism = 0u64;
+    let mut bits = 0u64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        debug_assert_eq!(x.len(), y.len());
+        bits += x.len() as u64;
+        for i in 0..x.len() {
+            if x.get(i) != y.get(i) {
+                mism += 1;
+            }
+        }
+    }
+    (mism, bits)
+}
+
+/// Validate the cycle-accurate simulator against the recorded JAX traces:
+/// run every trace sample functionally and compare each layer's output
+/// spike train bit-for-bit.
+pub fn validate_against_traces(art: &NetArtifacts, lhr: &[usize]) -> Result<ValidationReport> {
+    let mut net = art.net.clone();
+    net.t_steps = art.trace_t;
+    let hw = HwConfig::with_lhr(lhr.to_vec());
+    let cfg = ExperimentConfig::new(net, hw)?;
+    let n_layers = cfg.net.layers.len();
+    let mut mismatches = vec![0u64; n_layers];
+    let mut bits = vec![0u64; n_layers];
+    let mut cycles0 = 0u64;
+
+    for (si, sample) in art.traces.iter().enumerate() {
+        let mut sim = NetworkSim::new(&cfg, art.weights.clone(), CostModel::default());
+        let (result, traces) = sim.run_recording(&sample.input);
+        if si == 0 {
+            cycles0 = result.total_cycles;
+        }
+        for l in 0..n_layers {
+            let (m, b) = diff_trains(&traces[l], &sample.layer_outputs[l]);
+            mismatches[l] += m;
+            bits[l] += b;
+        }
+    }
+    Ok(ValidationReport {
+        samples: art.traces.len(),
+        mismatches_per_layer: mismatches,
+        bits_per_layer: bits,
+        total_cycles_sample0: cycles0,
+    })
+}
+
+/// Validate against a live PJRT execution of the AOT HLO: feed trace
+/// sample `sample_idx`'s input and the trained weights, compare every
+/// layer's spike train (FC nets only — the AOT export covers FC).
+pub fn validate_against_hlo(
+    art: &NetArtifacts,
+    hlo_path: &Path,
+    sample_idx: usize,
+) -> Result<ValidationReport> {
+    let rt = Runtime::cpu()?;
+    let exe = rt.load_snn(hlo_path)?;
+    let sample = &art.traces[sample_idx];
+    anyhow::ensure!(
+        exe.input_shape.0 == art.trace_t,
+        "HLO was exported for T={}, traces have T={} — re-run `make artifacts`",
+        exe.input_shape.0,
+        art.trace_t
+    );
+
+    // Flatten weights in (w, b) call order.
+    let mut params = Vec::new();
+    for lw in &art.weights {
+        match lw {
+            LayerWeights::Fc { w, b } | LayerWeights::Conv { w, b } => {
+                params.push(w.clone());
+                params.push(b.clone());
+            }
+            LayerWeights::None => {}
+        }
+    }
+    let outputs = exe.run(&sample.input, &params)?;
+
+    // Simulator side.
+    let mut net = art.net.clone();
+    net.t_steps = art.trace_t;
+    let n_param = net.parametric_layers().len();
+    let cfg = ExperimentConfig::new(net, HwConfig::fully_parallel(n_param))?;
+    let mut sim = NetworkSim::new(&cfg, art.weights.clone(), CostModel::default());
+    let (result, traces) = sim.run_recording(&sample.input);
+
+    // Compare layer spike trains (HLO outputs all layers then rates).
+    let n_layers = traces.len();
+    let mut mismatches = vec![0u64; n_layers];
+    let mut bits = vec![0u64; n_layers];
+    for l in 0..n_layers {
+        let flat = &outputs[l];
+        let n_bits = cfg.net.layers[l].output_bits();
+        bits[l] = (art.trace_t * n_bits) as u64;
+        for (t, step) in traces[l].iter().enumerate() {
+            for i in 0..n_bits {
+                let hlo_bit = flat[t * n_bits + i] >= 0.5;
+                if hlo_bit != step.get(i) {
+                    mismatches[l] += 1;
+                }
+            }
+        }
+    }
+    Ok(ValidationReport {
+        samples: 1,
+        mismatches_per_layer: mismatches,
+        bits_per_layer: bits,
+        total_cycles_sample0: result.total_cycles,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::BitVec;
+
+    #[test]
+    fn diff_counts_bit_flips() {
+        let a = vec![BitVec::from_bools(&[true, false, true])];
+        let b = vec![BitVec::from_bools(&[true, true, false])];
+        let (m, bits) = diff_trains(&a, &b);
+        assert_eq!((m, bits), (2, 3));
+    }
+
+    #[test]
+    fn report_pass_logic() {
+        let r = ValidationReport {
+            samples: 1,
+            mismatches_per_layer: vec![0, 0],
+            bits_per_layer: vec![100, 100],
+            total_cycles_sample0: 5,
+        };
+        assert!(r.passed());
+        assert_eq!(r.mismatch_rate(), 0.0);
+        let r2 = ValidationReport {
+            mismatches_per_layer: vec![1, 0],
+            ..r
+        };
+        assert!(!r2.passed());
+        assert!(r2.mismatch_rate() > 0.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Integration tests over the real build-path artifacts (skipped with a
+//! note when `make artifacts` has not been run — CI runs it first).
+//!
+//! These are the paper's "Simulation & Validation Phase" as tests: the
+//! cycle-accurate simulator must reproduce the trained JAX model's spike
+//! trains bit-for-bit, per layer, per time step, for every Table-I network
+//! including the conv/pool DVS topology — and the PJRT-executed AOT HLO
+//! must agree too.
+
+use snn_dse::runtime::NetArtifacts;
+use snn_dse::validate::{validate_against_hlo, validate_against_traces};
+use std::path::{Path, PathBuf};
+
+fn art(name: &str) -> Option<NetArtifacts> {
+    let dir = PathBuf::from("artifacts").join(name);
+    if !dir.exists() {
+        eprintln!("skipping: {} missing (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(NetArtifacts::load(&dir).expect("artifacts load"))
+}
+
+#[test]
+fn net1_loads_with_expected_shape() {
+    let Some(a) = art("net1") else { return };
+    assert_eq!(a.net.topology_string(), "784-500-500-300");
+    assert_eq!(a.weights.len(), 3);
+    assert_eq!(a.traces.len(), 8);
+    assert!(a.accuracy > 0.5, "net1 trained accuracy {}", a.accuracy);
+    assert_eq!(a.traces[0].input.len(), a.trace_t);
+    assert_eq!(a.traces[0].layer_outputs.len(), 3);
+}
+
+#[test]
+fn spike_to_spike_bit_exact_fc_nets() {
+    for name in ["net1", "net2", "net3", "net4"] {
+        let Some(a) = art(name) else { return };
+        let n = a.net.parametric_layers().len();
+        let r = validate_against_traces(&a, &vec![1; n]).expect("validation run");
+        assert!(
+            r.passed(),
+            "{name}: {} mismatched bits (rate {:.2e})",
+            r.mismatches_per_layer.iter().sum::<u64>(),
+            r.mismatch_rate()
+        );
+    }
+}
+
+#[test]
+fn spike_to_spike_bit_exact_conv_net5() {
+    let Some(a) = art("net5") else { return };
+    let n = a.net.parametric_layers().len();
+    let r = validate_against_traces(&a, &vec![1; n]).expect("validation run");
+    assert!(
+        r.passed(),
+        "net5 conv validation: {} mismatches",
+        r.mismatches_per_layer.iter().sum::<u64>()
+    );
+}
+
+#[test]
+fn validation_invariant_under_lhr() {
+    // Functional results must not depend on the mapping.
+    let Some(a) = art("net1") else { return };
+    let r1 = validate_against_traces(&a, &[1, 1, 1]).unwrap();
+    let r2 = validate_against_traces(&a, &[4, 8, 8]).unwrap();
+    assert!(r1.passed() && r2.passed());
+    assert!(
+        r2.total_cycles_sample0 > r1.total_cycles_sample0,
+        "higher LHR must cost cycles"
+    );
+}
+
+#[test]
+fn pjrt_hlo_agrees_with_simulator() {
+    let Some(a) = art("net1") else { return };
+    let hlo = Path::new("artifacts/net1_T25.hlo.txt");
+    if !hlo.exists() {
+        eprintln!("skipping: {} missing", hlo.display());
+        return;
+    }
+    let r = validate_against_hlo(&a, hlo, 0).expect("hlo validation");
+    assert!(r.passed(), "PJRT HLO disagrees with simulator");
+}
+
+#[test]
+fn manifest_activity_matches_trace_activity() {
+    // The manifest's avg_spikes_per_layer (whole test set) must be in the
+    // same regime as the stored trace samples.
+    let Some(a) = art("net1") else { return };
+    for (l, tr_mean) in a.avg_spikes_per_layer.iter().enumerate().skip(1) {
+        let from_traces: f64 = a
+            .traces
+            .iter()
+            .map(|s| {
+                s.layer_outputs[l - 1]
+                    .iter()
+                    .map(|b| b.count_ones() as f64)
+                    .sum::<f64>()
+                    / a.trace_t as f64
+            })
+            .sum::<f64>()
+            / a.traces.len() as f64;
+        let ratio = from_traces / tr_mean.max(1e-9);
+        assert!(
+            (0.4..2.5).contains(&ratio),
+            "layer {l}: trace activity {from_traces:.1} vs manifest {tr_mean:.1}"
+        );
+    }
+}

@@ -1,0 +1,188 @@
+//! Property-based invariants of the coordinator/simulator stack, checked
+//! over randomized topologies, mappings and workloads (the in-repo
+//! `prop_check` harness replaces proptest — see util::prop).
+
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::resources::estimate;
+use snn_dse::sim::{random_spike_train, CostModel, NetworkSim};
+use snn_dse::snn::{fc_net, BitVec};
+use snn_dse::util::prop::{prop_check, Gen};
+
+fn random_fc_case(g: &mut Gen) -> (ExperimentConfig, Vec<Vec<BitVec>>) {
+    let n_in = g.usize_in(8, 400);
+    let h1 = g.usize_in(4, 300);
+    let h2 = g.usize_in(4, 200);
+    let t = g.usize_in(1, 12);
+    let net = fc_net("prop", "mnist", &[n_in, h1, h2], 2, 1, 0.9, t);
+    let lhr = vec![g.pow2(6).min(h1), g.pow2(6).min(h2)];
+    let cfg = ExperimentConfig::new(net, HwConfig::with_lhr(lhr)).unwrap();
+    let rate = g.f64_in(0.0, 0.5);
+    let input = random_spike_train(n_in, t, rate, g.rng());
+    (cfg, vec![input])
+}
+
+#[test]
+fn pipelined_latency_bounded_by_serial_and_bottleneck() {
+    prop_check(64, 0x51AB, |g| {
+        let (cfg, inputs) = random_fc_case(g);
+        let mut sim = NetworkSim::with_random_weights(&cfg, g.case_seed, CostModel::default());
+        let r = sim.run(&inputs[0]);
+        if r.total_cycles > r.serial_cycles {
+            return Err(format!("pipelined {} > serial {}", r.total_cycles, r.serial_cycles));
+        }
+        let bottleneck = r.per_layer.iter().map(|l| l.busy_cycles).max().unwrap_or(0);
+        if r.total_cycles < bottleneck {
+            return Err(format!(
+                "pipelined {} < bottleneck busy {}",
+                r.total_cycles, bottleneck
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn doubling_lhr_never_reduces_latency_or_grows_area() {
+    prop_check(48, 0xD0B1, |g| {
+        let (cfg, inputs) = random_fc_case(g);
+        let mut lhr2 = cfg.hw.lhr.clone();
+        let li = g.usize_in(0, lhr2.len() - 1);
+        let sizes = [
+            cfg.net.layers[li].logical_units(),
+        ];
+        if lhr2[li] * 2 > sizes[0] {
+            return Ok(()); // can't double further
+        }
+        lhr2[li] *= 2;
+        let cfg2 = ExperimentConfig::new(cfg.net.clone(), HwConfig::with_lhr(lhr2)).unwrap();
+        let mut s1 = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let mut s2 = NetworkSim::with_random_weights(&cfg2, 7, CostModel::default());
+        let r1 = s1.run(&inputs[0]);
+        let r2 = s2.run(&inputs[0]);
+        if r2.total_cycles < r1.total_cycles {
+            return Err(format!(
+                "doubling LHR[{li}] reduced latency {} -> {}",
+                r1.total_cycles, r2.total_cycles
+            ));
+        }
+        let a1 = estimate(&cfg).total.lut;
+        let a2 = estimate(&cfg2).total.lut;
+        if a2 > a1 + 1e-6 {
+            return Err(format!("doubling LHR[{li}] grew LUT {a1} -> {a2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn functional_outputs_independent_of_mapping() {
+    // LHR changes *when* things happen, never *what* is computed: output
+    // spike counts must be identical across mappings for the same weights.
+    prop_check(32, 0xFA57, |g| {
+        let (cfg, inputs) = random_fc_case(g);
+        let full = ExperimentConfig::new(
+            cfg.net.clone(),
+            HwConfig::fully_parallel(cfg.hw.lhr.len()),
+        )
+        .unwrap();
+        let mut s1 = NetworkSim::with_random_weights(&cfg, 99, CostModel::default());
+        let mut s2 = NetworkSim::with_random_weights(&full, 99, CostModel::default());
+        let r1 = s1.run(&inputs[0]);
+        let r2 = s2.run(&inputs[0]);
+        if r1.output_counts != r2.output_counts {
+            return Err("output spikes changed with mapping".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn more_input_spikes_never_cheaper() {
+    // Sparsity-awareness: adding spikes to the input train can only add
+    // work (monotone cycle model).
+    prop_check(32, 0xADD5, |g| {
+        let (cfg, inputs) = random_fc_case(g);
+        let input = &inputs[0];
+        // superset train: set extra bits in every step
+        let mut denser = input.clone();
+        for step in denser.iter_mut() {
+            for i in 0..step.len() {
+                if g.rng().bernoulli(0.2) {
+                    step.set(i);
+                }
+            }
+        }
+        let mut s1 = NetworkSim::with_random_weights(&cfg, 5, CostModel::default());
+        let mut s2 = NetworkSim::with_random_weights(&cfg, 5, CostModel::default());
+        // compare only layer-0 compress+accum busy cycles (downstream
+        // activity depends on weights and may legitimately shrink)
+        let r1 = s1.run(input);
+        let r2 = s2.run(&denser);
+        let l0_1 = r1.per_layer[0].compress_cycles + r1.per_layer[0].accum_cycles;
+        let l0_2 = r2.per_layer[0].compress_cycles + r2.per_layer[0].accum_cycles;
+        if l0_2 < l0_1 {
+            return Err(format!("denser input got cheaper: {l0_1} -> {l0_2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stats_accounting_consistent() {
+    prop_check(48, 0xACC7, |g| {
+        let (cfg, inputs) = random_fc_case(g);
+        let mut sim = NetworkSim::with_random_weights(&cfg, g.case_seed, CostModel::default());
+        let r = sim.run(&inputs[0]);
+        let t = inputs[0].len() as u64;
+        for (li, l) in r.per_layer.iter().enumerate() {
+            let total =
+                l.compress_cycles + l.accum_cycles + l.activate_cycles + l.overhead_cycles;
+            if total != l.busy_cycles {
+                return Err(format!("layer {li}: phase sum {total} != busy {}", l.busy_cycles));
+            }
+            // weight reads = in_spikes * layer_size for FC
+            let n = cfg.net.layers[li].logical_units() as u64;
+            if l.weight_reads != l.in_spikes * n {
+                return Err(format!(
+                    "layer {li}: weight reads {} != in_spikes {} * n {}",
+                    l.weight_reads, l.in_spikes, n
+                ));
+            }
+            if l.activations != t * n {
+                return Err(format!("layer {li}: activations {} != t*n", l.activations));
+            }
+        }
+        // layer l's input spikes == layer l-1's output spikes
+        for w in r.per_layer.windows(2) {
+            if w[1].in_spikes != w[0].out_spikes {
+                return Err("spike plumbing between layers broken".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cost_only_agrees_with_functional_for_fc() {
+    prop_check(32, 0xC057, |g| {
+        let (cfg, inputs) = random_fc_case(g);
+        let mut fsim = NetworkSim::with_random_weights(&cfg, 11, CostModel::default());
+        let (fr, traces) = fsim.run_recording(&inputs[0]);
+        let mut activity = vec![inputs[0]
+            .iter()
+            .map(|b| b.count_ones())
+            .collect::<Vec<_>>()];
+        for tr in &traces {
+            activity.push(tr.iter().map(|b| b.count_ones()).collect());
+        }
+        let mut csim = NetworkSim::cost_only(&cfg, CostModel::default());
+        let cr = csim.run_activity(&activity);
+        if fr.total_cycles != cr.total_cycles || fr.serial_cycles != cr.serial_cycles {
+            return Err(format!(
+                "cost-only {} != functional {}",
+                cr.total_cycles, fr.total_cycles
+            ));
+        }
+        Ok(())
+    });
+}
