@@ -3,14 +3,47 @@
 //! step, (c) CONV layer step, (d) full pipelined inference, at realistic
 //! activity levels, reporting ns/op and derived throughput.
 //!
+//! A counting global allocator additionally reports heap allocations per
+//! inference and per steady-state step: the unified engine's ping-pong
+//! spike buffers (`BitVec::copy_from` / `fill_from_bools`) must drive the
+//! per-step allocation count to zero on the functional path.
+//!
 //! Run: `cargo bench --bench sim_microbench`
 
 use snn_dse::config::{ExperimentConfig, HwConfig};
 use snn_dse::sim::{random_spike_train, CostModel, LayerSim, LayerWeights, NetworkSim, Penc};
-use snn_dse::snn::{table1_net, BitVec, Layer};
+use snn_dse::snn::{table1_net, BitVec, Layer, SpikeTrain};
 use snn_dse::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+/// System allocator wrapper counting every allocation (and reallocation).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
 
 fn time<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     // warmup
@@ -36,8 +69,8 @@ fn main() {
     let penc = Penc::new(64);
     let costs = CostModel::default();
     let mut buf = Vec::new();
-    time("penc.compress 784b @12% density", 20_000, || {
-        black_box(penc.compress(black_box(&bits), &costs, &mut buf));
+    time("penc.compress_into 784b @12% density", 20_000, || {
+        black_box(penc.compress_into(black_box(&bits), &costs, &mut buf));
     });
 
     // (b) FC layer step: 784 -> 500, ~95 spikes
@@ -48,8 +81,9 @@ fn main() {
             b: vec![0.0; 500],
         }, costs.clone());
     let train = random_spike_train(784, 1, 0.12, &mut rng);
-    time("fc_layer.step 784->500 @95 spikes", 5_000, || {
-        black_box(fc.step(black_box(&train[0])));
+    let mut fc_out = BitVec::zeros(0);
+    time("fc_layer.step_into 784->500 @95 spikes", 5_000, || {
+        black_box(fc.step_into(black_box(&train[0]), &mut fc_out));
     });
 
     // (c) CONV layer step: 32ch 64x64, k=3, ~200 spikes
@@ -61,11 +95,12 @@ fn main() {
             b: vec![0.0; 32],
         }, costs.clone());
     let ctrain = random_spike_train(32 * 64 * 64, 1, 200.0 / (32.0 * 64.0 * 64.0), &mut rng);
-    time("conv_layer.step 32ch 64x64 @~200 spikes", 200, || {
-        black_box(conv.step(black_box(&ctrain[0])));
+    let mut conv_out = BitVec::zeros(0);
+    time("conv_layer.step_into 32ch 64x64 @~200 spikes", 200, || {
+        black_box(conv.step_into(black_box(&ctrain[0]), &mut conv_out));
     });
 
-    // (d) full net-1 functional inference (T=25)
+    // (d) full net-1 functional inference (T=25) through the unified engine
     let net = table1_net("net1");
     let cfg = ExperimentConfig::new(net, HwConfig::with_lhr(vec![1, 1, 1])).unwrap();
     let mut sim = NetworkSim::with_random_weights(&cfg, 3, costs.clone());
@@ -75,6 +110,56 @@ fn main() {
         black_box(sim.run(black_box(&input)));
     });
     println!("  => {:.0} inferences/s functional", 1.0 / per);
+
+    // (d2) steady-state allocation accounting: compare a T=25 and a T=100
+    // run on warmed buffers — the difference divided by the 75 extra steps
+    // is the engine's per-step allocation count (target: 0).
+    let input100 = random_spike_train(784, 100, 0.12, &mut rng);
+    sim.reset();
+    sim.run(&input100); // warm every buffer to max size
+    sim.reset();
+    let a0 = allocs();
+    sim.run(&input);
+    let per_inference_25 = allocs() - a0;
+    sim.reset();
+    let a1 = allocs();
+    sim.run(&input100);
+    let per_inference_100 = allocs() - a1;
+    let per_step =
+        (per_inference_100 as f64 - per_inference_25 as f64) / 75.0;
+    println!(
+        "  allocations: {per_inference_25}/inference @T=25, \
+         {per_inference_100}/inference @T=100 => {per_step:.2}/step steady-state"
+    );
+
+    // (d3) batched serving throughput: 32 samples streamed back-to-back
+    // through the layer pipeline vs run one-by-one.
+    let batch: Vec<SpikeTrain> = (0..32)
+        .map(|_| random_spike_train(784, 25, 0.12, &mut rng))
+        .collect();
+    let mut sim_batch = NetworkSim::with_random_weights(&cfg, 3, costs.clone());
+    let per_batch = time("net1 batched serving x32 (T=25 each)", 20, || {
+        sim_batch.reset();
+        black_box(sim_batch.run_batched(black_box(&batch)));
+    });
+    println!(
+        "  => {:.0} inferences/s batched ({:.2}x single-run throughput)",
+        32.0 / per_batch,
+        32.0 / per_batch * per
+    );
+    sim_batch.reset();
+    let (bres, _) = sim_batch.run_batched(&batch);
+    let mut serial_total = 0u64;
+    for s in &batch {
+        sim.reset();
+        serial_total += sim.run(s).total_cycles;
+    }
+    println!(
+        "  simulated cycles: batched {} vs {} one-by-one (pipeline win x{:.2})",
+        bres.total_cycles,
+        serial_total,
+        serial_total as f64 / bres.total_cycles as f64
+    );
 
     // (e) activity-driven net-5 (the heavy Table-I row)
     let net5 = table1_net("net5");

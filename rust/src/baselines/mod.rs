@@ -6,6 +6,7 @@
 
 use crate::config::{ExperimentConfig, HwConfig};
 use crate::sim::costs::CostModel;
+use crate::sim::engine::advance_finish;
 use crate::sim::stats::{LayerStats, PhaseCycles, SimResult};
 use crate::snn::{Layer, NetDef};
 
@@ -143,8 +144,7 @@ pub fn oblivious_latency(net: &NetDef, hw: &HwConfig, costs: &CostModel) -> SimR
         let mut prev = 0u64;
         for (l, &c) in per_step.iter().enumerate() {
             serial += c;
-            finish[l] = finish[l].max(prev) + c;
-            prev = finish[l];
+            prev = advance_finish(&mut finish[l], prev, c);
             let phases = PhaseCycles {
                 compress: 0,
                 accumulate: c.saturating_sub(1),

@@ -12,7 +12,8 @@
 
 use crate::config::HwConfig;
 use crate::data::ActivityModel;
-use crate::dse::runner::{evaluate, DsePoint, EvalMode};
+use crate::dse::runner::{evaluate_cached, DsePoint, EvalMode};
+use crate::resources::EstimateCache;
 use crate::sim::CostModel;
 use crate::snn::NetDef;
 
@@ -62,12 +63,16 @@ pub fn auto_search(
         .collect();
 
     let mut lhr = vec![1usize; n_layers];
+    // candidate moves revisit the same LHR tuples across iterations — the
+    // shared cache memoizes their resource estimates
+    let cache = EstimateCache::new();
     let eval = |lhr: &Vec<usize>| {
-        evaluate(
+        evaluate_cached(
             net,
             &HwConfig::with_lhr(lhr.clone()),
             &EvalMode::Activity { seed },
             costs,
+            &cache,
         )
     };
     let mut current = eval(&lhr);

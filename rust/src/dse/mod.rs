@@ -10,5 +10,5 @@ pub mod space;
 
 pub use auto::{auto_search, Constraints, SearchResult};
 pub use pareto::{dominates, knee_point, pareto_front};
-pub use runner::{evaluate, sweep, DsePoint, EvalMode};
+pub use runner::{evaluate, evaluate_cached, sweep, DsePoint, EvalMode};
 pub use space::{enumerate_capped, enumerate_lhr, lhr_choices, table1_lhr_sets};

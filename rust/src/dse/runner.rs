@@ -1,16 +1,23 @@
 //! DSE evaluation engine: configure -> simulate -> estimate -> score.
 //!
 //! One `DsePoint` per hardware configuration carries everything Table I
-//! reports (cycles, LUT/REG/BRAM, energy). Sweeps fan out across OS threads
-//! (`std::thread::scope`); the simulator is deterministic per seed so
-//! parallel and serial sweeps produce identical points.
+//! reports (cycles, LUT/REG/BRAM, energy). Sweeps fan out across OS
+//! threads with a work-stealing atomic-index dispatcher: workers pull the
+//! next unclaimed configuration instead of receiving fixed chunks, so
+//! heterogeneous LHR points (a net-5 conv row costs orders of magnitude
+//! more than a tiny FC row) cannot load-imbalance the sweep, and the empty
+//! input slice is trivially handled. The simulator is deterministic per
+//! seed, so 1-thread and N-thread sweeps produce byte-identical points.
+//! Resource estimates are memoized across points sharing
+//! `(net, lhr, mem_blocks, ...)` via [`EstimateCache`].
 
 use crate::config::{ExperimentConfig, HwConfig};
 use crate::data::ActivityModel;
-use crate::resources::{estimate, EnergyModel, Resources};
+use crate::resources::{estimate, estimate_total_cached, EnergyModel, EstimateCache, Resources};
 use crate::sim::{CostModel, LayerWeights, NetworkSim, SimResult};
 use crate::snn::{NetDef, SpikeTrain};
 use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// How to drive the simulator for each configuration.
 pub enum EvalMode<'a> {
@@ -53,6 +60,28 @@ impl DsePoint {
 
 /// Evaluate one configuration.
 pub fn evaluate(net: &NetDef, hw: &HwConfig, mode: &EvalMode, costs: &CostModel) -> DsePoint {
+    eval_inner(net, hw, mode, costs, None)
+}
+
+/// Evaluate one configuration, memoizing the resource estimate in `cache`
+/// (shared across sweep workers / auto-search iterations).
+pub fn evaluate_cached(
+    net: &NetDef,
+    hw: &HwConfig,
+    mode: &EvalMode,
+    costs: &CostModel,
+    cache: &EstimateCache,
+) -> DsePoint {
+    eval_inner(net, hw, mode, costs, Some(cache))
+}
+
+fn eval_inner(
+    net: &NetDef,
+    hw: &HwConfig,
+    mode: &EvalMode,
+    costs: &CostModel,
+    cache: Option<&EstimateCache>,
+) -> DsePoint {
     let cfg = ExperimentConfig::new(net.clone(), hw.clone()).expect("invalid config");
     let sim_result: SimResult = match mode {
         EvalMode::Activity { seed } => {
@@ -78,7 +107,10 @@ pub fn evaluate(net: &NetDef, hw: &HwConfig, mode: &EvalMode, costs: &CostModel)
             sim.run(&input)
         }
     };
-    let resources = estimate(&cfg).total;
+    let resources = match cache {
+        Some(c) => estimate_total_cached(&cfg, c),
+        None => estimate(&cfg).total,
+    };
     let energy = EnergyModel::default().inference_energy(&resources, &sim_result, cfg.hw.clock_hz);
     DsePoint {
         net: net.name.clone(),
@@ -93,8 +125,10 @@ pub fn evaluate(net: &NetDef, hw: &HwConfig, mode: &EvalMode, costs: &CostModel)
     }
 }
 
-/// Evaluate many configurations across `n_threads` OS threads.
-/// Order of results matches `configs`.
+/// Evaluate many configurations across up to `n_threads` OS threads with
+/// work stealing (atomic next-index dispatch). Order of results matches
+/// `configs`; an empty slice yields an empty result. Results are
+/// byte-identical regardless of thread count.
 pub fn sweep(
     net: &NetDef,
     configs: &[HwConfig],
@@ -102,26 +136,58 @@ pub fn sweep(
     costs: &CostModel,
     n_threads: usize,
 ) -> Vec<DsePoint> {
-    let n_threads = n_threads.max(1).min(configs.len().max(1));
+    if configs.is_empty() {
+        return Vec::new();
+    }
+    let n_threads = n_threads.clamp(1, configs.len());
+    let cache = EstimateCache::new();
     let mut results: Vec<Option<DsePoint>> = vec![None; configs.len()];
-    let chunk = configs.len().div_ceil(n_threads);
-    std::thread::scope(|s| {
-        for (tid, (cfg_chunk, res_chunk)) in configs
-            .chunks(chunk)
-            .zip(results.chunks_mut(chunk))
-            .enumerate()
-        {
-            let costs = costs.clone();
-            s.spawn(move || {
-                for (c, slot) in cfg_chunk.iter().zip(res_chunk.iter_mut()) {
-                    // same seed for every config: identical workload
-                    let _ = tid;
-                    *slot = Some(evaluate(net, c, &EvalMode::Activity { seed }, &costs));
-                }
-            });
-        }
+
+    // One code path for every thread count: each worker steals the next
+    // unclaimed index, so results are byte-identical whether one worker or
+    // many drain the queue.
+    let next = AtomicUsize::new(0);
+    let per_worker: Vec<Vec<(usize, DsePoint)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_threads)
+            .map(|_| {
+                let next = &next;
+                let cache = &cache;
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        // steal the next unclaimed configuration
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= configs.len() {
+                            break;
+                        }
+                        // same seed for every config: identical workload
+                        out.push((
+                            i,
+                            evaluate_cached(
+                                net,
+                                &configs[i],
+                                &EvalMode::Activity { seed },
+                                costs,
+                                cache,
+                            ),
+                        ));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
     });
-    results.into_iter().map(|p| p.unwrap()).collect()
+    for (i, p) in per_worker.into_iter().flatten() {
+        results[i] = Some(p);
+    }
+    results
+        .into_iter()
+        .map(|p| p.expect("work-stealing dispatch covered every config"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -157,6 +223,66 @@ mod tests {
             assert_eq!(p.cycles, q.cycles, "config {}", c.label());
             assert_eq!(p.resources, q.resources);
         }
+    }
+
+    #[test]
+    fn sweep_empty_configs_returns_empty() {
+        // regression: the chunked splitter used to compute chunk size 0 and
+        // panic in `chunks(0)` on an empty input
+        let net = table1_net("net1");
+        let out = sweep(&net, &[], 42, &CostModel::default(), 8);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn sweep_identical_across_thread_counts() {
+        // acceptance: results byte-identical between 1 thread and N threads
+        let net = table1_net("net2");
+        let configs: Vec<HwConfig> = table1_lhr_sets("net2")
+            .into_iter()
+            .map(HwConfig::with_lhr)
+            .collect();
+        let costs = CostModel::default();
+        let serial = sweep(&net, &configs, 42, &costs, 1);
+        for threads in [2, 4, 16] {
+            let par = sweep(&net, &configs, 42, &costs, threads);
+            assert_eq!(par.len(), serial.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.cycles, b.cycles, "{threads} threads, {}", a.label);
+                assert_eq!(a.serial_cycles, b.serial_cycles);
+                assert_eq!(a.resources, b.resources);
+                assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits());
+                assert_eq!(a.latency_us.to_bits(), b.latency_us.to_bits());
+                let la: Vec<u64> = a.layer_activity.iter().map(|x| x.to_bits()).collect();
+                let lb: Vec<u64> = b.layer_activity.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(la, lb);
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_more_threads_than_configs() {
+        let net = table1_net("net1");
+        let configs = vec![HwConfig::with_lhr(vec![1, 1, 1])];
+        let out = sweep(&net, &configs, 42, &CostModel::default(), 64);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].cycles > 0);
+    }
+
+    #[test]
+    fn cached_evaluate_matches_uncached() {
+        let net = table1_net("net1");
+        let hw = HwConfig::with_lhr(vec![4, 8, 8]);
+        let costs = CostModel::default();
+        let cache = EstimateCache::new();
+        let a = evaluate(&net, &hw, &EvalMode::Activity { seed: 9 }, &costs);
+        let b = evaluate_cached(&net, &hw, &EvalMode::Activity { seed: 9 }, &costs, &cache);
+        let c = evaluate_cached(&net, &hw, &EvalMode::Activity { seed: 9 }, &costs, &cache);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.resources, b.resources);
+        assert_eq!(b.resources, c.resources);
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

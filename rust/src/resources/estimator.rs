@@ -11,6 +11,8 @@ use crate::resources::library::{self, Resources};
 use crate::sim::memory::MemoryUnit;
 use crate::sim::neural_unit::NuMap;
 use crate::snn::Layer;
+use std::collections::HashMap;
+use std::sync::Mutex;
 
 /// Parallel PENC instances per layer are capped: beyond this the single
 /// PENC array is *time-multiplexed* over the remaining chunks (paper §V-B:
@@ -31,6 +33,68 @@ pub struct LayerEstimate {
 pub struct ResourceEstimate {
     pub per_layer: Vec<LayerEstimate>,
     pub total: Resources,
+}
+
+/// Everything `estimate` depends on, as a hashable key. The topology
+/// string captures layer sizes, so population-resized variants of a named
+/// net cannot collide.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct EstimateKey {
+    pub net: String,
+    pub topology: String,
+    pub lhr: Vec<usize>,
+    pub mem_blocks: Vec<usize>,
+    pub penc_width: usize,
+    pub weight_bits: usize,
+}
+
+impl EstimateKey {
+    pub fn of(cfg: &ExperimentConfig) -> Self {
+        EstimateKey {
+            net: cfg.net.name.clone(),
+            topology: cfg.net.topology_string(),
+            lhr: cfg.hw.lhr.clone(),
+            mem_blocks: cfg.hw.mem_blocks.clone(),
+            penc_width: cfg.hw.penc_width,
+            weight_bits: cfg.hw.weight_bits,
+        }
+    }
+}
+
+/// Thread-safe memo of total resource estimates. DSE sweeps and the
+/// greedy auto-search evaluate many points that revisit the same
+/// `(net, lhr, mem_blocks)` tuple (auto-search re-scores candidate moves
+/// every iteration); the cache collapses those to one `estimate` walk.
+#[derive(Default)]
+pub struct EstimateCache {
+    map: Mutex<HashMap<EstimateKey, Resources>>,
+}
+
+impl EstimateCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distinct configurations estimated so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Memoized variant of [`estimate`] returning the design total. Safe to
+/// share across sweep worker threads.
+pub fn estimate_total_cached(cfg: &ExperimentConfig, cache: &EstimateCache) -> Resources {
+    let key = EstimateKey::of(cfg);
+    if let Some(r) = cache.map.lock().unwrap().get(&key) {
+        return *r;
+    }
+    let total = estimate(cfg).total;
+    cache.map.lock().unwrap().insert(key, total);
+    total
 }
 
 /// Depth of the shift-register array for a layer with `n_pre` inputs: the
@@ -168,6 +232,50 @@ mod tests {
         let r = est("net2", vec![2, 2, 16, 8]);
         let sum: f64 = r.per_layer.iter().map(|l| l.resources.lut).sum();
         assert!((sum - r.total.lut).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cached_estimate_matches_direct() {
+        let cache = EstimateCache::new();
+        let cfg = ExperimentConfig::new(
+            table1_net("net1"),
+            HwConfig::with_lhr(vec![4, 8, 8]),
+        )
+        .unwrap();
+        let direct = estimate(&cfg).total;
+        let first = estimate_total_cached(&cfg, &cache);
+        let second = estimate_total_cached(&cfg, &cache);
+        assert_eq!(direct, first);
+        assert_eq!(first, second);
+        assert_eq!(cache.len(), 1, "repeat lookups must hit the memo");
+        // a different LHR is a different key
+        let cfg2 = ExperimentConfig::new(
+            table1_net("net1"),
+            HwConfig::with_lhr(vec![1, 1, 1]),
+        )
+        .unwrap();
+        let _ = estimate_total_cached(&cfg2, &cache);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cache_keys_distinguish_resized_topologies() {
+        // population sweeps resize the output layer under the same name;
+        // the topology string must keep their estimates apart.
+        let mut resized = table1_net("net1");
+        let out = resized.layers.len() - 1;
+        if let crate::snn::Layer::Fc { n, .. } = &mut resized.layers[out] {
+            *n = 10; // population 1 instead of 30
+        }
+        resized.population = 1;
+        let cache = EstimateCache::new();
+        let a = ExperimentConfig::new(table1_net("net1"), HwConfig::with_lhr(vec![1, 1, 1]))
+            .unwrap();
+        let b = ExperimentConfig::new(resized, HwConfig::with_lhr(vec![1, 1, 1])).unwrap();
+        let ra = estimate_total_cached(&a, &cache);
+        let rb = estimate_total_cached(&b, &cache);
+        assert_eq!(cache.len(), 2, "resized net must get its own key");
+        assert!(ra.lut > rb.lut, "smaller output layer must cost less");
     }
 
     #[test]

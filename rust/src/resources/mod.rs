@@ -7,5 +7,7 @@ pub mod estimator;
 pub mod library;
 
 pub use energy::{EnergyBreakdown, EnergyModel};
-pub use estimator::{estimate, LayerEstimate, ResourceEstimate};
+pub use estimator::{
+    estimate, estimate_total_cached, EstimateCache, EstimateKey, LayerEstimate, ResourceEstimate,
+};
 pub use library::Resources;

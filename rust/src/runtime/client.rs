@@ -5,121 +5,185 @@
 //! Interchange is HLO *text*, not serialized HloModuleProto — jax >= 0.5
 //! emits 64-bit instruction ids the bundled xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The real implementation needs the `xla` crate, which only exists in the
+//! full offline build environment's registry. It is therefore gated behind
+//! the `pjrt` cargo feature; without it a stub with the same API is
+//! compiled whose constructors return a descriptive error, so every
+//! non-PJRT code path (simulation, DSE, trace validation) builds and runs
+//! unchanged.
 
-use crate::snn::SpikeTrain;
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use crate::snn::SpikeTrain;
+    use anyhow::{Context, Result};
+    use std::path::Path;
 
-/// A compiled SNN inference executable plus its calling convention
-/// (from the `.hlo.json` sidecar).
-pub struct SnnExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    /// [t, n_in] of the spike-train parameter.
-    pub input_shape: (usize, usize),
-    /// Shapes of the per-layer weight/bias parameters, in call order.
-    pub param_shapes: Vec<Vec<usize>>,
-    /// Output shapes: per-layer spike trains then class rates.
-    pub output_shapes: Vec<Vec<usize>>,
-}
-
-/// Wrapper around a PJRT CPU client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        Ok(Runtime {
-            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
-        })
+    /// A compiled SNN inference executable plus its calling convention
+    /// (from the `.hlo.json` sidecar).
+    pub struct SnnExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        /// [t, n_in] of the spike-train parameter.
+        pub input_shape: (usize, usize),
+        /// Shapes of the per-layer weight/bias parameters, in call order.
+        pub param_shapes: Vec<Vec<usize>>,
+        /// Output shapes: per-layer spike trains then class rates.
+        pub output_shapes: Vec<Vec<usize>>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Wrapper around a PJRT CPU client.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    /// Load + compile `<stem>.hlo.txt` (with its `.hlo.json` sidecar).
-    pub fn load_snn(&self, hlo_txt: &Path) -> Result<SnnExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            hlo_txt
-                .to_str()
-                .context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", hlo_txt.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .context("compiling HLO on PJRT CPU")?;
-
-        let sidecar = hlo_txt.with_extension("").with_extension("hlo.json");
-        let meta = crate::util::json::Json::parse_file(&sidecar)
-            .with_context(|| format!("loading sidecar {}", sidecar.display()))?;
-        let ishape = meta.at("input_shape").usize_vec();
-        anyhow::ensure!(ishape.len() == 2, "input_shape must be [t, n]");
-        Ok(SnnExecutable {
-            exe,
-            input_shape: (ishape[0], ishape[1]),
-            param_shapes: meta
-                .at("param_shapes")
-                .as_arr()
-                .unwrap_or(&[])
-                .iter()
-                .map(|s| s.usize_vec())
-                .collect(),
-            output_shapes: meta
-                .at("outputs")
-                .as_arr()
-                .unwrap_or(&[])
-                .iter()
-                .map(|s| s.usize_vec())
-                .collect(),
-        })
-    }
-}
-
-impl SnnExecutable {
-    /// Execute on one input spike train + flat weight/bias tensors
-    /// (`params[i]` matches `param_shapes[i]`, row-major f32).
-    /// Returns each output as a flat f32 vector.
-    pub fn run(&self, input: &SpikeTrain, params: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let (t, n) = self.input_shape;
-        anyhow::ensure!(input.len() == t, "expected {t} time steps, got {}", input.len());
-        anyhow::ensure!(
-            params.len() == self.param_shapes.len(),
-            "expected {} parameter tensors, got {}",
-            self.param_shapes.len(),
-            params.len()
-        );
-        let mut flat = vec![0f32; t * n];
-        for (ti, step) in input.iter().enumerate() {
-            anyhow::ensure!(step.len() == n, "step {ti} has {} bits, want {n}", step.len());
-            for i in step.iter_ones() {
-                flat[ti * n + i] = 1.0;
-            }
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            Ok(Runtime {
+                client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            })
         }
-        let mut literals = Vec::with_capacity(1 + params.len());
-        literals.push(
-            xla::Literal::vec1(&flat).reshape(&[t as i64, n as i64])?,
-        );
-        for (p, shape) in params.iter().zip(&self.param_shapes) {
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile `<stem>.hlo.txt` (with its `.hlo.json` sidecar).
+        pub fn load_snn(&self, hlo_txt: &Path) -> Result<SnnExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_txt.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", hlo_txt.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .context("compiling HLO on PJRT CPU")?;
+
+            let sidecar = hlo_txt.with_extension("").with_extension("hlo.json");
+            let meta = crate::util::json::Json::parse_file(&sidecar)
+                .with_context(|| format!("loading sidecar {}", sidecar.display()))?;
+            let ishape = meta.at("input_shape").usize_vec();
+            anyhow::ensure!(ishape.len() == 2, "input_shape must be [t, n]");
+            Ok(SnnExecutable {
+                exe,
+                input_shape: (ishape[0], ishape[1]),
+                param_shapes: meta
+                    .at("param_shapes")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|s| s.usize_vec())
+                    .collect(),
+                output_shapes: meta
+                    .at("outputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|s| s.usize_vec())
+                    .collect(),
+            })
+        }
+    }
+
+    impl SnnExecutable {
+        /// Execute on one input spike train + flat weight/bias tensors
+        /// (`params[i]` matches `param_shapes[i]`, row-major f32).
+        /// Returns each output as a flat f32 vector.
+        pub fn run(&self, input: &SpikeTrain, params: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            let (t, n) = self.input_shape;
+            anyhow::ensure!(input.len() == t, "expected {t} time steps, got {}", input.len());
             anyhow::ensure!(
-                p.len() == shape.iter().product::<usize>(),
-                "param size {} != shape {:?}",
-                p.len(),
-                shape
+                params.len() == self.param_shapes.len(),
+                "expected {} parameter tensors, got {}",
+                self.param_shapes.len(),
+                params.len()
             );
-            literals.push(xla::Literal::vec1(p).reshape(&dims)?);
+            let mut flat = vec![0f32; t * n];
+            for (ti, step) in input.iter().enumerate() {
+                anyhow::ensure!(step.len() == n, "step {ti} has {} bits, want {n}", step.len());
+                for i in step.iter_ones() {
+                    flat[ti * n + i] = 1.0;
+                }
+            }
+            let mut literals = Vec::with_capacity(1 + params.len());
+            literals.push(xla::Literal::vec1(&flat).reshape(&[t as i64, n as i64])?);
+            for (p, shape) in params.iter().zip(&self.param_shapes) {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                anyhow::ensure!(
+                    p.len() == shape.iter().product::<usize>(),
+                    "param size {} != shape {:?}",
+                    p.len(),
+                    shape
+                );
+                literals.push(xla::Literal::vec1(p).reshape(&dims)?);
+            }
+            let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+                .to_literal_sync()?;
+            // aot.py lowers with return_tuple=True
+            let outs = result.decompose_tuple()?;
+            let mut vecs = Vec::with_capacity(outs.len());
+            for o in outs {
+                vecs.push(o.to_vec::<f32>()?);
+            }
+            Ok(vecs)
         }
-        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True
-        let outs = result.decompose_tuple()?;
-        let mut vecs = Vec::with_capacity(outs.len());
-        for o in outs {
-            vecs.push(o.to_vec::<f32>()?);
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::snn::SpikeTrain;
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    const UNAVAILABLE: &str = "PJRT execution unavailable: snn-dse was built without the \
+         `pjrt` feature (requires the `xla` crate from the offline registry)";
+
+    /// Stub with the same shape as the PJRT-backed executable.
+    pub struct SnnExecutable {
+        /// [t, n_in] of the spike-train parameter.
+        pub input_shape: (usize, usize),
+        /// Shapes of the per-layer weight/bias parameters, in call order.
+        pub param_shapes: Vec<Vec<usize>>,
+        /// Output shapes: per-layer spike trains then class rates.
+        pub output_shapes: Vec<Vec<usize>>,
+    }
+
+    /// Stub runtime: `cpu()` always fails with a descriptive error.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            bail!("{UNAVAILABLE}")
         }
-        Ok(vecs)
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load_snn(&self, _hlo_txt: &Path) -> Result<SnnExecutable> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+
+    impl SnnExecutable {
+        pub fn run(&self, _input: &SpikeTrain, _params: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+            bail!("{UNAVAILABLE}")
+        }
+    }
+}
+
+pub use imp::{Runtime, SnnExecutable};
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = Runtime::cpu().err().expect("stub must not construct");
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -10,6 +10,7 @@
 //! the degenerate case with one partition chosen up front.
 
 use crate::sim::costs::CostModel;
+use crate::sim::engine::advance_finish;
 use crate::snn::{Layer, NetDef};
 
 /// Dynamic allocator over a global NU budget.
@@ -132,10 +133,8 @@ pub fn compare_static_dynamic(
             let cs = fc_step_cost(n_pre, n, static_units[l], s_in, 64, costs);
             let cd = fc_step_cost(n_pre, n, dyn_units[l], s_in, 64, costs)
                 + alloc.reconfig_cycles;
-            static_finish[l] = static_finish[l].max(prev_s) + cs;
-            dynamic_finish[l] = dynamic_finish[l].max(prev_d) + cd;
-            prev_s = static_finish[l];
-            prev_d = dynamic_finish[l];
+            prev_s = advance_finish(&mut static_finish[l], prev_s, cs);
+            prev_d = advance_finish(&mut dynamic_finish[l], prev_d, cd);
         }
     }
     DynamicResult {

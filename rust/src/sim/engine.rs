@@ -1,0 +1,407 @@
+//! The unified simulation engine: ONE pipelined scheduler loop shared by
+//! every execution mode of the simulator.
+//!
+//! The paper's layer-wise pipelining (§V-B) is a single recurrence over
+//! per-layer, per-step costs:
+//!
+//! ```text
+//! finish[l][t] = max(finish[l][t-1], finish[l-1][t]) + c_l(t)
+//! ```
+//!
+//! Historically `NetworkSim::run`, `run_recording` and `run_activity` each
+//! re-implemented that loop with divergent bookkeeping and per-step
+//! `BitVec` clones. They are now thin wrappers over [`Engine::run`],
+//! parameterized on two small traits:
+//!
+//! * [`Workload`] — *what* drives each layer step: a functional spike
+//!   train ([`SpikeTrainWorkload`]), calibrated activity counts
+//!   ([`ActivityWorkload`]), or a batched multi-input stream for
+//!   serving-style throughput ([`BatchWorkload`], samples flow
+//!   back-to-back through the layer pipeline).
+//! * [`Probe`] — *what* is observed: nothing ([`NullProbe`]), per-layer
+//!   trace capture ([`TraceProbe`]), or per-sample output decoding
+//!   ([`BatchDecodeProbe`]).
+//!
+//! The engine owns a pair of ping-pong spike buffers reused across every
+//! step and layer (via [`BitVec::copy_from`] / `fill_from_bools`), so the
+//! functional hot path performs **zero steady-state allocations per step**.
+
+use crate::sim::layer::LayerSim;
+use crate::sim::stats::{decode_counts, PhaseCycles, SimResult};
+use crate::snn::{BitVec, SpikeTrain};
+
+/// One update of the pipelined finish-time recurrence. This helper is the
+/// single place in the codebase where the recurrence lives — the engine,
+/// the dynamic-allocation ablation and the sparsity-oblivious baseline all
+/// call it.
+#[inline]
+pub fn advance_finish(finish: &mut u64, prev_finish: u64, cost: u64) -> u64 {
+    *finish = (*finish).max(prev_finish) + cost;
+    *finish
+}
+
+/// Drives the per-layer work of one execution mode.
+pub trait Workload {
+    /// Total time steps to schedule.
+    fn t_steps(&self) -> usize;
+
+    /// Whether this workload propagates real spike trains (functional
+    /// modes). Cost-only workloads return `false` and the engine skips
+    /// buffer plumbing and output counting.
+    fn is_functional(&self) -> bool {
+        true
+    }
+
+    /// Write the step-`t` network input into `input` (no-op for cost-only
+    /// workloads).
+    fn begin_step(&mut self, t: usize, input: &mut BitVec);
+
+    /// Advance layer `l` at step `t`, returning its cycle breakdown.
+    /// Functional workloads consume `input` and fill `output`; cost-only
+    /// workloads ignore both buffers.
+    fn step_layer(
+        &mut self,
+        layer: &mut LayerSim,
+        l: usize,
+        t: usize,
+        input: &BitVec,
+        output: &mut BitVec,
+    ) -> PhaseCycles;
+}
+
+/// Observer hooks over a functional run. All methods default to no-ops.
+pub trait Probe {
+    /// Layer `l` produced its step-`t` output spike train.
+    fn on_layer_output(&mut self, _l: usize, _t: usize, _out: &BitVec) {}
+    /// The network's final layer produced its step-`t` output.
+    fn on_network_output(&mut self, _t: usize, _out: &BitVec) {}
+}
+
+/// Probe that observes nothing (plain latency/stats runs).
+pub struct NullProbe;
+
+impl Probe for NullProbe {}
+
+/// Captures every layer's full output spike train (spike-to-spike
+/// validation against the JAX reference).
+pub struct TraceProbe {
+    pub traces: Vec<SpikeTrain>,
+}
+
+impl TraceProbe {
+    pub fn new(n_layers: usize, t_steps: usize) -> Self {
+        TraceProbe {
+            traces: vec![Vec::with_capacity(t_steps); n_layers],
+        }
+    }
+}
+
+impl Probe for TraceProbe {
+    fn on_layer_output(&mut self, l: usize, _t: usize, out: &BitVec) {
+        self.traces[l].push(out.clone());
+    }
+}
+
+/// Decodes the population-coded output per sample of a batched run.
+pub struct BatchDecodeProbe {
+    t_per_sample: usize,
+    classes: usize,
+    population: usize,
+    counts: Vec<u32>,
+    /// One prediction per completed sample, in arrival order.
+    pub predictions: Vec<Option<usize>>,
+}
+
+impl BatchDecodeProbe {
+    pub fn new(t_per_sample: usize, classes: usize, population: usize) -> Self {
+        assert!(t_per_sample > 0, "samples must span at least one step");
+        BatchDecodeProbe {
+            t_per_sample,
+            classes,
+            population,
+            counts: Vec::new(),
+            predictions: Vec::new(),
+        }
+    }
+}
+
+impl Probe for BatchDecodeProbe {
+    fn on_network_output(&mut self, t: usize, out: &BitVec) {
+        if self.counts.len() != out.len() {
+            self.counts = vec![0; out.len()];
+        }
+        for i in out.iter_ones() {
+            self.counts[i] += 1;
+        }
+        if (t + 1) % self.t_per_sample == 0 {
+            self.predictions
+                .push(decode_counts(&self.counts, self.classes, self.population));
+            self.counts.iter_mut().for_each(|c| *c = 0);
+        }
+    }
+}
+
+/// Functional workload over one input spike train.
+pub struct SpikeTrainWorkload<'a> {
+    input: &'a SpikeTrain,
+}
+
+impl<'a> SpikeTrainWorkload<'a> {
+    pub fn new(input: &'a SpikeTrain) -> Self {
+        SpikeTrainWorkload { input }
+    }
+}
+
+impl Workload for SpikeTrainWorkload<'_> {
+    fn t_steps(&self) -> usize {
+        self.input.len()
+    }
+    fn begin_step(&mut self, t: usize, input: &mut BitVec) {
+        input.copy_from(&self.input[t]);
+    }
+    fn step_layer(
+        &mut self,
+        layer: &mut LayerSim,
+        _l: usize,
+        _t: usize,
+        input: &BitVec,
+        output: &mut BitVec,
+    ) -> PhaseCycles {
+        layer.step_into(input, output)
+    }
+}
+
+/// Cost-only workload driven by calibrated per-layer spike counts
+/// (`activity[0]` = input stage; `activity[l+1]` = layer `l`'s output).
+pub struct ActivityWorkload<'a> {
+    activity: &'a [Vec<usize>],
+}
+
+impl<'a> ActivityWorkload<'a> {
+    pub fn new(activity: &'a [Vec<usize>], n_layers: usize) -> Self {
+        assert_eq!(
+            activity.len(),
+            n_layers + 1,
+            "activity needs input + one entry per layer"
+        );
+        ActivityWorkload { activity }
+    }
+}
+
+impl Workload for ActivityWorkload<'_> {
+    fn t_steps(&self) -> usize {
+        self.activity[0].len()
+    }
+    fn is_functional(&self) -> bool {
+        false
+    }
+    fn begin_step(&mut self, _t: usize, _input: &mut BitVec) {}
+    fn step_layer(
+        &mut self,
+        layer: &mut LayerSim,
+        l: usize,
+        t: usize,
+        _input: &BitVec,
+        _output: &mut BitVec,
+    ) -> PhaseCycles {
+        layer.step_cost_only(self.activity[l][t], self.activity[l + 1][t])
+    }
+}
+
+/// Batched multi-input workload: samples stream back-to-back through the
+/// layer pipeline (serving-style throughput). Sample `i+1`'s first step
+/// enters layer 0 as soon as sample `i`'s last step has left it; each
+/// layer's functional state resets when a sample boundary passes through
+/// it, so per-sample outputs are bit-identical to isolated runs while
+/// latency overlaps across samples.
+pub struct BatchWorkload<'a> {
+    inputs: &'a [SpikeTrain],
+    t_per_sample: usize,
+}
+
+impl<'a> BatchWorkload<'a> {
+    pub fn new(inputs: &'a [SpikeTrain]) -> Self {
+        assert!(!inputs.is_empty(), "batch needs at least one sample");
+        let t_per_sample = inputs[0].len();
+        assert!(t_per_sample > 0, "samples must span at least one step");
+        assert!(
+            inputs.iter().all(|s| s.len() == t_per_sample),
+            "all batch samples must share the same spike-train length"
+        );
+        BatchWorkload {
+            inputs,
+            t_per_sample,
+        }
+    }
+
+    pub fn t_per_sample(&self) -> usize {
+        self.t_per_sample
+    }
+}
+
+impl Workload for BatchWorkload<'_> {
+    fn t_steps(&self) -> usize {
+        self.inputs.len() * self.t_per_sample
+    }
+    fn begin_step(&mut self, t: usize, input: &mut BitVec) {
+        input.copy_from(&self.inputs[t / self.t_per_sample][t % self.t_per_sample]);
+    }
+    fn step_layer(
+        &mut self,
+        layer: &mut LayerSim,
+        _l: usize,
+        t: usize,
+        input: &BitVec,
+        output: &mut BitVec,
+    ) -> PhaseCycles {
+        if t % self.t_per_sample == 0 {
+            // the sample boundary reaches this layer now: fresh membrane
+            layer.reset_state();
+        }
+        layer.step_into(input, output)
+    }
+}
+
+/// The pipelined scheduler. Owns the finish-time vector and the ping-pong
+/// spike buffers so repeated runs on one [`crate::sim::NetworkSim`] reuse
+/// all allocations.
+pub struct Engine {
+    finish: Vec<u64>,
+    cur: BitVec,
+    next: BitVec,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::new()
+    }
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Engine {
+            finish: Vec::new(),
+            cur: BitVec::zeros(0),
+            next: BitVec::zeros(0),
+        }
+    }
+
+    /// Run `workload` over `layers`, reporting outputs to `probe`.
+    /// `out_bits` sizes the output-count accumulator (the final layer's
+    /// output width). The returned [`SimResult`] is not yet decoded —
+    /// callers that want a predicted class call `SimResult::decode`.
+    pub fn run<W: Workload, P: Probe>(
+        &mut self,
+        layers: &mut [LayerSim],
+        out_bits: usize,
+        workload: &mut W,
+        probe: &mut P,
+    ) -> SimResult {
+        let t_steps = workload.t_steps();
+        let n_layers = layers.len();
+        let functional = workload.is_functional();
+        self.finish.clear();
+        self.finish.resize(n_layers, 0);
+        let mut serial = 0u64;
+        let mut output_counts: Vec<u32> = if functional {
+            vec![0; out_bits]
+        } else {
+            Vec::new()
+        };
+
+        for t in 0..t_steps {
+            workload.begin_step(t, &mut self.cur);
+            let mut prev_finish = 0u64;
+            for (l, layer) in layers.iter_mut().enumerate() {
+                let phases = workload.step_layer(layer, l, t, &self.cur, &mut self.next);
+                serial += phases.total();
+                prev_finish = advance_finish(&mut self.finish[l], prev_finish, phases.total());
+                if functional {
+                    probe.on_layer_output(l, t, &self.next);
+                    std::mem::swap(&mut self.cur, &mut self.next);
+                }
+            }
+            if functional {
+                for idx in self.cur.iter_ones() {
+                    output_counts[idx] += 1;
+                }
+                probe.on_network_output(t, &self.cur);
+            }
+        }
+
+        SimResult {
+            total_cycles: self.finish.last().copied().unwrap_or(0),
+            serial_cycles: serial,
+            per_layer: layers.iter().map(|l| l.stats.clone()).collect(),
+            t_steps,
+            output_counts,
+            predicted_class: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_finish_is_the_recurrence() {
+        // layer stalled on its own previous step
+        let mut f = 10u64;
+        assert_eq!(advance_finish(&mut f, 3, 5), 15);
+        // layer stalled on its producer
+        let mut f = 3u64;
+        assert_eq!(advance_finish(&mut f, 10, 5), 15);
+    }
+
+    #[test]
+    #[should_panic(expected = "activity needs input")]
+    fn activity_arity_checked() {
+        let activity = vec![vec![1usize; 3]; 2];
+        let _ = ActivityWorkload::new(&activity, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "same spike-train length")]
+    fn batch_rejects_ragged_samples() {
+        let a: SpikeTrain = vec![BitVec::zeros(4); 3];
+        let b: SpikeTrain = vec![BitVec::zeros(4); 2];
+        let inputs = vec![a, b];
+        let _ = BatchWorkload::new(&inputs);
+    }
+
+    #[test]
+    fn batch_workload_indexes_samples() {
+        let mk = |bit: usize| -> SpikeTrain {
+            (0..2)
+                .map(|_| {
+                    let mut v = BitVec::zeros(8);
+                    v.set(bit);
+                    v
+                })
+                .collect()
+        };
+        let inputs = vec![mk(1), mk(5)];
+        let mut wl = BatchWorkload::new(&inputs);
+        assert_eq!(wl.t_steps(), 4);
+        let mut buf = BitVec::zeros(0);
+        wl.begin_step(0, &mut buf);
+        assert!(buf.get(1));
+        wl.begin_step(3, &mut buf);
+        assert!(buf.get(5) && !buf.get(1));
+    }
+
+    #[test]
+    fn batch_decode_probe_decodes_per_sample() {
+        let mut p = BatchDecodeProbe::new(2, 2, 2);
+        // sample 0: class 1 pool spikes more
+        let s0 = BitVec::from_bools(&[false, false, true, true]);
+        p.on_network_output(0, &s0);
+        p.on_network_output(1, &s0);
+        // sample 1: class 0 pool spikes more
+        let s1 = BitVec::from_bools(&[true, true, false, false]);
+        p.on_network_output(2, &s1);
+        p.on_network_output(3, &s1);
+        assert_eq!(p.predictions, vec![Some(1), Some(0)]);
+    }
+}

@@ -130,33 +130,52 @@ impl LayerSim {
         }
     }
 
-    pub fn reset(&mut self) {
+    /// Zero the functional state (membrane potentials + accumulators) but
+    /// keep the accumulated statistics — the per-sample reset the batched
+    /// serving workload applies at sample boundaries.
+    pub fn reset_state(&mut self) {
         self.lif.reset();
         self.acc.iter_mut().for_each(|a| *a = 0.0);
+    }
+
+    pub fn reset(&mut self) {
+        self.reset_state();
         self.stats = LayerStats::new(self.stats.name.clone());
     }
 
     /// Functional step: consume one time step's input spike train, produce
-    /// the output train and the cycle breakdown.
+    /// the output train and the cycle breakdown. Allocating wrapper around
+    /// [`LayerSim::step_into`], kept for tests/tools; the engine's hot
+    /// path writes into a reused buffer instead.
     pub fn step(&mut self, input: &BitVec) -> (BitVec, PhaseCycles) {
+        let mut out = BitVec::zeros(0);
+        let phases = self.step_into(input, &mut out);
+        (out, phases)
+    }
+
+    /// Functional step writing the output spike train into `out` (resized
+    /// and overwritten in place — no allocation once `out` has grown to
+    /// the layer's output width).
+    pub fn step_into(&mut self, input: &BitVec, out: &mut BitVec) -> PhaseCycles {
         debug_assert_eq!(input.len(), self.layer.input_bits());
         match self.layer {
-            Layer::Fc { .. } => self.step_fc(input),
-            Layer::Conv { .. } => self.step_conv(input),
-            Layer::Pool { .. } => self.step_pool(input),
+            Layer::Fc { .. } => self.step_fc(input, out),
+            Layer::Conv { .. } => self.step_conv(input, out),
+            Layer::Pool { .. } => self.step_pool(input, out),
         }
     }
 
     // ---- FC ---------------------------------------------------------------
-    fn step_fc(&mut self, input: &BitVec) -> (BitVec, PhaseCycles) {
+    fn step_fc(&mut self, input: &BitVec, out: &mut BitVec) -> PhaseCycles {
         let (n_pre, n) = match self.layer {
             Layer::Fc { n_pre, n } => (n_pre, n),
             _ => unreachable!(),
         };
         let mut addrs = std::mem::take(&mut self.addr_buf);
-        let comp = self.penc.compress(input, &self.costs, &mut addrs);
+        let (comp_cycles, chunks_scanned) =
+            self.penc.compress_into(input, &self.costs, &mut addrs);
         let s = addrs.len();
-        self.stats.penc_chunks += comp.chunks_scanned;
+        self.stats.penc_chunks += chunks_scanned;
 
         // Accumulate: every logical neuron adds w[a][j] for each spike a.
         let (w, b) = match &self.weights {
@@ -196,19 +215,19 @@ impl LayerSim {
         self.stats.activations += n as u64;
 
         let phases = PhaseCycles {
-            compress: comp.cycles,
+            compress: comp_cycles,
             accumulate: accum_cycles,
             activate: activate_cycles,
             overhead: self.costs.phase_overhead,
         };
-        let out = BitVec::from_bools(&self.spike_buf[..n]);
+        out.fill_from_bools(&self.spike_buf[..n]);
         self.stats.add_step(&phases, s, fired);
         self.addr_buf = addrs;
-        (out, phases)
+        phases
     }
 
     // ---- CONV ---------------------------------------------------------------
-    fn step_conv(&mut self, input: &BitVec) -> (BitVec, PhaseCycles) {
+    fn step_conv(&mut self, input: &BitVec, out: &mut BitVec) -> PhaseCycles {
         let (in_ch, out_ch, k, h, w_) = match self.layer {
             Layer::Conv {
                 in_ch,
@@ -220,9 +239,10 @@ impl LayerSim {
             _ => unreachable!(),
         };
         let mut addrs = std::mem::take(&mut self.addr_buf);
-        let comp = self.penc.compress(input, &self.costs, &mut addrs);
+        let (comp_cycles, chunks_scanned) =
+            self.penc.compress_into(input, &self.costs, &mut addrs);
         let s = addrs.len();
-        self.stats.penc_chunks += comp.chunks_scanned;
+        self.stats.penc_chunks += chunks_scanned;
 
         let (wts, b) = match &self.weights {
             LayerWeights::Conv { w, b } => (w.as_slice(), b.as_slice()),
@@ -321,19 +341,19 @@ impl LayerSim {
         self.stats.activations += touched_per_ch * out_ch as u64;
 
         let phases = PhaseCycles {
-            compress: comp.cycles,
+            compress: comp_cycles,
             accumulate: accum_cycles,
             activate: activate_cycles,
             overhead: self.costs.phase_overhead,
         };
-        let out = BitVec::from_bools(&self.spike_buf[..out_ch * fmap]);
+        out.fill_from_bools(&self.spike_buf[..out_ch * fmap]);
         self.stats.add_step(&phases, s, fired);
         self.addr_buf = addrs;
-        (out, phases)
+        phases
     }
 
     // ---- POOL ---------------------------------------------------------------
-    fn step_pool(&mut self, input: &BitVec) -> (BitVec, PhaseCycles) {
+    fn step_pool(&mut self, input: &BitVec, out: &mut BitVec) -> PhaseCycles {
         let (ch, size, h, w_) = match self.layer {
             Layer::Pool {
                 ch,
@@ -344,7 +364,7 @@ impl LayerSim {
             _ => unreachable!(),
         };
         let (oh, ow) = (h / size, w_ / size);
-        let mut out = BitVec::zeros(ch * oh * ow);
+        out.reset(ch * oh * ow);
         let mut s_in = 0usize;
         for idx in input.iter_ones() {
             s_in += 1;
@@ -366,7 +386,7 @@ impl LayerSim {
             overhead: self.costs.phase_overhead,
         };
         self.stats.add_step(&phases, s_in, fired);
-        (out, phases)
+        phases
     }
 
     // ---- activity-driven (cost-only) -----------------------------------------

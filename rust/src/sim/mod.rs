@@ -8,13 +8,19 @@
 //!   neural size), serial accumulate + LIF activate
 //! * [`memory`] — weight block allocation and port contention
 //! * [`layer`] — one layer's ECU + NUs + memory, functional and cost-only
-//! * [`pipeline`] — layer-wise pipelined network execution
+//! * [`engine`] — the unified pipelined scheduler: one finish-time
+//!   recurrence parameterized by pluggable [`engine::Workload`]s
+//!   (functional / activity / batched) and [`engine::Probe`]s (traces,
+//!   per-sample decoding)
+//! * [`pipeline`] — `NetworkSim`: layer construction + thin run-mode
+//!   wrappers over the engine
 //! * [`costs`] — the named cycle-cost coefficients in one auditable place
 //! * [`stats`] — activity counters feeding the energy model and reports
 
 pub mod costs;
 pub mod dynamic;
 pub mod ecu;
+pub mod engine;
 pub mod layer;
 pub mod memory;
 pub mod neural_unit;
@@ -25,9 +31,13 @@ pub mod stats;
 pub use costs::CostModel;
 pub use dynamic::{compare_static_dynamic, DynamicAllocator, DynamicResult};
 pub use ecu::{EcuFsm, EcuState};
+pub use engine::{
+    advance_finish, ActivityWorkload, BatchDecodeProbe, BatchWorkload, Engine, NullProbe, Probe,
+    SpikeTrainWorkload, TraceProbe, Workload,
+};
 pub use layer::{LayerSim, LayerWeights};
 pub use memory::MemoryUnit;
 pub use neural_unit::NuMap;
 pub use penc::Penc;
 pub use pipeline::{random_spike_train, random_weights, NetworkSim};
-pub use stats::{LayerStats, PhaseCycles, SimResult};
+pub use stats::{decode_counts, LayerStats, PhaseCycles, SimResult};

@@ -38,18 +38,32 @@ impl Penc {
 
     /// Compress a spike train into its address list, charging cycles:
     /// `penc_chunk` per chunk scanned + `penc_per_spike` per set bit.
-    pub fn compress(&self, spikes: &BitVec, costs: &CostModel, out: &mut Vec<u32>) -> Compressed {
+    /// Returns `(cycles, chunks_scanned)`; the addresses land in `out`
+    /// with no allocation beyond `out`'s own growth — this is the
+    /// zero-clone hot path the layer stepper uses every time step.
+    pub fn compress_into(
+        &self,
+        spikes: &BitVec,
+        costs: &CostModel,
+        out: &mut Vec<u32>,
+    ) -> (u64, u64) {
         out.clear();
         for idx in spikes.iter_ones() {
             out.push(idx as u32);
         }
         let n_chunks = spikes.len().div_ceil(self.width) as u64;
-        let cycles =
-            costs.penc_chunk * n_chunks + costs.penc_per_spike * out.len() as u64;
+        let cycles = costs.penc_chunk * n_chunks + costs.penc_per_spike * out.len() as u64;
+        (cycles, n_chunks)
+    }
+
+    /// Allocating convenience wrapper around [`Penc::compress_into`] that
+    /// also materializes the address list in the returned [`Compressed`].
+    pub fn compress(&self, spikes: &BitVec, costs: &CostModel, out: &mut Vec<u32>) -> Compressed {
+        let (cycles, chunks_scanned) = self.compress_into(spikes, costs, out);
         Compressed {
             addrs: out.clone(),
             cycles,
-            chunks_scanned: n_chunks,
+            chunks_scanned,
         }
     }
 

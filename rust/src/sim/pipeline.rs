@@ -3,11 +3,11 @@
 //!
 //! Each layer's ECU buffers its output spike train and immediately starts
 //! the next time step, so layer `l` processes step `t` as soon as (a) it
-//! finished step `t-1` and (b) layer `l-1` delivered step `t`:
-//!
-//! ```text
-//! finish[l][t] = max(finish[l][t-1], finish[l-1][t]) + c_l(t)
-//! ```
+//! finished step `t-1` and (b) layer `l-1` delivered step `t`. The
+//! scheduling recurrence itself lives in [`crate::sim::engine`] — every
+//! public run mode here (`run`, `run_recording`, `run_activity`,
+//! `run_batched`) is a thin wrapper that pairs the unified [`Engine`] loop
+//! with the right [`Workload`] and [`Probe`].
 //!
 //! Total inference latency is `finish[L-1][T-1]`; the bottleneck layer's
 //! per-step cost dominates in steady state — the effect the paper's Table I
@@ -15,16 +15,23 @@
 
 use crate::config::ExperimentConfig;
 use crate::sim::costs::CostModel;
+use crate::sim::engine::{
+    ActivityWorkload, BatchDecodeProbe, BatchWorkload, Engine, NullProbe, Probe,
+    SpikeTrainWorkload, TraceProbe, Workload,
+};
 use crate::sim::layer::{LayerSim, LayerWeights};
 use crate::sim::stats::SimResult;
 use crate::snn::{BitVec, Layer, NetDef, SpikeTrain};
 use crate::util::rng::Rng;
 
-/// A configured accelerator instance: one `LayerSim` per network layer.
+/// A configured accelerator instance: one `LayerSim` per network layer,
+/// plus the reusable scheduling engine (finish-time vector + ping-pong
+/// spike buffers shared across runs).
 pub struct NetworkSim {
     pub net: NetDef,
     pub layers: Vec<LayerSim>,
     clock_hz: f64,
+    engine: Engine,
 }
 
 impl NetworkSim {
@@ -68,6 +75,7 @@ impl NetworkSim {
             net: cfg.net.clone(),
             layers,
             clock_hz: cfg.hw.clock_hz,
+            engine: Engine::new(),
         }
     }
 
@@ -98,6 +106,7 @@ impl NetworkSim {
             net: cfg.net.clone(),
             layers,
             clock_hz: cfg.hw.clock_hz,
+            engine: Engine::new(),
         }
     }
 
@@ -124,39 +133,23 @@ impl NetworkSim {
         }
     }
 
+    /// Drive the unified engine with an arbitrary workload/probe pair —
+    /// the extension point every specialized run mode below builds on.
+    pub fn run_engine<W: Workload, P: Probe>(
+        &mut self,
+        workload: &mut W,
+        probe: &mut P,
+    ) -> SimResult {
+        let out_bits = self.net.layers.last().map(|l| l.output_bits()).unwrap_or(0);
+        let NetworkSim { layers, engine, .. } = self;
+        engine.run(layers, out_bits, workload, probe)
+    }
+
     /// Functional run over a full input spike train; returns latency,
     /// per-layer stats, and the output spike accumulation.
     pub fn run(&mut self, input: &SpikeTrain) -> SimResult {
-        let t_steps = input.len();
-        let n_layers = self.layers.len();
-        let mut finish = vec![0u64; n_layers];
-        let mut serial = 0u64;
-        let out_bits = self.net.layers.last().map(|l| l.output_bits()).unwrap_or(0);
-        let mut output_counts = vec![0u32; out_bits];
-
-        for step_train in input.iter() {
-            let mut x = step_train.clone();
-            let mut prev_finish = 0u64; // producer's finish time for step t
-            for (l, layer) in self.layers.iter_mut().enumerate() {
-                let (out, phases) = layer.step(&x);
-                let c = phases.total();
-                serial += c;
-                finish[l] = finish[l].max(prev_finish) + c;
-                prev_finish = finish[l];
-                x = out;
-            }
-            for idx in x.iter_ones() {
-                output_counts[idx] += 1;
-            }
-        }
-        let mut result = SimResult {
-            total_cycles: finish.last().copied().unwrap_or(0),
-            serial_cycles: serial,
-            per_layer: self.layers.iter().map(|l| l.stats.clone()).collect(),
-            t_steps,
-            output_counts,
-            predicted_class: None,
-        };
+        let mut workload = SpikeTrainWorkload::new(input);
+        let mut result = self.run_engine(&mut workload, &mut NullProbe);
         result.decode(self.net.classes, self.net.population);
         result
     }
@@ -164,39 +157,11 @@ impl NetworkSim {
     /// Functional run that also returns every layer's output spike train
     /// (spike-to-spike validation against the JAX reference).
     pub fn run_recording(&mut self, input: &SpikeTrain) -> (SimResult, Vec<SpikeTrain>) {
-        let t_steps = input.len();
-        let n_layers = self.layers.len();
-        let mut finish = vec![0u64; n_layers];
-        let mut serial = 0u64;
-        let mut traces: Vec<SpikeTrain> = vec![Vec::with_capacity(t_steps); n_layers];
-        let out_bits = self.net.layers.last().map(|l| l.output_bits()).unwrap_or(0);
-        let mut output_counts = vec![0u32; out_bits];
-
-        for step_train in input.iter() {
-            let mut x = step_train.clone();
-            let mut prev_finish = 0u64;
-            for (l, layer) in self.layers.iter_mut().enumerate() {
-                let (out, phases) = layer.step(&x);
-                serial += phases.total();
-                finish[l] = finish[l].max(prev_finish) + phases.total();
-                prev_finish = finish[l];
-                traces[l].push(out.clone());
-                x = out;
-            }
-            for idx in x.iter_ones() {
-                output_counts[idx] += 1;
-            }
-        }
-        let mut result = SimResult {
-            total_cycles: finish.last().copied().unwrap_or(0),
-            serial_cycles: serial,
-            per_layer: self.layers.iter().map(|l| l.stats.clone()).collect(),
-            t_steps,
-            output_counts,
-            predicted_class: None,
-        };
+        let mut workload = SpikeTrainWorkload::new(input);
+        let mut probe = TraceProbe::new(self.layers.len(), input.len());
+        let mut result = self.run_engine(&mut workload, &mut probe);
         result.decode(self.net.classes, self.net.population);
-        (result, traces)
+        (result, probe.traces)
     }
 
     /// Activity-driven run: `activity[0]` is the input layer's spike count
@@ -204,34 +169,27 @@ impl NetworkSim {
     /// Only cycle/energy accounting is performed (no membrane arithmetic) —
     /// used for calibrated DVS workloads and large DSE sweeps.
     pub fn run_activity(&mut self, activity: &[Vec<usize>]) -> SimResult {
-        assert_eq!(
-            activity.len(),
-            self.layers.len() + 1,
-            "activity needs input + one entry per layer"
-        );
-        let t_steps = activity[0].len();
         let n_layers = self.layers.len();
-        let mut finish = vec![0u64; n_layers];
-        let mut serial = 0u64;
-        for t in 0..t_steps {
-            let mut prev_finish = 0u64;
-            for (l, layer) in self.layers.iter_mut().enumerate() {
-                let s_in = activity[l][t];
-                let s_out = activity[l + 1][t];
-                let phases = layer.step_cost_only(s_in, s_out);
-                serial += phases.total();
-                finish[l] = finish[l].max(prev_finish) + phases.total();
-                prev_finish = finish[l];
-            }
-        }
-        SimResult {
-            total_cycles: finish.last().copied().unwrap_or(0),
-            serial_cycles: serial,
-            per_layer: self.layers.iter().map(|l| l.stats.clone()).collect(),
-            t_steps,
-            output_counts: Vec::new(),
-            predicted_class: None,
-        }
+        let mut workload = ActivityWorkload::new(activity, n_layers);
+        self.run_engine(&mut workload, &mut NullProbe)
+    }
+
+    /// Batched serving run: the samples stream back-to-back through the
+    /// layer pipeline, overlapping across sample boundaries exactly as the
+    /// hardware would. Per-sample functional outputs are bit-identical to
+    /// isolated `run` calls (layer state resets as each boundary passes
+    /// through), while total latency is far below the sum of isolated
+    /// runs. Returns the aggregate result plus one decoded prediction per
+    /// sample.
+    pub fn run_batched(&mut self, inputs: &[SpikeTrain]) -> (SimResult, Vec<Option<usize>>) {
+        let mut workload = BatchWorkload::new(inputs);
+        let mut probe = BatchDecodeProbe::new(
+            workload.t_per_sample(),
+            self.net.classes,
+            self.net.population,
+        );
+        let result = self.run_engine(&mut workload, &mut probe);
+        (result, probe.predictions)
     }
 
     /// Latency in seconds at the configured clock.
@@ -371,5 +329,67 @@ mod tests {
         let ar = asim.run_activity(&activity);
         assert_eq!(fr.total_cycles, ar.total_cycles);
         assert_eq!(fr.serial_cycles, ar.serial_cycles);
+    }
+
+    #[test]
+    fn repeated_runs_reuse_buffers_and_agree() {
+        // back-to-back runs on one sim instance (with reset) must match a
+        // fresh instance exactly — the ping-pong buffers carry no state
+        // across runs.
+        let cfg = small_cfg(vec![1, 2]);
+        let mut rng = Rng::new(21);
+        let input = random_spike_train(32, 5, 0.3, &mut rng);
+        let mut reused = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let first = reused.run(&input);
+        reused.reset();
+        let second = reused.run(&input);
+        assert_eq!(first.total_cycles, second.total_cycles);
+        assert_eq!(first.output_counts, second.output_counts);
+    }
+
+    #[test]
+    fn batched_predictions_match_isolated_runs() {
+        let cfg = small_cfg(vec![1, 1]);
+        let mut rng = Rng::new(13);
+        let samples: Vec<SpikeTrain> = (0..4)
+            .map(|_| random_spike_train(32, 5, 0.35, &mut rng))
+            .collect();
+
+        // isolated per-sample runs
+        let mut isolated = Vec::new();
+        for s in &samples {
+            let mut sim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+            isolated.push(sim.run(s));
+        }
+
+        let mut bsim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let (batch, preds) = bsim.run_batched(&samples);
+
+        assert_eq!(preds.len(), samples.len());
+        for (p, r) in preds.iter().zip(&isolated) {
+            assert_eq!(*p, r.predicted_class, "batched decode must match isolated");
+        }
+        // identical per-sample work => serial cycles add up exactly
+        let serial_sum: u64 = isolated.iter().map(|r| r.serial_cycles).sum();
+        assert_eq!(batch.serial_cycles, serial_sum);
+        // pipelining across samples: cheaper than running them serially,
+        // no cheaper than the last sample alone
+        let total_sum: u64 = isolated.iter().map(|r| r.total_cycles).sum();
+        assert!(batch.total_cycles <= total_sum);
+        assert!(batch.total_cycles >= isolated.last().unwrap().total_cycles);
+    }
+
+    #[test]
+    fn batched_single_sample_equals_run() {
+        let cfg = small_cfg(vec![2, 1]);
+        let mut rng = Rng::new(17);
+        let input = random_spike_train(32, 6, 0.3, &mut rng);
+        let mut a = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let ra = a.run(&input);
+        let mut b = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let (rb, preds) = b.run_batched(std::slice::from_ref(&input));
+        assert_eq!(ra.total_cycles, rb.total_cycles);
+        assert_eq!(ra.serial_cycles, rb.serial_cycles);
+        assert_eq!(preds, vec![ra.predicted_class]);
     }
 }

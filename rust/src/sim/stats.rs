@@ -105,21 +105,31 @@ impl SimResult {
 
     /// Decode the population-coded output into a class.
     pub fn decode(&mut self, classes: usize, population: usize) {
-        if self.output_counts.is_empty() || classes * population != self.output_counts.len() {
-            return;
+        if let Some(c) = decode_counts(&self.output_counts, classes, population) {
+            self.predicted_class = Some(c);
         }
-        let mut best = (0usize, -1i64);
-        for c in 0..classes {
-            let s: i64 = self.output_counts[c * population..(c + 1) * population]
-                .iter()
-                .map(|&x| x as i64)
-                .sum();
-            if s > best.1 {
-                best = (c, s);
-            }
-        }
-        self.predicted_class = Some(best.0);
     }
+}
+
+/// Decode population-coded spike counts into a class (argmax over the
+/// per-class pools). Returns `None` when `counts` does not cover exactly
+/// `classes * population` neurons. Shared by `SimResult::decode` and the
+/// engine's per-sample batch decoding probe.
+pub fn decode_counts(counts: &[u32], classes: usize, population: usize) -> Option<usize> {
+    if counts.is_empty() || classes * population != counts.len() {
+        return None;
+    }
+    let mut best = (0usize, -1i64);
+    for c in 0..classes {
+        let s: i64 = counts[c * population..(c + 1) * population]
+            .iter()
+            .map(|&x| x as i64)
+            .sum();
+        if s > best.1 {
+            best = (c, s);
+        }
+    }
+    Some(best.0)
 }
 
 #[cfg(test)]
@@ -162,5 +172,15 @@ mod tests {
         };
         r.decode(3, 2); // pools: [3, 18, 1]
         assert_eq!(r.predicted_class, Some(1));
+    }
+
+    #[test]
+    fn decode_counts_edge_cases() {
+        assert_eq!(decode_counts(&[], 3, 2), None);
+        assert_eq!(decode_counts(&[1, 2, 3], 2, 2), None); // arity mismatch
+        // all-zero counts still decode (class 0 wins the tie, as the
+        // pre-refactor loop did)
+        assert_eq!(decode_counts(&[0, 0, 0, 0], 2, 2), Some(0));
+        assert_eq!(decode_counts(&[1, 2, 9, 9, 0, 1], 3, 2), Some(1));
     }
 }

@@ -40,6 +40,48 @@ impl BitVec {
         v
     }
 
+    /// Clear every bit, keeping the length. Reuses the allocation — the
+    /// buffer-recycling primitive of the simulation engine's ping-pong
+    /// spike buffers.
+    pub fn clear_all(&mut self) {
+        for w in &mut self.words {
+            *w = 0;
+        }
+    }
+
+    /// Resize to `len` bits, all cleared, reusing the existing allocation
+    /// (only grows the word storage when `len` exceeds every earlier
+    /// length seen by this buffer).
+    pub fn reset(&mut self, len: usize) {
+        self.words.clear();
+        self.words.resize(len.div_ceil(64), 0);
+        self.len = len;
+    }
+
+    /// Make `self` bit-identical to `other` (any length), reusing this
+    /// buffer's allocation instead of cloning.
+    pub fn copy_from(&mut self, other: &BitVec) {
+        self.words.clear();
+        self.words.extend_from_slice(&other.words);
+        self.len = other.len;
+    }
+
+    /// Overwrite with a packed copy of `bits`, reusing the allocation.
+    /// Packs one 64-bit word at a time (the hot path of `LayerSim`'s
+    /// spike-train emission; `from_bools` is the allocating variant).
+    pub fn fill_from_bools(&mut self, bits: &[bool]) {
+        self.words.clear();
+        self.words.reserve(bits.len().div_ceil(64));
+        for chunk in bits.chunks(64) {
+            let mut w = 0u64;
+            for (i, &b) in chunk.iter().enumerate() {
+                w |= (b as u64) << i;
+            }
+            self.words.push(w);
+        }
+        self.len = bits.len();
+    }
+
     #[inline]
     pub fn len(&self) -> usize {
         self.len
@@ -162,6 +204,114 @@ mod tests {
             (0..4).map(|i| a.get(i)).collect::<Vec<_>>(),
             vec![true, false, true, true]
         );
+    }
+
+    #[test]
+    fn word_boundary_set_clear_iter_count() {
+        // bits 63 / 64 / 65 straddle the first word boundary; 127/128 the
+        // second. Lengths deliberately not multiples of 64.
+        for len in [65, 66, 100, 129, 190] {
+            let mut v = BitVec::zeros(len);
+            let probes: Vec<usize> =
+                [0, 63, 64, 65, 127, 128].iter().copied().filter(|&i| i < len).collect();
+            for &i in &probes {
+                v.set(i);
+                assert!(v.get(i), "len {len} bit {i} not set");
+            }
+            assert_eq!(v.count_ones(), probes.len(), "len {len}");
+            assert_eq!(v.iter_ones().collect::<Vec<_>>(), probes, "len {len}");
+            for &i in &probes {
+                v.clear(i);
+                assert!(!v.get(i), "len {len} bit {i} not cleared");
+            }
+            assert_eq!(v.count_ones(), 0, "len {len}");
+            assert_eq!(v.iter_ones().count(), 0, "len {len}");
+        }
+    }
+
+    #[test]
+    fn clear_all_keeps_length() {
+        let mut v = BitVec::zeros(130);
+        for i in [0, 63, 64, 65, 129] {
+            v.set(i);
+        }
+        v.clear_all();
+        assert_eq!(v.len(), 130);
+        assert_eq!(v.count_ones(), 0);
+        // buffer stays usable at the same length
+        v.set(64);
+        assert_eq!(v.iter_ones().collect::<Vec<_>>(), vec![64]);
+    }
+
+    #[test]
+    fn copy_from_resizes_and_matches() {
+        let mut src = BitVec::zeros(200);
+        for i in [3, 63, 64, 65, 199] {
+            src.set(i);
+        }
+        // grow path
+        let mut dst = BitVec::zeros(10);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        // shrink path (must drop stale words, keep counts exact)
+        let small = BitVec::from_bools(&[true, false, true]);
+        dst.copy_from(&small);
+        assert_eq!(dst.len(), 3);
+        assert_eq!(dst.count_ones(), 2);
+        assert_eq!(dst.iter_ones().collect::<Vec<_>>(), vec![0, 2]);
+        // and back up again — repeated reuse of one buffer
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn reset_clears_and_relengths() {
+        let mut v = BitVec::zeros(64);
+        v.set(63);
+        v.reset(65);
+        assert_eq!(v.len(), 65);
+        assert_eq!(v.count_ones(), 0);
+        v.set(64);
+        assert!(v.get(64));
+        v.reset(1);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v.count_ones(), 0);
+    }
+
+    #[test]
+    fn fill_from_bools_matches_from_bools() {
+        for len in [1, 63, 64, 65, 127, 128, 129, 1000] {
+            let bits: Vec<bool> = (0..len).map(|i| i % 3 == 0 || i == len - 1).collect();
+            let fresh = BitVec::from_bools(&bits);
+            let mut reused = BitVec::zeros(7); // deliberately wrong size
+            reused.fill_from_bools(&bits);
+            assert_eq!(reused, fresh, "len {len}");
+        }
+    }
+
+    #[test]
+    fn prop_reuse_paths_match_fresh_construction() {
+        prop_check(128, 0xB17C, |g| {
+            let n = g.usize_in(1, 1500);
+            let p = g.f64_in(0.0, 0.5);
+            let bits = g.spike_bits(n, p);
+            let fresh = BitVec::from_bools(&bits);
+            let mut buf = BitVec::zeros(g.usize_in(0, 300));
+            buf.fill_from_bools(&bits);
+            if buf != fresh {
+                return Err(format!("fill_from_bools mismatch at n={n}"));
+            }
+            let mut copied = BitVec::zeros(g.usize_in(0, 300));
+            copied.copy_from(&fresh);
+            if copied != fresh {
+                return Err(format!("copy_from mismatch at n={n}"));
+            }
+            copied.clear_all();
+            if copied.count_ones() != 0 || copied.len() != n {
+                return Err("clear_all broke invariants".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

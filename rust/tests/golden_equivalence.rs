@@ -1,0 +1,231 @@
+//! Golden-equivalence tests for the unified simulation engine.
+//!
+//! The reference functions below are verbatim copies of the pre-refactor
+//! `NetworkSim::run` / `run_recording` / `run_activity` loops (the
+//! triplicated schedulers this engine replaced), re-expressed over the
+//! public `LayerSim` API. On the Table-I networks, the unified
+//! `Engine`-backed run modes must reproduce their `total_cycles`,
+//! `serial_cycles`, `output_counts` and recorded traces **bit-for-bit**
+//! across all three workload modes, plus the batched serving mode against
+//! per-sample isolated runs.
+
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::data::ActivityModel;
+use snn_dse::sim::{random_spike_train, CostModel, NetworkSim};
+use snn_dse::snn::{table1_net, NetDef, SpikeTrain};
+use snn_dse::util::rng::Rng;
+
+// ---- pre-refactor reference loops ------------------------------------------
+
+/// The old `NetworkSim::run` body (per-step input clone, per-layer output
+/// allocation, inline recurrence).
+fn ref_run(sim: &mut NetworkSim, input: &SpikeTrain) -> (u64, u64, Vec<u32>) {
+    let n_layers = sim.layers.len();
+    let mut finish = vec![0u64; n_layers];
+    let mut serial = 0u64;
+    let out_bits = sim.net.layers.last().map(|l| l.output_bits()).unwrap_or(0);
+    let mut output_counts = vec![0u32; out_bits];
+    for step_train in input.iter() {
+        let mut x = step_train.clone();
+        let mut prev_finish = 0u64;
+        for (l, layer) in sim.layers.iter_mut().enumerate() {
+            let (out, phases) = layer.step(&x);
+            let c = phases.total();
+            serial += c;
+            finish[l] = finish[l].max(prev_finish) + c;
+            prev_finish = finish[l];
+            x = out;
+        }
+        for idx in x.iter_ones() {
+            output_counts[idx] += 1;
+        }
+    }
+    (finish.last().copied().unwrap_or(0), serial, output_counts)
+}
+
+/// The old `NetworkSim::run_recording` body.
+fn ref_run_recording(
+    sim: &mut NetworkSim,
+    input: &SpikeTrain,
+) -> (u64, u64, Vec<u32>, Vec<SpikeTrain>) {
+    let t_steps = input.len();
+    let n_layers = sim.layers.len();
+    let mut finish = vec![0u64; n_layers];
+    let mut serial = 0u64;
+    let mut traces: Vec<SpikeTrain> = vec![Vec::with_capacity(t_steps); n_layers];
+    let out_bits = sim.net.layers.last().map(|l| l.output_bits()).unwrap_or(0);
+    let mut output_counts = vec![0u32; out_bits];
+    for step_train in input.iter() {
+        let mut x = step_train.clone();
+        let mut prev_finish = 0u64;
+        for (l, layer) in sim.layers.iter_mut().enumerate() {
+            let (out, phases) = layer.step(&x);
+            serial += phases.total();
+            finish[l] = finish[l].max(prev_finish) + phases.total();
+            prev_finish = finish[l];
+            traces[l].push(out.clone());
+            x = out;
+        }
+        for idx in x.iter_ones() {
+            output_counts[idx] += 1;
+        }
+    }
+    (
+        finish.last().copied().unwrap_or(0),
+        serial,
+        output_counts,
+        traces,
+    )
+}
+
+/// The old `NetworkSim::run_activity` body.
+fn ref_run_activity(sim: &mut NetworkSim, activity: &[Vec<usize>]) -> (u64, u64) {
+    assert_eq!(activity.len(), sim.layers.len() + 1);
+    let t_steps = activity[0].len();
+    let n_layers = sim.layers.len();
+    let mut finish = vec![0u64; n_layers];
+    let mut serial = 0u64;
+    for t in 0..t_steps {
+        let mut prev_finish = 0u64;
+        for (l, layer) in sim.layers.iter_mut().enumerate() {
+            let s_in = activity[l][t];
+            let s_out = activity[l + 1][t];
+            let phases = layer.step_cost_only(s_in, s_out);
+            serial += phases.total();
+            finish[l] = finish[l].max(prev_finish) + phases.total();
+            prev_finish = finish[l];
+        }
+    }
+    (finish.last().copied().unwrap_or(0), serial)
+}
+
+// ---- fixtures ---------------------------------------------------------------
+
+/// Table-I nets with workload-tractable spike-train lengths for the conv
+/// topology (net5's functional path at T=124 would dominate test time; the
+/// equivalence property is per-step, so a short train is just as strict).
+fn golden_nets() -> Vec<NetDef> {
+    let mut nets: Vec<NetDef> = ["net1", "net2", "net3", "net4"]
+        .iter()
+        .map(|n| table1_net(n))
+        .collect();
+    let mut net5 = table1_net("net5");
+    net5.t_steps = 6;
+    nets.push(net5);
+    nets
+}
+
+fn fully_parallel_cfg(net: &NetDef) -> ExperimentConfig {
+    let n = net.parametric_layers().len();
+    ExperimentConfig::new(net.clone(), HwConfig::fully_parallel(n)).unwrap()
+}
+
+fn mixed_lhr_cfg(net: &NetDef) -> ExperimentConfig {
+    // alternate 2 / 1 across parametric layers (capped by layer size)
+    let lhr: Vec<usize> = net
+        .parametric_layers()
+        .iter()
+        .enumerate()
+        .map(|(k, &li)| {
+            let units = net.layers[li].logical_units();
+            if k % 2 == 0 {
+                2.min(units)
+            } else {
+                1
+            }
+        })
+        .collect();
+    ExperimentConfig::new(net.clone(), HwConfig::with_lhr(lhr)).unwrap()
+}
+
+fn input_for(net: &NetDef, rng: &mut Rng) -> SpikeTrain {
+    // densities in the Fig-1 regime per topology
+    let rate = match net.dataset.as_str() {
+        "dvs" => 135.0 / net.input_bits as f64,
+        _ => 0.12,
+    };
+    random_spike_train(net.input_bits, net.t_steps, rate, rng)
+}
+
+// ---- the golden assertions --------------------------------------------------
+
+#[test]
+fn engine_matches_pre_refactor_run_on_table1_nets() {
+    for net in golden_nets() {
+        for cfg in [fully_parallel_cfg(&net), mixed_lhr_cfg(&net)] {
+            let mut rng = Rng::new(0xD0E5);
+            let input = input_for(&net, &mut rng);
+            let mut ref_sim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+            let (ref_total, ref_serial, ref_counts) = ref_run(&mut ref_sim, &input);
+            let mut sim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+            let r = sim.run(&input);
+            assert_eq!(r.total_cycles, ref_total, "{} total_cycles", net.name);
+            assert_eq!(r.serial_cycles, ref_serial, "{} serial_cycles", net.name);
+            assert_eq!(r.output_counts, ref_counts, "{} output_counts", net.name);
+        }
+    }
+}
+
+#[test]
+fn engine_matches_pre_refactor_recording_on_table1_nets() {
+    for net in golden_nets() {
+        let cfg = mixed_lhr_cfg(&net);
+        let mut rng = Rng::new(0xC0DE);
+        let input = input_for(&net, &mut rng);
+        let mut ref_sim = NetworkSim::with_random_weights(&cfg, 11, CostModel::default());
+        let (ref_total, ref_serial, ref_counts, ref_traces) =
+            ref_run_recording(&mut ref_sim, &input);
+        let mut sim = NetworkSim::with_random_weights(&cfg, 11, CostModel::default());
+        let (r, traces) = sim.run_recording(&input);
+        assert_eq!(r.total_cycles, ref_total, "{} total_cycles", net.name);
+        assert_eq!(r.serial_cycles, ref_serial, "{} serial_cycles", net.name);
+        assert_eq!(r.output_counts, ref_counts, "{} output_counts", net.name);
+        assert_eq!(traces, ref_traces, "{} layer traces", net.name);
+    }
+}
+
+#[test]
+fn engine_matches_pre_refactor_activity_on_table1_nets() {
+    for net in golden_nets() {
+        let cfg = mixed_lhr_cfg(&net);
+        let model = ActivityModel::for_net(&net);
+        let mut rng = Rng::new(42);
+        let activity = model.sample(net.t_steps, &mut rng);
+        let mut ref_sim = NetworkSim::cost_only(&cfg, CostModel::default());
+        let (ref_total, ref_serial) = ref_run_activity(&mut ref_sim, &activity);
+        let mut sim = NetworkSim::cost_only(&cfg, CostModel::default());
+        let r = sim.run_activity(&activity);
+        assert_eq!(r.total_cycles, ref_total, "{} total_cycles", net.name);
+        assert_eq!(r.serial_cycles, ref_serial, "{} serial_cycles", net.name);
+        assert!(r.output_counts.is_empty(), "activity mode has no counts");
+    }
+}
+
+#[test]
+fn batched_mode_reproduces_isolated_functional_outputs() {
+    // The new serving-style workload must keep per-sample functional
+    // results bit-identical to isolated runs while pipelining across
+    // sample boundaries.
+    let net = table1_net("net1");
+    let cfg = fully_parallel_cfg(&net);
+    let mut rng = Rng::new(0xBA7C);
+    let samples: Vec<SpikeTrain> = (0..3).map(|_| input_for(&net, &mut rng)).collect();
+
+    let mut isolated_totals = Vec::new();
+    let mut isolated_preds = Vec::new();
+    let mut serial_sum = 0u64;
+    for s in &samples {
+        let mut sim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let r = sim.run(s);
+        serial_sum += r.serial_cycles;
+        isolated_totals.push(r.total_cycles);
+        isolated_preds.push(r.predicted_class);
+    }
+
+    let mut bsim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+    let (batch, preds) = bsim.run_batched(&samples);
+    assert_eq!(preds, isolated_preds, "per-sample decode must match");
+    assert_eq!(batch.serial_cycles, serial_sum, "same per-sample work");
+    assert!(batch.total_cycles <= isolated_totals.iter().sum::<u64>());
+    assert!(batch.total_cycles >= *isolated_totals.last().unwrap());
+}
