@@ -1,0 +1,55 @@
+//! End-to-end `dse::explore` walkthrough: explore net-1's LHR lattice
+//! over (cycles, LUT, energy), checkpointing every round, then resume
+//! from the checkpoint with a doubled budget and print the Table-I-style
+//! frontier report.
+//!
+//! Run with: `cargo run --release --example explore_frontier`
+
+use snn_dse::dse::{report, ExploreConfig, Explorer, Objective};
+use snn_dse::sim::CostModel;
+use snn_dse::snn::table1_net;
+
+fn main() -> anyhow::Result<()> {
+    let net = table1_net("net1");
+    let costs = CostModel::default();
+    let ckpt = std::env::temp_dir().join("explore_frontier_example.json");
+    std::fs::remove_file(&ckpt).ok();
+
+    // Phase 1: a short exploration, checkpointed every round.
+    let cfg = ExploreConfig {
+        objectives: Objective::DEFAULT.to_vec(),
+        seed: 42,
+        rounds: 4,
+        batch: 8,
+        max_lhr: 32,
+        threads: 4,
+        checkpoint: Some(ckpt.clone()),
+        checkpoint_every: 1,
+    };
+    let mut ex = Explorer::resume_or_new(&net, cfg.clone())?;
+    ex.run(&net, &costs)?;
+    println!(
+        "phase 1: {} rounds, {} configs evaluated, frontier {}",
+        ex.rounds_done(),
+        ex.evaluated().len(),
+        ex.frontier().len()
+    );
+
+    // Phase 2: resume from the checkpoint and extend the budget — the
+    // continuation is identical to never having stopped.
+    let mut extended = cfg;
+    extended.rounds = 8;
+    let mut ex = Explorer::resume_or_new(&net, extended)?;
+    println!("resumed at round {}", ex.rounds_done());
+    ex.run(&net, &costs)?;
+    println!(
+        "phase 2: {} rounds, {} configs evaluated, frontier {}\n",
+        ex.rounds_done(),
+        ex.evaluated().len(),
+        ex.frontier().len()
+    );
+
+    println!("{}", report::frontier_block(&net.name, ex.frontier().points()));
+    std::fs::remove_file(&ckpt).ok();
+    Ok(())
+}

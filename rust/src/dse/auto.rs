@@ -9,6 +9,11 @@
 //! usually the sparsest/deepest one — until the area budget is met or the
 //! latency budget would be violated. This reproduces the paper's sweet-spot
 //! findings (e.g. net-5's (16,1,16,256)) without enumerating the lattice.
+//!
+//! `auto_search` returns a single constrained point. For the full
+//! LUT-vs-latency-vs-energy trade-off *curve* (Table I / Fig. 6), use the
+//! multi-objective frontier search in
+//! [`crate::dse::explore`](mod@crate::dse::explore) instead.
 
 use crate::config::HwConfig;
 use crate::data::ActivityModel;

@@ -1,0 +1,632 @@
+//! Multi-objective Pareto exploration of the LHR lattice — the paper's
+//! design-space exploration as a frontier search instead of the greedy
+//! single-path ascent of [`crate::dse::auto`].
+//!
+//! The explorer runs seeded, deterministic annealing rounds: each round it
+//! proposes a batch of unvisited lattice points (random jumps while the
+//! temperature is high, mutations of current frontier members as it
+//! cools), evaluates the batch in parallel with the work-stealing sweep
+//! dispatcher ([`crate::dse::runner::sweep_cached`], sharing one
+//! [`EstimateCache`] across the whole exploration), and folds the results
+//! into an incrementally maintained [`ParetoFrontier`]. When random
+//! proposals stop finding fresh points, a deterministic linear scan takes
+//! over, so small lattices are covered exhaustively and the search
+//! terminates with `exhausted = true`.
+//!
+//! Determinism: all randomness flows from one [`Rng`] drawn on a single
+//! thread; batch evaluation is order-preserving and per-config
+//! deterministic, so results are byte-identical across thread counts for
+//! a fixed seed.
+//!
+//! **Checkpoint/resume**: [`Explorer::save_checkpoint`] serializes every
+//! evaluated [`DsePoint`] plus the explorer state (RNG state, round and
+//! scan cursors) as JSON via [`crate::util::json`]. A killed run resumed
+//! from its last checkpoint replays the identical remaining rounds, and a
+//! finished run can be extended by resuming with a larger round budget.
+//!
+//! ```
+//! use snn_dse::dse::{ExploreConfig, Explorer};
+//! use snn_dse::sim::CostModel;
+//! use snn_dse::snn::table1_net;
+//!
+//! let net = table1_net("net1");
+//! let cfg = ExploreConfig {
+//!     rounds: 2,
+//!     batch: 4,
+//!     max_lhr: 8,
+//!     threads: 2,
+//!     ..Default::default()
+//! };
+//! let mut ex = Explorer::new(&net, cfg).unwrap();
+//! ex.run(&net, &CostModel::default()).unwrap();
+//! assert!(!ex.frontier().is_empty());
+//! ```
+
+use crate::config::HwConfig;
+use crate::dse::pareto::{Objective, ParetoFrontier};
+use crate::dse::runner::{sweep_cached, DsePoint};
+use crate::dse::space::{lattice_dims, lattice_size, nth_lhr};
+use crate::resources::{EstimateCache, Resources};
+use crate::sim::CostModel;
+use crate::snn::NetDef;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+/// Random-proposal attempts per batch slot before the deterministic
+/// linear-scan fallback kicks in.
+const PROPOSE_RETRIES: usize = 12;
+
+const CHECKPOINT_VERSION: u64 = 1;
+
+/// Exploration budget and strategy knobs.
+#[derive(Debug, Clone)]
+pub struct ExploreConfig {
+    /// Objectives the frontier is non-dominated over.
+    pub objectives: Vec<Objective>,
+    /// Workload seed (also seeds the proposal RNG stream).
+    pub seed: u64,
+    /// Total rounds to run (resuming with a larger value extends a
+    /// finished exploration).
+    pub rounds: usize,
+    /// Candidate configurations proposed and evaluated per round.
+    pub batch: usize,
+    /// LHR lattice bound (power-of-two choices per layer up to this).
+    pub max_lhr: usize,
+    /// Worker threads for batch evaluation (does not affect results).
+    pub threads: usize,
+    /// Checkpoint file; written every `checkpoint_every` rounds and once
+    /// at the end of [`Explorer::run`]. `None` disables checkpointing.
+    pub checkpoint: Option<PathBuf>,
+    /// Rounds between checkpoint writes (0 = only the final write).
+    /// Each write serializes *every* evaluated point, so on big lattices
+    /// a small cadence makes total checkpoint I/O quadratic — raise this
+    /// (or use 0) for 10k+-config explorations.
+    pub checkpoint_every: usize,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        ExploreConfig {
+            objectives: Objective::DEFAULT.to_vec(),
+            seed: 42,
+            rounds: 32,
+            batch: 16,
+            max_lhr: 32,
+            threads: 8,
+            checkpoint: None,
+            checkpoint_every: 5,
+        }
+    }
+}
+
+/// What one [`Explorer::step`] did.
+#[derive(Debug, Clone)]
+pub struct RoundSummary {
+    /// 1-based round counter after this step.
+    pub round: usize,
+    /// Configurations evaluated this round.
+    pub evaluated: usize,
+    /// Points that entered the frontier this round (they may still be
+    /// evicted by later points).
+    pub admitted: Vec<DsePoint>,
+    /// Frontier size after the round.
+    pub frontier_size: usize,
+    /// True if the whole lattice has been visited — no candidates were
+    /// left to propose and the exploration is complete.
+    pub exhausted: bool,
+}
+
+/// The exploration state machine. Create with [`Explorer::new`] or
+/// [`Explorer::resume_or_new`], drive with [`Explorer::run`] (or
+/// [`Explorer::step`] for streaming per-round output).
+pub struct Explorer {
+    cfg: ExploreConfig,
+    net_name: String,
+    topology: String,
+    frontier: ParetoFrontier,
+    visited: BTreeSet<Vec<usize>>,
+    evaluated: Vec<DsePoint>,
+    rng: Rng,
+    rounds_done: usize,
+    scan_cursor: usize,
+    exhausted: bool,
+}
+
+impl Explorer {
+    /// Fresh exploration of `net` under `cfg`.
+    pub fn new(net: &NetDef, cfg: ExploreConfig) -> Result<Self> {
+        if cfg.objectives.is_empty() {
+            bail!("explore: objective list is empty");
+        }
+        if cfg.batch == 0 {
+            bail!("explore: batch must be >= 1");
+        }
+        if net.parametric_layers().is_empty() {
+            bail!("explore: network '{}' has no parametric layers", net.name);
+        }
+        Ok(Explorer {
+            frontier: ParetoFrontier::new(&cfg.objectives),
+            net_name: net.name.clone(),
+            topology: net.topology_string(),
+            visited: BTreeSet::new(),
+            evaluated: Vec::new(),
+            rng: Rng::new(cfg.seed ^ 0xD5E5_0000_0000_0000),
+            rounds_done: 0,
+            scan_cursor: 0,
+            exhausted: false,
+            cfg,
+        })
+    }
+
+    /// Resume from `path` if it exists (validating it against `net` and
+    /// `cfg`), otherwise start fresh.
+    pub fn resume_or_new(net: &NetDef, cfg: ExploreConfig) -> Result<Self> {
+        match &cfg.checkpoint {
+            Some(path) if path.exists() => Explorer::resume(net, cfg.clone(), path),
+            _ => Explorer::new(net, cfg),
+        }
+    }
+
+    /// Resume an exploration from a checkpoint written by
+    /// [`Explorer::save_checkpoint`]. The checkpoint must match `net`,
+    /// the seed, the objective subset, `max_lhr` and `batch` — anything
+    /// else would silently change what the remaining rounds explore.
+    pub fn resume(net: &NetDef, cfg: ExploreConfig, path: &Path) -> Result<Self> {
+        let j = Json::parse_file(path)?;
+        let version = j.at("version").as_u64().context("checkpoint: missing version")?;
+        if version != CHECKPOINT_VERSION {
+            bail!("checkpoint {}: version {version} != {CHECKPOINT_VERSION}", path.display());
+        }
+        let ck_net = j.at("net").as_str().context("checkpoint: missing net")?;
+        if ck_net != net.name {
+            bail!("checkpoint is for net '{ck_net}', not '{}'", net.name);
+        }
+        let ck_topology = j.at("topology").as_str().unwrap_or("");
+        if ck_topology != net.topology_string() {
+            bail!(
+                "checkpoint topology '{ck_topology}' != network '{}'",
+                net.topology_string()
+            );
+        }
+        let ck_seed = parse_hex_u64(j.at("seed").as_str().context("checkpoint: missing seed")?)?;
+        if ck_seed != cfg.seed {
+            bail!("checkpoint seed {ck_seed} != --seed {}", cfg.seed);
+        }
+        let ck_objectives: Vec<String> = j
+            .at("objectives")
+            .as_arr()
+            .context("checkpoint: missing objectives")?
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+        let cfg_objectives: Vec<String> =
+            cfg.objectives.iter().map(|o| o.name().to_string()).collect();
+        if ck_objectives != cfg_objectives {
+            bail!("checkpoint objectives {ck_objectives:?} != requested {cfg_objectives:?}");
+        }
+        let ck_max_lhr = j.at("max_lhr").as_usize().context("checkpoint: missing max_lhr")?;
+        if ck_max_lhr != cfg.max_lhr {
+            bail!("checkpoint max_lhr {ck_max_lhr} != --max-lhr {}", cfg.max_lhr);
+        }
+        let ck_batch = j.at("batch").as_usize().context("checkpoint: missing batch")?;
+        if ck_batch != cfg.batch {
+            bail!("checkpoint batch {ck_batch} != --batch {}", cfg.batch);
+        }
+
+        let state_strs = j.at("rng_state").as_arr().context("checkpoint: missing rng_state")?;
+        if state_strs.len() != 4 {
+            bail!("checkpoint rng_state must have 4 words");
+        }
+        let mut state = [0u64; 4];
+        for (i, w) in state_strs.iter().enumerate() {
+            state[i] = parse_hex_u64(w.as_str().context("checkpoint: rng_state word")?)?;
+        }
+
+        let mut ex = Explorer::new(net, cfg)?;
+        ex.rng = Rng::from_state(state);
+        ex.rounds_done = j.at("rounds_done").as_usize().unwrap_or(0);
+        ex.scan_cursor = j.at("scan_cursor").as_usize().unwrap_or(0);
+        for pj in j.at("points").as_arr().context("checkpoint: missing points")? {
+            let p = point_from_json(pj)?;
+            ex.visited.insert(p.lhr.clone());
+            ex.frontier.insert(p.clone());
+            ex.evaluated.push(p);
+        }
+        Ok(ex)
+    }
+
+    /// Run one round: propose a batch, evaluate it in parallel, update
+    /// the frontier. Returns what happened (see [`RoundSummary`]).
+    pub fn step(&mut self, net: &NetDef, costs: &CostModel, cache: &EstimateCache) -> RoundSummary {
+        let dims = lattice_dims(net, self.cfg.max_lhr);
+        let total = lattice_size(&dims);
+        let lhrs = self.propose_batch(&dims, total);
+        if lhrs.is_empty() {
+            self.exhausted = true;
+            return RoundSummary {
+                round: self.rounds_done,
+                evaluated: 0,
+                admitted: Vec::new(),
+                frontier_size: self.frontier.len(),
+                exhausted: true,
+            };
+        }
+        let configs: Vec<HwConfig> = lhrs.into_iter().map(HwConfig::with_lhr).collect();
+        let points = sweep_cached(net, &configs, self.cfg.seed, costs, self.cfg.threads, cache);
+        let mut admitted = Vec::new();
+        for p in points {
+            self.visited.insert(p.lhr.clone());
+            if self.frontier.insert(p.clone()) {
+                admitted.push(p.clone());
+            }
+            self.evaluated.push(p);
+        }
+        self.rounds_done += 1;
+        RoundSummary {
+            round: self.rounds_done,
+            evaluated: configs.len(),
+            admitted,
+            frontier_size: self.frontier.len(),
+            exhausted: false,
+        }
+    }
+
+    /// Drive [`Explorer::step`] until the round budget is spent or the
+    /// lattice is exhausted, writing checkpoints per the config.
+    pub fn run(&mut self, net: &NetDef, costs: &CostModel) -> Result<()> {
+        self.run_with(net, costs, &EstimateCache::new(), |_| {})
+    }
+
+    /// [`Explorer::run`] with a caller-owned estimate cache (so the
+    /// caller can report its hit/miss stats) and a per-round observer —
+    /// the single drive loop the CLI streams admitted-point rows from.
+    /// The callback sees every [`RoundSummary`], including the final
+    /// exhausted one.
+    pub fn run_with<F>(
+        &mut self,
+        net: &NetDef,
+        costs: &CostModel,
+        cache: &EstimateCache,
+        mut on_round: F,
+    ) -> Result<()>
+    where
+        F: FnMut(&RoundSummary),
+    {
+        while self.rounds_done < self.cfg.rounds {
+            let s = self.step(net, costs, cache);
+            on_round(&s);
+            if s.exhausted {
+                break;
+            }
+            if let Some(path) = self.cfg.checkpoint.clone() {
+                if self.cfg.checkpoint_every > 0 && self.rounds_done % self.cfg.checkpoint_every == 0
+                {
+                    self.save_checkpoint(&path)?;
+                }
+            }
+        }
+        if let Some(path) = self.cfg.checkpoint.clone() {
+            self.save_checkpoint(&path)?;
+        }
+        Ok(())
+    }
+
+    /// Propose up to `batch` unvisited lattice points. Empty result means
+    /// the lattice is fully visited.
+    fn propose_batch(&mut self, dims: &[Vec<usize>], total: usize) -> Vec<Vec<usize>> {
+        let mut batch: Vec<Vec<usize>> = Vec::new();
+        let mut in_batch: BTreeSet<Vec<usize>> = BTreeSet::new();
+        // the very first proposal is always the fully-parallel baseline,
+        // so every exploration carries its improvement reference point
+        if self.rounds_done == 0 && self.evaluated.is_empty() {
+            let base: Vec<usize> = dims.iter().map(|d| d[0]).collect();
+            in_batch.insert(base.clone());
+            batch.push(base);
+        }
+        // annealing: random-jump probability decays with rounds already
+        // done (absolute, so a resumed run cools exactly like an
+        // uninterrupted one), floored to keep some global exploration
+        let temperature = 0.5f64.powf(self.rounds_done as f64 / 8.0);
+        let p_jump = 0.2 + 0.6 * temperature;
+        while batch.len() < self.cfg.batch {
+            let mut found = false;
+            for _ in 0..PROPOSE_RETRIES {
+                let cand = if self.frontier.is_empty() || self.rng.bernoulli(p_jump) {
+                    random_lattice_point(&mut self.rng, dims)
+                } else {
+                    let pts = self.frontier.points();
+                    let parent = pts[self.rng.below(pts.len())].lhr.clone();
+                    mutate(&mut self.rng, dims, parent)
+                };
+                if !self.visited.contains(&cand) && !in_batch.contains(&cand) {
+                    in_batch.insert(cand.clone());
+                    batch.push(cand);
+                    found = true;
+                    break;
+                }
+            }
+            if found {
+                continue;
+            }
+            // random proposals keep colliding: deterministically scan for
+            // the next unvisited point (covers small lattices exhaustively;
+            // a point the cursor passes is already visited, so cursor at
+            // the end means the lattice is done)
+            let mut scanned = false;
+            while self.scan_cursor < total {
+                let cand = nth_lhr(dims, self.scan_cursor);
+                self.scan_cursor += 1;
+                if !self.visited.contains(&cand) && !in_batch.contains(&cand) {
+                    in_batch.insert(cand.clone());
+                    batch.push(cand);
+                    scanned = true;
+                    break;
+                }
+            }
+            if !scanned {
+                break; // lattice exhausted
+            }
+        }
+        batch
+    }
+
+    /// Serialize the full state (config echo, RNG, cursors, every
+    /// evaluated point) as a JSON value.
+    pub fn checkpoint_json(&self) -> Json {
+        let state = self.rng.state();
+        Json::obj(vec![
+            ("version", Json::Num(CHECKPOINT_VERSION as f64)),
+            ("net", Json::Str(self.net_name.clone())),
+            ("topology", Json::Str(self.topology.clone())),
+            ("seed", Json::Str(format!("{:016x}", self.cfg.seed))),
+            (
+                "objectives",
+                Json::Arr(
+                    self.cfg
+                        .objectives
+                        .iter()
+                        .map(|o| Json::Str(o.name().to_string()))
+                        .collect(),
+                ),
+            ),
+            ("max_lhr", Json::Num(self.cfg.max_lhr as f64)),
+            ("batch", Json::Num(self.cfg.batch as f64)),
+            ("rounds_done", Json::Num(self.rounds_done as f64)),
+            ("scan_cursor", Json::Num(self.scan_cursor as f64)),
+            (
+                "rng_state",
+                Json::Arr(
+                    state
+                        .iter()
+                        .map(|w| Json::Str(format!("{w:016x}")))
+                        .collect(),
+                ),
+            ),
+            (
+                "points",
+                Json::Arr(self.evaluated.iter().map(point_to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Atomically write the checkpoint (temp file + rename, so a kill
+    /// mid-write cannot corrupt an existing checkpoint).
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.checkpoint_json().to_string_pretty())
+            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming checkpoint into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn frontier(&self) -> &ParetoFrontier {
+        &self.frontier
+    }
+
+    /// Every point evaluated so far, in evaluation order.
+    pub fn evaluated(&self) -> &[DsePoint] {
+        &self.evaluated
+    }
+
+    pub fn rounds_done(&self) -> usize {
+        self.rounds_done
+    }
+
+    pub fn config(&self) -> &ExploreConfig {
+        &self.cfg
+    }
+
+    /// True once the whole lattice has been visited.
+    pub fn exhausted(&self) -> bool {
+        self.exhausted
+    }
+}
+
+/// Convenience wrapper: resume-or-start, run to the budget, return the
+/// finished explorer.
+pub fn explore(net: &NetDef, cfg: ExploreConfig, costs: &CostModel) -> Result<Explorer> {
+    let mut ex = Explorer::resume_or_new(net, cfg)?;
+    ex.run(net, costs)?;
+    Ok(ex)
+}
+
+fn random_lattice_point(rng: &mut Rng, dims: &[Vec<usize>]) -> Vec<usize> {
+    dims.iter().map(|d| d[rng.below(d.len())]).collect()
+}
+
+/// Move one layer's LHR one lattice notch up or down (flipping direction
+/// at the edges). Single-choice dimensions return the parent unchanged —
+/// the caller's visited-set check rejects it.
+fn mutate(rng: &mut Rng, dims: &[Vec<usize>], mut lhr: Vec<usize>) -> Vec<usize> {
+    let k = rng.below(dims.len());
+    let d = &dims[k];
+    let pos = d.iter().position(|&v| v == lhr[k]).unwrap_or(0);
+    let up = rng.bernoulli(0.5);
+    let npos = if up {
+        if pos + 1 < d.len() {
+            pos + 1
+        } else {
+            pos.saturating_sub(1)
+        }
+    } else if pos > 0 {
+        pos - 1
+    } else if d.len() > 1 {
+        1
+    } else {
+        0
+    };
+    lhr[k] = d[npos];
+    lhr
+}
+
+fn parse_hex_u64(s: &str) -> Result<u64> {
+    u64::from_str_radix(s.trim_start_matches("0x"), 16)
+        .map_err(|e| anyhow::anyhow!("bad hex u64 '{s}': {e}"))
+}
+
+fn point_to_json(p: &DsePoint) -> Json {
+    Json::obj(vec![
+        ("net", Json::Str(p.net.clone())),
+        ("label", Json::Str(p.label.clone())),
+        ("lhr", Json::from_usizes(&p.lhr)),
+        ("cycles", Json::Num(p.cycles as f64)),
+        ("serial_cycles", Json::Num(p.serial_cycles as f64)),
+        ("lut", Json::Num(p.resources.lut)),
+        ("reg", Json::Num(p.resources.reg)),
+        ("bram_36k", Json::Num(p.resources.bram_36k)),
+        ("dsp", Json::Num(p.resources.dsp)),
+        ("energy_mj", Json::Num(p.energy_mj)),
+        ("latency_us", Json::Num(p.latency_us)),
+        ("layer_activity", Json::from_f64s(&p.layer_activity)),
+    ])
+}
+
+/// Every objective-bearing field is mandatory: a truncated or corrupted
+/// checkpoint must fail the resume, not deserialize as a zero-resource
+/// point that would dominate the whole frontier.
+fn point_from_json(j: &Json) -> Result<DsePoint> {
+    let lhr = j.at("lhr").usize_vec();
+    if lhr.is_empty() {
+        bail!("point: missing or empty lhr");
+    }
+    Ok(DsePoint {
+        net: j.at("net").as_str().context("point: missing net")?.to_string(),
+        label: j.at("label").as_str().context("point: missing label")?.to_string(),
+        lhr,
+        cycles: j.at("cycles").as_u64().context("point: missing cycles")?,
+        serial_cycles: j.at("serial_cycles").as_u64().context("point: missing serial_cycles")?,
+        resources: Resources {
+            lut: j.at("lut").as_f64().context("point: missing lut")?,
+            reg: j.at("reg").as_f64().context("point: missing reg")?,
+            bram_36k: j.at("bram_36k").as_f64().context("point: missing bram_36k")?,
+            dsp: j.at("dsp").as_f64().context("point: missing dsp")?,
+        },
+        energy_mj: j.at("energy_mj").as_f64().context("point: missing energy_mj")?,
+        latency_us: j.at("latency_us").as_f64().context("point: missing latency_us")?,
+        layer_activity: j.at("layer_activity").f64_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::table1_net;
+
+    fn tiny_cfg() -> ExploreConfig {
+        ExploreConfig {
+            rounds: 3,
+            batch: 6,
+            max_lhr: 8,
+            threads: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn explore_runs_and_builds_a_frontier() {
+        let net = table1_net("net1");
+        let mut ex = Explorer::new(&net, tiny_cfg()).unwrap();
+        ex.run(&net, &CostModel::default()).unwrap();
+        assert_eq!(ex.rounds_done(), 3);
+        assert_eq!(ex.evaluated().len(), 18);
+        assert!(!ex.frontier().is_empty());
+        // the fully-parallel baseline is always evaluated first
+        assert_eq!(ex.evaluated()[0].lhr, vec![1, 1, 1]);
+        // no duplicate evaluations
+        let mut lhrs: Vec<Vec<usize>> = ex.evaluated().iter().map(|p| p.lhr.clone()).collect();
+        lhrs.sort();
+        lhrs.dedup();
+        assert_eq!(lhrs.len(), 18);
+    }
+
+    #[test]
+    fn small_lattice_is_exhausted() {
+        // net1 with max_lhr 2: 2^3 = 8 points
+        let net = table1_net("net1");
+        let cfg = ExploreConfig {
+            rounds: 100,
+            batch: 3,
+            max_lhr: 2,
+            threads: 1,
+            ..Default::default()
+        };
+        let mut ex = Explorer::new(&net, cfg).unwrap();
+        ex.run(&net, &CostModel::default()).unwrap();
+        assert!(ex.exhausted());
+        assert_eq!(ex.evaluated().len(), 8);
+    }
+
+    #[test]
+    fn point_json_roundtrip_is_bit_exact() {
+        let net = table1_net("net1");
+        let p = crate::dse::runner::evaluate(
+            &net,
+            &HwConfig::with_lhr(vec![4, 8, 8]),
+            &crate::dse::runner::EvalMode::Activity { seed: 42 },
+            &CostModel::default(),
+        );
+        let j = Json::parse(&point_to_json(&p).to_string()).unwrap();
+        let q = point_from_json(&j).unwrap();
+        assert_eq!(p.net, q.net);
+        assert_eq!(p.label, q.label);
+        assert_eq!(p.lhr, q.lhr);
+        assert_eq!(p.cycles, q.cycles);
+        assert_eq!(p.serial_cycles, q.serial_cycles);
+        assert_eq!(p.resources.lut.to_bits(), q.resources.lut.to_bits());
+        assert_eq!(p.resources.reg.to_bits(), q.resources.reg.to_bits());
+        assert_eq!(p.resources.bram_36k.to_bits(), q.resources.bram_36k.to_bits());
+        assert_eq!(p.energy_mj.to_bits(), q.energy_mj.to_bits());
+        assert_eq!(p.latency_us.to_bits(), q.latency_us.to_bits());
+        let pa: Vec<u64> = p.layer_activity.iter().map(|x| x.to_bits()).collect();
+        let qa: Vec<u64> = q.layer_activity.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(pa, qa);
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_config() {
+        let net = table1_net("net1");
+        let dir = std::env::temp_dir().join("snn_dse_explore_mismatch");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.json");
+        let mut cfg = tiny_cfg();
+        cfg.checkpoint = Some(path.clone());
+        let mut ex = Explorer::new(&net, cfg.clone()).unwrap();
+        ex.run(&net, &CostModel::default()).unwrap();
+        // wrong seed
+        let mut bad = cfg.clone();
+        bad.seed = 43;
+        assert!(Explorer::resume(&net, bad, &path).is_err());
+        // wrong net
+        let net3 = table1_net("net3");
+        assert!(Explorer::resume(&net3, cfg.clone(), &path).is_err());
+        // wrong objectives
+        let mut bad = cfg;
+        bad.objectives = vec![Objective::Cycles, Objective::Lut];
+        assert!(Explorer::resume(&net, bad, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,14 +1,34 @@
-//! Design space exploration engine: space enumeration, parallel evaluation,
-//! Pareto pruning, and paper-shaped report emission (§IV's Evaluation
+//! Design space exploration engine: space enumeration, parallel
+//! evaluation, n-objective Pareto pruning, frontier exploration with
+//! checkpoint/resume, and paper-shaped report emission (§IV's Evaluation
 //! Phase with the automation the paper's Makefile flow provides).
+//!
+//! The pieces compose bottom-up:
+//!
+//! * [`space`] — the LHR lattice (per-layer power-of-two choices)
+//! * [`runner`] — configure → simulate → estimate → score, one
+//!   [`DsePoint`] per configuration; [`sweep`] fans out across threads
+//! * [`pareto`] — [`Objective`] subsets, dominance, and the incremental
+//!   [`ParetoFrontier`]
+//! * [`explore`](mod@explore) — seeded annealing over the lattice maintaining the
+//!   frontier, with JSON checkpoint/resume ([`Explorer`])
+//! * [`auto`] — the original greedy constraint-driven single-path search
+//! * [`report`] — Table-I / Fig. 6 / frontier renderers
 
 pub mod auto;
+pub mod explore;
 pub mod pareto;
 pub mod report;
 pub mod runner;
 pub mod space;
 
 pub use auto::{auto_search, Constraints, SearchResult};
-pub use pareto::{dominates, knee_point, pareto_front};
-pub use runner::{evaluate, evaluate_cached, sweep, DsePoint, EvalMode};
-pub use space::{enumerate_capped, enumerate_lhr, lhr_choices, table1_lhr_sets};
+pub use explore::{explore, ExploreConfig, Explorer, RoundSummary};
+pub use pareto::{
+    dominates, dominates_on, knee_point, pareto_front, pareto_front_on, Objective, ParetoFrontier,
+};
+pub use runner::{evaluate, evaluate_cached, sweep, sweep_cached, DsePoint, EvalMode};
+pub use space::{
+    enumerate_capped, enumerate_lhr, lattice_dims, lattice_size, lhr_choices, nth_lhr,
+    table1_lhr_sets,
+};

@@ -1,25 +1,146 @@
-//! Pareto-frontier extraction over (latency, LUT, energy) — the
-//! "Evaluation Phase" pruning that picks the paper's sweet spots.
+//! N-objective Pareto dominance engine — the "Evaluation Phase" pruning
+//! that picks the paper's sweet spots, generalized from the original
+//! (cycles, LUT, energy) triple to any subset of the five reported
+//! objectives (cycles, LUT, REG, BRAM, energy).
+//!
+//! Two usage shapes:
+//!
+//! * **Batch**: [`pareto_front`] / [`pareto_front_on`] filter a finished
+//!   sweep down to its non-dominated indices (Fig. 6's frontier).
+//! * **Incremental**: [`ParetoFrontier`] maintains the non-dominated set
+//!   while an exploration (see
+//!   [`crate::dse::explore`](mod@crate::dse::explore)) streams candidate
+//!   points in. `insert` is equivalent to rebuilding the batch front over
+//!   everything seen so far — `frontier_incremental_matches_batch` in the
+//!   tests pins that equivalence.
 
 use crate::dse::runner::DsePoint;
 
-/// True if `a` dominates `b` (no worse in all objectives, better in one)
-/// over (cycles, LUT, energy).
-pub fn dominates(a: &DsePoint, b: &DsePoint) -> bool {
-    let le = a.cycles <= b.cycles
-        && a.resources.lut <= b.resources.lut
-        && a.energy_mj <= b.energy_mj;
-    let lt = a.cycles < b.cycles
-        || a.resources.lut < b.resources.lut
-        || a.energy_mj < b.energy_mj;
-    le && lt
+/// One minimized objective over a [`DsePoint`].
+///
+/// Every Table-I column the paper reports is available; callers pick the
+/// subset they trade off (the paper's headline frontier is
+/// latency–LUT–energy, [`Objective::DEFAULT`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Objective {
+    /// Inference latency in cycles.
+    Cycles,
+    /// FPGA look-up tables.
+    Lut,
+    /// FPGA registers.
+    Reg,
+    /// BRAM 36K blocks.
+    Bram,
+    /// Energy per inference (mJ).
+    Energy,
 }
 
-/// Indices of the non-dominated points, in input order.
-pub fn pareto_front(points: &[DsePoint]) -> Vec<usize> {
+impl Objective {
+    /// Every supported objective.
+    pub const ALL: [Objective; 5] = [
+        Objective::Cycles,
+        Objective::Lut,
+        Objective::Reg,
+        Objective::Bram,
+        Objective::Energy,
+    ];
+
+    /// The paper's default trade-off triple: latency, LUT area, energy.
+    pub const DEFAULT: [Objective; 3] = [Objective::Cycles, Objective::Lut, Objective::Energy];
+
+    /// The objective's value for a point (all objectives are minimized).
+    pub fn value(&self, p: &DsePoint) -> f64 {
+        match self {
+            Objective::Cycles => p.cycles as f64,
+            Objective::Lut => p.resources.lut,
+            Objective::Reg => p.resources.reg,
+            Objective::Bram => p.resources.bram_36k,
+            Objective::Energy => p.energy_mj,
+        }
+    }
+
+    /// Stable lowercase name (used in checkpoints and `--objectives`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Cycles => "cycles",
+            Objective::Lut => "lut",
+            Objective::Reg => "reg",
+            Objective::Bram => "bram",
+            Objective::Energy => "energy",
+        }
+    }
+
+    /// Parse one objective name (accepts the common aliases `latency` and
+    /// `area`).
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "cycles" | "latency" => Some(Objective::Cycles),
+            "lut" | "area" => Some(Objective::Lut),
+            "reg" => Some(Objective::Reg),
+            "bram" => Some(Objective::Bram),
+            "energy" => Some(Objective::Energy),
+            _ => None,
+        }
+    }
+
+    /// Parse a comma-separated objective list, e.g. `cycles,lut,energy`.
+    pub fn parse_list(s: &str) -> Result<Vec<Objective>, String> {
+        let mut out = Vec::new();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let o = Objective::parse(part).ok_or_else(|| {
+                format!("unknown objective '{}' (cycles|lut|reg|bram|energy)", part.trim())
+            })?;
+            if !out.contains(&o) {
+                out.push(o);
+            }
+        }
+        if out.is_empty() {
+            return Err("objective list is empty".into());
+        }
+        Ok(out)
+    }
+}
+
+/// True if `a` dominates `b` over `objectives`: no worse in every
+/// objective, strictly better in at least one. With an empty objective
+/// list nothing dominates anything.
+pub fn dominates_on(a: &DsePoint, b: &DsePoint, objectives: &[Objective]) -> bool {
+    let mut strictly_better = false;
+    for o in objectives {
+        let (va, vb) = (o.value(a), o.value(b));
+        if va > vb {
+            return false;
+        }
+        if va < vb {
+            strictly_better = true;
+        }
+    }
+    strictly_better
+}
+
+/// True if `a` dominates `b` over the default (cycles, LUT, energy)
+/// objectives — the original three-objective entry point.
+pub fn dominates(a: &DsePoint, b: &DsePoint) -> bool {
+    dominates_on(a, b, &Objective::DEFAULT)
+}
+
+/// Indices of the non-dominated points over `objectives`, in input order.
+/// Duplicate points (equal in every objective) are all kept: neither
+/// dominates the other.
+pub fn pareto_front_on(points: &[DsePoint], objectives: &[Objective]) -> Vec<usize> {
     (0..points.len())
-        .filter(|&i| !points.iter().enumerate().any(|(j, p)| j != i && dominates(p, &points[i])))
+        .filter(|&i| {
+            !points
+                .iter()
+                .enumerate()
+                .any(|(j, p)| j != i && dominates_on(p, &points[i], objectives))
+        })
         .collect()
+}
+
+/// Indices of the non-dominated points over the default objectives.
+pub fn pareto_front(points: &[DsePoint]) -> Vec<usize> {
+    pareto_front_on(points, &Objective::DEFAULT)
 }
 
 /// Pick the knee point: the frontier point minimizing the normalized
@@ -37,6 +158,86 @@ pub fn knee_point(points: &[DsePoint]) -> Option<usize> {
         })
 }
 
+/// Incrementally maintained Pareto frontier over a fixed objective subset.
+///
+/// Feed points in any order with [`ParetoFrontier::insert`]; at every
+/// moment `points()` holds exactly the non-dominated subset of everything
+/// inserted so far — the same set (up to ordering) a batch
+/// [`pareto_front_on`] over the full history would return. An insert is
+/// `O(frontier)` instead of the batch rebuild's `O(n^2)`, which is what
+/// lets long explorations (10k+ evaluated configs) keep the frontier live.
+#[derive(Debug, Clone)]
+pub struct ParetoFrontier {
+    objectives: Vec<Objective>,
+    points: Vec<DsePoint>,
+}
+
+impl ParetoFrontier {
+    /// Empty frontier over the given objectives.
+    pub fn new(objectives: &[Objective]) -> Self {
+        ParetoFrontier {
+            objectives: objectives.to_vec(),
+            points: Vec::new(),
+        }
+    }
+
+    /// Build by inserting `points` in iteration order.
+    pub fn from_points<I>(objectives: &[Objective], points: I) -> Self
+    where
+        I: IntoIterator<Item = DsePoint>,
+    {
+        let mut f = ParetoFrontier::new(objectives);
+        for p in points {
+            f.insert(p);
+        }
+        f
+    }
+
+    /// Offer a point. Returns `true` if it joined the frontier (it may
+    /// evict points it dominates), `false` if an existing point dominates
+    /// it. Points equal in every objective are kept alongside each other,
+    /// matching [`pareto_front_on`]'s tie behavior.
+    pub fn insert(&mut self, p: DsePoint) -> bool {
+        if self
+            .points
+            .iter()
+            .any(|q| dominates_on(q, &p, &self.objectives))
+        {
+            return false;
+        }
+        self.points.retain(|q| !dominates_on(&p, q, &self.objectives));
+        self.points.push(p);
+        true
+    }
+
+    /// The current non-dominated points (insertion order, minus evictions).
+    pub fn points(&self) -> &[DsePoint] {
+        &self.points
+    }
+
+    /// The objective subset this frontier is defined over.
+    pub fn objectives(&self) -> &[Objective] {
+        &self.objectives
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// True if some frontier point equals `p` in every objective or
+    /// dominates it — i.e. the frontier "covers" `p`.
+    pub fn contains_or_dominates(&self, p: &DsePoint) -> bool {
+        self.points.iter().any(|q| {
+            dominates_on(q, p, &self.objectives)
+                || self.objectives.iter().all(|o| o.value(q) == o.value(p))
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -45,7 +246,9 @@ mod tests {
     fn pt(cycles: u64, lut: f64, e: f64) -> DsePoint {
         DsePoint {
             net: "t".into(),
-            label: format!("{cycles}/{lut}"),
+            // label carries every objective so label-multiset comparisons
+            // in the equivalence test cannot mask a differing frontier
+            label: format!("{cycles}/{lut}/{e}"),
             lhr: vec![1],
             cycles,
             serial_cycles: cycles,
@@ -75,6 +278,9 @@ mod tests {
     fn identical_points_both_kept() {
         let pts = vec![pt(10, 10.0, 1.0), pt(10, 10.0, 1.0)];
         assert_eq!(pareto_front(&pts).len(), 2);
+        // the incremental frontier agrees
+        let f = ParetoFrontier::from_points(&Objective::DEFAULT, pts);
+        assert_eq!(f.len(), 2);
     }
 
     #[test]
@@ -91,5 +297,121 @@ mod tests {
     fn empty_input() {
         assert!(pareto_front(&[]).is_empty());
         assert_eq!(knee_point(&[]), None);
+        let f = ParetoFrontier::new(&Objective::DEFAULT);
+        assert!(f.is_empty());
+        assert_eq!(f.len(), 0);
+    }
+
+    #[test]
+    fn single_point_is_its_own_frontier() {
+        let pts = vec![pt(10, 10.0, 1.0)];
+        assert_eq!(pareto_front(&pts), vec![0]);
+        let mut f = ParetoFrontier::new(&Objective::DEFAULT);
+        assert!(f.insert(pts[0].clone()));
+        assert!(f.contains_or_dominates(&pts[0]));
+    }
+
+    #[test]
+    fn ties_on_some_objectives_do_not_dominate_unless_strictly_better() {
+        // equal cycles & energy, better LUT -> dominates
+        let a = pt(100, 10.0, 1.0);
+        let b = pt(100, 20.0, 1.0);
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        // equal everywhere -> neither dominates
+        let c = pt(100, 10.0, 1.0);
+        assert!(!dominates(&a, &c));
+        assert!(!dominates(&c, &a));
+    }
+
+    #[test]
+    fn degenerate_single_objective() {
+        let pts = vec![pt(30, 1.0, 9.0), pt(10, 5.0, 9.0), pt(20, 2.0, 9.0), pt(10, 7.0, 1.0)];
+        // minimizing cycles alone: both cycles=10 points survive (tie)
+        let f = pareto_front_on(&pts, &[Objective::Cycles]);
+        assert_eq!(f, vec![1, 3]);
+        // minimizing LUT alone: only the 1.0 point survives
+        let f = pareto_front_on(&pts, &[Objective::Lut]);
+        assert_eq!(f, vec![0]);
+    }
+
+    #[test]
+    fn objective_subsets_change_the_front() {
+        // b trades LUT for energy: on (cycles, lut) it is dominated, on
+        // (cycles, lut, energy) it survives.
+        let a = pt(100, 10.0, 5.0);
+        let b = pt(100, 20.0, 1.0);
+        let pts = vec![a, b];
+        assert_eq!(pareto_front_on(&pts, &[Objective::Cycles, Objective::Lut]), vec![0]);
+        assert_eq!(pareto_front_on(&pts, &Objective::DEFAULT), vec![0, 1]);
+    }
+
+    #[test]
+    fn parse_objectives() {
+        assert_eq!(Objective::parse("latency"), Some(Objective::Cycles));
+        assert_eq!(Objective::parse("AREA"), Some(Objective::Lut));
+        assert_eq!(Objective::parse("nope"), None);
+        let v = Objective::parse_list("cycles, lut,energy,cycles").unwrap();
+        assert_eq!(v, vec![Objective::Cycles, Objective::Lut, Objective::Energy]);
+        assert!(Objective::parse_list("").is_err());
+        assert!(Objective::parse_list("cycles,bogus").is_err());
+    }
+
+    #[test]
+    fn frontier_incremental_matches_batch() {
+        // deterministic pseudo-random cloud, inserted in order; the
+        // incremental frontier must equal the batch rebuild at every prefix
+        let mut rng = crate::util::rng::Rng::new(2024);
+        let cloud: Vec<DsePoint> = (0..60)
+            .map(|_| {
+                pt(
+                    10 + rng.below(50) as u64,
+                    (1 + rng.below(40)) as f64,
+                    (1 + rng.below(30)) as f64,
+                )
+            })
+            .collect();
+        for objectives in [
+            &Objective::DEFAULT[..],
+            &[Objective::Cycles, Objective::Lut][..],
+            &[Objective::Energy][..],
+            &Objective::ALL[..],
+        ] {
+            let mut f = ParetoFrontier::new(objectives);
+            for (n, p) in cloud.iter().enumerate() {
+                f.insert(p.clone());
+                let batch = pareto_front_on(&cloud[..=n], objectives);
+                let mut inc: Vec<String> = f.points().iter().map(|p| p.label.clone()).collect();
+                let mut bat: Vec<String> = batch.iter().map(|&i| cloud[i].label.clone()).collect();
+                inc.sort();
+                bat.sort();
+                assert_eq!(inc, bat, "prefix {} over {:?}", n + 1, objectives);
+            }
+        }
+    }
+
+    #[test]
+    fn insert_rejects_dominated_and_evicts() {
+        let mut f = ParetoFrontier::new(&Objective::DEFAULT);
+        assert!(f.insert(pt(100, 50.0, 1.0)));
+        // dominated by the first point: rejected
+        assert!(!f.insert(pt(200, 60.0, 2.0)));
+        assert_eq!(f.len(), 1);
+        // dominates the first point: admitted, evicts it
+        assert!(f.insert(pt(90, 40.0, 0.5)));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.points()[0].cycles, 90);
+        // incomparable: both kept
+        assert!(f.insert(pt(50, 80.0, 2.0)));
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn contains_or_dominates_covers_dominated_points() {
+        let mut f = ParetoFrontier::new(&Objective::DEFAULT);
+        f.insert(pt(90, 40.0, 0.5));
+        assert!(f.contains_or_dominates(&pt(100, 50.0, 1.0))); // dominated
+        assert!(f.contains_or_dominates(&pt(90, 40.0, 0.5))); // equal
+        assert!(!f.contains_or_dominates(&pt(50, 80.0, 2.0))); // incomparable
     }
 }

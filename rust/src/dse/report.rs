@@ -67,6 +67,70 @@ fn topology_of(net_name: &str) -> String {
     crate::snn::table1_net(net_name).topology_string()
 }
 
+/// Table-I-style frontier report: one row per non-dominated point, sorted
+/// by ascending latency, with improvement columns against the paper's
+/// prior work for the net and against the frontier's own fastest
+/// (largest-area) point — the fully-parallel baseline whenever the
+/// exploration evaluated it.
+pub fn frontier_block(net_name: &str, points: &[DsePoint]) -> String {
+    let prior = prior_for(net_name);
+    let mut sorted: Vec<&DsePoint> = points.iter().collect();
+    sorted.sort_by(|a, b| a.cycles.cmp(&b.cycles).then_with(|| a.label.cmp(&b.label)));
+    let base = sorted.first().copied();
+    let rows: Vec<Vec<String>> = sorted
+        .iter()
+        .map(|p| {
+            let (lut_i, lat_i) = p.improvement_vs(prior.lut, prior.cycles);
+            let vs_base = base
+                .map(|b| {
+                    let (bl, bc) = p.improvement_vs(b.resources.lut, b.cycles);
+                    format!("x{bl:.2}, x{bc:.2}")
+                })
+                .unwrap_or_else(|| "—".into());
+            vec![
+                format!("TW-{}", p.label),
+                format!("{}/{}", kfmt(p.resources.lut), kfmt(p.resources.reg)),
+                crate::util::commas(p.cycles),
+                format!("{:.3} mJ", p.energy_mj),
+                if prior.lut.is_nan() {
+                    format!("—, x{lat_i:.2}")
+                } else {
+                    format!("x{lut_i:.2}, x{lat_i:.2}")
+                },
+                vs_base,
+            ]
+        })
+        .collect();
+    format!(
+        "### {} — Pareto frontier ({} points)\n\n{}",
+        net_name,
+        points.len(),
+        markdown_table(
+            &[
+                "Work",
+                "Est. Area LUT/REG",
+                "Cycles/Image",
+                "Energy/Image",
+                "LUT-Lat. vs prior",
+                "LUT-Lat. vs fastest",
+            ],
+            &rows,
+        )
+    )
+}
+
+/// One-line streaming row for a point newly admitted to the frontier —
+/// emitted live while an exploration runs.
+pub fn frontier_stream_row(round: usize, p: &DsePoint) -> String {
+    format!(
+        "[round {round:>3}] + {:18} {:>12} cycles  {:>9} LUT  {:.3} mJ",
+        p.label,
+        crate::util::commas(p.cycles),
+        kfmt(p.resources.lut),
+        p.energy_mj
+    )
+}
+
 /// CSV for Fig. 6: one line per configuration `net,label,lut,cycles`.
 pub fn fig6_csv(points_per_net: &[(String, Vec<DsePoint>)]) -> String {
     let mut out = String::from("net,lhr,lut,reg,cycles,energy_mj\n");
@@ -231,5 +295,26 @@ mod tests {
     fn claims_positive_reduction_formats() {
         let s = claims_summary("net1", &points());
         assert!(s.contains("speedup"));
+    }
+
+    #[test]
+    fn frontier_block_sorts_and_references_fastest() {
+        let s = frontier_block("net1", &points());
+        assert!(s.contains("Pareto frontier (2 points)"));
+        assert!(s.contains("TW-(1,1,1)"));
+        assert!(s.contains("TW-(4,8,8)"));
+        // the fastest row compares against itself: x1.00, x1.00
+        assert!(s.contains("x1.00, x1.00"));
+        // fully-parallel is fastest, so it must come first
+        let l111 = s.find("TW-(1,1,1)").unwrap();
+        let l488 = s.find("TW-(4,8,8)").unwrap();
+        assert!(l111 < l488);
+    }
+
+    #[test]
+    fn frontier_stream_row_formats() {
+        let r = frontier_stream_row(7, &points()[0]);
+        assert!(r.contains("[round   7]"));
+        assert!(r.contains("(1,1,1)"));
     }
 }

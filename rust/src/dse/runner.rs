@@ -59,6 +59,22 @@ impl DsePoint {
 }
 
 /// Evaluate one configuration.
+///
+/// ```
+/// use snn_dse::config::HwConfig;
+/// use snn_dse::dse::{evaluate, EvalMode};
+/// use snn_dse::sim::CostModel;
+/// use snn_dse::snn::table1_net;
+///
+/// let net = table1_net("net1");
+/// let p = evaluate(
+///     &net,
+///     &HwConfig::with_lhr(vec![4, 8, 8]),
+///     &EvalMode::Activity { seed: 42 },
+///     &CostModel::default(),
+/// );
+/// assert!(p.cycles > 0 && p.resources.lut > 0.0);
+/// ```
 pub fn evaluate(net: &NetDef, hw: &HwConfig, mode: &EvalMode, costs: &CostModel) -> DsePoint {
     eval_inner(net, hw, mode, costs, None)
 }
@@ -136,11 +152,25 @@ pub fn sweep(
     costs: &CostModel,
     n_threads: usize,
 ) -> Vec<DsePoint> {
+    let cache = EstimateCache::new();
+    sweep_cached(net, configs, seed, costs, n_threads, &cache)
+}
+
+/// [`sweep`] with a caller-owned [`EstimateCache`], so repeated batches
+/// (e.g. the rounds of [`crate::dse::explore`](mod@crate::dse::explore)) share one resource-estimate
+/// memo across the whole exploration.
+pub fn sweep_cached(
+    net: &NetDef,
+    configs: &[HwConfig],
+    seed: u64,
+    costs: &CostModel,
+    n_threads: usize,
+    cache: &EstimateCache,
+) -> Vec<DsePoint> {
     if configs.is_empty() {
         return Vec::new();
     }
     let n_threads = n_threads.clamp(1, configs.len());
-    let cache = EstimateCache::new();
     let mut results: Vec<Option<DsePoint>> = vec![None; configs.len()];
 
     // One code path for every thread count: each worker steals the next
@@ -151,7 +181,6 @@ pub fn sweep(
         let handles: Vec<_> = (0..n_threads)
             .map(|_| {
                 let next = &next;
-                let cache = &cache;
                 s.spawn(move || {
                     let mut out = Vec::new();
                     loop {

@@ -19,14 +19,35 @@ pub fn lhr_choices(logical_units: usize, max_lhr: usize) -> Vec<usize> {
     v
 }
 
+/// Per-layer LHR choice lists for a network — the axes of the lattice.
+pub fn lattice_dims(net: &NetDef, max_lhr: usize) -> Vec<Vec<usize>> {
+    net.parametric_layers()
+        .iter()
+        .map(|&i| lhr_choices(net.layers[i].logical_units(), max_lhr))
+        .collect()
+}
+
+/// Number of points in the lattice, without materializing it.
+pub fn lattice_size(dims: &[Vec<usize>]) -> usize {
+    dims.iter().map(|d| d.len()).product()
+}
+
+/// The `idx`-th lattice point in [`enumerate_lhr`] order (dimension 0
+/// varies fastest). `idx` must be `< lattice_size(dims)`.
+pub fn nth_lhr(dims: &[Vec<usize>], mut idx: usize) -> Vec<usize> {
+    dims.iter()
+        .map(|d| {
+            let v = d[idx % d.len()];
+            idx /= d.len();
+            v
+        })
+        .collect()
+}
+
 /// Full cartesian LHR lattice for a network (can be large: use
 /// `enumerate_capped` for bounded sweeps).
 pub fn enumerate_lhr(net: &NetDef, max_lhr: usize) -> Vec<HwConfig> {
-    let dims: Vec<Vec<usize>> = net
-        .parametric_layers()
-        .iter()
-        .map(|&i| lhr_choices(net.layers[i].logical_units(), max_lhr))
-        .collect();
+    let dims = lattice_dims(net, max_lhr);
     let mut out = Vec::new();
     let mut idx = vec![0usize; dims.len()];
     loop {
@@ -127,6 +148,17 @@ mod tests {
         labels.sort();
         labels.dedup();
         assert_eq!(labels.len(), 20);
+    }
+
+    #[test]
+    fn nth_lhr_matches_enumeration_order() {
+        let net = fc_net("t", "mnist", &[64, 16, 8], 4, 2, 0.9, 5);
+        let dims = lattice_dims(&net, 16);
+        let all = enumerate_lhr(&net, 16);
+        assert_eq!(lattice_size(&dims), all.len());
+        for (i, cfg) in all.iter().enumerate() {
+            assert_eq!(nth_lhr(&dims, i), cfg.lhr, "index {i}");
+        }
     }
 
     #[test]

@@ -2,8 +2,57 @@
 //!
 //! Sparsity-aware application-specific SNN accelerator design space
 //! exploration — a full-system reproduction of Aliyev, Svoboda & Adegbija
-//! (2023) as a three-layer Rust + JAX + Pallas stack. See DESIGN.md for the
-//! architecture mapping and README.md for usage.
+//! (2023) as a three-layer Rust + JAX + Pallas stack. See `rust/DESIGN.md`
+//! for the architecture mapping, `docs/architecture.md` for the
+//! paper-section-to-module map, and `docs/dse-guide.md` for a worked
+//! exploration walkthrough.
+//!
+//! ## Module map
+//!
+//! The crate follows the paper's three framework phases (§IV):
+//!
+//! * **Configuration Phase** — [`config`] (hardware knobs: per-layer LHR,
+//!   memory blocks, PENC width) over the [`snn`] topology types.
+//! * **Architecture Generation Phase** — [`arch`] (structural netlist) and
+//!   [`resources`] (analytical LUT/REG/BRAM/energy models calibrated to
+//!   Table I).
+//! * **Evaluation Phase** — [`sim`] (the cycle-accurate, sparsity-aware
+//!   simulator: one pipelined engine, pluggable workloads/probes) and
+//!   [`dse`] (sweeps, n-objective Pareto frontiers, the checkpointable
+//!   [`dse::Explorer`], constraint-driven [`dse::auto_search`], and
+//!   paper-shaped reports).
+//!
+//! Cross-cutting: [`data`] (calibrated activity models), [`baselines`]
+//! (prior-work anchors and the sparsity-oblivious latency bound),
+//! [`validate`] + [`runtime`] (spike-to-spike validation against JAX
+//! traces and the optional PJRT execution path), and [`util`] (offline
+//! substitutes for `serde_json`/`rand`/`clap`).
+//!
+//! ## Quick start
+//!
+//! Evaluate one hardware configuration and check it against the paper's
+//! fully-parallel baseline:
+//!
+//! ```
+//! use snn_dse::config::HwConfig;
+//! use snn_dse::dse::{evaluate, EvalMode};
+//! use snn_dse::sim::CostModel;
+//! use snn_dse::snn::table1_net;
+//!
+//! let net = table1_net("net1"); // 784-500-500-300 MNIST MLP
+//! let costs = CostModel::default();
+//! let base = evaluate(&net, &HwConfig::with_lhr(vec![1, 1, 1]),
+//!                     &EvalMode::Activity { seed: 42 }, &costs);
+//! let small = evaluate(&net, &HwConfig::with_lhr(vec![4, 8, 8]),
+//!                      &EvalMode::Activity { seed: 42 }, &costs);
+//! // multiplexing neurons trades latency for area (Table I's core trend)
+//! assert!(small.resources.lut < base.resources.lut);
+//! assert!(small.cycles > base.cycles);
+//! ```
+//!
+//! To search the whole design space instead of scoring points by hand,
+//! see [`dse::explore`](mod@dse::explore) and the `explore` CLI
+//! subcommand.
 
 pub mod arch;
 pub mod baselines;

@@ -4,6 +4,7 @@
 //!   simulate     cycle-accurate simulation of one configuration
 //!   resources    FPGA resource + power estimate of one configuration
 //!   dse          LHR sweep with Pareto frontier (Fig. 6 data)
+//!   explore      multi-objective Pareto exploration with checkpoint/resume
 //!   table1       reproduce the paper's Table I rows
 //!   sweep-t-pcr  spike-train length x population sweep (Fig. 7b)
 //!   validate     spike-to-spike validation vs JAX traces / PJRT HLO
@@ -21,7 +22,7 @@ use snn_dse::util::{commas, kfmt};
 use snn_dse::{runtime, validate};
 use std::path::PathBuf;
 
-const USAGE: &str = "snn-dse <simulate|resources|dse|table1|sweep-t-pcr|validate|infer|firing|generate|auto|dynamic> [options]
+const USAGE: &str = "snn-dse <simulate|resources|dse|explore|table1|sweep-t-pcr|validate|infer|firing|generate|auto|dynamic> [options]
   common options:
     --net <net1..net5>          network (default net1)
     --lhr <a,b,c,...>           per-layer logical-to-hardware ratios
@@ -33,6 +34,17 @@ const USAGE: &str = "snn-dse <simulate|resources|dse|table1|sweep-t-pcr|validate
     --cap <n>                   max configs (default 256)
     --threads <n>               worker threads (default 8)
     --csv <path>                dump swept points as CSV
+  explore options:
+    --objectives <list>         comma list of cycles|lut|reg|bram|energy
+                                (default cycles,lut,energy)
+    --rounds <n>                exploration rounds (default 32)
+    --batch <n>                 configs evaluated per round (default 16)
+    --max-lhr <n>               lattice bound (default 32)
+    --threads <n>               worker threads (default 8)
+    --checkpoint <path>         save/resume exploration state (JSON)
+    --checkpoint-every <n>      rounds between checkpoint writes (default 5;
+                                0 = only on completion)
+    --csv <path>                dump the frontier as CSV
   sweep-t-pcr options:
     --t-values <4,6,...>        spike-train lengths (default 4,6,8,10,15,20,25)
     --pops <1,10,30>            population sizes";
@@ -44,6 +56,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "resources" => cmd_resources(&args),
         "dse" => cmd_dse(&args),
+        "explore" => cmd_explore(&args),
         "table1" => cmd_table1(&args),
         "sweep-t-pcr" => cmd_sweep_t_pcr(&args),
         "validate" => cmd_validate(&args),
@@ -148,6 +161,78 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(out) = args.get("csv") {
         std::fs::write(out, dse::report::fig6_csv(&[(net.name.clone(), points)]))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_explore(args: &Args) -> anyhow::Result<()> {
+    let net = net_of(args);
+    let objectives = match args.get("objectives") {
+        Some(s) => snn_dse::dse::Objective::parse_list(s).map_err(|e| anyhow::anyhow!(e))?,
+        None => snn_dse::dse::Objective::DEFAULT.to_vec(),
+    };
+    let objective_names: Vec<&str> = objectives.iter().map(|o| o.name()).collect();
+    let cfg = snn_dse::dse::ExploreConfig {
+        objectives,
+        seed: args.usize_or("seed", 42) as u64,
+        rounds: args.usize_or("rounds", 32),
+        batch: args.usize_or("batch", 16),
+        max_lhr: args.usize_or("max-lhr", 32),
+        threads: args.usize_or("threads", 8),
+        checkpoint: args.get("checkpoint").map(PathBuf::from),
+        checkpoint_every: args.usize_or("checkpoint-every", 5),
+    };
+    let costs = CostModel::default();
+    let mut explorer = snn_dse::dse::Explorer::resume_or_new(&net, cfg)?;
+    if explorer.rounds_done() > 0 {
+        eprintln!(
+            "resumed: {} rounds done, {} points evaluated, frontier {}",
+            explorer.rounds_done(),
+            explorer.evaluated().len(),
+            explorer.frontier().len()
+        );
+    }
+    eprintln!(
+        "exploring {} over ({}) — {} rounds x {} configs, seed {}",
+        net.name,
+        objective_names.join(", "),
+        explorer.config().rounds,
+        explorer.config().batch,
+        explorer.config().seed
+    );
+    let cache = snn_dse::resources::EstimateCache::new();
+    let already_evaluated = explorer.evaluated().len();
+    let t0 = std::time::Instant::now();
+    explorer.run_with(&net, &costs, &cache, |s| {
+        if s.exhausted {
+            eprintln!("lattice exhausted — the whole design space is evaluated");
+            return;
+        }
+        for p in &s.admitted {
+            println!("{}", dse::report::frontier_stream_row(s.round, p));
+        }
+    })?;
+    if let Some(path) = &explorer.config().checkpoint {
+        eprintln!("checkpoint written to {}", path.display());
+    }
+    let (hits, misses) = cache.stats();
+    eprintln!(
+        "explored {} new configs in {:.2}s ({} total; estimate cache: {} hits / {} misses)",
+        explorer.evaluated().len() - already_evaluated,
+        t0.elapsed().as_secs_f64(),
+        explorer.evaluated().len(),
+        hits,
+        misses
+    );
+    println!();
+    let frontier_points: Vec<snn_dse::dse::DsePoint> = explorer.frontier().points().to_vec();
+    println!("{}", dse::report::frontier_block(&net.name, &frontier_points));
+    if let Some(out) = args.get("csv") {
+        std::fs::write(
+            out,
+            dse::report::fig6_csv(&[(net.name.clone(), frontier_points)]),
+        )?;
         println!("wrote {out}");
     }
     Ok(())

@@ -12,6 +12,7 @@ use crate::sim::memory::MemoryUnit;
 use crate::sim::neural_unit::NuMap;
 use crate::snn::Layer;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::Mutex;
 
 /// Parallel PENC instances per layer are capped: beyond this the single
@@ -68,6 +69,8 @@ impl EstimateKey {
 #[derive(Default)]
 pub struct EstimateCache {
     map: Mutex<HashMap<EstimateKey, Resources>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl EstimateCache {
@@ -83,6 +86,12 @@ impl EstimateCache {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// `(hits, misses)` counters since construction — long explorations
+    /// report these to show how much estimate work the memo collapsed.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(AtomicOrdering::Relaxed), self.misses.load(AtomicOrdering::Relaxed))
+    }
 }
 
 /// Memoized variant of [`estimate`] returning the design total. Safe to
@@ -90,8 +99,10 @@ impl EstimateCache {
 pub fn estimate_total_cached(cfg: &ExperimentConfig, cache: &EstimateCache) -> Resources {
     let key = EstimateKey::of(cfg);
     if let Some(r) = cache.map.lock().unwrap().get(&key) {
+        cache.hits.fetch_add(1, AtomicOrdering::Relaxed);
         return *r;
     }
+    cache.misses.fetch_add(1, AtomicOrdering::Relaxed);
     let total = estimate(cfg).total;
     cache.map.lock().unwrap().insert(key, total);
     total
@@ -256,6 +267,8 @@ mod tests {
         .unwrap();
         let _ = estimate_total_cached(&cfg2, &cache);
         assert_eq!(cache.len(), 2);
+        let (hits, misses) = cache.stats();
+        assert_eq!((hits, misses), (1, 2), "one repeat lookup, two fills");
     }
 
     #[test]

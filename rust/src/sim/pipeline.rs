@@ -27,6 +27,22 @@ use crate::util::rng::Rng;
 /// A configured accelerator instance: one `LayerSim` per network layer,
 /// plus the reusable scheduling engine (finish-time vector + ping-pong
 /// spike buffers shared across runs).
+///
+/// ```
+/// use snn_dse::config::{ExperimentConfig, HwConfig};
+/// use snn_dse::sim::{random_spike_train, CostModel, NetworkSim};
+/// use snn_dse::snn::table1_net;
+/// use snn_dse::util::rng::Rng;
+///
+/// let net = table1_net("net1");
+/// let cfg = ExperimentConfig::new(net.clone(), HwConfig::with_lhr(vec![4, 8, 8])).unwrap();
+/// let mut sim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+/// let input = random_spike_train(net.input_bits, net.t_steps, 0.1, &mut Rng::new(1));
+/// let result = sim.run(&input);
+/// // pipelining keeps total latency under the sum of per-layer times
+/// assert!(result.total_cycles > 0);
+/// assert!(result.total_cycles <= result.serial_cycles);
+/// ```
 pub struct NetworkSim {
     pub net: NetDef,
     pub layers: Vec<LayerSim>,

@@ -55,6 +55,11 @@ impl Json {
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
+    /// Whole-number accessor for counters (cycle counts etc.). Exact for
+    /// values < 2^53; larger state words must travel as strings.
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|f| f as u64)
+    }
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),

@@ -1,0 +1,184 @@
+//! Acceptance tests for the multi-objective exploration subsystem:
+//! Table-I coverage of the explored frontier, byte-identical results
+//! across thread counts, and checkpoint/resume equivalence with an
+//! uninterrupted run.
+
+use snn_dse::config::HwConfig;
+use snn_dse::dse::{
+    evaluate, pareto_front_on, table1_lhr_sets, DsePoint, EvalMode, ExploreConfig, Explorer,
+    Objective, ParetoFrontier,
+};
+use snn_dse::sim::CostModel;
+use snn_dse::snn::table1_net;
+use std::path::PathBuf;
+
+const SEED: u64 = 42;
+
+fn cfg(rounds: usize, batch: usize, max_lhr: usize, threads: usize) -> ExploreConfig {
+    ExploreConfig {
+        seed: SEED,
+        rounds,
+        batch,
+        max_lhr,
+        threads,
+        ..Default::default()
+    }
+}
+
+/// Field-by-field bitwise equality (f64s compared via to_bits).
+fn points_identical(a: &[DsePoint], b: &[DsePoint]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(p, q)| {
+            p.net == q.net
+                && p.label == q.label
+                && p.lhr == q.lhr
+                && p.cycles == q.cycles
+                && p.serial_cycles == q.serial_cycles
+                && p.resources.lut.to_bits() == q.resources.lut.to_bits()
+                && p.resources.reg.to_bits() == q.resources.reg.to_bits()
+                && p.resources.bram_36k.to_bits() == q.resources.bram_36k.to_bits()
+                && p.resources.dsp.to_bits() == q.resources.dsp.to_bits()
+                && p.energy_mj.to_bits() == q.energy_mj.to_bits()
+                && p.latency_us.to_bits() == q.latency_us.to_bits()
+                && p.layer_activity.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                    == q.layer_activity.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        })
+}
+
+fn tmp_ckpt(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("snn_dse_explore_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn explore_frontier_covers_table1_rows_net1() {
+    // acceptance: the net-1 frontier contains (or dominates) every
+    // Table-I TW row for net-1. With max_lhr 8 the lattice (4^3 = 64
+    // points) includes all TW rows and the budget exhausts it.
+    let net = table1_net("net1");
+    let costs = CostModel::default();
+    let mut ex = Explorer::new(&net, cfg(16, 8, 8, 4)).unwrap();
+    ex.run(&net, &costs).unwrap();
+    assert!(ex.exhausted(), "64-point lattice should be fully explored");
+    assert_eq!(ex.evaluated().len(), 64);
+    for lhr in table1_lhr_sets("net1") {
+        let row = evaluate(
+            &net,
+            &HwConfig::with_lhr(lhr.clone()),
+            &EvalMode::Activity { seed: SEED },
+            &costs,
+        );
+        assert!(
+            ex.frontier().contains_or_dominates(&row),
+            "frontier misses Table-I row {lhr:?}"
+        );
+    }
+}
+
+#[test]
+fn explore_identical_across_thread_counts() {
+    // acceptance: byte-identical across thread counts for a fixed seed
+    let net = table1_net("net1");
+    let costs = CostModel::default();
+    let mut serial = Explorer::new(&net, cfg(4, 8, 8, 1)).unwrap();
+    serial.run(&net, &costs).unwrap();
+    for threads in [2, 4, 16] {
+        let mut par = Explorer::new(&net, cfg(4, 8, 8, threads)).unwrap();
+        par.run(&net, &costs).unwrap();
+        assert!(
+            points_identical(serial.evaluated(), par.evaluated()),
+            "evaluation history differs at {threads} threads"
+        );
+        assert!(
+            points_identical(serial.frontier().points(), par.frontier().points()),
+            "frontier differs at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn killed_and_resumed_run_matches_uninterrupted() {
+    // acceptance: kill after 3 of 6 rounds, resume from the checkpoint,
+    // and end with exactly the frontier of an uninterrupted 6-round run
+    let net = table1_net("net1");
+    let costs = CostModel::default();
+
+    let mut uninterrupted = Explorer::new(&net, cfg(6, 6, 16, 4)).unwrap();
+    uninterrupted.run(&net, &costs).unwrap();
+
+    let path = tmp_ckpt("kill_resume.json");
+    std::fs::remove_file(&path).ok();
+    let mut first = cfg(3, 6, 16, 4); // "killed" after round 3
+    first.checkpoint = Some(path.clone());
+    let mut killed = Explorer::resume_or_new(&net, first).unwrap();
+    killed.run(&net, &costs).unwrap();
+    assert_eq!(killed.rounds_done(), 3);
+
+    let mut rest = cfg(6, 6, 16, 4); // extend the budget to the full 6
+    rest.checkpoint = Some(path.clone());
+    let mut resumed = Explorer::resume_or_new(&net, rest).unwrap();
+    assert_eq!(resumed.rounds_done(), 3, "must pick up from the checkpoint");
+    resumed.run(&net, &costs).unwrap();
+
+    assert_eq!(resumed.rounds_done(), uninterrupted.rounds_done());
+    assert!(
+        points_identical(uninterrupted.evaluated(), resumed.evaluated()),
+        "resumed evaluation history diverged"
+    );
+    assert!(
+        points_identical(
+            uninterrupted.frontier().points(),
+            resumed.frontier().points()
+        ),
+        "resumed frontier diverged"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn checkpoint_roundtrip_restores_identical_frontier() {
+    // save -> resume with the same budget -> identical frontier, no
+    // re-evaluation
+    let net = table1_net("net2");
+    let costs = CostModel::default();
+    let path = tmp_ckpt("roundtrip.json");
+    std::fs::remove_file(&path).ok();
+    let mut c = cfg(3, 5, 8, 2);
+    c.checkpoint = Some(path.clone());
+    let mut ex = Explorer::resume_or_new(&net, c.clone()).unwrap();
+    ex.run(&net, &costs).unwrap();
+
+    let restored = Explorer::resume_or_new(&net, c).unwrap();
+    assert_eq!(restored.rounds_done(), ex.rounds_done());
+    assert!(points_identical(ex.evaluated(), restored.evaluated()));
+    assert!(points_identical(
+        ex.frontier().points(),
+        restored.frontier().points()
+    ));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn incremental_frontier_matches_batch_on_real_points() {
+    // satellite: frontier-incremental-insert equivalence vs batch rebuild,
+    // on genuinely evaluated (not synthetic) points
+    let net = table1_net("net1");
+    let costs = CostModel::default();
+    let mut ex = Explorer::new(&net, cfg(4, 8, 16, 4)).unwrap();
+    ex.run(&net, &costs).unwrap();
+    let all = ex.evaluated();
+    for objectives in [
+        &Objective::DEFAULT[..],
+        &[Objective::Cycles, Objective::Lut][..],
+        &Objective::ALL[..],
+    ] {
+        let inc = ParetoFrontier::from_points(objectives, all.to_vec());
+        let batch = pareto_front_on(all, objectives);
+        let mut inc_labels: Vec<&str> = inc.points().iter().map(|p| p.label.as_str()).collect();
+        let mut batch_labels: Vec<&str> = batch.iter().map(|&i| all[i].label.as_str()).collect();
+        inc_labels.sort();
+        batch_labels.sort();
+        assert_eq!(inc_labels, batch_labels, "objectives {objectives:?}");
+    }
+}
