@@ -1,0 +1,80 @@
+//! Serve-runtime throughput microbench: wall-clock and simulated-time
+//! throughput of the sharded dynamic-batching runtime across shard
+//! counts, on one Table-I configuration under a fixed synthetic load.
+//!
+//! Reports, per shard count: host wall time, simulated throughput
+//! (req/s of simulated time — a property of the load + policy, flat in
+//! shard count once the queue drains faster than it fills), host
+//! throughput (req/s of wall time — the number that should scale with
+//! shards until the host runs out of cores), and p50/p99 latency.
+//!
+//! Run: `cargo bench --bench serve_throughput`
+
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::runtime::serve::{LoadSpec, ServeOptions};
+use snn_dse::runtime::{synthetic_load, BatchPolicy, ServeRuntime};
+use snn_dse::sim::CostModel;
+use snn_dse::snn::table1_net;
+use std::time::Instant;
+
+fn main() {
+    let net = table1_net("net1");
+    let hw = HwConfig::with_lhr(vec![4, 8, 8]);
+    let spec = LoadSpec {
+        n_requests: 192,
+        rate_rps: 4_000.0,
+        input_rate: 0.1,
+        seed: 42,
+    };
+    let clock_hz = hw.clock_hz;
+    let requests = synthetic_load(&net, clock_hz, &spec);
+    println!(
+        "serve_throughput: {} LHR {} — {} requests @ {:.0} rps, max-batch 8",
+        net.name,
+        hw.label(),
+        spec.n_requests,
+        spec.rate_rps
+    );
+    println!(
+        "  {:>6} {:>10} {:>12} {:>12} {:>10} {:>10}",
+        "shards", "wall ms", "host req/s", "sim req/s", "p50 us", "p99 us"
+    );
+    let mut baseline_preds: Option<Vec<Option<usize>>> = None;
+    for shards in [1usize, 2, 4, 8] {
+        let cfg = ExperimentConfig::new(net.clone(), hw.clone()).expect("valid config");
+        let rt = ServeRuntime::new(
+            cfg,
+            CostModel::default(),
+            ServeOptions {
+                shards,
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait_cycles: 100_000,
+                },
+                weight_seed: 7,
+            },
+        )
+        .expect("valid serve options");
+        let t0 = Instant::now();
+        let report = rt.run(requests.clone());
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(report.records.len(), spec.n_requests, "no request dropped");
+        let preds: Vec<Option<usize>> = report.records.iter().map(|r| r.prediction).collect();
+        match &baseline_preds {
+            None => baseline_preds = Some(preds),
+            Some(base) => assert_eq!(
+                base, &preds,
+                "predictions must be byte-identical across shard counts"
+            ),
+        }
+        println!(
+            "  {:>6} {:>10.1} {:>12.0} {:>12.0} {:>10.1} {:>10.1}",
+            shards,
+            wall * 1e3,
+            spec.n_requests as f64 / wall,
+            report.throughput_rps,
+            report.latency.p50_us,
+            report.latency.p99_us
+        );
+    }
+}

@@ -176,11 +176,7 @@ impl Explorer {
     /// else would silently change what the remaining rounds explore.
     pub fn resume(net: &NetDef, cfg: ExploreConfig, path: &Path) -> Result<Self> {
         let j = Json::parse_file(path)?;
-        let version = j.at("version").as_u64().context("checkpoint: missing version")?;
-        if version != CHECKPOINT_VERSION {
-            bail!("checkpoint {}: version {version} != {CHECKPOINT_VERSION}", path.display());
-        }
-        let ck_net = j.at("net").as_str().context("checkpoint: missing net")?;
+        let ck_net = checkpoint_header(&j, path)?;
         if ck_net != net.name {
             bail!("checkpoint is for net '{ck_net}', not '{}'", net.name);
         }
@@ -454,6 +450,41 @@ pub fn explore(net: &NetDef, cfg: ExploreConfig, costs: &CostModel) -> Result<Ex
     Ok(ex)
 }
 
+/// Load every evaluated point from an exploration checkpoint *without*
+/// resuming the exploration — the serve runtime's front door reads a
+/// finished (or in-flight) checkpoint this way and rebuilds a
+/// [`ParetoFrontier`] over whatever objectives it wants before picking a
+/// serving config against a latency SLO. Returns the checkpoint's net
+/// name plus the points in evaluation order. Only the format version is
+/// validated; seed/objective mismatches don't matter for read-only use.
+pub fn load_checkpoint_points(path: &Path) -> Result<(String, Vec<DsePoint>)> {
+    let j = Json::parse_file(path)?;
+    let net = checkpoint_header(&j, path)?;
+    let mut points = Vec::new();
+    for pj in j.at("points").as_arr().context("checkpoint: missing points")? {
+        points.push(point_from_json(pj)?);
+    }
+    Ok((net, points))
+}
+
+/// Validate a checkpoint's format version and return its net name — the
+/// header handshake shared by [`Explorer::resume`] and
+/// [`load_checkpoint_points`], so a future version bump cannot leave the
+/// two readers disagreeing.
+fn checkpoint_header(j: &Json, path: &Path) -> Result<String> {
+    let version = j.at("version").as_u64().context("checkpoint: missing version")?;
+    if version != CHECKPOINT_VERSION {
+        bail!(
+            "checkpoint {}: version {version} != {CHECKPOINT_VERSION}",
+            path.display()
+        );
+    }
+    Ok(j.at("net")
+        .as_str()
+        .context("checkpoint: missing net")?
+        .to_string())
+}
+
 fn random_lattice_point(rng: &mut Rng, dims: &[Vec<usize>]) -> Vec<usize> {
     dims.iter().map(|d| d[rng.below(d.len())]).collect()
 }
@@ -604,6 +635,25 @@ mod tests {
         let pa: Vec<u64> = p.layer_activity.iter().map(|x| x.to_bits()).collect();
         let qa: Vec<u64> = q.layer_activity.iter().map(|x| x.to_bits()).collect();
         assert_eq!(pa, qa);
+    }
+
+    #[test]
+    fn load_checkpoint_points_reads_without_resuming() {
+        let net = table1_net("net1");
+        let dir = std::env::temp_dir().join("snn_dse_explore_load_points");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        let mut ex = Explorer::new(&net, tiny_cfg()).unwrap();
+        ex.run(&net, &CostModel::default()).unwrap();
+        ex.save_checkpoint(&path).unwrap();
+        let (ck_net, points) = load_checkpoint_points(&path).unwrap();
+        assert_eq!(ck_net, "net1");
+        assert_eq!(points.len(), ex.evaluated().len());
+        assert_eq!(points[0].lhr, vec![1, 1, 1]);
+        // a frontier rebuilt from the loaded points matches the explorer's
+        let rebuilt = ParetoFrontier::from_points(&ex.config().objectives, points);
+        assert_eq!(rebuilt.len(), ex.frontier().len());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod runner;
 pub mod space;
 
 pub use auto::{auto_search, Constraints, SearchResult};
-pub use explore::{explore, ExploreConfig, Explorer, RoundSummary};
+pub use explore::{explore, load_checkpoint_points, ExploreConfig, Explorer, RoundSummary};
 pub use pareto::{
     dominates, dominates_on, knee_point, pareto_front, pareto_front_on, Objective, ParetoFrontier,
 };

@@ -236,6 +236,39 @@ impl ParetoFrontier {
                 || self.objectives.iter().all(|o| o.value(q) == o.value(p))
         })
     }
+
+    /// The frontier's fastest point (fewest cycles; ties broken by label
+    /// so the choice is deterministic regardless of insertion order).
+    pub fn fastest(&self) -> Option<&DsePoint> {
+        self.points
+            .iter()
+            .min_by(|a, b| a.cycles.cmp(&b.cycles).then_with(|| a.label.cmp(&b.label)))
+    }
+
+    /// The serve runtime's config-selection front door: among frontier
+    /// points whose single-inference latency meets `slo_latency_us`, pick
+    /// the cheapest (minimum energy, ties broken by fewer LUTs then by
+    /// label — deterministic regardless of insertion order). Returns
+    /// `None` when no frontier point meets the SLO; callers typically
+    /// fall back to [`ParetoFrontier::fastest`] and report the SLO as
+    /// infeasible.
+    pub fn select_for_slo(&self, slo_latency_us: f64) -> Option<&DsePoint> {
+        self.points
+            .iter()
+            .filter(|p| p.latency_us <= slo_latency_us)
+            .min_by(|a, b| {
+                a.energy_mj
+                    .partial_cmp(&b.energy_mj)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| {
+                        a.resources
+                            .lut
+                            .partial_cmp(&b.resources.lut)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    })
+                    .then_with(|| a.label.cmp(&b.label))
+            })
+    }
 }
 
 #[cfg(test)]
@@ -404,6 +437,37 @@ mod tests {
         // incomparable: both kept
         assert!(f.insert(pt(50, 80.0, 2.0)));
         assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn slo_selection_picks_cheapest_point_meeting_the_slo() {
+        // pt() sets latency_us = cycles, energy = third arg
+        let f = ParetoFrontier::from_points(
+            &Objective::DEFAULT,
+            vec![
+                pt(50, 100.0, 5.0),  // fastest, expensive
+                pt(200, 40.0, 2.0),  // meets slo=250, mid energy
+                pt(400, 10.0, 0.5),  // cheapest, too slow for slo=250
+            ],
+        );
+        assert_eq!(f.select_for_slo(250.0).unwrap().cycles, 200);
+        // loose SLO admits the cheapest point
+        assert_eq!(f.select_for_slo(1e9).unwrap().cycles, 400);
+        // impossible SLO: no selection, fastest() is the fallback
+        assert!(f.select_for_slo(10.0).is_none());
+        assert_eq!(f.fastest().unwrap().cycles, 50);
+    }
+
+    #[test]
+    fn slo_selection_tie_breaks_deterministically() {
+        // equal energy: fewer LUTs wins; equal both: label order
+        let f = ParetoFrontier::from_points(
+            &[Objective::Cycles, Objective::Lut],
+            vec![pt(100, 20.0, 1.0), pt(90, 30.0, 1.0)],
+        );
+        let chosen = f.select_for_slo(500.0).unwrap();
+        assert_eq!(chosen.resources.lut, 20.0);
+        assert!(ParetoFrontier::new(&Objective::DEFAULT).fastest().is_none());
     }
 
     #[test]

@@ -315,6 +315,35 @@ mod tests {
     }
 
     #[test]
+    fn sweep_cached_stats_account_for_every_evaluation() {
+        // audit (multi-threaded): across repeated sweep batches sharing
+        // one EstimateCache, hits + misses must equal the number of
+        // evaluations — counters can't drop or double-count under the
+        // work-stealing dispatch.
+        let net = table1_net("net1");
+        let configs: Vec<HwConfig> = table1_lhr_sets("net1")
+            .into_iter()
+            .map(HwConfig::with_lhr)
+            .collect();
+        let costs = CostModel::default();
+        let cache = EstimateCache::new();
+        let batches = 3usize;
+        for _ in 0..batches {
+            let pts = sweep_cached(&net, &configs, 42, &costs, 8, &cache);
+            assert_eq!(pts.len(), configs.len());
+        }
+        let (hits, misses) = cache.stats();
+        assert_eq!(
+            hits + misses,
+            (batches * configs.len()) as u64,
+            "hits + misses must equal evaluations"
+        );
+        // all batches after the first hit the memo for every config
+        assert!(cache.len() <= configs.len());
+        assert!(hits >= ((batches - 1) * configs.len()) as u64);
+    }
+
+    #[test]
     fn lhr_monotone_in_latency_same_workload() {
         let net = table1_net("net1");
         let costs = CostModel::default();

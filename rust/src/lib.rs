@@ -25,8 +25,9 @@
 //! Cross-cutting: [`data`] (calibrated activity models), [`baselines`]
 //! (prior-work anchors and the sparsity-oblivious latency bound),
 //! [`validate`] + [`runtime`] (spike-to-spike validation against JAX
-//! traces and the optional PJRT execution path), and [`util`] (offline
-//! substitutes for `serde_json`/`rand`/`clap`).
+//! traces, the optional PJRT execution path, and the sharded
+//! dynamic-batching serve runtime in [`runtime::serve`]), and [`util`]
+//! (offline substitutes for `serde_json`/`rand`/`clap`).
 //!
 //! ## Quick start
 //!

@@ -5,6 +5,7 @@
 //!   resources    FPGA resource + power estimate of one configuration
 //!   dse          LHR sweep with Pareto frontier (Fig. 6 data)
 //!   explore      multi-objective Pareto exploration with checkpoint/resume
+//!   serve        sharded dynamic-batching serve runtime under synthetic load
 //!   table1       reproduce the paper's Table I rows
 //!   sweep-t-pcr  spike-train length x population sweep (Fig. 7b)
 //!   validate     spike-to-spike validation vs JAX traces / PJRT HLO
@@ -22,7 +23,7 @@ use snn_dse::util::{commas, kfmt};
 use snn_dse::{runtime, validate};
 use std::path::PathBuf;
 
-const USAGE: &str = "snn-dse <simulate|resources|dse|explore|table1|sweep-t-pcr|validate|infer|firing|generate|auto|dynamic> [options]
+const USAGE: &str = "snn-dse <simulate|resources|dse|explore|serve|table1|sweep-t-pcr|validate|infer|firing|generate|auto|dynamic> [options]
   common options:
     --net <net1..net5>          network (default net1)
     --lhr <a,b,c,...>           per-layer logical-to-hardware ratios
@@ -45,6 +46,21 @@ const USAGE: &str = "snn-dse <simulate|resources|dse|explore|table1|sweep-t-pcr|
     --checkpoint-every <n>      rounds between checkpoint writes (default 5;
                                 0 = only on completion)
     --csv <path>                dump the frontier as CSV
+  serve options:
+    --shards <n>                engine replicas / worker threads (default 4)
+    --max-batch <n>             dynamic-batching cap per dispatch (default 8)
+    --max-wait-us <f>           batch-head wait window in simulated us (default 500)
+    --requests <n>              synthetic requests to serve (default 256)
+    --rps <f>                   mean arrival rate, simulated req/s (default 2000)
+    --input-rate <f>            input spike probability per bit (default 0.1)
+    --slo-us <f>                latency SLO; reports attainment, and with
+                                --checkpoint drives config selection
+    --checkpoint <path>         pick the serving config from an explore
+                                checkpoint's Pareto frontier (needs --slo-us;
+                                --lhr overrides)
+    --weight-seed <n>           replica weight seed (default 7)
+    --smoke                     tiny deterministic load for CI (32 requests,
+                                2 shards)
   sweep-t-pcr options:
     --t-values <4,6,...>        spike-train lengths (default 4,6,8,10,15,20,25)
     --pops <1,10,30>            population sizes";
@@ -57,6 +73,7 @@ fn main() {
         "resources" => cmd_resources(&args),
         "dse" => cmd_dse(&args),
         "explore" => cmd_explore(&args),
+        "serve" => cmd_serve(&args),
         "table1" => cmd_table1(&args),
         "sweep-t-pcr" => cmd_sweep_t_pcr(&args),
         "validate" => cmd_validate(&args),
@@ -234,6 +251,137 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
             dse::report::fig6_csv(&[(net.name.clone(), frontier_points)]),
         )?;
         println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use snn_dse::runtime::serve::{LoadSpec, ServeOptions};
+    use snn_dse::runtime::{choose_config_for_slo, synthetic_load, BatchPolicy, ServeRuntime};
+
+    let net = net_of(args);
+    let smoke = args.flag("smoke");
+    let slo_us = args.get("slo-us").map(|v| {
+        v.parse::<f64>()
+            .unwrap_or_else(|_| panic!("--slo-us expects a number, got '{v}'"))
+    });
+
+    // Config-selection front door: an explicit --lhr wins; otherwise an
+    // explore checkpoint + SLO picks the cheapest frontier point that is
+    // fast enough (falling back to the fastest point).
+    let hw = if args.get("lhr").is_none() && args.get("checkpoint").is_some() {
+        let ck = PathBuf::from(args.get("checkpoint").unwrap());
+        let (ck_net, points) = dse::load_checkpoint_points(&ck)?;
+        anyhow::ensure!(
+            ck_net == net.name,
+            "checkpoint is for net '{ck_net}', not '{}'",
+            net.name
+        );
+        let objectives = match args.get("objectives") {
+            Some(s) => dse::Objective::parse_list(s).map_err(|e| anyhow::anyhow!(e))?,
+            None => dse::Objective::DEFAULT.to_vec(),
+        };
+        let frontier = dse::ParetoFrontier::from_points(&objectives, points);
+        let slo = slo_us.ok_or_else(|| {
+            anyhow::anyhow!("--checkpoint config selection needs --slo-us (the latency target that picks the frontier point)")
+        })?;
+        let choice = choose_config_for_slo(&frontier, slo)?;
+        if choice.slo_met {
+            eprintln!(
+                "front door: {} meets SLO {:.1} us ({:.1} us/inference, {:.3} mJ) from {} frontier points",
+                choice.label, slo, choice.latency_us, choice.energy_mj, frontier.len()
+            );
+        } else {
+            eprintln!(
+                "front door: SLO {:.1} us infeasible on the frontier — serving the fastest point {} ({:.1} us/inference)",
+                slo, choice.label, choice.latency_us
+            );
+        }
+        HwConfig::with_lhr(choice.lhr)
+    } else {
+        hw_of(args, &net)
+    };
+
+    let shards = args.usize_or("shards", if smoke { 2 } else { 4 });
+    let cfg = ExperimentConfig::new(net.clone(), hw.clone())?;
+    let clock_hz = cfg.hw.clock_hz;
+    let max_wait_us = args.f64_or("max-wait-us", 500.0);
+    let opts = ServeOptions {
+        shards,
+        policy: BatchPolicy {
+            max_batch: args.usize_or("max-batch", 8),
+            max_wait_cycles: (max_wait_us * clock_hz / 1e6).round() as u64,
+        },
+        weight_seed: args.usize_or("weight-seed", 7) as u64,
+    };
+    let spec = LoadSpec {
+        n_requests: args.usize_or("requests", if smoke { 32 } else { 256 }),
+        rate_rps: args.f64_or("rps", 2_000.0),
+        input_rate: args.f64_or("input-rate", 0.1),
+        seed: args.usize_or("seed", 42) as u64,
+    };
+    eprintln!(
+        "serving {} LHR {} — {} shards, max-batch {}, max-wait {:.0} us, {} requests @ {:.0} rps (seed {})",
+        net.name,
+        hw.label(),
+        opts.shards,
+        opts.policy.max_batch,
+        max_wait_us,
+        spec.n_requests,
+        spec.rate_rps,
+        spec.seed
+    );
+    let requests = synthetic_load(&net, clock_hz, &spec);
+    let rt = ServeRuntime::new(cfg, CostModel::default(), opts)?;
+    let report = rt.run(requests);
+    anyhow::ensure!(
+        report.records.len() == spec.n_requests,
+        "serve dropped requests: {} of {} completed",
+        report.records.len(),
+        spec.n_requests
+    );
+
+    println!("per-shard:");
+    println!(
+        "  {:>5} {:>9} {:>8} {:>10} {:>7} {:>10} {:>10} {:>10}",
+        "shard", "requests", "batches", "mean batch", "util", "p50 us", "p99 us", "max us"
+    );
+    for s in &report.per_shard {
+        println!(
+            "  {:>5} {:>9} {:>8} {:>10.2} {:>6.1}% {:>10.1} {:>10.1} {:>10.1}",
+            s.shard,
+            s.requests,
+            s.batches,
+            s.mean_batch,
+            s.utilization * 100.0,
+            s.latency.p50_us,
+            s.latency.p99_us,
+            s.latency.max_us
+        );
+    }
+    println!(
+        "aggregate : p50 {:.1} us  p95 {:.1} us  p99 {:.1} us  max {:.1} us  mean {:.1} us",
+        report.latency.p50_us,
+        report.latency.p95_us,
+        report.latency.p99_us,
+        report.latency.max_us,
+        report.latency.mean_us
+    );
+    println!(
+        "throughput: {:.0} req/s over {} simulated cycles ({:.3} s wall)",
+        report.throughput_rps,
+        commas(report.span_cycles),
+        report.wall_seconds
+    );
+    if let Some(slo) = slo_us {
+        println!(
+            "SLO {:.1} us: {:.1}% of requests within",
+            slo,
+            report.slo_attainment(slo) * 100.0
+        );
+    }
+    if smoke {
+        println!("SMOKE OK ({} requests served)", report.records.len());
     }
     Ok(())
 }

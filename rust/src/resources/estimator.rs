@@ -89,13 +89,26 @@ impl EstimateCache {
 
     /// `(hits, misses)` counters since construction — long explorations
     /// report these to show how much estimate work the memo collapsed.
+    ///
+    /// Concurrency invariant (pinned by
+    /// `cache_stats_consistent_under_concurrency`): every
+    /// [`estimate_total_cached`] call increments exactly one of the two
+    /// atomic counters, so `hits + misses` always equals the number of
+    /// lookups performed, no matter how many sweep workers share the
+    /// cache. Two workers racing on the same fresh key may *both* miss
+    /// and both run the `estimate` walk (the map lock is released during
+    /// the walk, deliberately — holding it would serialize every worker
+    /// on the first sweep batch); each such duplicate walk really
+    /// happened and really counts as a miss, which is why `misses` can
+    /// exceed [`EstimateCache::len`] but the sum can never drift.
     pub fn stats(&self) -> (u64, u64) {
         (self.hits.load(AtomicOrdering::Relaxed), self.misses.load(AtomicOrdering::Relaxed))
     }
 }
 
 /// Memoized variant of [`estimate`] returning the design total. Safe to
-/// share across sweep worker threads.
+/// share across sweep worker threads; see [`EstimateCache::stats`] for
+/// the counter semantics under concurrency.
 pub fn estimate_total_cached(cfg: &ExperimentConfig, cache: &EstimateCache) -> Resources {
     let key = EstimateKey::of(cfg);
     if let Some(r) = cache.map.lock().unwrap().get(&key) {
@@ -269,6 +282,50 @@ mod tests {
         assert_eq!(cache.len(), 2);
         let (hits, misses) = cache.stats();
         assert_eq!((hits, misses), (1, 2), "one repeat lookup, two fills");
+    }
+
+    #[test]
+    fn cache_stats_consistent_under_concurrency() {
+        // audit: counters must neither drop nor double-count lookups when
+        // many sweep workers hammer one shared cache — the invariant is
+        // hits + misses == total evaluations performed.
+        let cache = EstimateCache::new();
+        let cfgs: Vec<ExperimentConfig> = [
+            vec![1usize, 1, 1],
+            vec![2, 2, 2],
+            vec![4, 8, 8],
+            vec![8, 8, 8],
+        ]
+        .into_iter()
+        .map(|lhr| ExperimentConfig::new(table1_net("net1"), HwConfig::with_lhr(lhr)).unwrap())
+        .collect();
+        let n_threads = 8usize;
+        let iters = 25usize;
+        std::thread::scope(|s| {
+            for t in 0..n_threads {
+                let cache = &cache;
+                let cfgs = &cfgs;
+                s.spawn(move || {
+                    for i in 0..iters {
+                        // stagger the key order per thread to force races
+                        let cfg = &cfgs[(i + t) % cfgs.len()];
+                        let r = estimate_total_cached(cfg, cache);
+                        assert_eq!(r, estimate(cfg).total, "cached value must be exact");
+                    }
+                });
+            }
+        });
+        let (hits, misses) = cache.stats();
+        assert_eq!(
+            hits + misses,
+            (n_threads * iters) as u64,
+            "every evaluation increments exactly one counter"
+        );
+        assert_eq!(cache.len(), cfgs.len());
+        // every distinct key misses at least once; racing duplicate fills
+        // may add more misses, but never lose a count
+        assert!(misses >= cfgs.len() as u64);
+        assert!(hits <= (n_threads * iters - cfgs.len()) as u64);
     }
 
     #[test]

@@ -1,10 +1,16 @@
-//! Runtime layer: PJRT execution of the AOT-compiled L2 model
-//! (`client`) and the loader for the Python build-path artifacts
-//! (`artifacts`). Python never runs on this path — `make artifacts` is the
-//! only place the compile path executes.
+//! Runtime layer: the sharded dynamic-batching serve runtime (`serve`),
+//! PJRT execution of the AOT-compiled L2 model (`client`) and the loader
+//! for the Python build-path artifacts (`artifacts`). Python never runs
+//! on this path — `make artifacts` is the only place the compile path
+//! executes.
 
 pub mod artifacts;
 pub mod client;
+pub mod serve;
 
 pub use artifacts::{artifacts_root, NetArtifacts, TraceSample};
 pub use client::{Runtime, SnnExecutable};
+pub use serve::{
+    choose_config_for_slo, synthetic_load, BatchPolicy, LatencySummary, LoadSpec, Request,
+    ServeOptions, ServeReport, ServeRuntime, ShardStats, SloChoice,
+};

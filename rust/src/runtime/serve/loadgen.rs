@@ -1,0 +1,144 @@
+//! Deterministic synthetic load generation for the serve runtime.
+//!
+//! Requests arrive by a seeded Poisson process (exponential inter-arrival
+//! gaps measured in simulated clock cycles) and carry rate-coded random
+//! input spike trains. Two independent RNG streams keep the workload
+//! stable under reconfiguration:
+//!
+//! * the **arrival stream** is drawn once, in request-id order, from a
+//!   single generator — so the traffic shape depends only on the seed;
+//! * each request's **input train** comes from its own generator derived
+//!   from `(seed, id)` — so request `i` carries byte-identical spikes no
+//!   matter how many shards serve it or in which batch it lands. This is
+//!   what lets the golden tests compare serve outputs against isolated
+//!   per-sample runs across shard counts.
+
+use crate::sim::random_spike_train;
+use crate::snn::{NetDef, SpikeTrain};
+use crate::util::rng::Rng;
+
+/// One inference request admitted to the serve runtime.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Dense id in arrival order (also the shard-partitioning key).
+    pub id: usize,
+    /// Arrival time in simulated clock cycles.
+    pub arrival_cycles: u64,
+    /// Rate-coded input spike train (`net.t_steps` steps).
+    pub input: SpikeTrain,
+}
+
+/// Synthetic-load knobs.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Total requests to generate.
+    pub n_requests: usize,
+    /// Mean arrival rate in requests per *simulated* second.
+    pub rate_rps: f64,
+    /// Bernoulli spike probability per input bit per step.
+    pub input_rate: f64,
+    /// Seed for both the arrival process and the per-request inputs.
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            n_requests: 128,
+            rate_rps: 2_000.0,
+            input_rate: 0.1,
+            seed: 42,
+        }
+    }
+}
+
+/// Per-request input generator: a pure function of `(seed, id)` via the
+/// shared [`Rng::fork`] stream splitter — never of the arrival stream.
+pub fn request_input_rng(seed: u64, id: usize) -> Rng {
+    Rng::new(seed).fork(id as u64 + 1)
+}
+
+/// Generate the full request list in arrival order. Arrival times are a
+/// seeded Poisson process at `spec.rate_rps` (converted to cycle gaps at
+/// `clock_hz`); inputs are rate-coded Bernoulli trains over
+/// `net.input_bits` x `net.t_steps`. Deterministic in `(net, clock_hz,
+/// spec)` and independent of any serve-side configuration.
+pub fn synthetic_load(net: &NetDef, clock_hz: f64, spec: &LoadSpec) -> Vec<Request> {
+    assert!(spec.rate_rps > 0.0, "arrival rate must be positive");
+    let mean_gap_cycles = clock_hz / spec.rate_rps;
+    let mut arrivals = Rng::new(spec.seed ^ 0x5E2F_E000_0000_0001);
+    let mut t = 0u64;
+    (0..spec.n_requests)
+        .map(|id| {
+            // exponential inter-arrival gap: -ln(1-u) * mean
+            let u = arrivals.f64();
+            let gap = (-(1.0 - u).ln() * mean_gap_cycles).round();
+            t = t.saturating_add(gap.max(0.0) as u64);
+            let mut input_rng = request_input_rng(spec.seed, id);
+            Request {
+                id,
+                arrival_cycles: t,
+                input: random_spike_train(net.input_bits, net.t_steps, spec.input_rate, &mut input_rng),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::table1_net;
+
+    #[test]
+    fn load_is_deterministic_and_ordered() {
+        let net = table1_net("net1");
+        let spec = LoadSpec {
+            n_requests: 16,
+            ..Default::default()
+        };
+        let a = synthetic_load(&net, 100e6, &spec);
+        let b = synthetic_load(&net, 100e6, &spec);
+        assert_eq!(a.len(), 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_cycles, y.arrival_cycles);
+            assert_eq!(x.input, y.input);
+        }
+        // arrival order is non-decreasing
+        for w in a.windows(2) {
+            assert!(w[0].arrival_cycles <= w[1].arrival_cycles);
+        }
+        // inputs have the right shape
+        assert_eq!(a[0].input.len(), net.t_steps);
+        assert_eq!(a[0].input[0].len(), net.input_bits);
+    }
+
+    #[test]
+    fn request_inputs_do_not_depend_on_the_arrival_stream() {
+        // request 3's spikes must be a pure function of (seed, 3)
+        let net = table1_net("net1");
+        let short = synthetic_load(&net, 100e6, &LoadSpec { n_requests: 4, ..Default::default() });
+        let long = synthetic_load(&net, 100e6, &LoadSpec { n_requests: 12, ..Default::default() });
+        assert_eq!(short[3].input, long[3].input);
+    }
+
+    #[test]
+    fn seeds_change_the_load() {
+        let net = table1_net("net1");
+        let a = synthetic_load(&net, 100e6, &LoadSpec { n_requests: 8, seed: 1, ..Default::default() });
+        let b = synthetic_load(&net, 100e6, &LoadSpec { n_requests: 8, seed: 2, ..Default::default() });
+        assert!(
+            a.iter().zip(&b).any(|(x, y)| x.arrival_cycles != y.arrival_cycles
+                || x.input != y.input),
+            "different seeds must produce different traffic"
+        );
+    }
+
+    #[test]
+    fn faster_rate_packs_arrivals_tighter() {
+        let net = table1_net("net1");
+        let slow = synthetic_load(&net, 100e6, &LoadSpec { n_requests: 64, rate_rps: 100.0, ..Default::default() });
+        let fast = synthetic_load(&net, 100e6, &LoadSpec { n_requests: 64, rate_rps: 10_000.0, ..Default::default() });
+        assert!(slow.last().unwrap().arrival_cycles > fast.last().unwrap().arrival_cycles);
+    }
+}

@@ -1,0 +1,491 @@
+//! Sharded, dynamically-batching serve runtime over the unified
+//! simulation engine — the load-testable service model on top of the
+//! simulator (`serve` CLI subcommand).
+//!
+//! ```text
+//!                      ┌────────────────────── ServeRuntime ─────────────────────┐
+//!   synthetic load     │  mutex-sharded admission queue      shard workers       │
+//!   (seeded Poisson)   │  ┌─────────────┐                 ┌─────────────────┐    │
+//!  ───────────────────▶│  │ shard 0 FIFO ├──── batches ──▶│ engine replica 0 │──┐ │
+//!   req id % shards    │  ├─────────────┤   (max-batch /  ├─────────────────┤  │ │
+//!  ───────────────────▶│  │ shard 1 FIFO ├──── max-wait) ─▶│ engine replica 1 │──┤─▶ records
+//!                      │  ├─────────────┤                 ├─────────────────┤  │ │   p50/p99,
+//!  ───────────────────▶│  │     ...     │                 │       ...       │──┘ │   throughput
+//!                      │  └─────────────┘                 └─────────────────┘    │
+//!                      └─────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Each shard owns a full [`NetworkSim`] replica of one hardware
+//! configuration and runs on its own OS thread; requests are partitioned
+//! `id % shards`, so every shard's dynamic-batching decisions (see
+//! [`queue`]) depend only on its own subsequence and the run is
+//! reproducible for a fixed seed regardless of thread scheduling.
+//! Batches execute through [`NetworkSim::run_batched_timed`], whose
+//! per-sample outputs are bit-identical to isolated single-sample runs —
+//! so serve predictions are byte-identical across shard counts and to a
+//! non-batched reference, while *latency* reflects real queueing + batch
+//! pipelining.
+//!
+//! The config-selection front door ([`ParetoFrontier::select_for_slo`])
+//! picks which hardware config the replicas instantiate from a PR-2
+//! exploration frontier given a latency SLO.
+
+pub mod loadgen;
+pub mod queue;
+pub mod stats;
+
+pub use loadgen::{synthetic_load, LoadSpec, Request};
+pub use queue::{Batch, BatchPolicy, ShardedQueue};
+pub use stats::{LatencySummary, ShardStats};
+
+use crate::config::ExperimentConfig;
+use crate::dse::ParetoFrontier;
+use crate::sim::{CostModel, NetworkSim};
+use anyhow::{bail, Result};
+
+/// Serve-side knobs (the load itself is a [`LoadSpec`]).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Engine replicas / worker threads.
+    pub shards: usize,
+    /// Dynamic-batching policy applied per shard.
+    pub policy: BatchPolicy,
+    /// Seed for the replicas' random weights (every shard uses the same
+    /// weights, so shard assignment cannot change predictions).
+    pub weight_seed: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            shards: 4,
+            policy: BatchPolicy::default(),
+            weight_seed: 7,
+        }
+    }
+}
+
+/// Fully-resolved life of one request, in simulated cycles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub shard: usize,
+    pub arrival_cycles: u64,
+    /// When the shard started executing the batch this request rode in.
+    pub dispatch_cycles: u64,
+    /// When the request's last time step left the final layer.
+    pub completion_cycles: u64,
+    /// Size of the coalesced batch it was served in.
+    pub batch_size: usize,
+    /// Decoded class, identical to an isolated run of the same input.
+    pub prediction: Option<usize>,
+}
+
+impl RequestRecord {
+    /// End-to-end latency: queueing + batching wait + pipelined execution.
+    pub fn latency_cycles(&self) -> u64 {
+        self.completion_cycles - self.arrival_cycles
+    }
+
+    /// Time spent waiting in the admission queue before dispatch.
+    pub fn queue_wait_cycles(&self) -> u64 {
+        self.dispatch_cycles - self.arrival_cycles
+    }
+}
+
+/// Everything a finished serve run reports.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// One record per request, sorted by request id.
+    pub records: Vec<RequestRecord>,
+    pub per_shard: Vec<ShardStats>,
+    /// Aggregate latency distribution across all shards.
+    pub latency: LatencySummary,
+    /// Simulated span: first arrival -> last completion, in cycles.
+    pub span_cycles: u64,
+    /// Requests per simulated second over the span.
+    pub throughput_rps: f64,
+    /// Clock the cycle numbers are denominated in.
+    pub clock_hz: f64,
+    /// Wall-clock seconds the host took to run the shards.
+    pub wall_seconds: f64,
+}
+
+impl ServeReport {
+    /// Fraction of requests with end-to-end latency within `slo_us`.
+    pub fn slo_attainment(&self, slo_us: f64) -> f64 {
+        if self.records.is_empty() {
+            return 1.0;
+        }
+        let us_per_cycle = 1e6 / self.clock_hz;
+        let met = self
+            .records
+            .iter()
+            .filter(|r| r.latency_cycles() as f64 * us_per_cycle <= slo_us)
+            .count();
+        met as f64 / self.records.len() as f64
+    }
+}
+
+/// Outcome of the SLO front door: the config to serve with, plus whether
+/// the SLO was actually satisfiable on the frontier.
+#[derive(Debug, Clone)]
+pub struct SloChoice {
+    pub lhr: Vec<usize>,
+    pub label: String,
+    pub latency_us: f64,
+    pub energy_mj: f64,
+    /// False when no frontier point met the SLO and the fastest point
+    /// was chosen as the fallback.
+    pub slo_met: bool,
+}
+
+/// Pick the serving configuration from an exploration frontier: the
+/// cheapest point meeting `slo_us` ([`ParetoFrontier::select_for_slo`]),
+/// falling back to the frontier's fastest point when the SLO is
+/// infeasible. Errors only when the frontier is empty.
+pub fn choose_config_for_slo(frontier: &ParetoFrontier, slo_us: f64) -> Result<SloChoice> {
+    if let Some(p) = frontier.select_for_slo(slo_us) {
+        return Ok(SloChoice {
+            lhr: p.lhr.clone(),
+            label: p.label.clone(),
+            latency_us: p.latency_us,
+            energy_mj: p.energy_mj,
+            slo_met: true,
+        });
+    }
+    match frontier.fastest() {
+        Some(p) => Ok(SloChoice {
+            lhr: p.lhr.clone(),
+            label: p.label.clone(),
+            latency_us: p.latency_us,
+            energy_mj: p.energy_mj,
+            slo_met: false,
+        }),
+        None => bail!("cannot pick a serving config from an empty frontier"),
+    }
+}
+
+/// The serve runtime: builds one engine replica per shard and drives the
+/// admission queue to completion over a request list.
+pub struct ServeRuntime {
+    cfg: ExperimentConfig,
+    costs: CostModel,
+    opts: ServeOptions,
+}
+
+impl ServeRuntime {
+    pub fn new(cfg: ExperimentConfig, costs: CostModel, opts: ServeOptions) -> Result<Self> {
+        if opts.shards == 0 {
+            bail!("serve: need at least one shard");
+        }
+        if opts.policy.max_batch == 0 {
+            bail!("serve: max_batch must be >= 1");
+        }
+        Ok(ServeRuntime { cfg, costs, opts })
+    }
+
+    pub fn options(&self) -> &ServeOptions {
+        &self.opts
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Serve `requests` (must be in arrival order, ids dense from 0) to
+    /// completion and report. Deterministic for a fixed request list and
+    /// options; predictions additionally do not depend on `shards` or
+    /// the batching policy at all.
+    pub fn run(&self, requests: Vec<Request>) -> ServeReport {
+        let n_requests = requests.len();
+        let n_shards = self.opts.shards;
+        let first_arrival = requests.first().map(|r| r.arrival_cycles).unwrap_or(0);
+        let queue = ShardedQueue::new(n_shards);
+        let policy = self.opts.policy;
+        let wall_start = std::time::Instant::now();
+
+        let mut shard_outputs: Vec<ShardOutput> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_shards)
+                .map(|shard| {
+                    let queue = &queue;
+                    let cfg = &self.cfg;
+                    let costs = &self.costs;
+                    let weight_seed = self.opts.weight_seed;
+                    scope.spawn(move || {
+                        serve_shard(shard, queue, cfg, costs, weight_seed, &policy)
+                    })
+                })
+                .collect();
+            // producer: admit the stream in arrival order, then end it
+            for req in requests {
+                let shard = req.id % n_shards;
+                queue.push(shard, req);
+            }
+            queue.close();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("serve shard worker panicked"))
+                .collect()
+        });
+        let wall_seconds = wall_start.elapsed().as_secs_f64();
+
+        let clock_hz = self.cfg.hw.clock_hz;
+        let us = |cycles: u64| cycles as f64 / clock_hz * 1e6;
+        let last_completion = shard_outputs
+            .iter()
+            .flat_map(|out| out.records.iter())
+            .map(|r| r.completion_cycles)
+            .max()
+            .unwrap_or(0);
+        let span_cycles = last_completion.saturating_sub(first_arrival);
+        let span_s = span_cycles as f64 / clock_hz;
+        // per-shard stats come straight off each shard's own record list,
+        // before the merge below drains it
+        let per_shard: Vec<ShardStats> = shard_outputs
+            .iter()
+            .enumerate()
+            .map(|(shard, out)| {
+                let lats: Vec<f64> = out
+                    .records
+                    .iter()
+                    .map(|r| us(r.latency_cycles()))
+                    .collect();
+                ShardStats {
+                    shard,
+                    requests: out.records.len(),
+                    batches: out.batches,
+                    mean_batch: if out.batches > 0 {
+                        out.records.len() as f64 / out.batches as f64
+                    } else {
+                        0.0
+                    },
+                    busy_cycles: out.busy_cycles,
+                    utilization: if span_cycles > 0 {
+                        out.busy_cycles as f64 / span_cycles as f64
+                    } else {
+                        0.0
+                    },
+                    latency: LatencySummary::from_us(lats),
+                }
+            })
+            .collect();
+
+        // merge + sort by id for a stable, shard-count-independent order
+        let mut records: Vec<RequestRecord> = Vec::with_capacity(n_requests);
+        for out in &mut shard_outputs {
+            records.append(&mut out.records);
+        }
+        records.sort_by_key(|r| r.id);
+        let latency =
+            LatencySummary::from_us(records.iter().map(|r| us(r.latency_cycles())).collect());
+        ServeReport {
+            latency,
+            per_shard,
+            throughput_rps: if span_s > 0.0 {
+                records.len() as f64 / span_s
+            } else {
+                0.0
+            },
+            span_cycles,
+            clock_hz,
+            wall_seconds,
+            records,
+        }
+    }
+}
+
+struct ShardOutput {
+    records: Vec<RequestRecord>,
+    batches: usize,
+    busy_cycles: u64,
+}
+
+/// One shard's worker loop: pop coalesced batches until the stream ends,
+/// stream each through the shard's engine replica, and timestamp every
+/// request from the pipelined per-sample completion times.
+fn serve_shard(
+    shard: usize,
+    queue: &ShardedQueue,
+    cfg: &ExperimentConfig,
+    costs: &CostModel,
+    weight_seed: u64,
+    policy: &BatchPolicy,
+) -> ShardOutput {
+    let mut sim = NetworkSim::with_random_weights(cfg, weight_seed, costs.clone());
+    let mut records = Vec::new();
+    let mut batches = 0usize;
+    let mut busy_cycles = 0u64;
+    let mut free_at = 0u64;
+    while let Some(mut batch) = queue.next_batch(shard, free_at, policy) {
+        // the batch is owned: move the spike trains out instead of cloning
+        // them on the serving hot path (metadata stays behind for records)
+        let inputs: Vec<crate::snn::SpikeTrain> = batch
+            .requests
+            .iter_mut()
+            .map(|r| std::mem::take(&mut r.input))
+            .collect();
+        sim.reset();
+        let (result, outcomes) = sim.run_batched_timed(&inputs);
+        debug_assert_eq!(outcomes.len(), batch.requests.len());
+        let batch_size = batch.requests.len();
+        for (req, out) in batch.requests.iter().zip(&outcomes) {
+            records.push(RequestRecord {
+                id: req.id,
+                shard,
+                arrival_cycles: req.arrival_cycles,
+                dispatch_cycles: batch.dispatch_cycles,
+                completion_cycles: batch.dispatch_cycles + out.completion_cycles,
+                batch_size,
+                prediction: out.prediction,
+            });
+        }
+        batches += 1;
+        busy_cycles += result.total_cycles;
+        free_at = batch.dispatch_cycles + result.total_cycles;
+    }
+    ShardOutput {
+        records,
+        batches,
+        busy_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+    use crate::snn::fc_net;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let net = fc_net("tiny", "mnist", &[32, 16, 8], 4, 2, 0.9, 5);
+        ExperimentConfig::new(net, HwConfig::with_lhr(vec![1, 1])).unwrap()
+    }
+
+    fn tiny_load(n: usize) -> Vec<Request> {
+        let cfg = tiny_cfg();
+        synthetic_load(
+            &cfg.net,
+            cfg.hw.clock_hz,
+            &LoadSpec {
+                n_requests: n,
+                rate_rps: 50_000.0,
+                input_rate: 0.3,
+                seed: 11,
+            },
+        )
+    }
+
+    #[test]
+    fn serves_every_request_exactly_once() {
+        let rt = ServeRuntime::new(
+            tiny_cfg(),
+            CostModel::default(),
+            ServeOptions {
+                shards: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let report = rt.run(tiny_load(20));
+        assert_eq!(report.records.len(), 20);
+        for (i, r) in report.records.iter().enumerate() {
+            assert_eq!(r.id, i, "sorted, dense ids");
+            assert_eq!(r.shard, i % 3, "static partitioning");
+            assert!(r.completion_cycles > r.arrival_cycles);
+            assert!(r.dispatch_cycles >= r.arrival_cycles);
+            assert!(r.batch_size >= 1);
+        }
+        assert!(report.latency.p99_us >= report.latency.p50_us);
+        assert!(report.throughput_rps > 0.0);
+        let served: usize = report.per_shard.iter().map(|s| s.requests).sum();
+        assert_eq!(served, 20);
+    }
+
+    #[test]
+    fn report_is_deterministic_for_a_fixed_seed() {
+        let mk = || {
+            ServeRuntime::new(
+                tiny_cfg(),
+                CostModel::default(),
+                ServeOptions {
+                    shards: 2,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+            .run(tiny_load(24))
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.records, b.records, "whole record stream must replay");
+        assert_eq!(a.latency, b.latency);
+        assert_eq!(a.span_cycles, b.span_cycles);
+    }
+
+    #[test]
+    fn empty_load_yields_empty_report() {
+        let rt =
+            ServeRuntime::new(tiny_cfg(), CostModel::default(), ServeOptions::default()).unwrap();
+        let report = rt.run(Vec::new());
+        assert!(report.records.is_empty());
+        assert_eq!(report.latency.count, 0);
+        assert_eq!(report.throughput_rps, 0.0);
+        assert_eq!(report.slo_attainment(1.0), 1.0);
+    }
+
+    #[test]
+    fn bigger_max_batch_coalesces_under_load() {
+        let opts = |max_batch: usize| ServeOptions {
+            shards: 1,
+            policy: BatchPolicy {
+                max_batch,
+                max_wait_cycles: 200_000,
+            },
+            ..Default::default()
+        };
+        let single = ServeRuntime::new(tiny_cfg(), CostModel::default(), opts(1))
+            .unwrap()
+            .run(tiny_load(16));
+        let batched = ServeRuntime::new(tiny_cfg(), CostModel::default(), opts(8))
+            .unwrap()
+            .run(tiny_load(16));
+        assert!(batched.per_shard[0].batches < single.per_shard[0].batches);
+        assert!(batched.per_shard[0].mean_batch > 1.0);
+        // same requests, same predictions, regardless of batching policy
+        let pa: Vec<_> = single.records.iter().map(|r| r.prediction).collect();
+        let pb: Vec<_> = batched.records.iter().map(|r| r.prediction).collect();
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn slo_front_door_falls_back_to_fastest() {
+        use crate::dse::{Objective, ParetoFrontier};
+        use crate::dse::DsePoint;
+        use crate::resources::Resources;
+        let pt = |cycles: u64, lut: f64, e: f64| DsePoint {
+            net: "t".into(),
+            label: format!("({cycles})"),
+            lhr: vec![cycles as usize],
+            cycles,
+            serial_cycles: cycles,
+            resources: Resources {
+                lut,
+                ..Default::default()
+            },
+            energy_mj: e,
+            latency_us: cycles as f64,
+            layer_activity: vec![],
+        };
+        let f = ParetoFrontier::from_points(
+            &Objective::DEFAULT,
+            vec![pt(100, 50.0, 2.0), pt(300, 10.0, 0.5)],
+        );
+        let met = choose_config_for_slo(&f, 350.0).unwrap();
+        assert!(met.slo_met);
+        assert_eq!(met.lhr, vec![300]);
+        let fallback = choose_config_for_slo(&f, 50.0).unwrap();
+        assert!(!fallback.slo_met);
+        assert_eq!(fallback.lhr, vec![100]);
+        assert!(choose_config_for_slo(&ParetoFrontier::new(&Objective::DEFAULT), 1.0).is_err());
+    }
+}

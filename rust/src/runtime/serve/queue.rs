@@ -1,0 +1,286 @@
+//! Mutex-sharded admission queue with a deterministic dynamic-batching
+//! policy.
+//!
+//! One producer pushes requests (in global arrival order) into per-shard
+//! FIFO queues; each shard worker pops *batches* coalesced under a
+//! max-batch-size / max-wait policy. Contention is per shard — there is
+//! no global lock — and each shard's batching decisions depend only on
+//! its own request subsequence, never on thread interleaving.
+//!
+//! **Determinism.** Arrival times are simulated (cycle timestamps carried
+//! by the requests), so "waiting for the batch window" never consults a
+//! wall clock. [`ShardedQueue::next_batch`] only commits to a batch in a
+//! *stable* state, one that no future push can change:
+//!
+//! 1. the eligible prefix already holds `max_batch` requests, or
+//! 2. a request *behind* the eligible prefix arrives after the batch
+//!    deadline (arrivals are ordered, so nothing later can squeeze in), or
+//! 3. the queue is closed (the stream is finished).
+//!
+//! In every other state the worker blocks on the shard's condvar. A batch
+//! dispatched because it filled goes out when its last member arrived;
+//! a batch cut by the wait window goes out at the deadline — the timer
+//! fires whether or not more traffic shows up, exactly like a wall-clock
+//! dynamic batcher, and identically in every run.
+
+use crate::runtime::serve::loadgen::Request;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Dynamic-batching knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Largest batch a shard dispatches at once.
+    pub max_batch: usize,
+    /// Longest a batch head may wait (simulated cycles) for followers
+    /// after the shard is ready for it. 0 = greedy immediate dispatch.
+    pub max_wait_cycles: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait_cycles: 50_000, // 500 us @100MHz
+        }
+    }
+}
+
+/// A dispatched batch: the coalesced requests plus the simulated cycle
+/// at which the shard starts executing them.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub dispatch_cycles: u64,
+}
+
+#[derive(Default)]
+struct ShardState {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+struct Shard {
+    state: Mutex<ShardState>,
+    cv: Condvar,
+}
+
+/// The admission queue: one mutex-protected FIFO per shard.
+pub struct ShardedQueue {
+    shards: Vec<Shard>,
+}
+
+impl ShardedQueue {
+    pub fn new(n_shards: usize) -> Self {
+        assert!(n_shards > 0, "need at least one shard");
+        ShardedQueue {
+            shards: (0..n_shards)
+                .map(|_| Shard {
+                    state: Mutex::new(ShardState::default()),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Admit a request to `shard`'s queue. The producer must push each
+    /// shard's requests in non-decreasing `arrival_cycles` order (pushing
+    /// the global stream in arrival order guarantees this).
+    pub fn push(&self, shard: usize, req: Request) {
+        let s = &self.shards[shard];
+        let mut g = s.state.lock().unwrap();
+        debug_assert!(!g.closed, "push after close");
+        debug_assert!(
+            g.queue.back().map(|b| b.arrival_cycles <= req.arrival_cycles).unwrap_or(true),
+            "requests must be pushed in arrival order"
+        );
+        g.queue.push_back(req);
+        drop(g);
+        s.cv.notify_one();
+    }
+
+    /// Signal the end of the request stream: workers drain what is left
+    /// and then see `None`.
+    pub fn close(&self) {
+        for s in &self.shards {
+            s.state.lock().unwrap().closed = true;
+            s.cv.notify_all();
+        }
+    }
+
+    /// Block until `shard`'s next batch is decided (see the module docs
+    /// for the stability rule) or the queue is closed and drained.
+    /// `free_at_cycles` is the simulated cycle at which the shard can
+    /// next start executing (the previous batch's completion).
+    pub fn next_batch(
+        &self,
+        shard: usize,
+        free_at_cycles: u64,
+        policy: &BatchPolicy,
+    ) -> Option<Batch> {
+        assert!(policy.max_batch > 0, "max_batch must be >= 1");
+        let s = &self.shards[shard];
+        let mut g = s.state.lock().unwrap();
+        loop {
+            if g.queue.is_empty() {
+                if g.closed {
+                    return None;
+                }
+                g = s.cv.wait(g).unwrap();
+                continue;
+            }
+            // the batch window opens when the shard is free AND the head
+            // request has arrived
+            let base = free_at_cycles.max(g.queue[0].arrival_cycles);
+            let deadline = base.saturating_add(policy.max_wait_cycles);
+            let eligible = g
+                .queue
+                .iter()
+                .take(policy.max_batch)
+                .take_while(|r| r.arrival_cycles <= deadline)
+                .count();
+            let full = eligible == policy.max_batch;
+            // stable iff: full batch, an ineligible request queued behind
+            // the prefix, or the stream is finished
+            if full || g.queue.len() > eligible || g.closed {
+                let requests: Vec<Request> = g.queue.drain(..eligible).collect();
+                let dispatch_cycles = if full {
+                    // last member seals the batch the moment it arrives
+                    base.max(requests.last().expect("non-empty batch").arrival_cycles)
+                } else {
+                    // wait window expires with the batch still open
+                    deadline
+                };
+                return Some(Batch {
+                    requests,
+                    dispatch_cycles,
+                });
+            }
+            g = s.cv.wait(g).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, arrival: u64) -> Request {
+        Request {
+            id,
+            arrival_cycles: arrival,
+            input: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn full_batch_dispatches_at_last_arrival() {
+        let q = ShardedQueue::new(1);
+        for (id, t) in [(0usize, 10u64), (1, 20), (2, 30)] {
+            q.push(0, req(id, t));
+        }
+        q.close();
+        let p = BatchPolicy { max_batch: 3, max_wait_cycles: 1_000 };
+        let b = q.next_batch(0, 0, &p).unwrap();
+        assert_eq!(b.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.dispatch_cycles, 30, "sealed when the 3rd request arrived");
+        assert!(q.next_batch(0, 30, &p).is_none());
+    }
+
+    #[test]
+    fn wait_window_cuts_the_batch_at_the_deadline() {
+        let q = ShardedQueue::new(1);
+        q.push(0, req(0, 100));
+        q.push(0, req(1, 120));
+        q.push(0, req(2, 5_000)); // far beyond the window
+        q.close();
+        let p = BatchPolicy { max_batch: 8, max_wait_cycles: 50 };
+        let b = q.next_batch(0, 0, &p).unwrap();
+        // window opens at 100 (head arrival), deadline 150: requests 0,1
+        assert_eq!(b.requests.len(), 2);
+        assert_eq!(b.dispatch_cycles, 150, "timer fires at the deadline");
+        // the straggler forms its own batch once the shard frees up
+        let b2 = q.next_batch(0, 400, &p).unwrap();
+        assert_eq!(b2.requests[0].id, 2);
+        assert_eq!(b2.dispatch_cycles, 5_000 + 50);
+    }
+
+    #[test]
+    fn busy_shard_shifts_the_window() {
+        let q = ShardedQueue::new(1);
+        q.push(0, req(0, 10));
+        q.push(0, req(1, 900));
+        q.close();
+        let p = BatchPolicy { max_batch: 2, max_wait_cycles: 100 };
+        // shard frees at 850: window opens there, deadline 950 covers both
+        let b = q.next_batch(0, 850, &p).unwrap();
+        assert_eq!(b.requests.len(), 2);
+        assert_eq!(b.dispatch_cycles, 900);
+    }
+
+    #[test]
+    fn greedy_policy_dispatches_singletons() {
+        let q = ShardedQueue::new(1);
+        q.push(0, req(0, 10));
+        q.push(0, req(1, 10_000));
+        q.close();
+        let p = BatchPolicy { max_batch: 4, max_wait_cycles: 0 };
+        let b = q.next_batch(0, 0, &p).unwrap();
+        assert_eq!(b.requests.len(), 1);
+        assert_eq!(b.dispatch_cycles, 10);
+    }
+
+    #[test]
+    fn closed_tail_still_respects_the_deadline() {
+        // a partial final batch is cut by the window, not flushed early —
+        // the same decision a run with more traffic behind it would make
+        let q = ShardedQueue::new(1);
+        q.push(0, req(0, 10));
+        q.close();
+        let p = BatchPolicy { max_batch: 4, max_wait_cycles: 100 };
+        let b = q.next_batch(0, 0, &p).unwrap();
+        assert_eq!(b.requests.len(), 1);
+        assert_eq!(b.dispatch_cycles, 110);
+    }
+
+    #[test]
+    fn batches_form_while_producer_still_pushing() {
+        // concurrent producer/consumer: worker must block until the batch
+        // decision is stable, then agree with the all-pushed-upfront run
+        let q = ShardedQueue::new(1);
+        let p = BatchPolicy { max_batch: 2, max_wait_cycles: 100 };
+        std::thread::scope(|s| {
+            let q = &q;
+            let h = s.spawn(move || {
+                let mut out = Vec::new();
+                let mut free_at = 0u64;
+                while let Some(b) = q.next_batch(0, free_at, &p) {
+                    free_at = b.dispatch_cycles + 500;
+                    out.push((
+                        b.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+                        b.dispatch_cycles,
+                    ));
+                }
+                out
+            });
+            for (id, t) in [(0usize, 10u64), (1, 40), (2, 60), (3, 5_000)] {
+                q.push(0, req(id, t));
+                std::thread::yield_now();
+            }
+            q.close();
+            let batches = h.join().unwrap();
+            assert_eq!(
+                batches,
+                vec![
+                    (vec![0, 1], 40),      // filled at request 1's arrival
+                    (vec![2], 640),        // window opens at free_at 540
+                    (vec![3], 5_100),
+                ]
+            );
+        });
+    }
+}

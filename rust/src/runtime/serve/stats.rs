@@ -1,0 +1,90 @@
+//! Serving statistics — latency percentiles, throughput and per-shard
+//! accounting in the same plain-counter style as [`crate::sim::stats`].
+
+/// Latency distribution summary (microseconds of simulated time).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl LatencySummary {
+    /// Summarize a latency sample set (any order; empty -> all zeros).
+    pub fn from_us(mut xs: Vec<f64>) -> LatencySummary {
+        if xs.is_empty() {
+            return LatencySummary::default();
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let count = xs.len();
+        LatencySummary {
+            count,
+            mean_us: xs.iter().sum::<f64>() / count as f64,
+            p50_us: percentile(&xs, 50.0),
+            p95_us: percentile(&xs, 95.0),
+            p99_us: percentile(&xs, 99.0),
+            max_us: *xs.last().expect("non-empty"),
+        }
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    let rank = (q / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// One shard's serving counters for a finished run.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Requests this shard served.
+    pub requests: usize,
+    /// Batches it dispatched.
+    pub batches: usize,
+    /// Mean coalesced batch size (`requests / batches`).
+    pub mean_batch: f64,
+    /// Simulated cycles the shard's engine replica spent executing.
+    pub busy_cycles: u64,
+    /// Shard utilization over the run span (busy / span).
+    pub utilization: f64,
+    /// Request latency (arrival -> completion) distribution.
+    pub latency: LatencySummary,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&xs, 1.0), 1.0);
+        let small = vec![10.0, 20.0];
+        assert_eq!(percentile(&small, 50.0), 10.0);
+        assert_eq!(percentile(&small, 99.0), 20.0);
+    }
+
+    #[test]
+    fn summary_from_unsorted_sample() {
+        let s = LatencySummary::from_us(vec![30.0, 10.0, 20.0, 40.0]);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.mean_us, 25.0);
+        assert_eq!(s.p50_us, 20.0);
+        assert_eq!(s.max_us, 40.0);
+    }
+
+    #[test]
+    fn empty_summary_is_zeroed() {
+        let s = LatencySummary::from_us(Vec::new());
+        assert_eq!(s.count, 0);
+        assert_eq!(s.max_us, 0.0);
+    }
+}

@@ -75,6 +75,11 @@ pub trait Probe {
     fn on_layer_output(&mut self, _l: usize, _t: usize, _out: &BitVec) {}
     /// The network's final layer produced its step-`t` output.
     fn on_network_output(&mut self, _t: usize, _out: &BitVec) {}
+    /// The pipelined finish time (cycles) of the final layer after step
+    /// `t` — called right after [`Probe::on_network_output`]. Batched
+    /// serving uses this to read per-sample completion times out of the
+    /// scheduler without re-deriving the recurrence.
+    fn on_step_finish(&mut self, _t: usize, _finish_cycles: u64) {}
 }
 
 /// Probe that observes nothing (plain latency/stats runs).
@@ -110,6 +115,10 @@ pub struct BatchDecodeProbe {
     counts: Vec<u32>,
     /// One prediction per completed sample, in arrival order.
     pub predictions: Vec<Option<usize>>,
+    /// Pipelined finish time (cycles) of each sample's last step — when
+    /// sample `i` fully left the final layer. Serving latency accounting
+    /// reads per-sample completions from here.
+    pub completions: Vec<u64>,
 }
 
 impl BatchDecodeProbe {
@@ -121,6 +130,7 @@ impl BatchDecodeProbe {
             population,
             counts: Vec::new(),
             predictions: Vec::new(),
+            completions: Vec::new(),
         }
     }
 }
@@ -137,6 +147,12 @@ impl Probe for BatchDecodeProbe {
             self.predictions
                 .push(decode_counts(&self.counts, self.classes, self.population));
             self.counts.iter_mut().for_each(|c| *c = 0);
+        }
+    }
+
+    fn on_step_finish(&mut self, t: usize, finish_cycles: u64) {
+        if (t + 1) % self.t_per_sample == 0 {
+            self.completions.push(finish_cycles);
         }
     }
 }
@@ -326,6 +342,9 @@ impl Engine {
                     output_counts[idx] += 1;
                 }
                 probe.on_network_output(t, &self.cur);
+                if let Some(&f) = self.finish.last() {
+                    probe.on_step_finish(t, f);
+                }
             }
         }
 
@@ -403,5 +422,18 @@ mod tests {
         p.on_network_output(2, &s1);
         p.on_network_output(3, &s1);
         assert_eq!(p.predictions, vec![Some(1), Some(0)]);
+    }
+
+    #[test]
+    fn batch_decode_probe_records_per_sample_completions() {
+        let mut p = BatchDecodeProbe::new(2, 2, 2);
+        let s = BitVec::from_bools(&[true, false, false, false]);
+        for t in 0..4 {
+            p.on_network_output(t, &s);
+            p.on_step_finish(t, (t as u64 + 1) * 10);
+        }
+        // sample boundaries fall after steps 1 and 3
+        assert_eq!(p.completions, vec![20, 40]);
+        assert_eq!(p.predictions.len(), 2);
     }
 }

@@ -48,6 +48,79 @@ pub struct LayerSim {
     spike_buf: Vec<bool>,
 }
 
+/// Sum over all feature-map positions of the number of in-range kernel
+/// taps under 'same' padding — `sum_{y,x} |clipped footprint(y,x)|`.
+/// The footprint factorizes into independent row and column tap counts,
+/// so the sum is `Sy * Sx`. Dividing by `h*w` gives the mean clipped
+/// footprint of a uniformly placed spike; the cost-only conv path charges
+/// memory traffic with that expectation, matching the functional path's
+/// exact border clipping on average.
+pub fn conv_clipped_taps_sum(kernel: usize, height: usize, width: usize) -> u64 {
+    let pad = (kernel - 1) / 2;
+    let axis = |n: usize| -> u64 {
+        (0..n)
+            .map(|y| {
+                // taps d with 0 <= y + pad - d < n, clamped to [0, k)
+                let hi = (y + pad).min(kernel - 1);
+                let lo = (y + pad + 1).saturating_sub(n);
+                (hi + 1 - lo) as u64
+            })
+            .sum()
+    };
+    axis(height) * axis(width)
+}
+
+/// Panic unless `weights` matches `layer`'s shape exactly. A bias vector
+/// shorter than the output width used to be silently zero-filled in the
+/// conv hot loop (`b.get(oc).unwrap_or(0.0)`), turning a construction
+/// mistake into quietly wrong membrane arithmetic; shape errors must
+/// surface when the layer is built, not as a wrong answer later.
+fn validate_weights(index: usize, layer: &Layer, weights: &LayerWeights) {
+    match (layer, weights) {
+        (Layer::Fc { n_pre, n }, LayerWeights::Fc { w, b }) => {
+            assert_eq!(
+                w.len(),
+                n_pre * n,
+                "fc{index}: weight matrix has {} entries, expected {n_pre}x{n}",
+                w.len()
+            );
+            assert_eq!(
+                b.len(),
+                *n,
+                "fc{index}: bias vector has {} entries, expected one per neuron ({n})",
+                b.len()
+            );
+        }
+        (
+            Layer::Conv {
+                in_ch,
+                out_ch,
+                kernel,
+                ..
+            },
+            LayerWeights::Conv { w, b },
+        ) => {
+            assert_eq!(
+                w.len(),
+                kernel * kernel * in_ch * out_ch,
+                "conv{index}: weight tensor has {} entries, expected {kernel}x{kernel}x{in_ch}x{out_ch}",
+                w.len()
+            );
+            assert_eq!(
+                b.len(),
+                *out_ch,
+                "conv{index}: bias vector has {} entries, expected one per output channel ({out_ch})",
+                b.len()
+            );
+        }
+        (Layer::Pool { .. }, LayerWeights::None) => {}
+        (layer, _) => panic!(
+            "{}{index}: weight kind does not match the layer kind",
+            layer.kind_str()
+        ),
+    }
+}
+
 impl LayerSim {
     pub fn new(
         index: usize,
@@ -60,6 +133,7 @@ impl LayerSim {
         weights: LayerWeights,
         costs: CostModel,
     ) -> Self {
+        validate_weights(index, &layer, &weights);
         let logical = layer.logical_units();
         let nu = NuMap::from_lhr(logical.max(1), lhr.max(1));
         let n_state = layer.output_bits();
@@ -255,6 +329,10 @@ impl LayerSim {
         // Spike -> affected-neuron address extraction + weight accumulation
         // (paper Fig. 5). 1-D address decomposed to (ci, y, x); 'same'
         // padding means output (oc, ny, nx) with ny = y + pad - dy.
+        // `taps` counts the kernel taps actually in range — spikes near the
+        // feature-map border touch fewer than k*k positions, and the memory
+        // traffic counters below must reflect that clipped footprint.
+        let mut taps = 0u64;
         for &a in &addrs {
             let a = a as usize;
             let ci = a / fmap;
@@ -283,6 +361,7 @@ impl LayerSim {
                     for oc in 0..out_ch {
                         self.acc[oc * fmap + pos] += wts[wbase + oc];
                     }
+                    taps += 1;
                     if !self.touched_flag[pos] {
                         self.touched_flag[pos] = true;
                         self.touched.push(pos as u32);
@@ -298,7 +377,13 @@ impl LayerSim {
         // rows, where raising conv LHR 1 -> 16 leaves latency unchanged.
         let stall = self.mem.stall_factor();
         let accum_cycles = s as u64 * (k * k) as u64 * self.costs.conv_rmw * stall;
-        let rmw = (s * k * k * out_ch) as u64; // upper bound incl. clipped
+        // Memory traffic covers only the in-range taps: the accumulate
+        // stage still walks all k*k footprint slots serially (cycles
+        // above), but out-of-range taps are masked and issue no weight
+        // read / accumulate / membrane RMW — border spikes used to be
+        // overcounted here (`s*k*k*out_ch` regardless of clipping), which
+        // inflated the energy estimates fed to the DSE.
+        let rmw = taps * out_ch as u64;
         self.mem.record_reads(rmw);
         self.stats.weight_reads += rmw;
         self.stats.accum_ops += rmw;
@@ -312,7 +397,9 @@ impl LayerSim {
             let beta = self.lif.beta;
             let theta = self.lif.theta;
             for oc in 0..out_ch {
-                let bias = b.get(oc).copied().unwrap_or(0.0);
+                // shape validated at construction: exactly one bias per
+                // output channel, so no silent zero-fill here
+                let bias = b[oc];
                 let base = oc * fmap;
                 // per-channel slices elide bounds checks in the dense
                 // leak+integrate pass (§Perf #3)
@@ -423,7 +510,14 @@ impl LayerSim {
                 let fmap = height * width;
                 // touched positions per channel: s*k^2 capped by the fmap
                 let touched = (s_in * kernel * kernel).min(fmap) as u64;
-                let rmw = (s_in * kernel * kernel * out_ch) as u64;
+                // Without spike positions the exact clipped footprint is
+                // unknowable; charge the *expected* in-range taps for
+                // uniformly placed spikes (exact for the functional path's
+                // border clipping on average) instead of the old k*k
+                // upper bound that overcounted every border spike.
+                let rmw = s_in as u64 * conv_clipped_taps_sum(kernel, height, width)
+                    * out_ch as u64
+                    / fmap as u64;
                 self.stats.weight_reads += rmw;
                 self.stats.accum_ops += rmw;
                 self.stats.membrane_accesses += 2 * rmw;
@@ -610,6 +704,172 @@ mod tests {
         let (_, phases) = l.step(&input);
         assert_eq!(phases.activate, 8); // 4 touched x 2
         assert_eq!(l.lif.v.iter().filter(|&&v| v > 0.5).count(), 4);
+    }
+
+    fn conv_4x4(out_ch: usize) -> LayerSim {
+        LayerSim::new(
+            0,
+            Layer::Conv {
+                in_ch: 1,
+                out_ch,
+                kernel: 3,
+                height: 4,
+                width: 4,
+            },
+            1,
+            0,
+            64,
+            0.9,
+            100.0,
+            LayerWeights::Conv {
+                w: vec![1.0; 9 * out_ch],
+                b: vec![0.0; out_ch],
+            },
+            CostModel::default(),
+        )
+    }
+
+    #[test]
+    #[should_panic(expected = "bias vector has 1 entries, expected one per output channel (2)")]
+    fn conv_short_bias_rejected_at_construction() {
+        // regression: a short conv bias used to be silently zero-filled in
+        // the activation loop instead of failing when the layer is built
+        let _ = LayerSim::new(
+            0,
+            Layer::Conv {
+                in_ch: 1,
+                out_ch: 2,
+                kernel: 3,
+                height: 4,
+                width: 4,
+            },
+            1,
+            0,
+            64,
+            0.9,
+            1.0,
+            LayerWeights::Conv {
+                w: vec![1.0; 18],
+                b: vec![0.0; 1],
+            },
+            CostModel::default(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "bias vector has 3 entries, expected one per neuron (10)")]
+    fn fc_short_bias_rejected_at_construction() {
+        let _ = LayerSim::new(
+            0,
+            Layer::Fc { n_pre: 4, n: 10 },
+            1,
+            0,
+            64,
+            0.9,
+            1.0,
+            LayerWeights::Fc {
+                w: vec![0.0; 40],
+                b: vec![0.0; 3],
+            },
+            CostModel::default(),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "weight matrix has 39 entries, expected 4x10")]
+    fn fc_wrong_weight_count_rejected_at_construction() {
+        let _ = LayerSim::new(
+            0,
+            Layer::Fc { n_pre: 4, n: 10 },
+            1,
+            0,
+            64,
+            0.9,
+            1.0,
+            LayerWeights::Fc {
+                w: vec![0.0; 39],
+                b: vec![0.0; 10],
+            },
+            CostModel::default(),
+        );
+    }
+
+    #[test]
+    fn conv_border_spike_counts_clipped_footprint() {
+        // regression: border spikes used to charge the full k*k*out_ch
+        // upper bound to weight_reads/accum_ops/membrane_accesses
+        let mut l = conv_4x4(2);
+        let mut input = BitVec::zeros(16);
+        input.set(0); // corner: only a 2x2 window of the 3x3 kernel lands
+        let _ = l.step(&input);
+        assert_eq!(l.stats.weight_reads, 4 * 2, "4 taps x 2 channels");
+        assert_eq!(l.stats.accum_ops, 4 * 2);
+        assert_eq!(l.stats.membrane_accesses, 2 * 4 * 2);
+
+        // interior spike still counts the full footprint
+        let mut l = conv_4x4(2);
+        let mut input = BitVec::zeros(16);
+        input.set(5); // (y=1, x=1): all 9 taps in range
+        let _ = l.step(&input);
+        assert_eq!(l.stats.weight_reads, 9 * 2);
+        assert_eq!(l.stats.accum_ops, 9 * 2);
+        assert_eq!(l.stats.membrane_accesses, 2 * 9 * 2);
+
+        // edge (non-corner) spike: 3x2 window
+        let mut l = conv_4x4(1);
+        let mut input = BitVec::zeros(16);
+        input.set(4); // (y=1, x=0)
+        let _ = l.step(&input);
+        assert_eq!(l.stats.weight_reads, 6);
+    }
+
+    #[test]
+    fn clipped_taps_sum_matches_bruteforce() {
+        for (k, h, w) in [(3usize, 4usize, 4usize), (3, 5, 7), (5, 6, 6), (1, 4, 4)] {
+            let pad = (k - 1) / 2;
+            let mut brute = 0u64;
+            for y in 0..h {
+                for x in 0..w {
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            let ny = y + pad;
+                            let nx = x + pad;
+                            if ny >= dy && ny - dy < h && nx >= dx && nx - dx < w {
+                                brute += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            assert_eq!(
+                conv_clipped_taps_sum(k, h, w),
+                brute,
+                "k={k} h={h} w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn cost_only_conv_charges_expected_clipped_footprint() {
+        // 3x3 kernel over 4x4: taps sum = 10*10 = 100 across 16 positions
+        let mut l = LayerSim::new_cost_only(
+            0,
+            Layer::Conv {
+                in_ch: 1,
+                out_ch: 2,
+                kernel: 3,
+                height: 4,
+                width: 4,
+            },
+            1,
+            0,
+            64,
+            CostModel::default(),
+        );
+        let _ = l.step_cost_only(16, 0);
+        // 16 spikes x (100/16 mean taps) x 2 channels = 200 (integer math)
+        assert_eq!(l.stats.weight_reads, 16 * 100 * 2 / 16);
+        assert!(l.stats.weight_reads < (16 * 9 * 2) as u64, "below the old upper bound");
     }
 
     #[test]

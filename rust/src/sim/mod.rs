@@ -39,5 +39,5 @@ pub use layer::{LayerSim, LayerWeights};
 pub use memory::MemoryUnit;
 pub use neural_unit::NuMap;
 pub use penc::Penc;
-pub use pipeline::{random_spike_train, random_weights, NetworkSim};
+pub use pipeline::{random_spike_train, random_weights, BatchOutcome, NetworkSim};
 pub use stats::{decode_counts, LayerStats, PhaseCycles, SimResult};

@@ -50,6 +50,17 @@ pub struct NetworkSim {
     engine: Engine,
 }
 
+/// Per-sample outcome of a batched serving run
+/// ([`NetworkSim::run_batched_timed`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchOutcome {
+    /// Decoded class (population-coded argmax), if decodable.
+    pub prediction: Option<usize>,
+    /// Pipelined cycle at which the sample's last step left the final
+    /// layer, measured from the start of the batch.
+    pub completion_cycles: u64,
+}
+
 impl NetworkSim {
     /// Build with explicit weights (from `artifacts/`); `weights[i]`
     /// corresponds to the i-th *parametric* layer.
@@ -198,6 +209,16 @@ impl NetworkSim {
     /// runs. Returns the aggregate result plus one decoded prediction per
     /// sample.
     pub fn run_batched(&mut self, inputs: &[SpikeTrain]) -> (SimResult, Vec<Option<usize>>) {
+        let (result, outcomes) = self.run_batched_timed(inputs);
+        (result, outcomes.into_iter().map(|o| o.prediction).collect())
+    }
+
+    /// [`NetworkSim::run_batched`] that additionally reports, per sample,
+    /// the pipelined cycle at which it fully left the final layer — the
+    /// per-request completion times the serve runtime turns into queueing
+    /// + execution latency. The last sample's completion equals the
+    /// aggregate `total_cycles`.
+    pub fn run_batched_timed(&mut self, inputs: &[SpikeTrain]) -> (SimResult, Vec<BatchOutcome>) {
         let mut workload = BatchWorkload::new(inputs);
         let mut probe = BatchDecodeProbe::new(
             workload.t_per_sample(),
@@ -205,7 +226,16 @@ impl NetworkSim {
             self.net.population,
         );
         let result = self.run_engine(&mut workload, &mut probe);
-        (result, probe.predictions)
+        let outcomes = probe
+            .predictions
+            .into_iter()
+            .zip(probe.completions)
+            .map(|(prediction, completion_cycles)| BatchOutcome {
+                prediction,
+                completion_cycles,
+            })
+            .collect();
+        (result, outcomes)
     }
 
     /// Latency in seconds at the configured clock.
@@ -393,6 +423,28 @@ mod tests {
         let total_sum: u64 = isolated.iter().map(|r| r.total_cycles).sum();
         assert!(batch.total_cycles <= total_sum);
         assert!(batch.total_cycles >= isolated.last().unwrap().total_cycles);
+    }
+
+    #[test]
+    fn batched_timed_completions_are_monotone_and_end_at_total() {
+        let cfg = small_cfg(vec![1, 2]);
+        let mut rng = Rng::new(19);
+        let samples: Vec<SpikeTrain> = (0..3)
+            .map(|_| random_spike_train(32, 4, 0.3, &mut rng))
+            .collect();
+        let mut sim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let (r, outcomes) = sim.run_batched_timed(&samples);
+        assert_eq!(outcomes.len(), 3);
+        for w in outcomes.windows(2) {
+            assert!(w[0].completion_cycles < w[1].completion_cycles);
+        }
+        assert_eq!(outcomes.last().unwrap().completion_cycles, r.total_cycles);
+        // predictions agree with the untimed wrapper
+        let mut sim2 = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let (_, preds) = sim2.run_batched(&samples);
+        let timed_preds: Vec<Option<usize>> =
+            outcomes.iter().map(|o| o.prediction).collect();
+        assert_eq!(timed_preds, preds);
     }
 
     #[test]

@@ -1,0 +1,160 @@
+//! Acceptance tests for the sharded dynamic-batching serve runtime:
+//! batched serving outputs must be byte-identical to isolated per-sample
+//! `SpikeTrainWorkload` runs, byte-identical across shard counts, and the
+//! whole report must replay deterministically for a fixed seed — the same
+//! determinism contract the PR-2 explorer holds across thread counts.
+
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::runtime::serve::{LoadSpec, ServeOptions};
+use snn_dse::runtime::{synthetic_load, BatchPolicy, Request, ServeRuntime};
+use snn_dse::sim::{CostModel, NetworkSim};
+use snn_dse::snn::{fc_net, table1_net, NetDef};
+
+const WEIGHT_SEED: u64 = 7;
+
+fn tiny_net() -> NetDef {
+    fc_net("tiny", "mnist", &[32, 16, 8], 4, 2, 0.9, 5)
+}
+
+fn tiny_cfg() -> ExperimentConfig {
+    ExperimentConfig::new(tiny_net(), HwConfig::with_lhr(vec![1, 2])).unwrap()
+}
+
+fn tiny_load(n: usize, seed: u64) -> Vec<Request> {
+    let cfg = tiny_cfg();
+    synthetic_load(
+        &cfg.net,
+        cfg.hw.clock_hz,
+        &LoadSpec {
+            n_requests: n,
+            rate_rps: 40_000.0,
+            input_rate: 0.3,
+            seed,
+        },
+    )
+}
+
+fn serve(shards: usize, load: Vec<Request>) -> snn_dse::runtime::ServeReport {
+    let opts = ServeOptions {
+        shards,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait_cycles: 30_000,
+        },
+        weight_seed: WEIGHT_SEED,
+    };
+    ServeRuntime::new(tiny_cfg(), CostModel::default(), opts)
+        .unwrap()
+        .run(load)
+}
+
+#[test]
+fn serve_outputs_byte_identical_to_isolated_spike_train_runs() {
+    let load = tiny_load(18, 3);
+    let report = serve(2, load.clone());
+    assert_eq!(report.records.len(), load.len());
+    for (req, rec) in load.iter().zip(&report.records) {
+        assert_eq!(req.id, rec.id);
+        // the reference: one fresh sim, one isolated SpikeTrainWorkload run
+        let mut sim =
+            NetworkSim::with_random_weights(&tiny_cfg(), WEIGHT_SEED, CostModel::default());
+        let isolated = sim.run(&req.input);
+        assert_eq!(
+            rec.prediction, isolated.predicted_class,
+            "request {}: served prediction must match the isolated run",
+            req.id
+        );
+        // dynamic batching can only add latency over the isolated
+        // pipelined execution, never lose cycles
+        assert!(
+            rec.latency_cycles() >= isolated.total_cycles,
+            "request {}: latency {} below isolated execution {}",
+            req.id,
+            rec.latency_cycles(),
+            isolated.total_cycles
+        );
+    }
+}
+
+#[test]
+fn serve_predictions_deterministic_across_shard_counts() {
+    let reference: Vec<Option<usize>> = serve(1, tiny_load(20, 9))
+        .records
+        .iter()
+        .map(|r| r.prediction)
+        .collect();
+    for shards in [2usize, 3, 5] {
+        let preds: Vec<Option<usize>> = serve(shards, tiny_load(20, 9))
+            .records
+            .iter()
+            .map(|r| r.prediction)
+            .collect();
+        assert_eq!(
+            reference, preds,
+            "{shards} shards must produce byte-identical predictions"
+        );
+    }
+}
+
+#[test]
+fn serve_report_replays_for_a_fixed_seed_and_shard_count() {
+    let a = serve(3, tiny_load(21, 5));
+    let b = serve(3, tiny_load(21, 5));
+    assert_eq!(a.records, b.records, "records (incl. all timestamps) must replay");
+    assert_eq!(a.span_cycles, b.span_cycles);
+    assert_eq!(a.latency, b.latency);
+    for (x, y) in a.per_shard.iter().zip(&b.per_shard) {
+        assert_eq!(x.requests, y.requests);
+        assert_eq!(x.batches, y.batches);
+        assert_eq!(x.busy_cycles, y.busy_cycles);
+        assert_eq!(x.latency, y.latency);
+    }
+}
+
+#[test]
+fn serve_sustains_a_multi_shard_table1_load() {
+    // acceptance: a multi-shard synthetic load on a paper network with
+    // reported p50/p99 and throughput
+    let net = table1_net("net1");
+    let cfg = ExperimentConfig::new(net.clone(), HwConfig::with_lhr(vec![4, 8, 8])).unwrap();
+    let load = synthetic_load(
+        &net,
+        cfg.hw.clock_hz,
+        &LoadSpec {
+            n_requests: 24,
+            rate_rps: 3_000.0,
+            input_rate: 0.1,
+            seed: 42,
+        },
+    );
+    let report = ServeRuntime::new(
+        cfg,
+        CostModel::default(),
+        ServeOptions {
+            shards: 3,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait_cycles: 50_000,
+            },
+            weight_seed: WEIGHT_SEED,
+        },
+    )
+    .unwrap()
+    .run(load);
+    assert_eq!(report.records.len(), 24);
+    assert!(report.latency.p50_us > 0.0);
+    assert!(report.latency.p99_us >= report.latency.p50_us);
+    assert!(report.latency.max_us >= report.latency.p99_us);
+    assert!(report.throughput_rps > 0.0);
+    assert_eq!(report.per_shard.len(), 3);
+    let served: usize = report.per_shard.iter().map(|s| s.requests).sum();
+    assert_eq!(served, 24);
+    // every shard saw traffic under round-robin partitioning
+    for s in &report.per_shard {
+        assert!(s.requests > 0);
+        assert!(s.busy_cycles > 0);
+    }
+    // full SLO attainment at an absurdly loose SLO, none at an absurd one
+    assert_eq!(report.slo_attainment(f64::INFINITY), 1.0);
+    assert_eq!(report.slo_attainment(0.0), 0.0);
+}
