@@ -82,9 +82,10 @@ fn main() {
         }, costs.clone());
     let train = random_spike_train(784, 1, 0.12, &mut rng);
     let mut fc_out = BitVec::zeros(0);
-    time("fc_layer.step_into 784->500 @95 spikes", 5_000, || {
+    let per_fc = time("fc_layer.step_into 784->500 @95 spikes", 5_000, || {
         black_box(fc.step_into(black_box(&train[0]), &mut fc_out));
     });
+    println!("  => {:.0} FC steps/s @ Table-I sparsity", 1.0 / per_fc);
 
     // (c) CONV layer step: 32ch 64x64, k=3, ~200 spikes
     let mut conv = LayerSim::new(0,
@@ -96,9 +97,10 @@ fn main() {
         }, costs.clone());
     let ctrain = random_spike_train(32 * 64 * 64, 1, 200.0 / (32.0 * 64.0 * 64.0), &mut rng);
     let mut conv_out = BitVec::zeros(0);
-    time("conv_layer.step_into 32ch 64x64 @~200 spikes", 200, || {
+    let per_conv = time("conv_layer.step_into 32ch 64x64 @~200 spikes", 200, || {
         black_box(conv.step_into(black_box(&ctrain[0]), &mut conv_out));
     });
+    println!("  => {:.0} CONV steps/s @ DVS-like sparsity", 1.0 / per_conv);
 
     // (d) full net-1 functional inference (T=25) through the unified engine
     let net = table1_net("net1");

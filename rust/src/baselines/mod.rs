@@ -2,7 +2,13 @@
 //! compares against, and (b) a sparsity-oblivious execution model of *our*
 //! hardware (no PENC compression — every neuron integrates every
 //! pre-synaptic input each step), used for the paper's "64% energy
-//! reduction vs the sparsity-oblivious baseline" claim and ablations.
+//! reduction vs the sparsity-oblivious baseline" claim and ablations, and
+//! (c) the scalar reference step ([`scalar`]) preserved verbatim as the
+//! differential oracle the optimized hot path is fuzzed against.
+
+pub mod scalar;
+
+pub use scalar::{ScalarLayerSim, ScalarNetworkSim};
 
 use crate::config::{ExperimentConfig, HwConfig};
 use crate::sim::costs::CostModel;

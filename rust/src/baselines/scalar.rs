@@ -1,0 +1,432 @@
+//! The scalar reference step — the differential oracle for the optimized
+//! simulation hot path.
+//!
+//! [`ScalarLayerSim::step`] is a verbatim preservation of the pre-PR-4
+//! `LayerSim` functional step: one-address-at-a-time pairwise FC row
+//! accumulation, an unconditional dense accumulator clear, and a dense
+//! leak + integrate + threshold pass over *every* neuron each step. The
+//! optimized path in `sim::layer` (word-level spike decode, fused row
+//! accumulation, touched-set sparse conv activation with lazy leak
+//! replay) must stay **byte-identical** to this oracle on output spikes,
+//! `PhaseCycles`, and every `LayerStats` counter — the contract enforced
+//! by `rust/tests/fuzz_differential.rs` over randomized topologies.
+//!
+//! Keep this module dumb and dense on purpose: its value is being
+//! obviously correct, not fast.
+
+use crate::config::ExperimentConfig;
+use crate::sim::costs::CostModel;
+use crate::sim::engine::advance_finish;
+use crate::sim::layer::LayerWeights;
+use crate::sim::memory::MemoryUnit;
+use crate::sim::neural_unit::NuMap;
+use crate::sim::penc::Penc;
+use crate::sim::stats::{LayerStats, PhaseCycles, SimResult};
+use crate::snn::{BitVec, Layer, LifState, NetDef, SpikeTrain};
+
+/// One layer of the scalar reference simulator. Field-for-field mirror of
+/// `sim::LayerSim`'s functional state; construction assumes weight shapes
+/// already validated (the oracle is always built from a validated
+/// [`ExperimentConfig`]).
+pub struct ScalarLayerSim {
+    pub layer: Layer,
+    pub nu: NuMap,
+    pub mem: MemoryUnit,
+    pub penc: Penc,
+    pub stats: LayerStats,
+    costs: CostModel,
+    lif: LifState,
+    weights: LayerWeights,
+    acc: Vec<f32>,
+    touched: Vec<u32>,
+    touched_flag: Vec<bool>,
+    addr_buf: Vec<u32>,
+    spike_buf: Vec<bool>,
+}
+
+impl ScalarLayerSim {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        index: usize,
+        layer: Layer,
+        lhr: usize,
+        mem_blocks: usize,
+        penc_width: usize,
+        beta: f32,
+        theta: f32,
+        weights: LayerWeights,
+        costs: CostModel,
+    ) -> Self {
+        let logical = layer.logical_units();
+        let nu = NuMap::from_lhr(logical.max(1), lhr.max(1));
+        let n_state = layer.output_bits();
+        let row_words = match &layer {
+            Layer::Fc { n_pre, .. } => *n_pre,
+            Layer::Conv { in_ch, kernel, .. } => kernel * kernel * in_ch,
+            Layer::Pool { .. } => 0,
+        };
+        let mem = MemoryUnit::new(mem_blocks, nu.units, row_words, logical.max(1));
+        let name = format!("{}{}", layer.kind_str(), index);
+        let state_n = if layer.is_parametric() { n_state } else { 0 };
+        let conv_n = if matches!(layer, Layer::Conv { .. }) { n_state } else { 0 };
+        ScalarLayerSim {
+            nu,
+            mem,
+            penc: Penc::new(penc_width),
+            stats: LayerStats::new(name),
+            costs,
+            lif: LifState::new(state_n, beta, theta),
+            acc: vec![0.0; state_n],
+            touched: Vec::new(),
+            touched_flag: vec![false; conv_n],
+            addr_buf: Vec::new(),
+            spike_buf: vec![false; n_state],
+            layer,
+            weights,
+        }
+    }
+
+    /// The preserved scalar functional step (see the module docs).
+    pub fn step(&mut self, input: &BitVec) -> (BitVec, PhaseCycles) {
+        debug_assert_eq!(input.len(), self.layer.input_bits());
+        let mut out = BitVec::zeros(0);
+        let phases = match self.layer {
+            Layer::Fc { .. } => self.step_fc(input, &mut out),
+            Layer::Conv { .. } => self.step_conv(input, &mut out),
+            Layer::Pool { .. } => self.step_pool(input, &mut out),
+        };
+        (out, phases)
+    }
+
+    fn step_fc(&mut self, input: &BitVec, out: &mut BitVec) -> PhaseCycles {
+        let (n_pre, n) = match self.layer {
+            Layer::Fc { n_pre, n } => (n_pre, n),
+            _ => unreachable!(),
+        };
+        let mut addrs = std::mem::take(&mut self.addr_buf);
+        let (comp_cycles, chunks_scanned) =
+            self.penc.compress_into(input, &self.costs, &mut addrs);
+        let s = addrs.len();
+        self.stats.penc_chunks += chunks_scanned;
+
+        let (w, b) = match &self.weights {
+            LayerWeights::Fc { w, b } => (w.as_slice(), b.as_slice()),
+            _ => panic!("fc layer without fc weights"),
+        };
+        debug_assert_eq!(w.len(), n_pre * n);
+        // Pairwise row accumulation, one pass over the accumulators per
+        // address pair — the arithmetic order the optimized path must
+        // reproduce bit-for-bit.
+        let mut it = addrs.chunks_exact(2);
+        for pair in &mut it {
+            let (a0, a1) = (pair[0] as usize, pair[1] as usize);
+            let r0 = &w[a0 * n..a0 * n + n];
+            let r1 = &w[a1 * n..a1 * n + n];
+            for ((acc, &w0), &w1) in self.acc.iter_mut().zip(r0).zip(r1) {
+                *acc += w0 + w1;
+            }
+        }
+        for &a in it.remainder() {
+            let row = &w[a as usize * n..(a as usize + 1) * n];
+            for (acc, &wv) in self.acc.iter_mut().zip(row) {
+                *acc += wv;
+            }
+        }
+        let stall = self.mem.stall_factor();
+        let accum_cycles =
+            s as u64 * self.nu.per_unit() as u64 * self.costs.fc_accum * stall;
+        self.mem.record_reads((s * n) as u64);
+        self.stats.weight_reads += (s * n) as u64;
+        self.stats.accum_ops += (s * n) as u64;
+
+        let fired = self.lif.activate(&self.acc, b, &mut self.spike_buf);
+        // unconditional dense accumulator clear
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        let activate_cycles = self.nu.per_unit() as u64 * self.costs.act_fc;
+        self.stats.membrane_accesses += 2 * n as u64;
+        self.stats.activations += n as u64;
+
+        let phases = PhaseCycles {
+            compress: comp_cycles,
+            accumulate: accum_cycles,
+            activate: activate_cycles,
+            overhead: self.costs.phase_overhead,
+        };
+        out.fill_from_bools(&self.spike_buf[..n]);
+        self.stats.add_step(&phases, s, fired);
+        self.addr_buf = addrs;
+        phases
+    }
+
+    fn step_conv(&mut self, input: &BitVec, out: &mut BitVec) -> PhaseCycles {
+        let (in_ch, out_ch, k, h, w_) = match self.layer {
+            Layer::Conv {
+                in_ch,
+                out_ch,
+                kernel,
+                height,
+                width,
+            } => (in_ch, out_ch, kernel, height, width),
+            _ => unreachable!(),
+        };
+        let mut addrs = std::mem::take(&mut self.addr_buf);
+        let (comp_cycles, chunks_scanned) =
+            self.penc.compress_into(input, &self.costs, &mut addrs);
+        let s = addrs.len();
+        self.stats.penc_chunks += chunks_scanned;
+
+        let (wts, b) = match &self.weights {
+            LayerWeights::Conv { w, b } => (w.as_slice(), b.as_slice()),
+            _ => panic!("conv layer without conv weights"),
+        };
+        let pad = (k - 1) / 2;
+        let fmap = h * w_;
+        self.touched.clear();
+
+        let mut taps = 0u64;
+        for &a in &addrs {
+            let a = a as usize;
+            let ci = a / fmap;
+            let y = (a % fmap) / w_;
+            let x = a % w_;
+            for dy in 0..k {
+                let ny = y + pad;
+                if ny < dy {
+                    continue;
+                }
+                let ny = ny - dy;
+                if ny >= h {
+                    continue;
+                }
+                for dx in 0..k {
+                    let nx = x + pad;
+                    if nx < dx {
+                        continue;
+                    }
+                    let nx = nx - dx;
+                    if nx >= w_ {
+                        continue;
+                    }
+                    let wbase = ((dy * k + dx) * in_ch + ci) * out_ch;
+                    let pos = ny * w_ + nx;
+                    for oc in 0..out_ch {
+                        self.acc[oc * fmap + pos] += wts[wbase + oc];
+                    }
+                    taps += 1;
+                    if !self.touched_flag[pos] {
+                        self.touched_flag[pos] = true;
+                        self.touched.push(pos as u32);
+                    }
+                }
+            }
+        }
+        let stall = self.mem.stall_factor();
+        let accum_cycles = s as u64 * (k * k) as u64 * self.costs.conv_rmw * stall;
+        let rmw = taps * out_ch as u64;
+        self.mem.record_reads(rmw);
+        self.stats.weight_reads += rmw;
+        self.stats.accum_ops += rmw;
+        self.stats.membrane_accesses += 2 * rmw;
+
+        // Dense leak + integrate + threshold over every neuron, every step.
+        let fired = {
+            let mut fired = 0usize;
+            let beta = self.lif.beta;
+            let theta = self.lif.theta;
+            for oc in 0..out_ch {
+                let bias = b[oc];
+                let base = oc * fmap;
+                let vs = &mut self.lif.v[base..base + fmap];
+                let accs = &self.acc[base..base + fmap];
+                let spks = &mut self.spike_buf[base..base + fmap];
+                for ((v, &a), sp) in vs.iter_mut().zip(accs).zip(spks.iter_mut()) {
+                    let v_new = beta * *v + a + bias;
+                    let spike = v_new >= theta;
+                    *v = if spike { v_new - theta } else { v_new };
+                    *sp = spike;
+                    fired += spike as usize;
+                }
+            }
+            fired
+        };
+        // unconditional dense accumulator clear
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        let touched_per_ch = self.touched.len() as u64;
+        for &pos in &self.touched {
+            self.touched_flag[pos as usize] = false;
+        }
+        let activate_cycles = touched_per_ch * self.costs.act_conv
+            + fired as u64 * self.costs.conv_emit;
+        self.stats.activations += touched_per_ch * out_ch as u64;
+
+        let phases = PhaseCycles {
+            compress: comp_cycles,
+            accumulate: accum_cycles,
+            activate: activate_cycles,
+            overhead: self.costs.phase_overhead,
+        };
+        out.fill_from_bools(&self.spike_buf[..out_ch * fmap]);
+        self.stats.add_step(&phases, s, fired);
+        self.addr_buf = addrs;
+        phases
+    }
+
+    fn step_pool(&mut self, input: &BitVec, out: &mut BitVec) -> PhaseCycles {
+        let (ch, size, h, w_) = match self.layer {
+            Layer::Pool {
+                ch,
+                size,
+                height,
+                width,
+            } => (ch, size, height, width),
+            _ => unreachable!(),
+        };
+        let (oh, ow) = (h / size, w_ / size);
+        out.reset(ch * oh * ow);
+        let mut s_in = 0usize;
+        for idx in input.iter_ones() {
+            s_in += 1;
+            let c = idx / (h * w_);
+            let y = (idx % (h * w_)) / w_;
+            let x = idx % w_;
+            let (py, px) = (y / size, x / size);
+            if py < oh && px < ow {
+                out.set(c * oh * ow + py * ow + px);
+            }
+        }
+        let fired = out.count_ones();
+        let phases = PhaseCycles {
+            compress: 0,
+            accumulate: 0,
+            activate: s_in as u64 * self.costs.pool_per_spike,
+            overhead: self.costs.phase_overhead,
+        };
+        self.stats.add_step(&phases, s_in, fired);
+        phases
+    }
+}
+
+/// The scalar reference network simulator: `ScalarLayerSim`s driven by the
+/// same pipelined finish-time recurrence as `sim::Engine` (via
+/// [`advance_finish`]), with per-step input cloning — the pre-refactor run
+/// loop shape, kept as the whole-network differential oracle.
+pub struct ScalarNetworkSim {
+    pub net: NetDef,
+    pub layers: Vec<ScalarLayerSim>,
+}
+
+impl ScalarNetworkSim {
+    /// Build with explicit weights; `weights[i]` corresponds to the i-th
+    /// parametric layer, exactly like `NetworkSim::new`.
+    pub fn new(cfg: &ExperimentConfig, mut weights: Vec<LayerWeights>, costs: CostModel) -> Self {
+        let param = cfg.net.parametric_layers();
+        assert_eq!(
+            weights.len(),
+            param.len(),
+            "need one LayerWeights per parametric layer"
+        );
+        weights.reverse();
+        let mut layers = Vec::new();
+        let mut k = 0usize;
+        for (i, layer) in cfg.net.layers.iter().enumerate() {
+            let (lhr, blocks, w) = if layer.is_parametric() {
+                let lhr = cfg.hw.lhr[k];
+                let blocks = cfg.hw.mem_blocks.get(k).copied().unwrap_or(0);
+                k += 1;
+                (lhr, blocks, weights.pop().unwrap())
+            } else {
+                (1, 0, LayerWeights::None)
+            };
+            layers.push(ScalarLayerSim::new(
+                i,
+                layer.clone(),
+                lhr,
+                blocks,
+                cfg.hw.penc_width,
+                cfg.net.beta,
+                cfg.net.theta,
+                w,
+                costs.clone(),
+            ));
+        }
+        ScalarNetworkSim {
+            net: cfg.net.clone(),
+            layers,
+        }
+    }
+
+    /// Functional run recording every layer's output spike train. Returns
+    /// the decoded [`SimResult`] plus per-layer traces, shaped exactly
+    /// like `NetworkSim::run_recording`.
+    pub fn run_recording(&mut self, input: &SpikeTrain) -> (SimResult, Vec<SpikeTrain>) {
+        let n_layers = self.layers.len();
+        let mut finish = vec![0u64; n_layers];
+        let mut serial = 0u64;
+        let mut traces: Vec<SpikeTrain> = vec![Vec::with_capacity(input.len()); n_layers];
+        let out_bits = self.net.layers.last().map(|l| l.output_bits()).unwrap_or(0);
+        let mut output_counts = vec![0u32; out_bits];
+        for step_train in input.iter() {
+            let mut x = step_train.clone();
+            let mut prev_finish = 0u64;
+            for (l, layer) in self.layers.iter_mut().enumerate() {
+                let (out, phases) = layer.step(&x);
+                serial += phases.total();
+                prev_finish = advance_finish(&mut finish[l], prev_finish, phases.total());
+                traces[l].push(out.clone());
+                x = out;
+            }
+            for idx in x.iter_ones() {
+                output_counts[idx] += 1;
+            }
+        }
+        let mut result = SimResult {
+            total_cycles: finish.last().copied().unwrap_or(0),
+            serial_cycles: serial,
+            per_layer: self.layers.iter().map(|l| l.stats.clone()).collect(),
+            t_steps: input.len(),
+            output_counts,
+            predicted_class: None,
+        };
+        result.decode(self.net.classes, self.net.population);
+        (result, traces)
+    }
+
+    /// Functional run without traces (decoded aggregate result only).
+    pub fn run(&mut self, input: &SpikeTrain) -> SimResult {
+        self.run_recording(input).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+    use crate::sim::{random_spike_train, NetworkSim};
+    use crate::snn::fc_net;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scalar_oracle_matches_engine_on_a_small_fc_net() {
+        let net = fc_net("tiny", "mnist", &[32, 16, 8], 4, 2, 0.9, 6);
+        let cfg = ExperimentConfig::new(net, HwConfig::with_lhr(vec![2, 1])).unwrap();
+        let mut rng = Rng::new(5);
+        let input = random_spike_train(32, 6, 0.3, &mut rng);
+        let mut fast = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let (fr, ft) = fast.run_recording(&input);
+        let weights: Vec<LayerWeights> = {
+            let mut wr = Rng::new(7);
+            cfg.net
+                .parametric_layers()
+                .iter()
+                .map(|&i| crate::sim::random_weights(&cfg.net.layers[i], &mut wr))
+                .collect()
+        };
+        let mut oracle = ScalarNetworkSim::new(&cfg, weights, CostModel::default());
+        let (or, ot) = oracle.run_recording(&input);
+        assert_eq!(fr.total_cycles, or.total_cycles);
+        assert_eq!(fr.serial_cycles, or.serial_cycles);
+        assert_eq!(fr.output_counts, or.output_counts);
+        assert_eq!(fr.predicted_class, or.predicted_class);
+        assert_eq!(ft, ot);
+    }
+}

@@ -1,0 +1,410 @@
+//! Deterministic fixed-seed throughput harness — the `bench` CLI
+//! subcommand behind the repo's machine-readable perf trajectory.
+//!
+//! Every run drives the exact same seeded workloads (net1–net5 functional
+//! spike-train simulation, the sharded batched serve runtime, and an
+//! `explore` batch) and emits `BENCH_sim.json`: steps/sec, samples/sec
+//! and simulated-cycles/sec per net plus serve and explore throughput.
+//! CI runs `bench --smoke`, validates the emitted document against
+//! [`validate`], and archives it as an artifact, so hot-path speedups
+//! (and regressions) accumulate as comparable numbers instead of
+//! unverifiable claims.
+//!
+//! The *workload* is deterministic (fixed seeds end to end); only the
+//! wall-clock timings vary by host. Schema: [`BENCH_SCHEMA`].
+
+use crate::config::{ExperimentConfig, HwConfig};
+use crate::dse::{ExploreConfig, Explorer, Objective};
+use crate::resources::EstimateCache;
+use crate::runtime::serve::{synthetic_load, LoadSpec, ServeOptions, ServeRuntime};
+use crate::runtime::BatchPolicy;
+use crate::sim::{random_spike_train, CostModel, NetworkSim};
+use crate::snn::{table1_net, NetDef};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::hint::black_box;
+use std::path::Path;
+use std::time::Instant;
+
+/// Version tag carried in every `BENCH_sim.json` (`schema` field).
+pub const BENCH_SCHEMA: &str = "snn-dse-bench/v1";
+
+/// Knobs of one bench run.
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    /// Workload seed (inputs, weights, serve load, explore stream).
+    pub seed: u64,
+    /// Tiny fixed workload for CI: two nets, short trains, few requests.
+    pub smoke: bool,
+    /// Override the per-net sim repetition count (None = mode default).
+    pub iters: Option<usize>,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions {
+            seed: 42,
+            smoke: false,
+            iters: None,
+        }
+    }
+}
+
+/// Time `iters` functional inferences of `net` (fixed seed, input spike
+/// probability `rate`) and return the per-net JSON record.
+pub fn bench_net_sim(net: &NetDef, lhr: Vec<usize>, iters: usize, seed: u64, rate: f64) -> Json {
+    let cfg =
+        ExperimentConfig::new(net.clone(), HwConfig::with_lhr(lhr)).expect("valid bench config");
+    let mut rng = Rng::new(seed);
+    let input = random_spike_train(net.input_bits, net.t_steps, rate, &mut rng);
+    let mut sim = NetworkSim::with_random_weights(&cfg, seed ^ 0xBE7C, CostModel::default());
+    // warmup run grows every reused buffer and pins the simulated cycles
+    sim.reset();
+    let total_cycles = sim.run(&input).total_cycles;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        sim.reset();
+        black_box(sim.run(black_box(&input)));
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let steps = (net.t_steps * iters) as f64;
+    Json::obj(vec![
+        ("net", Json::Str(net.name.clone())),
+        ("t_steps", Json::Num(net.t_steps as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("input_rate", Json::Num(rate)),
+        ("total_cycles", Json::Num(total_cycles as f64)),
+        ("steps_per_sec", Json::Num(steps / elapsed)),
+        ("samples_per_sec", Json::Num(iters as f64 / elapsed)),
+        (
+            "sim_cycles_per_sec",
+            Json::Num(total_cycles as f64 * iters as f64 / elapsed),
+        ),
+    ])
+}
+
+/// Serve-runtime throughput under the standard seeded Poisson load.
+pub fn bench_serve(seed: u64, smoke: bool) -> Json {
+    let net = table1_net("net1");
+    let cfg = ExperimentConfig::new(net.clone(), HwConfig::with_lhr(vec![4, 8, 8]))
+        .expect("valid serve bench config");
+    let clock_hz = cfg.hw.clock_hz;
+    let shards = if smoke { 2 } else { 4 };
+    let n_requests = if smoke { 32 } else { 256 };
+    let spec = LoadSpec {
+        n_requests,
+        rate_rps: 2_000.0,
+        input_rate: 0.1,
+        seed,
+    };
+    let requests = synthetic_load(&net, clock_hz, &spec);
+    let opts = ServeOptions {
+        shards,
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait_cycles: (500.0 * clock_hz / 1e6) as u64,
+        },
+        weight_seed: 7,
+    };
+    let rt = ServeRuntime::new(cfg, CostModel::default(), opts).expect("valid serve options");
+    let report = rt.run(requests);
+    Json::obj(vec![
+        ("net", Json::Str("net1".into())),
+        ("shards", Json::Num(shards as f64)),
+        ("requests", Json::Num(n_requests as f64)),
+        (
+            "samples_per_sec",
+            Json::Num(n_requests as f64 / report.wall_seconds.max(1e-9)),
+        ),
+        ("sim_throughput_rps", Json::Num(report.throughput_rps)),
+        ("p50_us", Json::Num(report.latency.p50_us)),
+        ("p99_us", Json::Num(report.latency.p99_us)),
+    ])
+}
+
+/// Explore-batch throughput: seeded-annealing rounds over the net1
+/// lattice through the shared estimate cache.
+pub fn bench_explore(seed: u64, smoke: bool) -> Result<Json> {
+    let net = table1_net("net1");
+    let rounds = if smoke { 2 } else { 6 };
+    let batch = 8usize;
+    let cfg = ExploreConfig {
+        objectives: Objective::DEFAULT.to_vec(),
+        seed,
+        rounds,
+        batch,
+        max_lhr: 32,
+        threads: 4,
+        checkpoint: None,
+        checkpoint_every: 0,
+    };
+    let mut explorer = Explorer::new(&net, cfg)?;
+    let cache = EstimateCache::new();
+    let t0 = Instant::now();
+    explorer.run_with(&net, &CostModel::default(), &cache, |_| {})?;
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let configs = explorer.evaluated().len();
+    Ok(Json::obj(vec![
+        ("net", Json::Str("net1".into())),
+        ("rounds", Json::Num(rounds as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("configs", Json::Num(configs as f64)),
+        ("configs_per_sec", Json::Num(configs as f64 / elapsed)),
+        ("frontier", Json::Num(explorer.frontier().len() as f64)),
+    ]))
+}
+
+/// Per-net sim workloads of one mode: `(net, lhr, default_iters, rate)`.
+fn sim_specs(smoke: bool) -> Vec<(NetDef, Vec<usize>, usize, f64)> {
+    if smoke {
+        // one FC and one conv topology, trimmed spike trains
+        let mut net5 = table1_net("net5");
+        net5.t_steps = 6;
+        vec![
+            (table1_net("net1"), vec![1, 1, 1], 4, 0.12),
+            (net5, vec![1, 1, 1, 1, 1], 1, 0.02),
+        ]
+    } else {
+        let mut specs: Vec<(NetDef, Vec<usize>, usize, f64)> = ["net1", "net2", "net3", "net4"]
+            .iter()
+            .map(|&name| {
+                let net = table1_net(name);
+                let lhr = vec![1; net.parametric_layers().len()];
+                (net, lhr, 10, 0.12)
+            })
+            .collect();
+        // net5 at its native T=124 with DVS-like input sparsity
+        specs.push((table1_net("net5"), vec![1, 1, 1, 1, 1], 2, 0.02));
+        specs
+    }
+}
+
+/// Run the full harness and return the `BENCH_sim.json` document.
+pub fn run(opts: &BenchOptions) -> Result<Json> {
+    // the report stores the seed as a JSON number (f64): beyond 2^53 it
+    // would silently round and the recorded seed could no longer replay
+    // the workload it actually measured — refuse instead of corrupting
+    anyhow::ensure!(
+        opts.seed < (1u64 << 53),
+        "bench: seed {} exceeds 2^53-1 and cannot round-trip through the JSON report",
+        opts.seed
+    );
+    let mode = if opts.smoke { "smoke" } else { "full" };
+    eprintln!("[bench] {mode} run, seed {}", opts.seed);
+    let mut nets = Vec::new();
+    for (net, lhr, default_iters, rate) in sim_specs(opts.smoke) {
+        let iters = opts.iters.unwrap_or(default_iters).max(1);
+        let rec = bench_net_sim(&net, lhr, iters, opts.seed, rate);
+        eprintln!(
+            "[bench] sim {}: {:.0} steps/s, {:.2} samples/s, {:.3e} sim-cycles/s",
+            net.name,
+            rec.at("steps_per_sec").as_f64().unwrap_or(0.0),
+            rec.at("samples_per_sec").as_f64().unwrap_or(0.0),
+            rec.at("sim_cycles_per_sec").as_f64().unwrap_or(0.0),
+        );
+        nets.push(rec);
+    }
+    let serve = bench_serve(opts.seed, opts.smoke);
+    eprintln!(
+        "[bench] serve net1: {:.1} samples/s wall, p99 {:.1} us simulated",
+        serve.at("samples_per_sec").as_f64().unwrap_or(0.0),
+        serve.at("p99_us").as_f64().unwrap_or(0.0),
+    );
+    let explore = bench_explore(opts.seed, opts.smoke)?;
+    eprintln!(
+        "[bench] explore net1: {:.1} configs/s ({} evaluated)",
+        explore.at("configs_per_sec").as_f64().unwrap_or(0.0),
+        explore.at("configs").as_u64().unwrap_or(0),
+    );
+    Ok(Json::obj(vec![
+        ("schema", Json::Str(BENCH_SCHEMA.into())),
+        ("seed", Json::Num(opts.seed as f64)),
+        ("smoke", Json::Bool(opts.smoke)),
+        ("sim", Json::obj(vec![("nets", Json::Arr(nets))])),
+        ("serve", serve),
+        ("explore", explore),
+    ]))
+}
+
+/// Atomic write of the report (temp file + rename, like the explore
+/// checkpoints) so a crashed run never leaves a truncated document.
+pub fn write_report(report: &Json, path: &Path) -> Result<()> {
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, report.to_string_pretty())?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+fn expect_pos(j: &Json, ctx: &str, key: &str) -> std::result::Result<(), String> {
+    match j.at(key).as_f64() {
+        Some(v) if v.is_finite() && v > 0.0 => Ok(()),
+        Some(v) => Err(format!("{ctx}.{key} must be positive and finite, got {v}")),
+        None => Err(format!("{ctx}.{key} must be a number")),
+    }
+}
+
+/// Validate a `BENCH_sim.json` document against the v1 schema. Returns a
+/// human-readable description of the first violation.
+pub fn validate(j: &Json) -> std::result::Result<(), String> {
+    if j.at("schema").as_str() != Some(BENCH_SCHEMA) {
+        return Err(format!("schema must be the string \"{BENCH_SCHEMA}\""));
+    }
+    if j.at("seed").as_f64().is_none() {
+        return Err("seed must be a number".into());
+    }
+    if j.at("smoke").as_bool().is_none() {
+        return Err("smoke must be a boolean".into());
+    }
+    let nets = j
+        .at("sim")
+        .at("nets")
+        .as_arr()
+        .ok_or_else(|| "sim.nets must be an array".to_string())?;
+    if nets.is_empty() {
+        return Err("sim.nets must not be empty".into());
+    }
+    for rec in nets {
+        let name = rec
+            .at("net")
+            .as_str()
+            .ok_or_else(|| "sim.nets[].net must be a string".to_string())?;
+        let ctx = format!("sim.nets[{name}]");
+        for key in [
+            "t_steps",
+            "iters",
+            "total_cycles",
+            "steps_per_sec",
+            "samples_per_sec",
+            "sim_cycles_per_sec",
+        ] {
+            expect_pos(rec, &ctx, key)?;
+        }
+    }
+    let serve = j.at("serve");
+    for key in [
+        "shards",
+        "requests",
+        "samples_per_sec",
+        "sim_throughput_rps",
+        "p50_us",
+        "p99_us",
+    ] {
+        expect_pos(serve, "serve", key)?;
+    }
+    let explore = j.at("explore");
+    for key in ["rounds", "batch", "configs", "configs_per_sec", "frontier"] {
+        expect_pos(explore, "explore", key)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::fc_net;
+
+    fn minimal_valid_doc() -> Json {
+        let net = Json::obj(vec![
+            ("net", Json::Str("net1".into())),
+            ("t_steps", Json::Num(25.0)),
+            ("iters", Json::Num(2.0)),
+            ("total_cycles", Json::Num(1000.0)),
+            ("steps_per_sec", Json::Num(50.0)),
+            ("samples_per_sec", Json::Num(2.0)),
+            ("sim_cycles_per_sec", Json::Num(2000.0)),
+        ]);
+        Json::obj(vec![
+            ("schema", Json::Str(BENCH_SCHEMA.into())),
+            ("seed", Json::Num(42.0)),
+            ("smoke", Json::Bool(true)),
+            ("sim", Json::obj(vec![("nets", Json::Arr(vec![net]))])),
+            (
+                "serve",
+                Json::obj(vec![
+                    ("shards", Json::Num(2.0)),
+                    ("requests", Json::Num(32.0)),
+                    ("samples_per_sec", Json::Num(10.0)),
+                    ("sim_throughput_rps", Json::Num(100.0)),
+                    ("p50_us", Json::Num(200.0)),
+                    ("p99_us", Json::Num(300.0)),
+                ]),
+            ),
+            (
+                "explore",
+                Json::obj(vec![
+                    ("rounds", Json::Num(2.0)),
+                    ("batch", Json::Num(8.0)),
+                    ("configs", Json::Num(16.0)),
+                    ("configs_per_sec", Json::Num(4.0)),
+                    ("frontier", Json::Num(3.0)),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn schema_accepts_valid_and_roundtripped_docs() {
+        let doc = minimal_valid_doc();
+        validate(&doc).unwrap();
+        // survives serialization (what CI actually checks after the write)
+        let back = Json::parse(&doc.to_string_pretty()).unwrap();
+        validate(&back).unwrap();
+    }
+
+    #[test]
+    fn schema_rejects_missing_or_bad_fields() {
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("schema".into(), Json::Str("wrong/v0".into()));
+        }
+        assert!(validate(&doc).unwrap_err().contains("schema"));
+
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("sim".into(), Json::obj(vec![("nets", Json::Arr(vec![]))]));
+        }
+        assert!(validate(&doc).unwrap_err().contains("empty"));
+
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            let serve = Json::obj(vec![("shards", Json::Num(0.0))]);
+            m.insert("serve".into(), serve);
+        }
+        assert!(validate(&doc).is_err());
+    }
+
+    #[test]
+    fn oversized_seed_is_rejected_not_rounded() {
+        let opts = BenchOptions {
+            seed: (1u64 << 53) + 1,
+            smoke: true,
+            iters: Some(1),
+        };
+        let err = run(&opts).unwrap_err().to_string();
+        assert!(err.contains("2^53"), "got: {err}");
+    }
+
+    #[test]
+    fn bench_net_sim_reports_positive_rates_on_a_tiny_net() {
+        let net = fc_net("tiny", "mnist", &[32, 16, 8], 4, 2, 0.9, 5);
+        let rec = bench_net_sim(&net, vec![1, 1], 2, 7, 0.2);
+        for key in ["steps_per_sec", "samples_per_sec", "sim_cycles_per_sec"] {
+            let v = rec.at(key).as_f64().unwrap();
+            assert!(v > 0.0 && v.is_finite(), "{key} = {v}");
+        }
+        assert_eq!(rec.at("t_steps").as_usize(), Some(5));
+    }
+
+    #[test]
+    fn write_report_is_atomic_and_parseable() {
+        let dir = std::env::temp_dir().join("snn_dse_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_sim.json");
+        let doc = minimal_valid_doc();
+        write_report(&doc, &path).unwrap();
+        let back = Json::parse_file(&path).unwrap();
+        validate(&back).unwrap();
+        assert!(!path.with_extension("json.tmp").exists());
+    }
+}

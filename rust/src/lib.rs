@@ -23,7 +23,10 @@
 //!   paper-shaped reports).
 //!
 //! Cross-cutting: [`data`] (calibrated activity models), [`baselines`]
-//! (prior-work anchors and the sparsity-oblivious latency bound),
+//! (prior-work anchors, the sparsity-oblivious latency bound, and the
+//! scalar reference step the optimized hot path is fuzzed against),
+//! [`bench`] (the fixed-seed throughput harness behind the `bench`
+//! subcommand, emitting the schema-checked `BENCH_sim.json`),
 //! [`validate`] + [`runtime`] (spike-to-spike validation against JAX
 //! traces, the optional PJRT execution path, and the sharded
 //! dynamic-batching serve runtime in [`runtime::serve`]), and [`util`]
@@ -57,6 +60,7 @@
 
 pub mod arch;
 pub mod baselines;
+pub mod bench;
 pub mod config;
 pub mod data;
 pub mod dse;

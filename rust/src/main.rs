@@ -6,6 +6,7 @@
 //!   dse          LHR sweep with Pareto frontier (Fig. 6 data)
 //!   explore      multi-objective Pareto exploration with checkpoint/resume
 //!   serve        sharded dynamic-batching serve runtime under synthetic load
+//!   bench        fixed-seed throughput harness emitting BENCH_sim.json
 //!   table1       reproduce the paper's Table I rows
 //!   sweep-t-pcr  spike-train length x population sweep (Fig. 7b)
 //!   validate     spike-to-spike validation vs JAX traces / PJRT HLO
@@ -23,7 +24,7 @@ use snn_dse::util::{commas, kfmt};
 use snn_dse::{runtime, validate};
 use std::path::PathBuf;
 
-const USAGE: &str = "snn-dse <simulate|resources|dse|explore|serve|table1|sweep-t-pcr|validate|infer|firing|generate|auto|dynamic> [options]
+const USAGE: &str = "snn-dse <simulate|resources|dse|explore|serve|bench|table1|sweep-t-pcr|validate|infer|firing|generate|auto|dynamic> [options]
   common options:
     --net <net1..net5>          network (default net1)
     --lhr <a,b,c,...>           per-layer logical-to-hardware ratios
@@ -61,6 +62,10 @@ const USAGE: &str = "snn-dse <simulate|resources|dse|explore|serve|table1|sweep-
     --weight-seed <n>           replica weight seed (default 7)
     --smoke                     tiny deterministic load for CI (32 requests,
                                 2 shards)
+  bench options:
+    --smoke                     tiny fixed workload for CI (schema-checked)
+    --iters <n>                 override per-net sim repetitions
+    --out <path>                report path (default BENCH_sim.json)
   sweep-t-pcr options:
     --t-values <4,6,...>        spike-train lengths (default 4,6,8,10,15,20,25)
     --pops <1,10,30>            population sizes";
@@ -74,6 +79,7 @@ fn main() {
         "dse" => cmd_dse(&args),
         "explore" => cmd_explore(&args),
         "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
         "table1" => cmd_table1(&args),
         "sweep-t-pcr" => cmd_sweep_t_pcr(&args),
         "validate" => cmd_validate(&args),
@@ -382,6 +388,27 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     if smoke {
         println!("SMOKE OK ({} requests served)", report.records.len());
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let opts = snn_dse::bench::BenchOptions {
+        seed: args.usize_or("seed", 42) as u64,
+        smoke: args.flag("smoke"),
+        iters: args.get("iters").map(|v| {
+            v.parse()
+                .unwrap_or_else(|_| panic!("--iters expects an integer, got '{v}'"))
+        }),
+    };
+    let report = snn_dse::bench::run(&opts)?;
+    snn_dse::bench::validate(&report)
+        .map_err(|e| anyhow::anyhow!("emitted bench report violates the schema: {e}"))?;
+    let out = PathBuf::from(args.get_or("out", "BENCH_sim.json"));
+    snn_dse::bench::write_report(&report, &out)?;
+    println!("wrote {} (schema {})", out.display(), snn_dse::bench::BENCH_SCHEMA);
+    if opts.smoke {
+        println!("SMOKE OK (bench report schema-valid)");
     }
     Ok(())
 }

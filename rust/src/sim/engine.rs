@@ -140,9 +140,8 @@ impl Probe for BatchDecodeProbe {
         if self.counts.len() != out.len() {
             self.counts = vec![0; out.len()];
         }
-        for i in out.iter_ones() {
-            self.counts[i] += 1;
-        }
+        let counts = &mut self.counts;
+        out.for_each_one(|i| counts[i] += 1);
         if (t + 1) % self.t_per_sample == 0 {
             self.predictions
                 .push(decode_counts(&self.counts, self.classes, self.population));
@@ -338,9 +337,7 @@ impl Engine {
                 }
             }
             if functional {
-                for idx in self.cur.iter_ones() {
-                    output_counts[idx] += 1;
-                }
+                self.cur.for_each_one(|idx| output_counts[idx] += 1);
                 probe.on_network_output(t, &self.cur);
                 if let Some(&f) = self.finish.last() {
                     probe.on_step_finish(t, f);

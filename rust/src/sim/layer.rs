@@ -8,6 +8,17 @@
 //! charged cycles per the `CostModel`. A cost-only path
 //! (`step_cost_only`) supports activity-driven simulation where only spike
 //! *counts* are known (used for calibrated DVS workloads and fast DSE).
+//!
+//! The functional step is the simulator's hot path and is event-driven
+//! end to end: input spikes are decoded by raw-`u64` word scans
+//! (`BitVec::for_each_one`), FC weight rows accumulate four-at-a-time
+//! through bounds-check-free slices in the scalar oracle's exact f32
+//! order, and the conv activation takes a touched-set sparse walk with
+//! lazy leak replay behind a per-step density threshold
+//! (`CONV_SPARSE_DENSITY_DIV`) instead of an unconditional dense sweep +
+//! dense accumulator clear. All of it is byte-identical to
+//! the preserved scalar step in [`crate::baselines::scalar`] — enforced
+//! by the differential fuzz suite (`rust/tests/fuzz_differential.rs`).
 
 use crate::sim::costs::CostModel;
 use crate::sim::memory::MemoryUnit;
@@ -46,6 +57,20 @@ pub struct LayerSim {
     addr_buf: Vec<u32>,
     /// Scratch: output spikes as bools before packing.
     spike_buf: Vec<bool>,
+    /// Conv lazy-leak bookkeeping for the touched-set sparse activation
+    /// path (see `step_conv`): per-fmap-position count of steps fully
+    /// applied, the layer's completed-step counter, positions whose
+    /// residual membrane (any channel) can fire without input next step,
+    /// and whether the last dense sweep left such a residual anywhere.
+    synced_steps: Vec<u64>,
+    steps_done: u64,
+    hot: Vec<u32>,
+    hot_scratch: Vec<u32>,
+    dense_residual: bool,
+    /// Sparse activation is legal at all: conv layer with all-zero biases,
+    /// `0 <= beta <= 1` and `theta > 0` — the regime where an untouched,
+    /// sub-threshold neuron provably cannot fire.
+    lazy_leak_ok: bool,
 }
 
 /// Sum over all feature-map positions of the number of in-range kernel
@@ -68,6 +93,45 @@ pub fn conv_clipped_taps_sum(kernel: usize, height: usize, width: usize) -> u64 
             .sum()
     };
     axis(height) * axis(width)
+}
+
+/// Visit one feature-map position on the conv sparse activation path:
+/// replay `stale` deferred pure-leak steps (bit-identical to the oracle's
+/// dense updates on an untouched, bias-free position), then apply the
+/// current step's leak + integrate + threshold + soft reset for every
+/// output channel, setting fired bits in `out` directly. Returns the
+/// spike count and whether any channel's residual membrane can fire
+/// without input next step (`v >= theta`).
+#[inline]
+fn lazy_visit_pos(
+    v: &mut [f32],
+    acc: &[f32],
+    out: &mut BitVec,
+    p: usize,
+    (fmap, out_ch): (usize, usize),
+    (beta, theta): (f32, f32),
+    stale: u64,
+) -> (usize, bool) {
+    let mut fired = 0usize;
+    let mut hot = false;
+    for oc in 0..out_ch {
+        let i = oc * fmap + p;
+        let mut vi = v[i];
+        for _ in 0..stale {
+            // the oracle's untouched-position update with acc = bias = 0
+            vi = beta * vi + 0.0 + 0.0;
+        }
+        let v_new = beta * vi + acc[i] + 0.0;
+        let spike = v_new >= theta;
+        vi = if spike { v_new - theta } else { v_new };
+        if spike {
+            out.set(i);
+            fired += 1;
+        }
+        hot |= vi >= theta;
+        v[i] = vi;
+    }
+    (fired, hot)
 }
 
 /// Panic unless `weights` matches `layer`'s shape exactly. A bias vector
@@ -122,6 +186,12 @@ fn validate_weights(index: usize, layer: &Layer, weights: &LayerWeights) {
 }
 
 impl LayerSim {
+    /// Density threshold for the conv sparse activation path and the
+    /// sparse accumulator clear: the event-driven walk wins while the
+    /// visited positions stay under `fmap / CONV_SPARSE_DENSITY_DIV`;
+    /// beyond that the linear channel-major sweep's cache behaviour wins.
+    const CONV_SPARSE_DENSITY_DIV: usize = 4;
+
     pub fn new(
         index: usize,
         layer: Layer,
@@ -145,6 +215,16 @@ impl LayerSim {
         };
         let mem = MemoryUnit::new(mem_blocks, nu.units, row_words, logical.max(1));
         let name = format!("{}{}", layer.kind_str(), index);
+        let fmap = match &layer {
+            Layer::Conv { height, width, .. } => height * width,
+            _ => 0,
+        };
+        let lazy_leak_ok = match (&layer, &weights) {
+            (Layer::Conv { .. }, LayerWeights::Conv { b, .. }) => {
+                b.iter().all(|&x| x == 0.0) && (0.0..=1.0).contains(&beta) && theta > 0.0
+            }
+            _ => false,
+        };
         LayerSim {
             nu,
             mem,
@@ -161,6 +241,12 @@ impl LayerSim {
             touched_flag: vec![false; if matches!(layer, Layer::Conv { .. }) { n_state } else { 0 }],
             addr_buf: Vec::new(),
             spike_buf: vec![false; n_state],
+            synced_steps: vec![0; fmap],
+            steps_done: 0,
+            hot: Vec::new(),
+            hot_scratch: Vec::new(),
+            dense_residual: false,
+            lazy_leak_ok,
             layer,
             weights,
         }
@@ -199,6 +285,12 @@ impl LayerSim {
             touched_flag: Vec::new(),
             addr_buf: Vec::new(),
             spike_buf: Vec::new(),
+            synced_steps: Vec::new(),
+            steps_done: 0,
+            hot: Vec::new(),
+            hot_scratch: Vec::new(),
+            dense_residual: false,
+            lazy_leak_ok: false,
             layer,
             weights: LayerWeights::None,
         }
@@ -206,10 +298,15 @@ impl LayerSim {
 
     /// Zero the functional state (membrane potentials + accumulators) but
     /// keep the accumulated statistics — the per-sample reset the batched
-    /// serving workload applies at sample boundaries.
+    /// serving workload applies at sample boundaries. Also rewinds the
+    /// conv lazy-leak bookkeeping so a fresh sample starts fully synced.
     pub fn reset_state(&mut self) {
         self.lif.reset();
         self.acc.iter_mut().for_each(|a| *a = 0.0);
+        self.steps_done = 0;
+        self.synced_steps.iter_mut().for_each(|s| *s = 0);
+        self.hot.clear();
+        self.dense_residual = false;
     }
 
     pub fn reset(&mut self) {
@@ -257,10 +354,29 @@ impl LayerSim {
             _ => panic!("fc layer without fc weights"),
         };
         debug_assert_eq!(w.len(), n_pre * n);
-        // Pairwise row accumulation halves accumulator read/write traffic
-        // (the FC hot loop is memory-bound on the weight rows; §Perf #4).
-        let mut it = addrs.chunks_exact(2);
-        for pair in &mut it {
+        // Four weight rows per pass over the accumulators, fused as two
+        // pairwise adds in sequence — element-wise the exact f32 operation
+        // order of the scalar oracle's back-to-back pairwise passes
+        // (`baselines::scalar`), so results stay bit-identical while the
+        // accumulator read/write traffic halves again. Slices elide
+        // bounds checks (§Perf #4).
+        let mut quads = addrs.chunks_exact(4);
+        for q in &mut quads {
+            let (a0, a1) = (q[0] as usize, q[1] as usize);
+            let (a2, a3) = (q[2] as usize, q[3] as usize);
+            let r0 = &w[a0 * n..a0 * n + n];
+            let r1 = &w[a1 * n..a1 * n + n];
+            let r2 = &w[a2 * n..a2 * n + n];
+            let r3 = &w[a3 * n..a3 * n + n];
+            for ((((acc, &w0), &w1), &w2), &w3) in
+                self.acc.iter_mut().zip(r0).zip(r1).zip(r2).zip(r3)
+            {
+                let t = *acc + (w0 + w1);
+                *acc = t + (w2 + w3);
+            }
+        }
+        let mut pairs = quads.remainder().chunks_exact(2);
+        for pair in &mut pairs {
             let (a0, a1) = (pair[0] as usize, pair[1] as usize);
             let r0 = &w[a0 * n..a0 * n + n];
             let r1 = &w[a1 * n..a1 * n + n];
@@ -268,7 +384,7 @@ impl LayerSim {
                 *acc += w0 + w1;
             }
         }
-        for &a in it.remainder() {
+        for &a in pairs.remainder() {
             let row = &w[a as usize * n..(a as usize + 1) * n];
             for (acc, &wv) in self.acc.iter_mut().zip(row) {
                 *acc += wv;
@@ -283,7 +399,11 @@ impl LayerSim {
 
         // Activate: serial LIF pass inside each NU (parallel across NUs).
         let fired = self.lif.activate(&self.acc, b, &mut self.spike_buf);
-        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        if s > 0 {
+            // with no input spikes the accumulators were never written, so
+            // the dense clear is skipped (values identical either way)
+            self.acc.iter_mut().for_each(|a| *a = 0.0);
+        }
         let activate_cycles = self.nu.per_unit() as u64 * self.costs.act_fc;
         self.stats.membrane_accesses += 2 * n as u64;
         self.stats.activations += n as u64;
@@ -318,8 +438,8 @@ impl LayerSim {
         let s = addrs.len();
         self.stats.penc_chunks += chunks_scanned;
 
-        let (wts, b) = match &self.weights {
-            LayerWeights::Conv { w, b } => (w.as_slice(), b.as_slice()),
+        let wts = match &self.weights {
+            LayerWeights::Conv { w, .. } => w.as_slice(),
             _ => panic!("conv layer without conv weights"),
         };
         let pad = (k - 1) / 2;
@@ -389,13 +509,83 @@ impl LayerSim {
         self.stats.accum_ops += rmw;
         self.stats.membrane_accesses += 2 * rmw;
 
-        // Dense leak (functional exactness vs the JAX oracle); the hardware
-        // applies leak lazily on touched neurons — cycles charged
-        // accordingly (touched positions per channel x channels-per-NU).
-        let fired = {
+        // Activation: touched-set sparse walk or dense channel-major sweep,
+        // chosen per step by a density threshold. Both produce spikes,
+        // cycles and stats **byte-identical** to the scalar oracle's dense
+        // pass (`baselines::scalar`, fuzzed in tests/fuzz_differential.rs).
+        // The sparse walk is legal only when a skipped neuron provably
+        // cannot fire (`lazy_leak_ok`: zero biases, 0 <= beta <= 1,
+        // theta > 0) and no untracked residual membrane sits at or above
+        // theta; the leak it defers is replayed one step at a time on the
+        // neuron's next visit, reproducing the oracle's f32 sequence.
+        let n_out = out_ch * fmap;
+        let beta = self.lif.beta;
+        let theta = self.lif.theta;
+        let use_sparse = self.lazy_leak_ok
+            && !self.dense_residual
+            && (self.touched.len() + self.hot.len()) * Self::CONV_SPARSE_DENSITY_DIV < fmap;
+        let fired = if use_sparse {
             let mut fired = 0usize;
-            let beta = self.lif.beta;
-            let theta = self.lif.theta;
+            out.reset(n_out);
+            for &pu in &self.touched {
+                let p = pu as usize;
+                let stale = self.steps_done - self.synced_steps[p];
+                let (f, hot) = lazy_visit_pos(
+                    &mut self.lif.v,
+                    &self.acc,
+                    out,
+                    p,
+                    (fmap, out_ch),
+                    (beta, theta),
+                    stale,
+                );
+                fired += f;
+                if hot {
+                    self.hot_scratch.push(pu);
+                }
+                self.synced_steps[p] = self.steps_done + 1;
+            }
+            // residual-hot carryover: positions that can fire without any
+            // input this step (soft-reset left some channel at >= theta)
+            let prev_hot = std::mem::take(&mut self.hot);
+            for &pu in &prev_hot {
+                let p = pu as usize;
+                if self.touched_flag[p] {
+                    continue; // already visited via the touched set
+                }
+                let stale = self.steps_done - self.synced_steps[p];
+                let (f, hot) = lazy_visit_pos(
+                    &mut self.lif.v,
+                    &self.acc,
+                    out,
+                    p,
+                    (fmap, out_ch),
+                    (beta, theta),
+                    stale,
+                );
+                fired += f;
+                if hot {
+                    self.hot_scratch.push(pu);
+                }
+                self.synced_steps[p] = self.steps_done + 1;
+            }
+            // next step's hot set; recycle the old allocation as scratch
+            self.hot = std::mem::take(&mut self.hot_scratch);
+            self.hot_scratch = prev_hot;
+            self.hot_scratch.clear();
+            self.dense_residual = false;
+            fired
+        } else {
+            // dense sweep: first bring lazily-skipped positions current
+            if self.lazy_leak_ok {
+                self.sync_all_positions(fmap, out_ch, beta);
+            }
+            let b = match &self.weights {
+                LayerWeights::Conv { b, .. } => b.as_slice(),
+                _ => unreachable!(),
+            };
+            let mut fired = 0usize;
+            let mut residual = false;
             for oc in 0..out_ch {
                 // shape validated at construction: exactly one bias per
                 // output channel, so no silent zero-fill here
@@ -406,17 +596,40 @@ impl LayerSim {
                 let vs = &mut self.lif.v[base..base + fmap];
                 let accs = &self.acc[base..base + fmap];
                 let spks = &mut self.spike_buf[base..base + fmap];
-                for ((v, &a), s) in vs.iter_mut().zip(accs).zip(spks.iter_mut()) {
+                for ((v, &a), sp) in vs.iter_mut().zip(accs).zip(spks.iter_mut()) {
                     let v_new = beta * *v + a + bias;
                     let spike = v_new >= theta;
-                    *v = if spike { v_new - theta } else { v_new };
-                    *s = spike;
+                    let stored = if spike { v_new - theta } else { v_new };
+                    *v = stored;
+                    *sp = spike;
                     fired += spike as usize;
+                    residual |= stored >= theta;
                 }
             }
+            if self.lazy_leak_ok {
+                let next = self.steps_done + 1;
+                self.synced_steps.iter_mut().for_each(|sy| *sy = next);
+            }
+            self.hot.clear();
+            self.dense_residual = residual;
+            out.fill_from_bools(&self.spike_buf[..n_out]);
             fired
         };
-        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        self.steps_done += 1;
+
+        // Accumulator clear: only touched positions were ever written, so
+        // clear just those while they are sparse; fall back to the linear
+        // wipe once the touched set covers a sizable fraction of the fmap.
+        if self.touched.len() * Self::CONV_SPARSE_DENSITY_DIV < fmap {
+            for &pu in &self.touched {
+                let p = pu as usize;
+                for oc in 0..out_ch {
+                    self.acc[oc * fmap + p] = 0.0;
+                }
+            }
+        } else {
+            self.acc.iter_mut().for_each(|a| *a = 0.0);
+        }
         let touched_per_ch = self.touched.len() as u64;
         for &pos in &self.touched {
             self.touched_flag[pos as usize] = false;
@@ -433,10 +646,30 @@ impl LayerSim {
             activate: activate_cycles,
             overhead: self.costs.phase_overhead,
         };
-        out.fill_from_bools(&self.spike_buf[..out_ch * fmap]);
         self.stats.add_step(&phases, s, fired);
         self.addr_buf = addrs;
         phases
+    }
+
+    /// Bring every lazily-skipped feature-map position current before a
+    /// dense sweep: replay the pure-leak steps the sparse path deferred,
+    /// bit-identical to the oracle's dense updates on untouched, bias-free
+    /// positions. No-op when nothing is stale.
+    fn sync_all_positions(&mut self, fmap: usize, out_ch: usize, beta: f32) {
+        let steps_done = self.steps_done;
+        for (p, synced) in self.synced_steps.iter_mut().enumerate() {
+            let stale = steps_done - *synced;
+            if stale == 0 {
+                continue;
+            }
+            for oc in 0..out_ch {
+                let v = &mut self.lif.v[oc * fmap + p];
+                for _ in 0..stale {
+                    *v = beta * *v + 0.0 + 0.0;
+                }
+            }
+            *synced = steps_done;
+        }
     }
 
     // ---- POOL ---------------------------------------------------------------
@@ -453,7 +686,9 @@ impl LayerSim {
         let (oh, ow) = (h / size, w_ / size);
         out.reset(ch * oh * ow);
         let mut s_in = 0usize;
-        for idx in input.iter_ones() {
+        // word-level scan: each spike routes combinationally to its output
+        // window; rows/columns beyond the last full window are clipped
+        input.for_each_one(|idx| {
             s_in += 1;
             let c = idx / (h * w_);
             let y = (idx % (h * w_)) / w_;
@@ -462,7 +697,7 @@ impl LayerSim {
             if py < oh && px < ow {
                 out.set(c * oh * ow + py * ow + px);
             }
-        }
+        });
         let fired = out.count_ones();
         let phases = PhaseCycles {
             compress: 0,
@@ -870,6 +1105,222 @@ mod tests {
         // 16 spikes x (100/16 mean taps) x 2 channels = 200 (integer math)
         assert_eq!(l.stats.weight_reads, 16 * 100 * 2 / 16);
         assert!(l.stats.weight_reads < (16 * 9 * 2) as u64, "below the old upper bound");
+    }
+
+    #[test]
+    fn pool_non_divisible_dims_clip_partial_windows() {
+        // 5x5 input, 2x2 windows: output is 2x2 and the 5th row/column
+        // (the `py < oh` / `px < ow` clip branch) is dropped entirely.
+        let mut l = LayerSim::new(
+            1,
+            Layer::Pool {
+                ch: 1,
+                size: 2,
+                height: 5,
+                width: 5,
+            },
+            1,
+            0,
+            64,
+            0.9,
+            1.0,
+            LayerWeights::None,
+            CostModel::default(),
+        );
+        let mut input = BitVec::zeros(25);
+        input.set(0); // (0,0) -> window (0,0)
+        input.set(4); // (0,4): px = 2 clipped
+        input.set(23); // (4,3): py = 2 clipped
+        input.set(24); // (4,4): both clipped
+        let (out, phases) = l.step(&input);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out.count_ones(), 1);
+        assert!(out.get(0));
+        // clipped spikes still cost routing cycles: 4 x pool_per_spike
+        assert_eq!(phases.activate, 4 * CostModel::default().pool_per_spike);
+        assert_eq!(phases.compress, 0);
+        assert_eq!(phases.accumulate, 0);
+        assert_eq!(l.stats.in_spikes, 4);
+        assert_eq!(l.stats.out_spikes, 1);
+        assert_eq!(l.stats.max_shift_depth, 4);
+    }
+
+    #[test]
+    fn pool_all_spikes_input_saturates_every_window() {
+        for (h, w, size) in [(5usize, 5usize, 2usize), (6, 4, 3), (7, 7, 2)] {
+            let mut l = LayerSim::new(
+                1,
+                Layer::Pool {
+                    ch: 2,
+                    size,
+                    height: h,
+                    width: w,
+                },
+                1,
+                0,
+                64,
+                0.9,
+                1.0,
+                LayerWeights::None,
+                CostModel::default(),
+            );
+            let bits = 2 * h * w;
+            let input = BitVec::from_bools(&vec![true; bits]);
+            let (out, phases) = l.step(&input);
+            let (oh, ow) = (h / size, w / size);
+            assert_eq!(out.len(), 2 * oh * ow, "h={h} w={w} size={size}");
+            // every window holds at least one spike -> all outputs fire
+            assert_eq!(out.count_ones(), 2 * oh * ow, "h={h} w={w} size={size}");
+            // cycle accounting charges every input spike, clipped or not
+            assert_eq!(
+                phases.activate,
+                bits as u64 * CostModel::default().pool_per_spike
+            );
+            assert_eq!(l.stats.in_spikes, bits as u64);
+            assert_eq!(l.stats.out_spikes, (2 * oh * ow) as u64);
+        }
+    }
+
+    /// Drive the optimized layer and the preserved scalar oracle through
+    /// the same input sequence; outputs, phases, and stats must match
+    /// byte-for-byte at every step.
+    fn assert_layer_matches_oracle(
+        layer: Layer,
+        weights: LayerWeights,
+        beta: f32,
+        theta: f32,
+        inputs: &[BitVec],
+    ) {
+        use crate::baselines::scalar::ScalarLayerSim;
+        let mut fast = LayerSim::new(
+            0,
+            layer.clone(),
+            1,
+            0,
+            64,
+            beta,
+            theta,
+            weights.clone(),
+            CostModel::default(),
+        );
+        let mut oracle =
+            ScalarLayerSim::new(0, layer, 1, 0, 64, beta, theta, weights, CostModel::default());
+        for (t, input) in inputs.iter().enumerate() {
+            let (fo, fp) = fast.step(input);
+            let (oo, op) = oracle.step(input);
+            assert_eq!(fo, oo, "step {t}: output spikes diverge");
+            assert_eq!(fp, op, "step {t}: phase cycles diverge");
+        }
+        assert_eq!(
+            format!("{:?}", fast.stats),
+            format!("{:?}", oracle.stats),
+            "stats diverge"
+        );
+    }
+
+    fn conv_8x8_layer(out_ch: usize) -> Layer {
+        Layer::Conv {
+            in_ch: 1,
+            out_ch,
+            kernel: 3,
+            height: 8,
+            width: 8,
+        }
+    }
+
+    fn conv_weights(out_ch: usize, scale: f32, bias: f32, seed: u64) -> LayerWeights {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        LayerWeights::Conv {
+            w: (0..9 * out_ch).map(|_| (rng.normal() as f32) * scale).collect(),
+            b: vec![bias; out_ch],
+        }
+    }
+
+    #[test]
+    fn conv_sparse_path_matches_oracle_on_sparse_steps() {
+        // single-spike steps keep the touched set far below the density
+        // threshold, so the lazy touched-set walk runs every step
+        let mut inputs = Vec::new();
+        for t in 0..10usize {
+            let mut b = BitVec::zeros(64);
+            b.set((t * 13 + 5) % 64);
+            inputs.push(b);
+        }
+        inputs.push(BitVec::zeros(64)); // zero-activity step
+        inputs.push(BitVec::zeros(64));
+        let mut tail = BitVec::zeros(64);
+        tail.set(0);
+        inputs.push(tail); // replay after two fully skipped steps
+        assert_layer_matches_oracle(
+            conv_8x8_layer(3),
+            conv_weights(3, 0.9, 0.0, 11),
+            0.9,
+            1.0,
+            &inputs,
+        );
+    }
+
+    #[test]
+    fn conv_sparse_path_tracks_residual_hot_neurons() {
+        // large weights + low theta leave soft-reset residuals >= theta,
+        // which must keep firing with no input (the hot carryover set)
+        let mut inputs = Vec::new();
+        let mut burst = BitVec::zeros(64);
+        burst.set(27);
+        burst.set(28);
+        inputs.push(burst);
+        for _ in 0..6 {
+            inputs.push(BitVec::zeros(64));
+        }
+        assert_layer_matches_oracle(
+            conv_8x8_layer(2),
+            conv_weights(2, 3.0, 0.0, 7),
+            0.95,
+            0.3,
+            &inputs,
+        );
+    }
+
+    #[test]
+    fn conv_alternating_dense_and_sparse_steps_match_oracle() {
+        // all-ones steps force the dense sweep; single-spike steps drop
+        // back to the sparse walk — the sync/fill handoff between the two
+        // paths must replay deferred leak exactly
+        let dense = BitVec::from_bools(&[true; 64]);
+        let mut sparse = BitVec::zeros(64);
+        sparse.set(37);
+        let inputs = vec![
+            sparse.clone(),
+            dense.clone(),
+            sparse.clone(),
+            BitVec::zeros(64),
+            dense,
+            BitVec::zeros(64),
+            sparse,
+        ];
+        assert_layer_matches_oracle(
+            conv_8x8_layer(2),
+            conv_weights(2, 0.8, 0.0, 23),
+            0.9,
+            1.0,
+            &inputs,
+        );
+    }
+
+    #[test]
+    fn conv_nonzero_bias_falls_back_to_dense_and_matches_oracle() {
+        // a bias can fire untouched neurons, so the sparse walk is illegal;
+        // the layer must take the dense sweep and still match the oracle
+        let mut inputs = vec![BitVec::zeros(64); 4];
+        inputs[0].set(9);
+        inputs[2].set(44);
+        assert_layer_matches_oracle(
+            conv_8x8_layer(2),
+            conv_weights(2, 0.7, 0.4, 3),
+            0.9,
+            1.0,
+            &inputs,
+        );
     }
 
     #[test]

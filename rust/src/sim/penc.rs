@@ -48,9 +48,9 @@ impl Penc {
         out: &mut Vec<u32>,
     ) -> (u64, u64) {
         out.clear();
-        for idx in spikes.iter_ones() {
-            out.push(idx as u32);
-        }
+        // word-level scan with trailing_zeros decode — same ascending
+        // address order as the chunked hardware PENC emits
+        spikes.for_each_one(|idx| out.push(idx as u32));
         let n_chunks = spikes.len().div_ceil(self.width) as u64;
         let cycles = costs.penc_chunk * n_chunks + costs.penc_per_spike * out.len() as u64;
         (cycles, n_chunks)

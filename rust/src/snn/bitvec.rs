@@ -125,6 +125,31 @@ impl BitVec {
         }
     }
 
+    /// Visit every set-bit index in ascending order by scanning raw `u64`
+    /// words with `trailing_zeros` decode — the non-allocating fast path
+    /// of the simulator's spike-compression and output-counting loops.
+    /// Equivalent to `iter_ones` but monomorphizes the loop body into the
+    /// word scan (no per-item iterator state), which is what the hot path
+    /// wants at Table-I sparsity levels.
+    #[inline]
+    pub fn for_each_one<F: FnMut(usize)>(&self, mut f: F) {
+        let n_words = self.words.len();
+        let tail_bits = self.len % 64;
+        for (wi, &word) in self.words.iter().enumerate() {
+            let mut w = word;
+            if wi + 1 == n_words && tail_bits != 0 {
+                // defensive tail mask: the set()/fill paths never set bits
+                // beyond len, but the scan contract must hold regardless
+                w &= (1u64 << tail_bits) - 1;
+            }
+            let base = wi * 64;
+            while w != 0 {
+                f(base + w.trailing_zeros() as usize);
+                w &= w - 1;
+            }
+        }
+    }
+
     /// Bitwise OR in place (used by the hardware maxpool model).
     pub fn or_assign(&mut self, other: &BitVec) {
         debug_assert_eq!(self.len, other.len);
@@ -309,6 +334,39 @@ mod tests {
             copied.clear_all();
             if copied.count_ones() != 0 || copied.len() != n {
                 return Err("clear_all broke invariants".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn for_each_one_matches_iter_ones() {
+        let mut v = BitVec::zeros(200);
+        for i in [0, 3, 63, 64, 65, 127, 128, 199] {
+            v.set(i);
+        }
+        let mut scanned = Vec::new();
+        v.for_each_one(|i| scanned.push(i));
+        assert_eq!(scanned, v.iter_ones().collect::<Vec<_>>());
+        // empty vector visits nothing
+        let mut hits = 0usize;
+        BitVec::zeros(77).for_each_one(|_| hits += 1);
+        assert_eq!(hits, 0);
+    }
+
+    #[test]
+    fn prop_for_each_one_matches_naive() {
+        prop_check(128, 0xF0E, |g| {
+            let n = g.usize_in(1, 1500);
+            let p = g.f64_in(0.0, 0.6);
+            let bits = g.spike_bits(n, p);
+            let v = BitVec::from_bools(&bits);
+            let naive: Vec<usize> =
+                bits.iter().enumerate().filter(|(_, &b)| b).map(|(i, _)| i).collect();
+            let mut got = Vec::new();
+            v.for_each_one(|i| got.push(i));
+            if got != naive {
+                return Err(format!("for_each_one mismatch at n={n}"));
             }
             Ok(())
         });

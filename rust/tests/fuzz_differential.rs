@@ -1,0 +1,389 @@
+//! Differential fuzzing of the optimized simulation hot path against the
+//! preserved scalar oracle.
+//!
+//! The optimized `LayerSim` step (word-level spike decode, fused FC row
+//! accumulation, touched-set sparse conv activation with lazy leak
+//! replay, gated accumulator clears) must be **byte-identical** to
+//! `baselines::scalar` — the verbatim pre-optimization scalar step — on
+//! output spikes, predictions, `PhaseCycles`, and every `SimStats`
+//! counter. The hand-rolled seeded generator below (no external deps;
+//! `util::prop` over `util::rng::Rng`) covers random topologies (FC
+//! stacks and conv/pool mixes with odd dims), LHR across the lattice,
+//! input sparsity from 0 to beyond the sparse-path density threshold,
+//! and varied beta/theta/bias regimes, including the ones that force the
+//! dense fallback. On failure the harness prints the reproducing case
+//! seed (replay with `util::prop::prop_replay`).
+
+use snn_dse::baselines::scalar::{ScalarLayerSim, ScalarNetworkSim};
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::sim::{CostModel, LayerSim, LayerWeights, NetworkSim};
+use snn_dse::snn::{BitVec, Layer, NetDef, SpikeTrain};
+use snn_dse::util::prop::{prop_check, Gen};
+
+// ---- seeded generators ------------------------------------------------------
+
+fn gen_beta_theta(g: &mut Gen) -> (f32, f32) {
+    // mostly the lazy-legal regime (0 <= beta <= 1), sometimes beyond it
+    // so the conv dense fallback is exercised too
+    let beta = if g.usize_in(0, 4) == 0 {
+        g.f64_in(1.0, 1.5) as f32
+    } else {
+        g.f64_in(0.0, 1.0) as f32
+    };
+    let theta = g.f64_in(0.2, 2.0) as f32;
+    (beta, theta)
+}
+
+fn gen_fc_layers(g: &mut Gen) -> (usize, Vec<Layer>) {
+    let depth = g.usize_in(1, 3);
+    let mut sizes = vec![g.usize_in(1, 150)];
+    for _ in 0..depth {
+        sizes.push(g.usize_in(1, 90));
+    }
+    let layers = sizes
+        .windows(2)
+        .map(|w| Layer::Fc {
+            n_pre: w[0],
+            n: w[1],
+        })
+        .collect();
+    (sizes[0], layers)
+}
+
+fn gen_conv_layers(g: &mut Gen) -> (usize, Vec<Layer>) {
+    let mut ch = g.usize_in(1, 2);
+    let mut h = g.usize_in(4, 11);
+    let mut w = g.usize_in(4, 11);
+    let input_bits = ch * h * w;
+    let mut layers = Vec::new();
+    for _ in 0..g.usize_in(1, 2) {
+        let out_ch = g.usize_in(1, 4);
+        let kernel = *g.choose(&[1usize, 3, 5]);
+        layers.push(Layer::Conv {
+            in_ch: ch,
+            out_ch,
+            kernel,
+            height: h,
+            width: w,
+        });
+        ch = out_ch;
+        if g.bool() {
+            // sizes that do NOT divide h/w exercise the pool clip branch
+            let size = if h.min(w) >= 3 && g.bool() { 3 } else { 2 };
+            if h >= size && w >= size {
+                layers.push(Layer::Pool {
+                    ch,
+                    size,
+                    height: h,
+                    width: w,
+                });
+                h /= size;
+                w /= size;
+            }
+        }
+    }
+    let n_out = g.usize_in(1, 20);
+    layers.push(Layer::Fc {
+        n_pre: ch * h * w,
+        n: n_out,
+    });
+    (input_bits, layers)
+}
+
+fn gen_net(g: &mut Gen) -> NetDef {
+    let (input_bits, layers) = if g.bool() {
+        gen_fc_layers(g)
+    } else {
+        gen_conv_layers(g)
+    };
+    let classes = match layers.last().unwrap() {
+        Layer::Fc { n, .. } => *n,
+        _ => unreachable!("topologies always end with an FC head"),
+    };
+    let (beta, theta) = gen_beta_theta(g);
+    NetDef {
+        name: "fuzz".into(),
+        dataset: "synthetic".into(),
+        input_bits,
+        layers,
+        classes,
+        population: 1,
+        beta,
+        theta,
+        t_steps: g.usize_in(1, 6),
+    }
+}
+
+fn gen_hw(g: &mut Gen, net: &NetDef) -> HwConfig {
+    let lhr: Vec<usize> = net
+        .parametric_layers()
+        .iter()
+        .map(|&i| {
+            let units = net.layers[i].logical_units();
+            g.usize_in(1, units.min(17))
+        })
+        .collect();
+    let mem_blocks: Vec<usize> = lhr.iter().map(|_| g.usize_in(0, 3)).collect();
+    HwConfig {
+        lhr,
+        mem_blocks,
+        penc_width: g.usize_in(1, 100),
+        clock_hz: 100e6,
+        weight_bits: 32,
+    }
+}
+
+fn gen_weights(g: &mut Gen, net: &NetDef) -> Vec<LayerWeights> {
+    // 1 in 4 cases uses nonzero biases, which makes the conv sparse walk
+    // illegal and must force the dense fallback
+    let with_bias = g.usize_in(0, 3) == 0;
+    let mut bias = |g: &mut Gen| -> f32 {
+        if with_bias {
+            (g.rng().normal() * 0.15) as f32
+        } else {
+            0.0
+        }
+    };
+    net.parametric_layers()
+        .iter()
+        .map(|&i| match &net.layers[i] {
+            Layer::Fc { n_pre, n } => LayerWeights::Fc {
+                w: (0..n_pre * n).map(|_| (g.rng().normal() * 0.4) as f32).collect(),
+                b: (0..*n).map(|_| bias(&mut *g)).collect(),
+            },
+            Layer::Conv {
+                in_ch,
+                out_ch,
+                kernel,
+                ..
+            } => LayerWeights::Conv {
+                w: (0..kernel * kernel * in_ch * out_ch)
+                    .map(|_| (g.rng().normal() * 0.5) as f32)
+                    .collect(),
+                b: (0..*out_ch).map(|_| bias(&mut *g)).collect(),
+            },
+            Layer::Pool { .. } => unreachable!("pool layers are not parametric"),
+        })
+        .collect()
+}
+
+fn gen_step_density(g: &mut Gen) -> f64 {
+    match g.usize_in(0, 5) {
+        0 => 0.0,                 // zero-activity steps (skip paths)
+        1 => g.f64_in(0.0, 0.03), // ultra-sparse (deep lazy replay)
+        5 => g.f64_in(0.6, 1.0),  // beyond the density threshold (dense)
+        _ => g.f64_in(0.0, 0.6),  // the paper's sparsity regime
+    }
+}
+
+fn gen_input(g: &mut Gen, n_bits: usize, t_steps: usize) -> SpikeTrain {
+    (0..t_steps)
+        .map(|_| {
+            let p = gen_step_density(g);
+            BitVec::from_bools(&g.spike_bits(n_bits, p))
+        })
+        .collect()
+}
+
+fn stats_diff(fast: &snn_dse::sim::LayerStats, oracle: &snn_dse::sim::LayerStats) -> Option<String> {
+    let (a, b) = (format!("{fast:?}"), format!("{oracle:?}"));
+    if a == b {
+        None
+    } else {
+        Some(format!("fast   {a}\noracle {b}"))
+    }
+}
+
+// ---- properties -------------------------------------------------------------
+
+/// Whole-network differential run: traces, cycles, stats, prediction.
+fn compare_networks(g: &mut Gen) -> Result<(), String> {
+    let net = gen_net(g);
+    let hw = gen_hw(g, &net);
+    let cfg = ExperimentConfig::new(net.clone(), hw).map_err(|e| format!("config: {e}"))?;
+    let weights = gen_weights(g, &net);
+    let input = gen_input(g, net.input_bits, net.t_steps);
+
+    let mut fast = NetworkSim::new(&cfg, weights.clone(), CostModel::default());
+    let (fr, ftraces) = fast.run_recording(&input);
+    let mut oracle = ScalarNetworkSim::new(&cfg, weights, CostModel::default());
+    let (or, otraces) = oracle.run_recording(&input);
+
+    if fr.total_cycles != or.total_cycles {
+        return Err(format!(
+            "total_cycles {} != oracle {}",
+            fr.total_cycles, or.total_cycles
+        ));
+    }
+    if fr.serial_cycles != or.serial_cycles {
+        return Err(format!(
+            "serial_cycles {} != oracle {}",
+            fr.serial_cycles, or.serial_cycles
+        ));
+    }
+    if fr.output_counts != or.output_counts {
+        return Err("output spike counts diverge".into());
+    }
+    if fr.predicted_class != or.predicted_class {
+        return Err(format!(
+            "prediction {:?} != oracle {:?}",
+            fr.predicted_class, or.predicted_class
+        ));
+    }
+    for (l, (ft, ot)) in ftraces.iter().zip(&otraces).enumerate() {
+        for (t, (fb, ob)) in ft.iter().zip(ot).enumerate() {
+            if fb != ob {
+                return Err(format!(
+                    "layer {l} step {t}: output spike train diverges ({} vs {} ones)",
+                    fb.count_ones(),
+                    ob.count_ones()
+                ));
+            }
+        }
+    }
+    for (l, (fs, os)) in fr.per_layer.iter().zip(&or.per_layer).enumerate() {
+        if let Some(d) = stats_diff(fs, os) {
+            return Err(format!("layer {l} stats diverge:\n{d}"));
+        }
+    }
+    Ok(())
+}
+
+/// Single-layer differential stepping: per-step `PhaseCycles` + outputs.
+fn compare_single_layer(g: &mut Gen) -> Result<(), String> {
+    let (beta, theta) = gen_beta_theta(g);
+    let zero_bias = g.usize_in(0, 3) != 0;
+    let (layer, weights) = if g.bool() {
+        let n_pre = g.usize_in(1, 200);
+        let n = g.usize_in(1, 120);
+        let w = (0..n_pre * n).map(|_| (g.rng().normal() * 0.4) as f32).collect();
+        let b = (0..n)
+            .map(|_| if zero_bias { 0.0 } else { (g.rng().normal() * 0.15) as f32 })
+            .collect();
+        (Layer::Fc { n_pre, n }, LayerWeights::Fc { w, b })
+    } else {
+        let in_ch = g.usize_in(1, 2);
+        let out_ch = g.usize_in(1, 4);
+        let kernel = *g.choose(&[1usize, 3, 5]);
+        let height = g.usize_in(3, 12);
+        let width = g.usize_in(3, 12);
+        let w = (0..kernel * kernel * in_ch * out_ch)
+            .map(|_| (g.rng().normal() * 0.6) as f32)
+            .collect();
+        let b = (0..out_ch)
+            .map(|_| if zero_bias { 0.0 } else { (g.rng().normal() * 0.15) as f32 })
+            .collect();
+        (
+            Layer::Conv {
+                in_ch,
+                out_ch,
+                kernel,
+                height,
+                width,
+            },
+            LayerWeights::Conv { w, b },
+        )
+    };
+    let units = layer.logical_units();
+    let lhr = g.usize_in(1, units.min(9));
+    let blocks = g.usize_in(0, 3);
+    let penc_width = g.usize_in(1, 100);
+    let mut fast = LayerSim::new(
+        0,
+        layer.clone(),
+        lhr,
+        blocks,
+        penc_width,
+        beta,
+        theta,
+        weights.clone(),
+        CostModel::default(),
+    );
+    let mut oracle = ScalarLayerSim::new(
+        0,
+        layer.clone(),
+        lhr,
+        blocks,
+        penc_width,
+        beta,
+        theta,
+        weights,
+        CostModel::default(),
+    );
+    let bits = layer.input_bits();
+    let steps = g.usize_in(1, 8);
+    for t in 0..steps {
+        let p = gen_step_density(g);
+        let input = BitVec::from_bools(&g.spike_bits(bits, p));
+        let (fo, fp) = fast.step(&input);
+        let (oo, op) = oracle.step(&input);
+        if fo != oo {
+            return Err(format!(
+                "step {t}: spikes diverge ({} vs {} ones, density {p:.3})",
+                fo.count_ones(),
+                oo.count_ones()
+            ));
+        }
+        if fp != op {
+            return Err(format!("step {t}: phases diverge {fp:?} vs {op:?}"));
+        }
+    }
+    if let Some(d) = stats_diff(&fast.stats, &oracle.stats) {
+        return Err(format!("stats diverge after {steps} steps:\n{d}"));
+    }
+    Ok(())
+}
+
+/// Batched serving mode vs per-sample oracle runs: predictions and the
+/// serial-cycle sum (the per-sample state reset must rewind the sparse
+/// path's lazy bookkeeping too).
+fn compare_batched(g: &mut Gen) -> Result<(), String> {
+    let net = gen_net(g);
+    let hw = gen_hw(g, &net);
+    let cfg = ExperimentConfig::new(net.clone(), hw).map_err(|e| format!("config: {e}"))?;
+    let weights = gen_weights(g, &net);
+    let n_samples = g.usize_in(2, 4);
+    let samples: Vec<SpikeTrain> = (0..n_samples)
+        .map(|_| gen_input(g, net.input_bits, net.t_steps))
+        .collect();
+
+    let mut bsim = NetworkSim::new(&cfg, weights.clone(), CostModel::default());
+    let (batch, preds) = bsim.run_batched(&samples);
+
+    let mut oracle_serial = 0u64;
+    for (i, s) in samples.iter().enumerate() {
+        let mut oracle = ScalarNetworkSim::new(&cfg, weights.clone(), CostModel::default());
+        let or = oracle.run(s);
+        oracle_serial += or.serial_cycles;
+        if preds[i] != or.predicted_class {
+            return Err(format!(
+                "sample {i}: batched prediction {:?} != oracle {:?}",
+                preds[i], or.predicted_class
+            ));
+        }
+    }
+    if batch.serial_cycles != oracle_serial {
+        return Err(format!(
+            "batched serial cycles {} != oracle sum {}",
+            batch.serial_cycles, oracle_serial
+        ));
+    }
+    Ok(())
+}
+
+// ---- entry points -----------------------------------------------------------
+
+#[test]
+fn fuzz_networks_match_scalar_oracle() {
+    prop_check(80, 0xD1FF_0001, compare_networks);
+}
+
+#[test]
+fn fuzz_single_layers_match_scalar_oracle() {
+    prop_check(140, 0xD1FF_0002, compare_single_layer);
+}
+
+#[test]
+fn fuzz_batched_serving_matches_scalar_oracle() {
+    prop_check(24, 0xD1FF_0003, compare_batched);
+}
