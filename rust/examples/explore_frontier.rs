@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
         threads: 4,
         checkpoint: Some(ckpt.clone()),
         checkpoint_every: 1,
+        uarch: false,
     };
     let mut ex = Explorer::resume_or_new(&net, cfg.clone())?;
     ex.run(&net, &costs)?;

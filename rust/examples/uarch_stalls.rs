@@ -1,0 +1,82 @@
+//! Sweep the inter-layer FIFO depth on net5 (the DVS conv topology) and
+//! print the latency/stall trade-off table the `uarch/` subsystem exposes.
+//!
+//! Run with:
+//! ```sh
+//! cargo run --release --example uarch_stalls
+//! ```
+//!
+//! net5's second conv layer is the activity hotspot (~1250 spikes/step),
+//! so shallow FIFOs back-pressure the front of the pipeline while the
+//! memory knobs stay unlimited — isolating the `fifo_full` axis of the
+//! stall breakdown. The last row repeats the sweep with a single-ported,
+//! single-banked memory to show the other two counters.
+
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::data::ActivityModel;
+use snn_dse::sim::{CostModel, NetworkSim};
+use snn_dse::snn::table1_net;
+use snn_dse::uarch::{record_activity, replay, stall_table, UarchConfig};
+use snn_dse::util::commas;
+use snn_dse::util::rng::Rng;
+
+fn main() {
+    let net = table1_net("net5");
+    let hw = HwConfig::with_lhr(vec![1, 1, 16, 256, 1]); // a Table-I row
+    let cfg = ExperimentConfig::new(net.clone(), hw.clone()).unwrap();
+
+    // record the calibrated activity workload once, replay many configs
+    let model = ActivityModel::for_net(&net);
+    let mut rng = Rng::new(42);
+    let activity = model.sample(net.t_steps, &mut rng);
+    let mut sim = NetworkSim::cost_only(&cfg, CostModel::default());
+    let traces = record_activity(&mut sim, &activity);
+
+    let ideal = replay(&traces, &UarchConfig::ideal());
+    println!(
+        "net5 {} LHR {} — T={} steps, ideal latency {} cycles\n",
+        net.topology_string(),
+        hw.label(),
+        net.t_steps,
+        commas(ideal.total_cycles)
+    );
+
+    println!(
+        "{:>10} {:>14} {:>10} {:>12} {:>12} {:>14}",
+        "fifo", "cycles", "vs ideal", "fifo_full", "port_wait", "bank_conflict"
+    );
+    for depth in [1usize, 2, 4, 8, 16, 0] {
+        let ucfg = UarchConfig {
+            fifo_depth: depth,
+            mem_ports: 0,
+            banks: 0,
+        };
+        let r = replay(&traces, &ucfg);
+        let (fifo_full, port_wait, bank_conflict) = r.stall_breakdown();
+        println!(
+            "{:>10} {:>14} {:>9.3}x {:>12} {:>12} {:>14}",
+            if depth == 0 { "∞".to_string() } else { depth.to_string() },
+            commas(r.total_cycles),
+            r.total_cycles as f64 / ideal.total_cycles as f64,
+            commas(fifo_full),
+            commas(port_wait),
+            commas(bank_conflict)
+        );
+    }
+
+    // the memory knobs, isolated: deep FIFOs, one port / one bank
+    let tight_mem = UarchConfig {
+        fifo_depth: 0,
+        mem_ports: 1,
+        banks: 1,
+    };
+    let r = replay(&traces, &tight_mem);
+    println!(
+        "\nsingle-ported single-banked memory ({}): {} cycles ({:.3}x ideal)",
+        tight_mem.label(),
+        commas(r.total_cycles),
+        r.total_cycles as f64 / ideal.total_cycles as f64
+    );
+    println!("per-layer breakdown:");
+    print!("{}", stall_table(&r));
+}

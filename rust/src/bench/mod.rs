@@ -2,9 +2,10 @@
 //! subcommand behind the repo's machine-readable perf trajectory.
 //!
 //! Every run drives the exact same seeded workloads (net1–net5 functional
-//! spike-train simulation, the sharded batched serve runtime, and an
-//! `explore` batch) and emits `BENCH_sim.json`: steps/sec, samples/sec
-//! and simulated-cycles/sec per net plus serve and explore throughput.
+//! spike-train simulation, the sharded batched serve runtime, an
+//! `explore` batch, and an event-driven `uarch` replay) and emits
+//! `BENCH_sim.json`: steps/sec, samples/sec and simulated-cycles/sec per
+//! net plus serve, explore and uarch (events/sec) throughput.
 //! CI runs `bench --smoke`, validates the emitted document against
 //! [`validate`], and archives it as an artifact, so hot-path speedups
 //! (and regressions) accumulate as comparable numbers instead of
@@ -28,7 +29,8 @@ use std::path::Path;
 use std::time::Instant;
 
 /// Version tag carried in every `BENCH_sim.json` (`schema` field).
-pub const BENCH_SCHEMA: &str = "snn-dse-bench/v1";
+/// v2 added the `uarch` section (event-driven replay events/sec).
+pub const BENCH_SCHEMA: &str = "snn-dse-bench/v2";
 
 /// Knobs of one bench run.
 #[derive(Debug, Clone)]
@@ -138,6 +140,7 @@ pub fn bench_explore(seed: u64, smoke: bool) -> Result<Json> {
         threads: 4,
         checkpoint: None,
         checkpoint_every: 0,
+        uarch: false,
     };
     let mut explorer = Explorer::new(&net, cfg)?;
     let cache = EstimateCache::new();
@@ -153,6 +156,50 @@ pub fn bench_explore(seed: u64, smoke: bool) -> Result<Json> {
         ("configs_per_sec", Json::Num(configs as f64 / elapsed)),
         ("frontier", Json::Num(explorer.frontier().len() as f64)),
     ]))
+}
+
+/// Event-driven uarch replay throughput: record net1's activity trace
+/// once, then time repeated replays under a finite (stalling)
+/// configuration. The `events_per_sec` rate tracks the event queue's
+/// throughput as the subsystem evolves; the workload (trace + config) is
+/// fully seeded, so only wall-clock varies by host.
+pub fn bench_uarch(seed: u64, smoke: bool) -> Json {
+    use crate::data::ActivityModel;
+    use crate::uarch::{record_activity, replay, UarchConfig};
+
+    let net = table1_net("net1");
+    let cfg = ExperimentConfig::new(net.clone(), HwConfig::with_lhr(vec![1, 1, 1]))
+        .expect("valid uarch bench config");
+    let model = ActivityModel::for_net(&net);
+    let mut rng = Rng::new(seed);
+    let activity = model.sample(net.t_steps, &mut rng);
+    let mut sim = NetworkSim::cost_only(&cfg, CostModel::default());
+    let traces = record_activity(&mut sim, &activity);
+    let ucfg = UarchConfig {
+        fifo_depth: 2,
+        mem_ports: 2,
+        banks: 4,
+    };
+    let iters = if smoke { 4 } else { 64 };
+    // warmup replay pins the per-replay event count and the stall totals
+    let warm = replay(&traces, &ucfg);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        black_box(replay(black_box(&traces), &ucfg));
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    Json::obj(vec![
+        ("net", Json::Str("net1".into())),
+        ("config", Json::Str(ucfg.label())),
+        ("iters", Json::Num(iters as f64)),
+        ("events", Json::Num(warm.events as f64)),
+        (
+            "events_per_sec",
+            Json::Num(warm.events as f64 * iters as f64 / elapsed),
+        ),
+        ("total_cycles", Json::Num(warm.total_cycles as f64)),
+        ("stall_cycles", Json::Num(warm.stall_cycles() as f64)),
+    ])
 }
 
 /// Per-net sim workloads of one mode: `(net, lhr, default_iters, rate)`.
@@ -217,6 +264,13 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         explore.at("configs_per_sec").as_f64().unwrap_or(0.0),
         explore.at("configs").as_u64().unwrap_or(0),
     );
+    let uarch = bench_uarch(opts.seed, opts.smoke);
+    eprintln!(
+        "[bench] uarch net1: {:.3e} events/s ({} events/replay, {} stall cycles)",
+        uarch.at("events_per_sec").as_f64().unwrap_or(0.0),
+        uarch.at("events").as_u64().unwrap_or(0),
+        uarch.at("stall_cycles").as_u64().unwrap_or(0),
+    );
     Ok(Json::obj(vec![
         ("schema", Json::Str(BENCH_SCHEMA.into())),
         ("seed", Json::Num(opts.seed as f64)),
@@ -224,6 +278,7 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         ("sim", Json::obj(vec![("nets", Json::Arr(nets))])),
         ("serve", serve),
         ("explore", explore),
+        ("uarch", uarch),
     ]))
 }
 
@@ -296,6 +351,19 @@ pub fn validate(j: &Json) -> std::result::Result<(), String> {
     for key in ["rounds", "batch", "configs", "configs_per_sec", "frontier"] {
         expect_pos(explore, "explore", key)?;
     }
+    let uarch = j.at("uarch");
+    for key in ["iters", "events", "events_per_sec", "total_cycles"] {
+        expect_pos(uarch, "uarch", key)?;
+    }
+    // stall cycles are a legitimate zero under generous configs
+    match uarch.at("stall_cycles").as_f64() {
+        Some(v) if v.is_finite() && v >= 0.0 => {}
+        Some(v) => return Err(format!("uarch.stall_cycles must be >= 0 and finite, got {v}")),
+        None => return Err("uarch.stall_cycles must be a number".into()),
+    }
+    if uarch.at("config").as_str().is_none() {
+        return Err("uarch.config must be a string".into());
+    }
     Ok(())
 }
 
@@ -340,6 +408,18 @@ mod tests {
                     ("frontier", Json::Num(3.0)),
                 ]),
             ),
+            (
+                "uarch",
+                Json::obj(vec![
+                    ("net", Json::Str("net1".into())),
+                    ("config", Json::Str("f2/p2/b4".into())),
+                    ("iters", Json::Num(4.0)),
+                    ("events", Json::Num(500.0)),
+                    ("events_per_sec", Json::Num(1000.0)),
+                    ("total_cycles", Json::Num(12_000.0)),
+                    ("stall_cycles", Json::Num(0.0)),
+                ]),
+            ),
         ])
     }
 
@@ -372,6 +452,34 @@ mod tests {
             m.insert("serve".into(), serve);
         }
         assert!(validate(&doc).is_err());
+    }
+
+    #[test]
+    fn schema_requires_the_uarch_section() {
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("uarch");
+        }
+        assert!(validate(&doc).unwrap_err().contains("uarch"));
+        // negative stall cycles are malformed
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(u)) = m.get_mut("uarch") {
+                u.insert("stall_cycles".into(), Json::Num(-1.0));
+            }
+        }
+        assert!(validate(&doc).unwrap_err().contains("stall_cycles"));
+    }
+
+    #[test]
+    fn bench_uarch_reports_positive_event_rate() {
+        let rec = bench_uarch(7, true);
+        for key in ["iters", "events", "events_per_sec", "total_cycles"] {
+            let v = rec.at(key).as_f64().unwrap();
+            assert!(v > 0.0 && v.is_finite(), "{key} = {v}");
+        }
+        assert!(rec.at("stall_cycles").as_f64().unwrap() >= 0.0);
+        assert_eq!(rec.at("config").as_str(), Some("f2/p2/b4"));
     }
 
     #[test]

@@ -44,8 +44,8 @@
 
 use crate::config::HwConfig;
 use crate::dse::pareto::{Objective, ParetoFrontier};
-use crate::dse::runner::{sweep_cached, DsePoint};
-use crate::dse::space::{lattice_dims, lattice_size, nth_lhr};
+use crate::dse::runner::{sweep_cached, sweep_uarch_cached, DsePoint, UarchSummary};
+use crate::dse::space::{lattice_dims, lattice_size, nth_lhr, split_uarch_point, uarch_dims};
 use crate::resources::{EstimateCache, Resources};
 use crate::sim::CostModel;
 use crate::snn::NetDef;
@@ -85,6 +85,11 @@ pub struct ExploreConfig {
     /// a small cadence makes total checkpoint I/O quadratic — raise this
     /// (or use 0) for 10k+-config explorations.
     pub checkpoint_every: usize,
+    /// Extend the lattice with the three microarchitecture dimensions
+    /// (FIFO depth, memory ports, banks — see
+    /// [`crate::dse::space::uarch_dims`]) and evaluate every point
+    /// through the event-driven simulator (`explore --uarch`).
+    pub uarch: bool,
 }
 
 impl Default for ExploreConfig {
@@ -98,6 +103,7 @@ impl Default for ExploreConfig {
             threads: 8,
             checkpoint: None,
             checkpoint_every: 5,
+            uarch: false,
         }
     }
 }
@@ -211,6 +217,16 @@ impl Explorer {
         if ck_batch != cfg.batch {
             bail!("checkpoint batch {ck_batch} != --batch {}", cfg.batch);
         }
+        // absent in pre-uarch checkpoints == false: those explored the
+        // plain LHR lattice
+        let ck_uarch = j.at("uarch").as_bool().unwrap_or(false);
+        if ck_uarch != cfg.uarch {
+            bail!(
+                "checkpoint {} the uarch dimensions but --uarch is {}",
+                if ck_uarch { "explores" } else { "does not explore" },
+                if cfg.uarch { "on" } else { "off" }
+            );
+        }
 
         let state_strs = j.at("rng_state").as_arr().context("checkpoint: missing rng_state")?;
         if state_strs.len() != 4 {
@@ -227,20 +243,37 @@ impl Explorer {
         ex.scan_cursor = j.at("scan_cursor").as_usize().unwrap_or(0);
         for pj in j.at("points").as_arr().context("checkpoint: missing points")? {
             let p = point_from_json(pj)?;
-            ex.visited.insert(p.lhr.clone());
+            let mut key = p.lhr.clone();
+            if ck_uarch {
+                let u = p.uarch.as_ref().with_context(|| {
+                    format!("uarch checkpoint point {} lacks its uarch fields", p.label)
+                })?;
+                key.extend([u.fifo_depth, u.mem_ports, u.banks]);
+            }
+            ex.visited.insert(key);
             ex.frontier.insert(p.clone());
             ex.evaluated.push(p);
         }
         Ok(ex)
     }
 
+    /// The lattice axes this exploration walks: per-layer LHR choices,
+    /// plus the three uarch dimensions when `cfg.uarch` is on.
+    fn dims(&self, net: &NetDef) -> Vec<Vec<usize>> {
+        let mut dims = lattice_dims(net, self.cfg.max_lhr);
+        if self.cfg.uarch {
+            dims.extend(uarch_dims());
+        }
+        dims
+    }
+
     /// Run one round: propose a batch, evaluate it in parallel, update
     /// the frontier. Returns what happened (see [`RoundSummary`]).
     pub fn step(&mut self, net: &NetDef, costs: &CostModel, cache: &EstimateCache) -> RoundSummary {
-        let dims = lattice_dims(net, self.cfg.max_lhr);
+        let dims = self.dims(net);
         let total = lattice_size(&dims);
-        let lhrs = self.propose_batch(&dims, total);
-        if lhrs.is_empty() {
+        let lattice_points = self.propose_batch(&dims, total);
+        if lattice_points.is_empty() {
             self.exhausted = true;
             return RoundSummary {
                 round: self.rounds_done,
@@ -250,11 +283,24 @@ impl Explorer {
                 exhausted: true,
             };
         }
-        let configs: Vec<HwConfig> = lhrs.into_iter().map(HwConfig::with_lhr).collect();
-        let points = sweep_cached(net, &configs, self.cfg.seed, costs, self.cfg.threads, cache);
+        let points = if self.cfg.uarch {
+            let pairs: Vec<(HwConfig, crate::uarch::UarchConfig)> = lattice_points
+                .iter()
+                .map(|v| {
+                    let (lhr, ucfg) = split_uarch_point(v);
+                    (HwConfig::with_lhr(lhr), ucfg)
+                })
+                .collect();
+            sweep_uarch_cached(net, &pairs, self.cfg.seed, costs, self.cfg.threads, cache)
+        } else {
+            let configs: Vec<HwConfig> =
+                lattice_points.iter().cloned().map(HwConfig::with_lhr).collect();
+            sweep_cached(net, &configs, self.cfg.seed, costs, self.cfg.threads, cache)
+        };
+        let evaluated_n = lattice_points.len();
         let mut admitted = Vec::new();
-        for p in points {
-            self.visited.insert(p.lhr.clone());
+        for (key, p) in lattice_points.into_iter().zip(points) {
+            self.visited.insert(key);
             if self.frontier.insert(p.clone()) {
                 admitted.push(p.clone());
             }
@@ -263,7 +309,7 @@ impl Explorer {
         self.rounds_done += 1;
         RoundSummary {
             round: self.rounds_done,
-            evaluated: configs.len(),
+            evaluated: evaluated_n,
             admitted,
             frontier_size: self.frontier.len(),
             exhausted: false,
@@ -310,6 +356,23 @@ impl Explorer {
         Ok(())
     }
 
+    /// The full lattice coordinates of an evaluated point: the LHR
+    /// prefix, plus the three uarch knobs when this exploration walks
+    /// the extended lattice. Mutation parents and visited keys must both
+    /// use this — an LHR-only prefix would be mis-split (or indexed out
+    /// of bounds) against the extended dims.
+    fn lattice_key(&self, p: &DsePoint) -> Vec<usize> {
+        let mut key = p.lhr.clone();
+        if self.cfg.uarch {
+            let u = p
+                .uarch
+                .as_ref()
+                .expect("uarch exploration produced a point without uarch fields");
+            key.extend([u.fifo_depth, u.mem_ports, u.banks]);
+        }
+        key
+    }
+
     /// Propose up to `batch` unvisited lattice points. Empty result means
     /// the lattice is fully visited.
     fn propose_batch(&mut self, dims: &[Vec<usize>], total: usize) -> Vec<Vec<usize>> {
@@ -333,8 +396,8 @@ impl Explorer {
                 let cand = if self.frontier.is_empty() || self.rng.bernoulli(p_jump) {
                     random_lattice_point(&mut self.rng, dims)
                 } else {
-                    let pts = self.frontier.points();
-                    let parent = pts[self.rng.below(pts.len())].lhr.clone();
+                    let idx = self.rng.below(self.frontier.len());
+                    let parent = self.lattice_key(&self.frontier.points()[idx]);
                     mutate(&mut self.rng, dims, parent)
                 };
                 if !self.visited.contains(&cand) && !in_batch.contains(&cand) {
@@ -390,6 +453,7 @@ impl Explorer {
             ),
             ("max_lhr", Json::Num(self.cfg.max_lhr as f64)),
             ("batch", Json::Num(self.cfg.batch as f64)),
+            ("uarch", Json::Bool(self.cfg.uarch)),
             ("rounds_done", Json::Num(self.rounds_done as f64)),
             ("scan_cursor", Json::Num(self.scan_cursor as f64)),
             (
@@ -520,7 +584,7 @@ fn parse_hex_u64(s: &str) -> Result<u64> {
 }
 
 fn point_to_json(p: &DsePoint) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("net", Json::Str(p.net.clone())),
         ("label", Json::Str(p.label.clone())),
         ("lhr", Json::from_usizes(&p.lhr)),
@@ -533,7 +597,22 @@ fn point_to_json(p: &DsePoint) -> Json {
         ("energy_mj", Json::Num(p.energy_mj)),
         ("latency_us", Json::Num(p.latency_us)),
         ("layer_activity", Json::from_f64s(&p.layer_activity)),
-    ])
+    ];
+    if let Some(u) = &p.uarch {
+        fields.push((
+            "uarch",
+            Json::obj(vec![
+                ("fifo_depth", Json::Num(u.fifo_depth as f64)),
+                ("mem_ports", Json::Num(u.mem_ports as f64)),
+                ("banks", Json::Num(u.banks as f64)),
+                ("ideal_cycles", Json::Num(u.ideal_cycles as f64)),
+                ("fifo_full", Json::Num(u.fifo_full as f64)),
+                ("port_wait", Json::Num(u.port_wait as f64)),
+                ("bank_conflict", Json::Num(u.bank_conflict as f64)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
 }
 
 /// Every objective-bearing field is mandatory: a truncated or corrupted
@@ -559,6 +638,24 @@ fn point_from_json(j: &Json) -> Result<DsePoint> {
         energy_mj: j.at("energy_mj").as_f64().context("point: missing energy_mj")?,
         latency_us: j.at("latency_us").as_f64().context("point: missing latency_us")?,
         layer_activity: j.at("layer_activity").f64_vec(),
+        uarch: match j.get("uarch") {
+            None => None,
+            Some(uj) => Some(UarchSummary {
+                fifo_depth: uj.at("fifo_depth").as_usize().context("uarch: missing fifo_depth")?,
+                mem_ports: uj.at("mem_ports").as_usize().context("uarch: missing mem_ports")?,
+                banks: uj.at("banks").as_usize().context("uarch: missing banks")?,
+                ideal_cycles: uj
+                    .at("ideal_cycles")
+                    .as_u64()
+                    .context("uarch: missing ideal_cycles")?,
+                fifo_full: uj.at("fifo_full").as_u64().context("uarch: missing fifo_full")?,
+                port_wait: uj.at("port_wait").as_u64().context("uarch: missing port_wait")?,
+                bank_conflict: uj
+                    .at("bank_conflict")
+                    .as_u64()
+                    .context("uarch: missing bank_conflict")?,
+            }),
+        },
     })
 }
 
@@ -654,6 +751,110 @@ mod tests {
         let rebuilt = ParetoFrontier::from_points(&ex.config().objectives, points);
         assert_eq!(rebuilt.len(), ex.frontier().len());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn uarch_exploration_walks_the_extended_lattice() {
+        let net = table1_net("net1");
+        let cfg = ExploreConfig {
+            rounds: 4,
+            batch: 8,
+            max_lhr: 8,
+            threads: 2,
+            uarch: true,
+            ..Default::default()
+        };
+        let mut ex = Explorer::new(&net, cfg).unwrap();
+        ex.run(&net, &CostModel::default()).unwrap();
+        assert_eq!(ex.evaluated().len(), 32);
+        // every point carries its uarch summary
+        assert!(ex.evaluated().iter().all(|p| p.uarch.is_some()));
+        // the first proposal is fully-parallel LHR + the ideal preset
+        let first = &ex.evaluated()[0];
+        assert_eq!(first.lhr, vec![1, 1, 1]);
+        assert!(first.uarch.as_ref().unwrap().config().is_ideal());
+        // no duplicate (lhr, uarch) evaluations
+        let mut keys: Vec<Vec<usize>> = ex
+            .evaluated()
+            .iter()
+            .map(|p| {
+                let u = p.uarch.as_ref().unwrap();
+                let mut k = p.lhr.clone();
+                k.extend([u.fifo_depth, u.mem_ports, u.banks]);
+                k
+            })
+            .collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 32);
+        // the annealer proposed at least one non-ideal uarch config
+        assert!(ex
+            .evaluated()
+            .iter()
+            .any(|p| !p.uarch.as_ref().unwrap().config().is_ideal()));
+    }
+
+    #[test]
+    fn uarch_point_json_roundtrips_stall_breakdown() {
+        let net = table1_net("net1");
+        let cache = EstimateCache::new();
+        let p = crate::dse::runner::evaluate_uarch_cached(
+            &net,
+            &HwConfig::with_lhr(vec![4, 8, 8]),
+            &crate::uarch::UarchConfig { fifo_depth: 2, mem_ports: 1, banks: 2 },
+            42,
+            &CostModel::default(),
+            &cache,
+        );
+        let j = Json::parse(&point_to_json(&p).to_string()).unwrap();
+        let q = point_from_json(&j).unwrap();
+        assert_eq!(p.cycles, q.cycles);
+        assert_eq!(p.uarch, q.uarch, "stall breakdown must round-trip exactly");
+        // a point without uarch fields still parses (pre-uarch checkpoints)
+        let plain = crate::dse::runner::evaluate(
+            &net,
+            &HwConfig::with_lhr(vec![4, 8, 8]),
+            &crate::dse::runner::EvalMode::Activity { seed: 42 },
+            &CostModel::default(),
+        );
+        let j = Json::parse(&point_to_json(&plain).to_string()).unwrap();
+        assert!(point_from_json(&j).unwrap().uarch.is_none());
+    }
+
+    #[test]
+    fn uarch_checkpoint_resume_validates_the_flag_and_replays() {
+        let net = table1_net("net1");
+        let dir = std::env::temp_dir().join("snn_dse_explore_uarch_ck");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        let cfg = ExploreConfig {
+            rounds: 3,
+            batch: 6,
+            max_lhr: 4,
+            threads: 2,
+            uarch: true,
+            checkpoint: Some(path.clone()),
+            ..Default::default()
+        };
+        let mut ex = Explorer::new(&net, cfg.clone()).unwrap();
+        ex.run(&net, &CostModel::default()).unwrap();
+        // resuming with --uarch off must be rejected
+        let mut no_uarch = cfg.clone();
+        no_uarch.uarch = false;
+        assert!(Explorer::resume(&net, no_uarch, &path).is_err());
+        // a matching resume replays: same visited set, same frontier size
+        let resumed = Explorer::resume(&net, cfg.clone(), &path).unwrap();
+        assert_eq!(resumed.evaluated().len(), ex.evaluated().len());
+        assert_eq!(resumed.frontier().len(), ex.frontier().len());
+        // extending the budget keeps proposing fresh extended-lattice keys
+        let mut extended = resumed;
+        let more = ExploreConfig { rounds: 4, ..cfg };
+        // rebuild with the larger budget via resume (same file)
+        extended.run(&net, &CostModel::default()).unwrap(); // no-op: budget spent
+        let mut again = Explorer::resume(&net, more, &path).unwrap();
+        again.run(&net, &CostModel::default()).unwrap();
+        assert!(again.evaluated().len() > ex.evaluated().len());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -27,8 +27,12 @@ pub use explore::{explore, load_checkpoint_points, ExploreConfig, Explorer, Roun
 pub use pareto::{
     dominates, dominates_on, knee_point, pareto_front, pareto_front_on, Objective, ParetoFrontier,
 };
-pub use runner::{evaluate, evaluate_cached, sweep, sweep_cached, DsePoint, EvalMode};
+pub use runner::{
+    evaluate, evaluate_cached, evaluate_uarch_cached, sweep, sweep_cached, sweep_uarch_cached,
+    DsePoint, EvalMode, UarchSummary,
+};
 pub use space::{
     enumerate_capped, enumerate_lhr, lattice_dims, lattice_size, lhr_choices, nth_lhr,
-    table1_lhr_sets,
+    split_uarch_point, table1_lhr_sets, uarch_dims, UARCH_BANK_CHOICES, UARCH_FIFO_CHOICES,
+    UARCH_PORT_CHOICES,
 };

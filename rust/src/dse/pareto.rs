@@ -292,6 +292,7 @@ mod tests {
             energy_mj: e,
             latency_us: cycles as f64,
             layer_activity: vec![],
+            uarch: None,
         }
     }
 

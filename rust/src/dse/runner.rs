@@ -16,7 +16,9 @@ use crate::data::ActivityModel;
 use crate::resources::{estimate, estimate_total_cached, EnergyModel, EstimateCache, Resources};
 use crate::sim::{CostModel, LayerWeights, NetworkSim, SimResult};
 use crate::snn::{NetDef, SpikeTrain};
+use crate::uarch::{self, UarchConfig};
 use crate::util::rng::Rng;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// How to drive the simulator for each configuration.
@@ -32,6 +34,37 @@ pub enum EvalMode<'a> {
     RandomFunctional { seed: u64, input_rate: f64 },
 }
 
+/// Microarchitecture side of an evaluated point: the three uarch knobs
+/// plus the stall breakdown the event simulator attributed to them.
+/// Present only on points evaluated through the uarch path
+/// ([`evaluate_uarch_cached`] / `explore --uarch`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UarchSummary {
+    pub fifo_depth: usize,
+    pub mem_ports: usize,
+    pub banks: usize,
+    /// Total cycles of the same workload under [`UarchConfig::ideal`] —
+    /// the analytic-recurrence reference the stall gap is measured from.
+    pub ideal_cycles: u64,
+    pub fifo_full: u64,
+    pub port_wait: u64,
+    pub bank_conflict: u64,
+}
+
+impl UarchSummary {
+    pub fn config(&self) -> UarchConfig {
+        UarchConfig {
+            fifo_depth: self.fifo_depth,
+            mem_ports: self.mem_ports,
+            banks: self.banks,
+        }
+    }
+
+    pub fn stall_cycles(&self) -> u64 {
+        self.fifo_full + self.port_wait + self.bank_conflict
+    }
+}
+
 /// One evaluated design point.
 #[derive(Debug, Clone)]
 pub struct DsePoint {
@@ -45,6 +78,8 @@ pub struct DsePoint {
     pub latency_us: f64,
     /// Mean output spikes/step per layer (activity snapshot).
     pub layer_activity: Vec<f64>,
+    /// Uarch config + stall breakdown when evaluated event-driven.
+    pub uarch: Option<UarchSummary>,
 }
 
 impl DsePoint {
@@ -138,7 +173,104 @@ fn eval_inner(
         energy_mj: energy.total_mj(),
         latency_us: sim_result.total_cycles as f64 / cfg.hw.clock_hz * 1e6,
         layer_activity: sim_result.mean_activity(),
+        uarch: None,
     }
+}
+
+/// The uarch-independent half of an event-driven evaluation: the
+/// recorded per-step trace, the ideal-replay reference, and the
+/// activity-run layer stats. Depends only on `(net, hw, seed, costs)` —
+/// never on the uarch knobs — so one recording serves every
+/// `UarchConfig` replayed against the same hardware point (the
+/// record-once/replay-many design `uarch/` advertises).
+struct UarchRecording {
+    traces: Vec<uarch::LayerTrace>,
+    ideal_cycles: u64,
+    serial_cycles: u64,
+    per_layer: Vec<crate::sim::LayerStats>,
+}
+
+fn record_uarch_workload(net: &NetDef, hw: &HwConfig, seed: u64, costs: &CostModel) -> UarchRecording {
+    let cfg = ExperimentConfig::new(net.clone(), hw.clone()).expect("invalid config");
+    let model = ActivityModel::for_net(net);
+    let mut rng = Rng::new(seed);
+    let activity = model.sample(net.t_steps, &mut rng);
+    let mut sim = NetworkSim::cost_only(&cfg, costs.clone());
+    let traces = uarch::record_activity(&mut sim, &activity);
+    let ideal = uarch::replay(&traces, &UarchConfig::ideal());
+    let serial_cycles: u64 = traces
+        .iter()
+        .flat_map(|t| t.steps.iter())
+        .map(|s| s.cost)
+        .sum();
+    UarchRecording {
+        ideal_cycles: ideal.total_cycles,
+        serial_cycles,
+        per_layer: sim.layers.iter().map(|l| l.stats.clone()).collect(),
+        traces,
+    }
+}
+
+fn assemble_uarch_point(
+    net: &NetDef,
+    hw: &HwConfig,
+    ucfg: &UarchConfig,
+    rec: &UarchRecording,
+    cache: &EstimateCache,
+) -> DsePoint {
+    let cfg = ExperimentConfig::new(net.clone(), hw.clone()).expect("invalid config");
+    let finite = uarch::replay(&rec.traces, ucfg);
+    let (fifo_full, port_wait, bank_conflict) = finite.stall_breakdown();
+    let sim_result = SimResult {
+        total_cycles: finite.total_cycles,
+        serial_cycles: rec.serial_cycles,
+        per_layer: rec.per_layer.clone(),
+        t_steps: net.t_steps,
+        output_counts: Vec::new(),
+        predicted_class: None,
+    };
+    let mut resources = estimate_total_cached(&cfg, cache);
+    resources.add(uarch::uarch_resources(&cfg, ucfg));
+    let energy = EnergyModel::default().inference_energy(&resources, &sim_result, cfg.hw.clock_hz);
+    DsePoint {
+        net: net.name.clone(),
+        label: format!("{}·{}", hw.label(), ucfg.label()),
+        lhr: hw.lhr.clone(),
+        cycles: finite.total_cycles,
+        serial_cycles: rec.serial_cycles,
+        resources,
+        energy_mj: energy.total_mj(),
+        latency_us: finite.total_cycles as f64 / cfg.hw.clock_hz * 1e6,
+        layer_activity: sim_result.mean_activity(),
+        uarch: Some(UarchSummary {
+            fifo_depth: ucfg.fifo_depth,
+            mem_ports: ucfg.mem_ports,
+            banks: ucfg.banks,
+            ideal_cycles: rec.ideal_cycles,
+            fifo_full,
+            port_wait,
+            bank_conflict,
+        }),
+    }
+}
+
+/// Evaluate one `(HwConfig, UarchConfig)` pair through the event-driven
+/// microarchitecture simulator, on the same calibrated activity workload
+/// as [`EvalMode::Activity`] (same `seed` ⇒ same per-step costs). The
+/// point's `cycles` are the *finite-config* event-simulated latency, its
+/// resources include the FIFO/port/bank adder
+/// ([`crate::uarch::uarch_resources`]), and its [`DsePoint::uarch`]
+/// carries the stall breakdown plus the ideal reference cycles.
+pub fn evaluate_uarch_cached(
+    net: &NetDef,
+    hw: &HwConfig,
+    ucfg: &UarchConfig,
+    seed: u64,
+    costs: &CostModel,
+    cache: &EstimateCache,
+) -> DsePoint {
+    let rec = record_uarch_workload(net, hw, seed, costs);
+    assemble_uarch_point(net, hw, ucfg, &rec, cache)
 }
 
 /// Evaluate many configurations across up to `n_threads` OS threads with
@@ -167,17 +299,71 @@ pub fn sweep_cached(
     n_threads: usize,
     cache: &EstimateCache,
 ) -> Vec<DsePoint> {
-    if configs.is_empty() {
+    // same seed for every config: identical workload
+    sweep_with(configs, n_threads, |hw| {
+        evaluate_cached(net, hw, &EvalMode::Activity { seed }, costs, cache)
+    })
+}
+
+/// [`sweep_cached`] over `(HwConfig, UarchConfig)` pairs: the batch
+/// evaluator behind `explore --uarch`. Same work-stealing dispatch, same
+/// thread-count-invariant results. The trace + ideal replay — the
+/// expensive, uarch-independent half — are recorded once per *distinct
+/// hardware config*, in parallel, and shared by every uarch variant of
+/// it in the batch; only the finite replay and the resource adder run
+/// per pair.
+pub fn sweep_uarch_cached(
+    net: &NetDef,
+    configs: &[(HwConfig, UarchConfig)],
+    seed: u64,
+    costs: &CostModel,
+    n_threads: usize,
+    cache: &EstimateCache,
+) -> Vec<DsePoint> {
+    // key by everything the recording depends on (cycles don't see
+    // clock_hz or weight_bits)
+    type RecKey = (Vec<usize>, Vec<usize>, usize);
+    let key_of = |hw: &HwConfig| -> RecKey {
+        (hw.lhr.clone(), hw.mem_blocks.clone(), hw.penc_width)
+    };
+    let mut index: HashMap<RecKey, usize> = HashMap::new();
+    let mut uniq: Vec<&HwConfig> = Vec::new();
+    for (hw, _) in configs {
+        let k = key_of(hw);
+        if !index.contains_key(&k) {
+            index.insert(k, uniq.len());
+            uniq.push(hw);
+        }
+    }
+    let recordings: Vec<UarchRecording> = sweep_with(&uniq, n_threads, |hw| {
+        record_uarch_workload(net, hw, seed, costs)
+    });
+    sweep_with(configs, n_threads, |(hw, ucfg)| {
+        let rec = &recordings[index[&key_of(hw)]];
+        assemble_uarch_point(net, hw, ucfg, rec, cache)
+    })
+}
+
+/// The shared work-stealing dispatcher: each worker steals the next
+/// unclaimed index, so results are byte-identical whether one worker or
+/// many drain the queue, and heterogeneous per-item cost cannot
+/// load-imbalance the sweep. Order of results matches `items`; an empty
+/// slice yields an empty result.
+fn sweep_with<T, R, F>(items: &[T], n_threads: usize, eval: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if items.is_empty() {
         return Vec::new();
     }
-    let n_threads = n_threads.clamp(1, configs.len());
-    let mut results: Vec<Option<DsePoint>> = vec![None; configs.len()];
+    let n_threads = n_threads.clamp(1, items.len());
+    let mut results: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
 
-    // One code path for every thread count: each worker steals the next
-    // unclaimed index, so results are byte-identical whether one worker or
-    // many drain the queue.
     let next = AtomicUsize::new(0);
-    let per_worker: Vec<Vec<(usize, DsePoint)>> = std::thread::scope(|s| {
+    let eval = &eval;
+    let per_worker: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..n_threads)
             .map(|_| {
                 let next = &next;
@@ -186,20 +372,10 @@ pub fn sweep_cached(
                     loop {
                         // steal the next unclaimed configuration
                         let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= configs.len() {
+                        if i >= items.len() {
                             break;
                         }
-                        // same seed for every config: identical workload
-                        out.push((
-                            i,
-                            evaluate_cached(
-                                net,
-                                &configs[i],
-                                &EvalMode::Activity { seed },
-                                costs,
-                                cache,
-                            ),
-                        ));
+                        out.push((i, eval(&items[i])));
                     }
                     out
                 })
@@ -361,6 +537,85 @@ mod tests {
         );
         assert!(p4.cycles > p1.cycles);
         assert!(p4.resources.lut < p1.resources.lut);
+    }
+
+    #[test]
+    fn uarch_ideal_eval_reproduces_the_activity_eval_cycles() {
+        // the load-bearing reconciliation: the event-driven path under the
+        // ideal preset prices the exact same workload at the exact same
+        // cycle count as the analytic activity evaluation
+        let net = table1_net("net1");
+        let hw = HwConfig::with_lhr(vec![4, 8, 8]);
+        let costs = CostModel::default();
+        let cache = EstimateCache::new();
+        let analytic = evaluate(&net, &hw, &EvalMode::Activity { seed: 42 }, &costs);
+        let ideal = evaluate_uarch_cached(
+            &net,
+            &hw,
+            &UarchConfig::ideal(),
+            42,
+            &costs,
+            &cache,
+        );
+        assert_eq!(ideal.cycles, analytic.cycles);
+        assert_eq!(ideal.serial_cycles, analytic.serial_cycles);
+        let u = ideal.uarch.as_ref().unwrap();
+        assert_eq!(u.ideal_cycles, analytic.cycles);
+        assert_eq!(u.stall_cycles(), 0);
+        // the uarch adder makes the point's area a superset of the base
+        assert!(ideal.resources.lut > analytic.resources.lut);
+    }
+
+    #[test]
+    fn finite_uarch_point_is_slower_and_cheaper_than_ideal() {
+        let net = table1_net("net1");
+        let hw = HwConfig::with_lhr(vec![4, 8, 8]);
+        let costs = CostModel::default();
+        let cache = EstimateCache::new();
+        let ideal = evaluate_uarch_cached(&net, &hw, &UarchConfig::ideal(), 42, &costs, &cache);
+        let tight = evaluate_uarch_cached(
+            &net,
+            &hw,
+            &UarchConfig { fifo_depth: 1, mem_ports: 1, banks: 1 },
+            42,
+            &costs,
+            &cache,
+        );
+        assert!(tight.cycles >= ideal.cycles);
+        assert!(tight.resources.lut < ideal.resources.lut);
+        let u = tight.uarch.as_ref().unwrap();
+        assert_eq!(u.ideal_cycles, ideal.cycles);
+        let gap = tight.cycles - u.ideal_cycles;
+        assert!(gap <= u.stall_cycles(), "gap {gap} > stalls {}", u.stall_cycles());
+    }
+
+    #[test]
+    fn uarch_sweep_identical_across_thread_counts() {
+        let net = table1_net("net1");
+        let costs = CostModel::default();
+        let configs: Vec<(HwConfig, UarchConfig)> = [
+            (vec![1, 1, 1], UarchConfig::ideal()),
+            (vec![4, 8, 8], UarchConfig { fifo_depth: 2, mem_ports: 1, banks: 2 }),
+            (vec![4, 4, 4], UarchConfig { fifo_depth: 1, mem_ports: 2, banks: 4 }),
+        ]
+        .into_iter()
+        .map(|(lhr, u)| (HwConfig::with_lhr(lhr), u))
+        .collect();
+        let serial: Vec<DsePoint> = {
+            let cache = EstimateCache::new();
+            sweep_uarch_cached(&net, &configs, 42, &costs, 1, &cache)
+        };
+        for threads in [2, 8] {
+            let cache = EstimateCache::new();
+            let par = sweep_uarch_cached(&net, &configs, 42, &costs, threads, &cache);
+            assert_eq!(par.len(), serial.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.cycles, b.cycles);
+                assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits());
+                assert_eq!(a.uarch, b.uarch);
+            }
+        }
     }
 
     #[test]

@@ -81,6 +81,46 @@ pub fn enumerate_capped(net: &NetDef, max_lhr: usize, cap: usize) -> Vec<HwConfi
     all.into_iter().step_by(stride).collect()
 }
 
+/// Candidate inter-layer FIFO depths for `explore --uarch` (0 = the
+/// unbounded ideal preset, anchoring the frontier's fast/expensive end).
+pub const UARCH_FIFO_CHOICES: [usize; 6] = [0, 1, 2, 4, 8, 16];
+
+/// Candidate memory-port counts for `explore --uarch` (0 = unlimited).
+pub const UARCH_PORT_CHOICES: [usize; 4] = [0, 1, 2, 4];
+
+/// Candidate memory bank counts for `explore --uarch` (0 = conflict-free).
+pub const UARCH_BANK_CHOICES: [usize; 5] = [0, 1, 2, 4, 8];
+
+/// The three microarchitecture axes appended to the LHR lattice when
+/// `--uarch` is on: FIFO depth, memory ports, banks (in that order —
+/// [`crate::uarch::UarchConfig`] fields map positionally). Values are the
+/// knob settings themselves, like the LHR dims carry LHR values.
+pub fn uarch_dims() -> Vec<Vec<usize>> {
+    vec![
+        UARCH_FIFO_CHOICES.to_vec(),
+        UARCH_PORT_CHOICES.to_vec(),
+        UARCH_BANK_CHOICES.to_vec(),
+    ]
+}
+
+/// Split an extended lattice point (produced under [`uarch_dims`]) into
+/// its LHR prefix and the [`crate::uarch::UarchConfig`] tail.
+pub fn split_uarch_point(point: &[usize]) -> (Vec<usize>, crate::uarch::UarchConfig) {
+    assert!(
+        point.len() >= 3,
+        "uarch lattice point needs at least the three uarch dims"
+    );
+    let (lhr, tail) = point.split_at(point.len() - 3);
+    (
+        lhr.to_vec(),
+        crate::uarch::UarchConfig {
+            fifo_depth: tail[0],
+            mem_ports: tail[1],
+            banks: tail[2],
+        },
+    )
+}
+
 /// The exact LHR sets of the paper's Table I (TW rows), per network.
 /// Conv networks (net5) get an implicit LHR 1 for the output layer, which
 /// the paper's 4-tuples leave fixed.
@@ -168,6 +208,27 @@ mod tests {
         let capped = enumerate_capped(&net, 64, 10);
         assert!(full.len() > 10);
         assert!(capped.len() <= 10 + 1);
+    }
+
+    #[test]
+    fn uarch_dims_split_roundtrips() {
+        let net = fc_net("t", "mnist", &[64, 16, 8], 4, 2, 0.9, 5);
+        let mut dims = lattice_dims(&net, 16);
+        let n_param = dims.len();
+        dims.extend(uarch_dims());
+        assert_eq!(dims.len(), n_param + 3);
+        // first point of every dim = fully-parallel LHR + ideal uarch
+        let first: Vec<usize> = dims.iter().map(|d| d[0]).collect();
+        let (lhr, ucfg) = split_uarch_point(&first);
+        assert_eq!(lhr, vec![1; n_param]);
+        assert!(ucfg.is_ideal());
+        // a finite tail maps positionally: fifo, ports, banks
+        let point = vec![2, 4, 8, 2, 1];
+        let (lhr, ucfg) = split_uarch_point(&point);
+        assert_eq!(lhr, vec![2, 4]);
+        assert_eq!(ucfg.fifo_depth, 8);
+        assert_eq!(ucfg.mem_ports, 2);
+        assert_eq!(ucfg.banks, 1);
     }
 
     #[test]

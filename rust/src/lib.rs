@@ -17,10 +17,12 @@
 //!   [`resources`] (analytical LUT/REG/BRAM/energy models calibrated to
 //!   Table I).
 //! * **Evaluation Phase** — [`sim`] (the cycle-accurate, sparsity-aware
-//!   simulator: one pipelined engine, pluggable workloads/probes) and
-//!   [`dse`] (sweeps, n-objective Pareto frontiers, the checkpointable
-//!   [`dse::Explorer`], constraint-driven [`dse::auto_search`], and
-//!   paper-shaped reports).
+//!   simulator: one pipelined engine, pluggable workloads/probes),
+//!   [`uarch`] (the event-driven microarchitecture model: bounded spike
+//!   FIFOs, banked memory ports, stall accounting — ideal preset
+//!   byte-identical to the analytic engine) and [`dse`] (sweeps,
+//!   n-objective Pareto frontiers, the checkpointable [`dse::Explorer`],
+//!   constraint-driven [`dse::auto_search`], and paper-shaped reports).
 //!
 //! Cross-cutting: [`data`] (calibrated activity models), [`baselines`]
 //! (prior-work anchors, the sparsity-oblivious latency bound, and the
@@ -68,5 +70,6 @@ pub mod resources;
 pub mod runtime;
 pub mod sim;
 pub mod snn;
+pub mod uarch;
 pub mod util;
 pub mod validate;

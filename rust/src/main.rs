@@ -5,6 +5,7 @@
 //!   resources    FPGA resource + power estimate of one configuration
 //!   dse          LHR sweep with Pareto frontier (Fig. 6 data)
 //!   explore      multi-objective Pareto exploration with checkpoint/resume
+//!   uarch        event-driven microarchitecture simulation (FIFO/port/bank stalls)
 //!   serve        sharded dynamic-batching serve runtime under synthetic load
 //!   bench        fixed-seed throughput harness emitting BENCH_sim.json
 //!   table1       reproduce the paper's Table I rows
@@ -24,7 +25,7 @@ use snn_dse::util::{commas, kfmt};
 use snn_dse::{runtime, validate};
 use std::path::PathBuf;
 
-const USAGE: &str = "snn-dse <simulate|resources|dse|explore|serve|bench|table1|sweep-t-pcr|validate|infer|firing|generate|auto|dynamic> [options]
+const USAGE: &str = "snn-dse <simulate|resources|dse|explore|uarch|serve|bench|table1|sweep-t-pcr|validate|infer|firing|generate|auto|dynamic> [options]
   common options:
     --net <net1..net5>          network (default net1)
     --lhr <a,b,c,...>           per-layer logical-to-hardware ratios
@@ -46,7 +47,20 @@ const USAGE: &str = "snn-dse <simulate|resources|dse|explore|serve|bench|table1|
     --checkpoint <path>         save/resume exploration state (JSON)
     --checkpoint-every <n>      rounds between checkpoint writes (default 5;
                                 0 = only on completion)
+    --uarch                     extend the lattice with the microarchitecture
+                                dimensions (FIFO depth, memory ports, banks)
+                                and evaluate points event-driven
     --csv <path>                dump the frontier as CSV
+  uarch options:
+    --net <net1..net5>          network (default net1)
+    --lhr <a,b,c,...>           per-layer LHR (default fully parallel)
+    --fifo-depth <n>            inter-layer spike-FIFO depth (0 = unbounded,
+                                default 2)
+    --ports <n>                 memory ports per layer (0 = unlimited, default 1)
+    --banks <n>                 memory banks per layer (0 = conflict-free,
+                                default 2)
+    --smoke                     verify the ideal preset against the analytic
+                                engine and print a tiny stall table (CI)
   serve options:
     --shards <n>                engine replicas / worker threads (default 4)
     --max-batch <n>             dynamic-batching cap per dispatch (default 8)
@@ -78,6 +92,7 @@ fn main() {
         "resources" => cmd_resources(&args),
         "dse" => cmd_dse(&args),
         "explore" => cmd_explore(&args),
+        "uarch" => cmd_uarch(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
         "table1" => cmd_table1(&args),
@@ -205,6 +220,7 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
         threads: args.usize_or("threads", 8),
         checkpoint: args.get("checkpoint").map(PathBuf::from),
         checkpoint_every: args.usize_or("checkpoint-every", 5),
+        uarch: args.flag("uarch"),
     };
     let costs = CostModel::default();
     let mut explorer = snn_dse::dse::Explorer::resume_or_new(&net, cfg)?;
@@ -257,6 +273,56 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
             dse::report::fig6_csv(&[(net.name.clone(), frontier_points)]),
         )?;
         println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_uarch(args: &Args) -> anyhow::Result<()> {
+    use snn_dse::uarch::{stall_table, UarchConfig, UarchSim};
+
+    let net = net_of(args);
+    let hw = hw_of(args, &net);
+    let seed = args.usize_or("seed", 42) as u64;
+    let ucfg = UarchConfig {
+        fifo_depth: args.usize_or("fifo-depth", 2),
+        mem_ports: args.usize_or("ports", 1),
+        banks: args.usize_or("banks", 2),
+    };
+    let mut finite_sim = UarchSim::cost_only(&net, &hw, ucfg)?;
+    let finite = finite_sim.run_activity_seeded(seed);
+    let mut ideal_sim = UarchSim::cost_only(&net, &hw, UarchConfig::ideal())?;
+    let ideal = ideal_sim.run_activity_seeded(seed);
+
+    println!("network   : {} ({})", net.name, net.topology_string());
+    println!("LHR       : {}", hw.label());
+    println!("uarch     : {} ({} events)", ucfg.label(), commas(finite.events));
+    println!("ideal     : {} cycles (unbounded FIFOs, conflict-free memory)",
+        commas(ideal.total_cycles));
+    let gap = finite.total_cycles - ideal.total_cycles;
+    println!("finite    : {} cycles (+{} from stalls, x{:.3} vs ideal)",
+        commas(finite.total_cycles), commas(gap),
+        finite.total_cycles as f64 / ideal.total_cycles.max(1) as f64);
+    println!("stall breakdown:");
+    print!("{}", stall_table(&finite));
+
+    if args.flag("smoke") {
+        // golden reconciliation, executed in CI: the ideal preset must
+        // price the same workload at exactly the analytic engine's cycles
+        let analytic = dse::evaluate(&net, &hw, &EvalMode::Activity { seed }, &CostModel::default());
+        anyhow::ensure!(
+            ideal.total_cycles == analytic.cycles,
+            "ideal uarch {} cycles != analytic engine {} cycles",
+            ideal.total_cycles,
+            analytic.cycles
+        );
+        anyhow::ensure!(ideal.stall_cycles() == 0, "ideal preset reported stalls");
+        anyhow::ensure!(
+            gap <= finite.stall_cycles(),
+            "cycle gap {gap} exceeds the stall sum {}",
+            finite.stall_cycles()
+        );
+        println!("SMOKE OK (ideal == analytic: {} cycles; gap {} <= stalls {})",
+            commas(ideal.total_cycles), commas(gap), commas(finite.stall_cycles()));
     }
     Ok(())
 }

@@ -96,6 +96,26 @@ impl NetArtifacts {
                 n_samples
             );
         }
+        // A missing or malformed accuracy used to be mapped to NaN via
+        // `unwrap_or(f64::NAN)` and then propagate silently all the way
+        // into `dse::report::table1_block`'s accuracy column; a broken
+        // manifest must fail the load with a description instead.
+        let accuracy = manifest
+            .at("accuracy")
+            .as_f64()
+            .with_context(|| {
+                format!(
+                    "manifest {}: missing or non-numeric \"accuracy\"",
+                    dir.join("manifest.json").display()
+                )
+            })?;
+        if !accuracy.is_finite() || !(0.0..=1.0).contains(&accuracy) {
+            bail!(
+                "manifest {}: accuracy {accuracy} outside the valid fraction range 0.0..=1.0",
+                dir.join("manifest.json").display()
+            );
+        }
+
         let mut traces = Vec::with_capacity(n_samples);
         let mut off = 0usize;
         for s in 0..n_samples {
@@ -124,7 +144,7 @@ impl NetArtifacts {
             net,
             weights,
             traces,
-            accuracy: manifest.at("accuracy").as_f64().unwrap_or(f64::NAN),
+            accuracy,
             avg_spikes_per_layer: manifest.at("avg_spikes_per_layer").f64_vec(),
             trace_t,
             dir: dir.to_path_buf(),
@@ -255,6 +275,56 @@ mod tests {
         assert_eq!(net.layers[0].output_bits(), 4 * 8 * 8);
         assert_eq!(net.layers[1].output_bits(), 4 * 4 * 4);
         assert_eq!(net.layers[2].input_bits(), 64);
+    }
+
+    /// Write a minimal loadable artifact directory (one 4->2 dense layer,
+    /// zero trace samples) with the given manifest `accuracy` fragment.
+    fn write_artifact_dir(tag: &str, accuracy_field: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("snn_dse_artifacts_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = format!(
+            r#"{{"name":"t","dataset":"mnist","input_shape":[4],
+                "classes":2,"population":1,"beta":0.9,"theta":1.0,
+                "t_steps":3,"trace_samples":0,{accuracy_field}
+                "layers":[{{"kind":"dense","shape":[4,2],"w_offset":0,
+                           "b_offset":8}}]}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        // 8 weights + 2 biases, all f32 LE zeros
+        std::fs::write(dir.join("weights.bin"), vec![0u8; 10 * 4]).unwrap();
+        std::fs::write(dir.join("trace.bin"), Vec::<u8>::new()).unwrap();
+        dir
+    }
+
+    #[test]
+    fn missing_accuracy_is_a_descriptive_error_not_nan() {
+        // regression: `unwrap_or(f64::NAN)` silently fed NaN into the
+        // Table-I accuracy column when the manifest lacked the field
+        let dir = write_artifact_dir("no_acc", "");
+        let err = NetArtifacts::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("accuracy"), "error must name the field: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn out_of_range_accuracy_rejected() {
+        let dir = write_artifact_dir("bad_acc", r#""accuracy":17.5,"#);
+        let err = NetArtifacts::load(&dir).unwrap_err().to_string();
+        assert!(
+            err.contains("0.0..=1.0"),
+            "error must describe the valid range: {err}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn valid_accuracy_loads() {
+        let dir = write_artifact_dir("ok_acc", r#""accuracy":0.91,"#);
+        let art = NetArtifacts::load(&dir).unwrap();
+        assert!((art.accuracy - 0.91).abs() < 1e-12);
+        assert_eq!(art.weights.len(), 1);
+        assert!(art.traces.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -475,6 +475,7 @@ mod tests {
             energy_mj: e,
             latency_us: cycles as f64,
             layer_activity: vec![],
+            uarch: None,
         };
         let f = ParetoFrontier::from_points(
             &Objective::DEFAULT,

@@ -69,8 +69,18 @@ pub trait Workload {
     ) -> PhaseCycles;
 }
 
-/// Observer hooks over a functional run. All methods default to no-ops.
+/// Observer hooks over a run. All methods default to no-ops. Spike-train
+/// hooks (`on_layer_output` / `on_network_output` / `on_step_finish`)
+/// fire only for functional workloads; [`Probe::on_layer_step`] fires
+/// for every workload, cost-only included.
 pub trait Probe {
+    /// Layer `l` finished its step-`t` work at a cost of `phases` —
+    /// called for *every* workload right after
+    /// [`Workload::step_layer`] returns, with the layer's post-step
+    /// state readable. The uarch trace recorder hooks here, so per-step
+    /// costs are observed from the engine's own loop rather than a
+    /// re-implementation of it.
+    fn on_layer_step(&mut self, _l: usize, _t: usize, _phases: &PhaseCycles, _layer: &LayerSim) {}
     /// Layer `l` produced its step-`t` output spike train.
     fn on_layer_output(&mut self, _l: usize, _t: usize, _out: &BitVec) {}
     /// The network's final layer produced its step-`t` output.
@@ -329,6 +339,7 @@ impl Engine {
             let mut prev_finish = 0u64;
             for (l, layer) in layers.iter_mut().enumerate() {
                 let phases = workload.step_layer(layer, l, t, &self.cur, &mut self.next);
+                probe.on_layer_step(l, t, &phases, layer);
                 serial += phases.total();
                 prev_finish = advance_finish(&mut self.finish[l], prev_finish, phases.total());
                 if functional {
@@ -368,6 +379,41 @@ mod tests {
         // layer stalled on its producer
         let mut f = 3u64;
         assert_eq!(advance_finish(&mut f, 10, 5), 15);
+    }
+
+    #[test]
+    fn on_layer_step_fires_for_cost_only_workloads() {
+        // the spike-train hooks stay silent for cost-only runs, but the
+        // per-layer cost hook must fire for every (layer, step) — the
+        // uarch trace recorder depends on it
+        struct CostCounter {
+            calls: usize,
+            total: u64,
+        }
+        impl Probe for CostCounter {
+            fn on_layer_step(
+                &mut self,
+                _l: usize,
+                _t: usize,
+                phases: &PhaseCycles,
+                _layer: &LayerSim,
+            ) {
+                self.calls += 1;
+                self.total += phases.total();
+            }
+        }
+        use crate::config::{ExperimentConfig, HwConfig};
+        use crate::sim::costs::CostModel;
+        use crate::sim::pipeline::NetworkSim;
+        let net = crate::snn::fc_net("t", "mnist", &[16, 8, 4], 2, 2, 0.9, 3);
+        let cfg = ExperimentConfig::new(net, HwConfig::with_lhr(vec![1, 1])).unwrap();
+        let mut sim = NetworkSim::cost_only(&cfg, CostModel::default());
+        let activity = vec![vec![2usize; 3], vec![1; 3], vec![1; 3]];
+        let mut workload = ActivityWorkload::new(&activity, 2);
+        let mut probe = CostCounter { calls: 0, total: 0 };
+        let r = sim.run_engine(&mut workload, &mut probe);
+        assert_eq!(probe.calls, 2 * 3, "one call per (layer, step)");
+        assert_eq!(probe.total, r.serial_cycles, "hook sees every cost");
     }
 
     #[test]

@@ -1,0 +1,158 @@
+//! Deterministic event queue for the microarchitecture simulator.
+//!
+//! A binary min-heap of timestamped events with **total-order
+//! tie-breaking**: events are ordered by `(time, kind, layer, seq)`, where
+//! `seq` is the monotonically increasing push counter. Two runs of the
+//! same simulation therefore pop events in exactly the same order — the
+//! determinism contract `UarchSim` advertises — and simultaneous events
+//! (a credit freed and a compute finishing on the same cycle) resolve the
+//! same way on every host and at every thread count.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What a scheduled event asks the simulator to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// A layer's in-flight step finished computing (including memory
+    /// stalls); it may now try to emit.
+    ComputeDone,
+    /// A downstream credit was freed or an input token arrived: the layer
+    /// should retry a blocked emit.
+    TryEmit,
+    /// An input token or its own output register became available: the
+    /// layer should try to start its next step.
+    TryStart,
+}
+
+/// One scheduled event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Simulated cycle at which the event fires.
+    pub time: u64,
+    pub kind: EventKind,
+    /// Layer index the event targets.
+    pub layer: usize,
+    /// Push sequence number — the final total-order tie-breaker.
+    pub seq: u64,
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert so the earliest event pops
+        // first. ComputeDone before TryEmit before TryStart at equal
+        // times keeps state transitions (finish, then unblock, then
+        // start) in pipeline order; seq breaks every remaining tie.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.kind.cmp(&self.kind))
+            .then_with(|| other.layer.cmp(&self.layer))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The deterministic event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+    /// Events popped so far (the `events/sec` bench rate counts these).
+    pub popped: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue::default()
+    }
+
+    /// Schedule `kind` for `layer` at `time`.
+    pub fn push(&mut self, time: u64, kind: EventKind, layer: usize) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event {
+            time,
+            kind,
+            layer,
+            seq,
+        });
+    }
+
+    /// Pop the earliest event (ties resolved by the total order).
+    pub fn pop(&mut self) -> Option<Event> {
+        let e = self.heap.pop();
+        if e.is_some() {
+            self.popped += 1;
+        }
+        e
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, EventKind::TryStart, 0);
+        q.push(10, EventKind::ComputeDone, 2);
+        q.push(20, EventKind::TryEmit, 1);
+        let times: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(times, vec![10, 20, 30]);
+        assert_eq!(q.popped, 3);
+    }
+
+    #[test]
+    fn equal_times_break_by_kind_then_layer_then_seq() {
+        let mut q = EventQueue::new();
+        q.push(5, EventKind::TryStart, 0);
+        q.push(5, EventKind::ComputeDone, 1);
+        q.push(5, EventKind::TryEmit, 0);
+        q.push(5, EventKind::ComputeDone, 0);
+        let order: Vec<(EventKind, usize)> =
+            std::iter::from_fn(|| q.pop()).map(|e| (e.kind, e.layer)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (EventKind::ComputeDone, 0),
+                (EventKind::ComputeDone, 1),
+                (EventKind::TryEmit, 0),
+                (EventKind::TryStart, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn identical_events_pop_in_push_order() {
+        let mut q = EventQueue::new();
+        for _ in 0..4 {
+            q.push(7, EventKind::TryStart, 3);
+        }
+        let seqs: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_queue_pops_none() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+        assert!(q.pop().is_none());
+        assert_eq!(q.popped, 0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Credit-based bounded spike FIFOs between layer ECUs.
+//!
+//! The analytic engine assumes every layer can buffer arbitrarily many
+//! finished time steps for its consumer (`finish[l][t]` never waits on
+//! downstream progress). Real inter-layer buffers are finite: a producer
+//! holds its output register until the FIFO grants a credit, so a slow
+//! consumer back-pressures the whole upstream pipeline. `SpikeFifo`
+//! models exactly that credit flow — one slot per buffered time step,
+//! occupied from the producer's *emit* until the consumer *starts* the
+//! step — plus the occupancy statistics the DSE uses to size buffers.
+//!
+//! `depth == 0` means unbounded (the `UarchConfig::ideal()` preset): a
+//! credit is always available and the model degenerates to the analytic
+//! recurrence.
+
+/// One bounded inter-layer FIFO.
+#[derive(Debug, Clone)]
+pub struct SpikeFifo {
+    /// Capacity in buffered time steps; 0 = unbounded.
+    depth: usize,
+    occupancy: usize,
+    /// Highest occupancy ever observed (sizes the hardware buffer).
+    max_occupancy: usize,
+    pushes: u64,
+    pops: u64,
+}
+
+impl SpikeFifo {
+    pub fn new(depth: usize) -> Self {
+        SpikeFifo {
+            depth,
+            occupancy: 0,
+            max_occupancy: 0,
+            pushes: 0,
+            pops: 0,
+        }
+    }
+
+    /// True when a producer may emit into the FIFO (a credit is free).
+    pub fn has_space(&self) -> bool {
+        self.depth == 0 || self.occupancy < self.depth
+    }
+
+    /// Producer emits one time step's spike train. Panics when called
+    /// without a credit — the simulator must gate emits on `has_space`.
+    pub fn push(&mut self) {
+        assert!(self.has_space(), "push into a full FIFO (credit protocol violated)");
+        self.occupancy += 1;
+        self.max_occupancy = self.max_occupancy.max(self.occupancy);
+        self.pushes += 1;
+    }
+
+    /// Consumer pops the oldest buffered step, freeing one credit.
+    pub fn pop(&mut self) {
+        assert!(self.occupancy > 0, "pop from an empty FIFO");
+        self.occupancy -= 1;
+        self.pops += 1;
+    }
+
+    /// Preload `n` tokens (the network-input source: every time step is
+    /// available at cycle 0, exactly as the analytic engine assumes).
+    pub fn preload(&mut self, n: usize) {
+        assert!(
+            self.depth == 0 || n <= self.depth,
+            "preload exceeds FIFO depth"
+        );
+        self.occupancy = n;
+        self.max_occupancy = self.max_occupancy.max(n);
+        self.pushes += n as u64;
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.occupancy
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.occupancy == 0
+    }
+
+    pub fn max_occupancy(&self) -> usize {
+        self.max_occupancy
+    }
+
+    /// Capacity in steps; 0 = unbounded.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// `(pushes, pops)` so far — every pushed step must eventually pop.
+    pub fn traffic(&self) -> (u64, u64) {
+        (self.pushes, self.pops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_fifo_exhausts_credits() {
+        let mut f = SpikeFifo::new(2);
+        assert!(f.has_space());
+        f.push();
+        f.push();
+        assert!(!f.has_space());
+        f.pop();
+        assert!(f.has_space());
+        assert_eq!(f.occupancy(), 1);
+        assert_eq!(f.max_occupancy(), 2);
+        assert_eq!(f.traffic(), (2, 1));
+    }
+
+    #[test]
+    fn unbounded_fifo_never_blocks() {
+        let mut f = SpikeFifo::new(0);
+        for _ in 0..1000 {
+            assert!(f.has_space());
+            f.push();
+        }
+        assert_eq!(f.occupancy(), 1000);
+        assert_eq!(f.max_occupancy(), 1000);
+    }
+
+    #[test]
+    #[should_panic(expected = "credit protocol violated")]
+    fn push_without_credit_panics() {
+        let mut f = SpikeFifo::new(1);
+        f.push();
+        f.push();
+    }
+
+    #[test]
+    #[should_panic(expected = "pop from an empty FIFO")]
+    fn pop_empty_panics() {
+        let mut f = SpikeFifo::new(1);
+        f.pop();
+    }
+
+    #[test]
+    fn preload_fills_the_source() {
+        let mut f = SpikeFifo::new(0);
+        f.preload(25);
+        assert_eq!(f.occupancy(), 25);
+        f.pop();
+        assert_eq!(f.occupancy(), 24);
+    }
+}

@@ -1,0 +1,172 @@
+//! Banked membrane/weight memories with port arbitration.
+//!
+//! The analytic cost model charges the accumulate phase as if every
+//! memory access the datapath issues is serviced the same cycle
+//! (conflict-free, infinitely ported — beyond the coarse
+//! `MemoryUnit::stall_factor` already folded into the base cycles). This
+//! module models the two finite-memory effects on top of that base:
+//!
+//! * **Port arbitration** (`mem_ports`): the memory accepts at most P
+//!   requests per cycle. When the step's access count needs more service
+//!   cycles than the datapath's own pace provides, the difference is
+//!   `port_wait` stall.
+//! * **Bank conflicts** (`banks`): requests spread round-robin over B
+//!   banks, each serving one request per cycle. With fewer banks than
+//!   concurrently requesting PE lanes, banks serialize; the *additional*
+//!   service cycles beyond the port bound are `bank_conflict` stall.
+//!
+//! Both knobs use `0 = unlimited` (the `UarchConfig::ideal()` preset ⇒
+//! zero stall). A knob at or above the layer's lane count imposes no
+//! constraint either: L lanes can never issue more than L requests per
+//! cycle, and that pace is already what the base cycle count reflects —
+//! which is what makes a sufficiently provisioned finite memory converge
+//! to the ideal model instead of stalling spuriously.
+
+/// Stall attribution for one serviced step.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemService {
+    /// Extra cycles because ports limited request acceptance.
+    pub port_wait: u64,
+    /// Extra cycles (beyond the port bound) because banks serialized.
+    pub bank_conflict: u64,
+}
+
+impl MemService {
+    pub fn total(&self) -> u64 {
+        self.port_wait + self.bank_conflict
+    }
+}
+
+/// One layer's banked memory system.
+#[derive(Debug, Clone, Copy)]
+pub struct BankedMemory {
+    /// Requests accepted per cycle; 0 = unlimited.
+    pub ports: usize,
+    /// Memory banks; 0 = conflict-free.
+    pub banks: usize,
+}
+
+impl BankedMemory {
+    pub fn new(ports: usize, banks: usize) -> Self {
+        BankedMemory { ports, banks }
+    }
+
+    /// The ideal preset: no port or bank constraint, never stalls.
+    pub fn unlimited() -> Self {
+        BankedMemory { ports: 0, banks: 0 }
+    }
+
+    /// Effective per-cycle throughput limit imposed by knob `x` on a
+    /// layer with `lanes` concurrent requesters; `None` = unconstrained.
+    fn cap(x: usize, lanes: usize) -> Option<u64> {
+        if x == 0 || x >= lanes {
+            None
+        } else {
+            Some(x as u64)
+        }
+    }
+
+    /// Stall cycles for a step issuing `accesses` memory requests from
+    /// `lanes` PE lanes over a base duration of `base_cycles`.
+    ///
+    /// The memory must serve all requests within the step; service
+    /// cycles needed are `ceil(accesses / throughput)`, and only the
+    /// portion exceeding `base_cycles` (the pace the datapath already
+    /// pays for) stalls the step. `port_wait` is the stall with banks
+    /// assumed conflict-free; `bank_conflict` is whatever the bank bound
+    /// adds on top, so the two always sum to the step's total stall.
+    pub fn service(&self, accesses: u64, base_cycles: u64, lanes: usize) -> MemService {
+        if accesses == 0 {
+            return MemService::default();
+        }
+        let lanes = lanes.max(1);
+        let stall_under = |throughput: Option<u64>| -> u64 {
+            match throughput {
+                None => 0,
+                Some(t) => accesses.div_ceil(t).saturating_sub(base_cycles),
+            }
+        };
+        let port_cap = Self::cap(self.ports, lanes);
+        let bank_cap = Self::cap(self.banks, lanes);
+        let combined = match (port_cap, bank_cap) {
+            (None, None) => None,
+            (Some(p), None) => Some(p),
+            (None, Some(b)) => Some(b),
+            (Some(p), Some(b)) => Some(p.min(b)),
+        };
+        let port_wait = stall_under(port_cap);
+        let total = stall_under(combined);
+        MemService {
+            port_wait,
+            bank_conflict: total - port_wait,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_memory_never_stalls() {
+        let m = BankedMemory::unlimited();
+        assert_eq!(m.service(1_000_000, 1, 64), MemService::default());
+        assert_eq!(m.service(0, 0, 1), MemService::default());
+    }
+
+    #[test]
+    fn knobs_at_or_above_lane_count_impose_nothing() {
+        // 8 lanes can issue at most 8 requests/cycle — 8 ports or banks
+        // (or more) change nothing relative to the datapath's own pace.
+        for (ports, banks) in [(8, 0), (0, 8), (16, 16), (8, 8)] {
+            let m = BankedMemory::new(ports, banks);
+            assert_eq!(m.service(10_000, 1, 8), MemService::default());
+        }
+    }
+
+    #[test]
+    fn port_bound_attributes_to_port_wait() {
+        // 100 accesses over 1 port need 100 cycles; base covers 30.
+        let m = BankedMemory::new(1, 0);
+        let s = m.service(100, 30, 8);
+        assert_eq!(s.port_wait, 70);
+        assert_eq!(s.bank_conflict, 0);
+    }
+
+    #[test]
+    fn bank_bound_attributes_to_bank_conflict() {
+        // ports unconstrained, 2 banks < 8 lanes: ceil(100/2)=50, base 30.
+        let m = BankedMemory::new(0, 2);
+        let s = m.service(100, 30, 8);
+        assert_eq!(s.port_wait, 0);
+        assert_eq!(s.bank_conflict, 20);
+    }
+
+    #[test]
+    fn combined_bounds_split_attribution() {
+        // 4 ports give ceil(100/4)=25 -> port_wait 15 over base 10;
+        // 2 banks tighten to 50 cycles -> 25 more attributed to banks.
+        let m = BankedMemory::new(4, 2);
+        let s = m.service(100, 10, 8);
+        assert_eq!(s.port_wait, 15);
+        assert_eq!(s.bank_conflict, 25);
+        assert_eq!(s.total(), 40);
+    }
+
+    #[test]
+    fn fewer_banks_never_reduce_stall() {
+        let mut prev = 0u64;
+        for banks in (1..=8).rev() {
+            let s = BankedMemory::new(0, banks).service(500, 20, 8);
+            assert!(s.total() >= prev, "banks={banks}");
+            prev = s.total();
+        }
+    }
+
+    #[test]
+    fn base_cycles_absorb_service_time() {
+        // service fits inside the datapath's own duration: no stall
+        let m = BankedMemory::new(2, 2);
+        assert_eq!(m.service(100, 50, 8), MemService::default());
+    }
+}

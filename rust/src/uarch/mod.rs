@@ -1,0 +1,731 @@
+//! Event-driven microarchitecture simulator.
+//!
+//! The analytic engine ([`crate::sim::engine`]) prices a configuration
+//! with a closed-form finish-time recurrence that assumes **infinite
+//! inter-layer buffering** and **conflict-free memory**. Real
+//! accelerators have neither: finite spike FIFOs back-pressure producers,
+//! and banked memories with few ports stall the accumulate phase. This
+//! module simulates exactly those effects, event by event, on top of the
+//! existing per-step cost model:
+//!
+//! * [`event`] — binary-heap event queue with total-order tie-breaking
+//! * [`fifo`] — credit-based bounded spike FIFOs between layer ECUs
+//! * [`pe`] — PE lane arrays honoring each layer's LHR time-multiplexing
+//! * [`memory`] — banked memories with port arbitration and bank-conflict
+//!   stalls
+//!
+//! ## The load-bearing contract
+//!
+//! Under [`UarchConfig::ideal`] (unbounded FIFOs, unlimited memory) the
+//! event simulation degenerates *byte-identically* to the analytic
+//! recurrence: per-layer per-step finish times and the total cycle count
+//! equal `finish[l][t] = max(finish[l][t-1], finish[l-1][t]) + c_l(t)`
+//! on the exact same `c_l(t)` values — pinned by
+//! `rust/tests/uarch_golden.rs` on every Table-I network and fuzzed
+//! against random topologies in `rust/tests/fuzz_differential.rs`.
+//! Finite configurations can only add stall cycles, each attributed to a
+//! per-layer counter (`fifo_full`, `port_wait`, `bank_conflict`), and the
+//! ideal-vs-finite cycle gap is always bounded by the stall sum.
+//!
+//! ## Two phases
+//!
+//! A run records a **trace** — per-layer per-step base cost and memory
+//! access count, captured from inside the unified engine's own loop via
+//! a [`crate::sim::Probe`] hook (functional or cost-only workload), so
+//! the recorded costs are the engine's by construction — and then
+//! **replays** it through the event queue under a [`UarchConfig`].
+//! Recording once and replaying under many configurations is what makes
+//! the three uarch DSE dimensions cheap to sweep.
+//!
+//! ```
+//! use snn_dse::config::HwConfig;
+//! use snn_dse::snn::table1_net;
+//! use snn_dse::uarch::{UarchConfig, UarchSim};
+//!
+//! let net = table1_net("net1");
+//! let hw = HwConfig::with_lhr(vec![4, 8, 8]);
+//! let mut ideal = UarchSim::cost_only(&net, &hw, UarchConfig::ideal()).unwrap();
+//! let mut tight = UarchSim::cost_only(
+//!     &net,
+//!     &hw,
+//!     UarchConfig { fifo_depth: 1, mem_ports: 1, banks: 1 },
+//! ).unwrap();
+//! let a = ideal.run_activity_seeded(42);
+//! let b = tight.run_activity_seeded(42);
+//! // bounded buffers and one memory port can only slow the pipeline down
+//! assert!(b.total_cycles >= a.total_cycles);
+//! assert_eq!(a.stall_cycles(), 0);
+//! ```
+
+pub mod event;
+pub mod fifo;
+pub mod memory;
+pub mod pe;
+
+pub use event::{Event, EventKind, EventQueue};
+pub use fifo::SpikeFifo;
+pub use memory::{BankedMemory, MemService};
+pub use pe::{PeArray, ServedStep, StepTrace};
+
+use crate::config::{ExperimentConfig, HwConfig};
+use crate::data::ActivityModel;
+use crate::resources::Resources;
+use crate::sim::{
+    ActivityWorkload, CostModel, LayerSim, NetworkSim, PhaseCycles, Probe, SpikeTrainWorkload,
+};
+use crate::snn::{NetDef, SpikeTrain};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Weight seed used by the convenience constructors (matches the serve
+/// runtime's replica default).
+pub const DEFAULT_WEIGHT_SEED: u64 = 7;
+
+/// Buffer depth the resource model charges for an "unbounded" ideal FIFO
+/// — the provisioned worst case a hardware generator would instantiate to
+/// make back-pressure impossible at Table-I activity levels.
+pub const IDEAL_FIFO_DEPTH: usize = 64;
+
+/// The three microarchitecture knobs the event simulator adds to the
+/// design space. Every knob uses `0 = unbounded/unlimited`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct UarchConfig {
+    /// Inter-layer spike-FIFO depth in buffered time steps; 0 = unbounded.
+    pub fifo_depth: usize,
+    /// Memory requests accepted per cycle per layer; 0 = unlimited.
+    pub mem_ports: usize,
+    /// Membrane/weight memory banks per layer; 0 = conflict-free.
+    pub banks: usize,
+}
+
+impl UarchConfig {
+    /// Unbounded FIFOs, conflict-free memory: the preset under which the
+    /// event simulation reproduces the analytic recurrence byte-for-byte.
+    pub fn ideal() -> Self {
+        UarchConfig {
+            fifo_depth: 0,
+            mem_ports: 0,
+            banks: 0,
+        }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        *self == UarchConfig::ideal()
+    }
+
+    /// Short label like `f2/p1/b4` (`∞` for unbounded knobs).
+    pub fn label(&self) -> String {
+        let knob = |v: usize| -> String {
+            if v == 0 {
+                "∞".to_string()
+            } else {
+                v.to_string()
+            }
+        };
+        format!(
+            "f{}/p{}/b{}",
+            knob(self.fifo_depth),
+            knob(self.mem_ports),
+            knob(self.banks)
+        )
+    }
+}
+
+/// The recorded workload of one layer: base cost and memory traffic per
+/// time step, plus the lane count the memory arbitration sees.
+#[derive(Debug, Clone)]
+pub struct LayerTrace {
+    pub name: String,
+    /// PE lanes (= the layer's NU count under its LHR).
+    pub lanes: usize,
+    pub steps: Vec<StepTrace>,
+}
+
+/// Per-layer stall/occupancy breakdown of one event-simulated inference.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UarchLayerStats {
+    pub name: String,
+    pub lanes: usize,
+    /// Cycles spent computing (base cost + memory stalls).
+    pub busy_cycles: u64,
+    /// Cycles a finished step sat blocked on a full downstream FIFO.
+    pub fifo_full: u64,
+    /// Memory stall cycles attributed to port arbitration.
+    pub port_wait: u64,
+    /// Memory stall cycles attributed to bank conflicts.
+    pub bank_conflict: u64,
+    /// Peak occupancy of the FIFO this layer emits into (0 for the
+    /// network output, which drains into an unbounded sink).
+    pub max_out_occupancy: usize,
+}
+
+impl UarchLayerStats {
+    pub fn stall_cycles(&self) -> u64 {
+        self.fifo_full + self.port_wait + self.bank_conflict
+    }
+}
+
+/// Result of one event-simulated inference.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UarchResult {
+    /// Cycle at which the final layer emitted its last step.
+    pub total_cycles: u64,
+    pub t_steps: usize,
+    pub per_layer: Vec<UarchLayerStats>,
+    /// `finish[l][t]`: the cycle at which layer `l` emitted step `t`.
+    /// Under [`UarchConfig::ideal`] this is byte-identical to the
+    /// analytic recurrence's finish matrix.
+    pub finish: Vec<Vec<u64>>,
+    /// Events processed by the queue (the bench `events/sec` numerator).
+    pub events: u64,
+}
+
+impl UarchResult {
+    /// All stall cycles across layers and causes. Zero under the ideal
+    /// preset; for finite configurations the ideal-vs-finite total-cycle
+    /// gap never exceeds this sum.
+    pub fn stall_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.stall_cycles()).sum()
+    }
+
+    /// Aggregate `(fifo_full, port_wait, bank_conflict)` across layers.
+    pub fn stall_breakdown(&self) -> (u64, u64, u64) {
+        self.per_layer.iter().fold((0, 0, 0), |(f, p, b), l| {
+            (f + l.fifo_full, p + l.port_wait, b + l.bank_conflict)
+        })
+    }
+}
+
+/// Render the per-layer stall/occupancy breakdown as an aligned text
+/// table (the `uarch` subcommand's and `uarch_stalls` example's output).
+pub fn stall_table(r: &UarchResult) -> String {
+    let mut s = format!(
+        "  {:<8} {:>6} {:>14} {:>12} {:>12} {:>14} {:>10}\n",
+        "layer", "lanes", "busy", "fifo_full", "port_wait", "bank_conflict", "max occ"
+    );
+    for l in &r.per_layer {
+        s.push_str(&format!(
+            "  {:<8} {:>6} {:>14} {:>12} {:>12} {:>14} {:>10}\n",
+            l.name,
+            l.lanes,
+            crate::util::commas(l.busy_cycles),
+            crate::util::commas(l.fifo_full),
+            crate::util::commas(l.port_wait),
+            crate::util::commas(l.bank_conflict),
+            l.max_out_occupancy
+        ));
+    }
+    let (f, p, b) = r.stall_breakdown();
+    s.push_str(&format!(
+        "  {:<8} {:>6} {:>14} {:>12} {:>12} {:>14}\n",
+        "TOTAL",
+        "",
+        crate::util::commas(r.total_cycles),
+        crate::util::commas(f),
+        crate::util::commas(p),
+        crate::util::commas(b)
+    ));
+    s
+}
+
+// ---- trace recording --------------------------------------------------------
+
+/// Memory accesses a layer's stats report so far (weight reads +
+/// membrane read/writes — everything that goes through the banked
+/// memories).
+fn accesses_of(layer: &LayerSim) -> u64 {
+    layer.stats.weight_reads + layer.stats.membrane_accesses
+}
+
+/// [`Probe`] that records each layer's per-step base cost and memory
+/// traffic from inside the engine's own loop ([`Probe::on_layer_step`]).
+/// Because the engine drives the recording, the captured `c_l(t)` values
+/// are — by construction, not by a parallel re-implementation — the
+/// exact costs the analytic recurrence consumes.
+struct TraceRecorder {
+    traces: Vec<LayerTrace>,
+    /// Last observed access counter per layer (stats may be non-zero
+    /// when recording starts on a reused simulator).
+    prev: Vec<u64>,
+}
+
+impl TraceRecorder {
+    fn new(sim: &NetworkSim, t_steps: usize) -> Self {
+        TraceRecorder {
+            traces: sim
+                .layers
+                .iter()
+                .map(|l| LayerTrace {
+                    name: l.stats.name.clone(),
+                    lanes: l.nu.units,
+                    steps: Vec::with_capacity(t_steps),
+                })
+                .collect(),
+            prev: sim.layers.iter().map(accesses_of).collect(),
+        }
+    }
+}
+
+impl Probe for TraceRecorder {
+    fn on_layer_step(&mut self, l: usize, _t: usize, phases: &PhaseCycles, layer: &LayerSim) {
+        let now = accesses_of(layer);
+        self.traces[l].steps.push(StepTrace {
+            cost: phases.total(),
+            accesses: now - self.prev[l],
+        });
+        self.prev[l] = now;
+    }
+}
+
+/// Record a functional spike-train run as per-layer traces by driving
+/// the unified engine with the trace-recording probe.
+pub fn record_spike_train(sim: &mut NetworkSim, input: &SpikeTrain) -> Vec<LayerTrace> {
+    let mut probe = TraceRecorder::new(sim, input.len());
+    let mut workload = SpikeTrainWorkload::new(input);
+    sim.run_engine(&mut workload, &mut probe);
+    probe.traces
+}
+
+/// Record an activity-driven (cost-only) run: `activity[0]` is the input
+/// spike count per step, `activity[l+1]` layer `l`'s output count.
+pub fn record_activity(sim: &mut NetworkSim, activity: &[Vec<usize>]) -> Vec<LayerTrace> {
+    let n_layers = sim.layers.len();
+    let mut workload = ActivityWorkload::new(activity, n_layers);
+    let mut probe = TraceRecorder::new(sim, activity[0].len());
+    sim.run_engine(&mut workload, &mut probe);
+    probe.traces
+}
+
+// ---- event-driven replay ----------------------------------------------------
+
+/// Per-layer state machine of the replay: Idle -> Computing -> WaitEmit.
+struct LayerRt {
+    /// Next step index to pop from the input FIFO and start.
+    next_step: usize,
+    /// Step currently computing (a `ComputeDone` event is in flight).
+    computing: Option<usize>,
+    /// Computed step waiting for a downstream credit: `(step, done_at)`.
+    blocked: Option<(usize, u64)>,
+}
+
+impl LayerRt {
+    fn busy(&self) -> bool {
+        self.computing.is_some() || self.blocked.is_some()
+    }
+}
+
+/// Replay recorded traces through the event-driven pipeline model under
+/// `cfg`. Deterministic: a pure function of `(traces, cfg)`.
+pub fn replay(traces: &[LayerTrace], cfg: &UarchConfig) -> UarchResult {
+    let n_layers = traces.len();
+    let t_steps = traces.first().map(|t| t.steps.len()).unwrap_or(0);
+    assert!(
+        traces.iter().all(|t| t.steps.len() == t_steps),
+        "all layer traces must span the same number of steps"
+    );
+    let mut finish = vec![vec![0u64; t_steps]; n_layers];
+    let mut stats: Vec<UarchLayerStats> = traces
+        .iter()
+        .map(|t| UarchLayerStats {
+            name: t.name.clone(),
+            lanes: t.lanes,
+            busy_cycles: 0,
+            fifo_full: 0,
+            port_wait: 0,
+            bank_conflict: 0,
+            max_out_occupancy: 0,
+        })
+        .collect();
+    if n_layers == 0 || t_steps == 0 {
+        return UarchResult {
+            total_cycles: 0,
+            t_steps,
+            per_layer: stats,
+            finish,
+            events: 0,
+        };
+    }
+
+    let pes: Vec<PeArray> = traces.iter().map(|t| PeArray::new(t.lanes)).collect();
+    let mem = BankedMemory::new(cfg.mem_ports, cfg.banks);
+    // fifos[l] feeds layer l; fifos[0] is the unbounded network-input
+    // source with every time step available at cycle 0 (exactly the
+    // analytic engine's assumption).
+    let mut fifos: Vec<SpikeFifo> = (0..n_layers)
+        .map(|l| SpikeFifo::new(if l == 0 { 0 } else { cfg.fifo_depth }))
+        .collect();
+    fifos[0].preload(t_steps);
+    let mut layers: Vec<LayerRt> = (0..n_layers)
+        .map(|_| LayerRt {
+            next_step: 0,
+            computing: None,
+            blocked: None,
+        })
+        .collect();
+
+    let mut q = EventQueue::new();
+    q.push(0, EventKind::TryStart, 0);
+
+    while let Some(e) = q.pop() {
+        let now = e.time;
+        let l = e.layer;
+        match e.kind {
+            EventKind::TryStart => {
+                if layers[l].busy() || layers[l].next_step >= t_steps || fifos[l].is_empty() {
+                    continue;
+                }
+                let t = layers[l].next_step;
+                layers[l].next_step = t + 1;
+                fifos[l].pop();
+                if l > 0 {
+                    // the pop freed an upstream credit
+                    q.push(now, EventKind::TryEmit, l - 1);
+                }
+                let served = pes[l].serve(&traces[l].steps[t], &mem);
+                stats[l].busy_cycles += served.duration;
+                stats[l].port_wait += served.mem.port_wait;
+                stats[l].bank_conflict += served.mem.bank_conflict;
+                layers[l].computing = Some(t);
+                q.push(now + served.duration, EventKind::ComputeDone, l);
+            }
+            EventKind::ComputeDone => {
+                let t = layers[l]
+                    .computing
+                    .take()
+                    .expect("ComputeDone without an in-flight step");
+                layers[l].blocked = Some((t, now));
+                q.push(now, EventKind::TryEmit, l);
+            }
+            EventKind::TryEmit => {
+                let Some((t, done_at)) = layers[l].blocked else {
+                    continue;
+                };
+                let has_credit = l + 1 == n_layers || fifos[l + 1].has_space();
+                if !has_credit {
+                    continue; // the downstream pop will requeue TryEmit
+                }
+                layers[l].blocked = None;
+                stats[l].fifo_full += now - done_at;
+                finish[l][t] = now;
+                if l + 1 < n_layers {
+                    fifos[l + 1].push();
+                    q.push(now, EventKind::TryStart, l + 1);
+                }
+                q.push(now, EventKind::TryStart, l);
+            }
+        }
+    }
+
+    // every layer must have drained every step — anything less is a
+    // protocol bug, not a user error
+    for (l, rt) in layers.iter().enumerate() {
+        assert!(
+            rt.next_step == t_steps && !rt.busy(),
+            "layer {l} stalled at step {}/{t_steps}",
+            rt.next_step
+        );
+    }
+    for (l, st) in stats.iter_mut().enumerate() {
+        st.max_out_occupancy = if l + 1 < n_layers {
+            fifos[l + 1].max_occupancy()
+        } else {
+            0
+        };
+    }
+
+    UarchResult {
+        total_cycles: finish[n_layers - 1][t_steps - 1],
+        t_steps,
+        per_layer: stats,
+        finish,
+        events: q.popped,
+    }
+}
+
+// ---- the assembled simulator ------------------------------------------------
+
+/// The event-driven microarchitecture simulator: the ordinary layer
+/// pipeline for functional behavior and per-step costs, plus the bounded
+/// FIFO / banked memory timing model on top.
+pub struct UarchSim {
+    sim: NetworkSim,
+    cfg: UarchConfig,
+}
+
+impl UarchSim {
+    /// Build with random weights (seed [`DEFAULT_WEIGHT_SEED`]) — the
+    /// functional path for nets without trained artifacts.
+    pub fn new(net: &NetDef, hw: &HwConfig, cfg: UarchConfig) -> Result<Self> {
+        let ecfg = ExperimentConfig::new(net.clone(), hw.clone())?;
+        Ok(UarchSim::with_network(
+            NetworkSim::with_random_weights(&ecfg, DEFAULT_WEIGHT_SEED, CostModel::default()),
+            cfg,
+        ))
+    }
+
+    /// Cost-only instance for activity-driven runs (no weights or
+    /// membrane state; only `run_activity*` may be called).
+    pub fn cost_only(net: &NetDef, hw: &HwConfig, cfg: UarchConfig) -> Result<Self> {
+        let ecfg = ExperimentConfig::new(net.clone(), hw.clone())?;
+        Ok(UarchSim::with_network(
+            NetworkSim::cost_only(&ecfg, CostModel::default()),
+            cfg,
+        ))
+    }
+
+    /// Wrap an existing [`NetworkSim`] (caller controls weights/costs).
+    pub fn with_network(sim: NetworkSim, cfg: UarchConfig) -> Self {
+        UarchSim { sim, cfg }
+    }
+
+    pub fn config(&self) -> &UarchConfig {
+        &self.cfg
+    }
+
+    /// The wrapped pipeline (e.g. to read accumulated `LayerStats`).
+    pub fn network(&self) -> &NetworkSim {
+        &self.sim
+    }
+
+    /// Functional run over one input spike train. Resets layer state
+    /// first, so repeated runs are independent and deterministic.
+    pub fn run(&mut self, input: &SpikeTrain) -> UarchResult {
+        self.sim.reset();
+        let traces = record_spike_train(&mut self.sim, input);
+        replay(&traces, &self.cfg)
+    }
+
+    /// Activity-driven run (see [`record_activity`] for the layout).
+    pub fn run_activity(&mut self, activity: &[Vec<usize>]) -> UarchResult {
+        self.sim.reset();
+        let traces = record_activity(&mut self.sim, activity);
+        replay(&traces, &self.cfg)
+    }
+
+    /// Activity-driven run over the net's calibrated [`ActivityModel`]
+    /// sampled with `seed` — the same workload the DSE's
+    /// `EvalMode::Activity` uses.
+    pub fn run_activity_seeded(&mut self, seed: u64) -> UarchResult {
+        let model = ActivityModel::for_net(&self.sim.net);
+        let mut rng = Rng::new(seed);
+        let activity = model.sample(self.sim.net.t_steps, &mut rng);
+        self.run_activity(&activity)
+    }
+}
+
+// ---- resource model for the new dimensions ----------------------------------
+
+/// FPGA resources the uarch choices add on top of the base estimate:
+/// inter-layer FIFO storage (deeper buffers cost more; the ideal preset
+/// is charged the provisioned worst case [`IDEAL_FIFO_DEPTH`]), and
+/// port/bank arbitration logic (more ports/banks cost more, capped at
+/// the layer's lane count — beyond that the hardware generator would not
+/// instantiate them). Monotone in every knob, with the ideal preset the
+/// most expensive point, so the DSE sees a genuine buffering-vs-latency
+/// trade.
+pub fn uarch_resources(cfg: &ExperimentConfig, u: &UarchConfig) -> Resources {
+    use crate::resources::estimator::shift_depth;
+    use crate::sim::neural_unit::NuMap;
+
+    let mut r = Resources::default();
+    let depth_eff = if u.fifo_depth == 0 {
+        IDEAL_FIFO_DEPTH
+    } else {
+        u.fifo_depth
+    };
+    // one FIFO per inter-layer boundary, sized for the producer's output:
+    // depth_eff slots of shift_depth(bits) compressed spike addresses
+    for layer in cfg.net.layers.iter().take(cfg.net.layers.len().saturating_sub(1)) {
+        let bits = layer.output_bits().max(1);
+        let addr_bits = (usize::BITS - (bits - 1).max(1).leading_zeros()) as usize;
+        let slot_bits = shift_depth(bits) * addr_bits;
+        r.bram_36k += (depth_eff * slot_bits) as f64 / (36.0 * 1024.0);
+        r.lut += 24.0 + 1.5 * depth_eff as f64; // credit counters + mux
+    }
+    // per-parametric-layer arbitration: crossbar/arbiter LUT scales with
+    // the effective (lane-capped) port and bank counts
+    let mut k = 0usize;
+    for layer in cfg.net.layers.iter().filter(|l| l.is_parametric()) {
+        let lanes = NuMap::from_lhr(layer.logical_units().max(1), cfg.hw.lhr[k]).units;
+        k += 1;
+        let eff = |knob: usize| -> usize {
+            if knob == 0 {
+                lanes
+            } else {
+                knob.min(lanes)
+            }
+        };
+        let (p_eff, b_eff) = (eff(u.mem_ports), eff(u.banks));
+        r.lut += 18.0 * (p_eff + b_eff) as f64;
+        r.reg += 8.0 * (p_eff + b_eff) as f64;
+        r.bram_36k += b_eff.saturating_sub(1) as f64 * 0.25; // banking split waste
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::random_spike_train;
+    use crate::snn::fc_net;
+
+    fn tiny_cfg(lhr: Vec<usize>) -> ExperimentConfig {
+        let net = fc_net("tiny", "mnist", &[32, 16, 8], 4, 2, 0.9, 6);
+        ExperimentConfig::new(net, HwConfig::with_lhr(lhr)).unwrap()
+    }
+
+    #[test]
+    fn ideal_replay_matches_network_sim_exactly() {
+        let cfg = tiny_cfg(vec![2, 1]);
+        let mut rng = Rng::new(3);
+        let input = random_spike_train(32, 6, 0.3, &mut rng);
+        let mut plain = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let expected = plain.run(&input);
+        let mut usim = UarchSim::with_network(
+            NetworkSim::with_random_weights(&cfg, 7, CostModel::default()),
+            UarchConfig::ideal(),
+        );
+        let got = usim.run(&input);
+        assert_eq!(got.total_cycles, expected.total_cycles);
+        assert_eq!(got.stall_cycles(), 0);
+        // per-layer busy time equals the analytic busy accounting
+        for (u, a) in got.per_layer.iter().zip(&expected.per_layer) {
+            assert_eq!(u.busy_cycles, a.busy_cycles, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn ideal_finish_matrix_is_the_recurrence() {
+        let cfg = tiny_cfg(vec![1, 2]);
+        let mut rng = Rng::new(9);
+        let input = random_spike_train(32, 5, 0.4, &mut rng);
+        let mut sim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let traces = record_spike_train(&mut sim, &input);
+        let r = replay(&traces, &UarchConfig::ideal());
+        // re-derive the analytic recurrence from the recorded costs
+        let mut finish = vec![0u64; traces.len()];
+        for t in 0..5 {
+            let mut prev = 0u64;
+            for (l, tr) in traces.iter().enumerate() {
+                prev = crate::sim::advance_finish(&mut finish[l], prev, tr.steps[t].cost);
+                assert_eq!(r.finish[l][t], finish[l], "layer {l} step {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn finite_configs_only_slow_down_and_gap_is_bounded() {
+        let cfg = tiny_cfg(vec![1, 1]);
+        let mut rng = Rng::new(11);
+        let input = random_spike_train(32, 6, 0.5, &mut rng);
+        let mut sim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let traces = record_spike_train(&mut sim, &input);
+        let ideal = replay(&traces, &UarchConfig::ideal());
+        for ucfg in [
+            UarchConfig { fifo_depth: 1, mem_ports: 0, banks: 0 },
+            UarchConfig { fifo_depth: 0, mem_ports: 1, banks: 0 },
+            UarchConfig { fifo_depth: 0, mem_ports: 0, banks: 1 },
+            UarchConfig { fifo_depth: 1, mem_ports: 1, banks: 1 },
+        ] {
+            let finite = replay(&traces, &ucfg);
+            assert!(finite.total_cycles >= ideal.total_cycles, "{}", ucfg.label());
+            let gap = finite.total_cycles - ideal.total_cycles;
+            assert!(
+                gap <= finite.stall_cycles(),
+                "{}: gap {gap} exceeds stalls {}",
+                ucfg.label(),
+                finite.stall_cycles()
+            );
+        }
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let cfg = tiny_cfg(vec![2, 2]);
+        let mut rng = Rng::new(5);
+        let input = random_spike_train(32, 6, 0.4, &mut rng);
+        let mut sim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let traces = record_spike_train(&mut sim, &input);
+        let ucfg = UarchConfig { fifo_depth: 1, mem_ports: 1, banks: 2 };
+        let a = replay(&traces, &ucfg);
+        let b = replay(&traces, &ucfg);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn repeated_runs_on_one_sim_agree() {
+        let cfg = tiny_cfg(vec![1, 2]);
+        let mut rng = Rng::new(21);
+        let input = random_spike_train(32, 6, 0.3, &mut rng);
+        let mut usim = UarchSim::with_network(
+            NetworkSim::with_random_weights(&cfg, 7, CostModel::default()),
+            UarchConfig { fifo_depth: 2, mem_ports: 1, banks: 1 },
+        );
+        let a = usim.run(&input);
+        let b = usim.run(&input);
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.stall_breakdown(), b.stall_breakdown());
+    }
+
+    #[test]
+    fn empty_trace_replays_to_zero() {
+        let r = replay(&[], &UarchConfig::ideal());
+        assert_eq!(r.total_cycles, 0);
+        assert_eq!(r.events, 0);
+        assert!(r.per_layer.is_empty());
+    }
+
+    #[test]
+    fn label_formats_knobs() {
+        assert_eq!(UarchConfig::ideal().label(), "f∞/p∞/b∞");
+        let c = UarchConfig { fifo_depth: 4, mem_ports: 2, banks: 8 };
+        assert_eq!(c.label(), "f4/p2/b8");
+        assert!(!c.is_ideal());
+        assert!(UarchConfig::ideal().is_ideal());
+    }
+
+    #[test]
+    fn stall_table_renders_all_layers() {
+        let cfg = tiny_cfg(vec![1, 1]);
+        let mut rng = Rng::new(2);
+        let input = random_spike_train(32, 6, 0.5, &mut rng);
+        let mut usim = UarchSim::with_network(
+            NetworkSim::with_random_weights(&cfg, 7, CostModel::default()),
+            UarchConfig { fifo_depth: 1, mem_ports: 1, banks: 1 },
+        );
+        let r = usim.run(&input);
+        let table = stall_table(&r);
+        assert!(table.contains("fc0"));
+        assert!(table.contains("fc1"));
+        assert!(table.contains("TOTAL"));
+    }
+
+    #[test]
+    fn uarch_resources_are_monotone_with_ideal_most_expensive() {
+        let cfg = tiny_cfg(vec![1, 1]);
+        let ideal = uarch_resources(&cfg, &UarchConfig::ideal());
+        let small = uarch_resources(&cfg, &UarchConfig { fifo_depth: 1, mem_ports: 1, banks: 1 });
+        let mid = uarch_resources(&cfg, &UarchConfig { fifo_depth: 4, mem_ports: 2, banks: 2 });
+        assert!(small.lut < mid.lut);
+        assert!(mid.lut <= ideal.lut);
+        assert!(small.bram_36k < ideal.bram_36k);
+        assert!(small.reg <= mid.reg);
+    }
+
+    #[test]
+    fn deep_fifo_converges_to_ideal_latency() {
+        let cfg = tiny_cfg(vec![1, 1]);
+        let mut rng = Rng::new(13);
+        let input = random_spike_train(32, 6, 0.4, &mut rng);
+        let mut sim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let traces = record_spike_train(&mut sim, &input);
+        let ideal = replay(&traces, &UarchConfig::ideal());
+        // a FIFO as deep as the whole spike train can never back-pressure
+        let deep = replay(
+            &traces,
+            &UarchConfig { fifo_depth: 6, mem_ports: 0, banks: 0 },
+        );
+        assert_eq!(deep.total_cycles, ideal.total_cycles);
+        assert_eq!(deep.stall_cycles(), 0);
+    }
+}

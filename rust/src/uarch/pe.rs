@@ -1,0 +1,101 @@
+//! PE lanes: the per-layer processing element array the event simulator
+//! schedules.
+//!
+//! Each layer's compute is carried out by `lanes = ceil(logical / LHR)`
+//! parallel PE lanes — exactly the `NuMap::units` count of the layer's
+//! neural units, so the LHR knob's time-multiplexing is honored: the base
+//! step duration (recorded from the analytic cost model) already serializes
+//! `per_unit` logical neurons through each lane, and the lane count feeds
+//! the banked-memory arbitration as the number of concurrent requesters.
+//!
+//! `PeArray::serve` turns one recorded step (base cycles + memory access
+//! count) into its stall-extended duration under a [`BankedMemory`]
+//! configuration, attributing every extra cycle to `port_wait` or
+//! `bank_conflict`.
+
+use crate::uarch::memory::{BankedMemory, MemService};
+
+/// One recorded (layer, time-step) unit of work for the timing replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepTrace {
+    /// Base duration from the analytic cost model (`PhaseCycles::total`).
+    pub cost: u64,
+    /// Weight-memory reads + membrane accesses the step issued.
+    pub accesses: u64,
+}
+
+/// A step's duration after memory arbitration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServedStep {
+    /// Base cost plus every memory stall cycle.
+    pub duration: u64,
+    pub mem: MemService,
+}
+
+/// The PE lane array of one layer.
+#[derive(Debug, Clone, Copy)]
+pub struct PeArray {
+    /// Parallel hardware lanes (the layer's NU count under its LHR).
+    pub lanes: usize,
+}
+
+impl PeArray {
+    pub fn new(lanes: usize) -> Self {
+        PeArray { lanes: lanes.max(1) }
+    }
+
+    /// Duration of `step` on this lane array against `mem`: the analytic
+    /// base cost, stretched by whatever the memory system cannot service
+    /// at the datapath's pace.
+    pub fn serve(&self, step: &StepTrace, mem: &BankedMemory) -> ServedStep {
+        let service = mem.service(step.accesses, step.cost, self.lanes);
+        ServedStep {
+            duration: step.cost + service.total(),
+            mem: service,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_memory_keeps_base_duration() {
+        let pe = PeArray::new(16);
+        let step = StepTrace { cost: 120, accesses: 4_000 };
+        let served = pe.serve(&step, &BankedMemory::unlimited());
+        assert_eq!(served.duration, 120);
+        assert_eq!(served.mem.total(), 0);
+    }
+
+    #[test]
+    fn constrained_memory_stretches_duration() {
+        let pe = PeArray::new(16);
+        let step = StepTrace { cost: 100, accesses: 1_000 };
+        // 2 ports: ceil(1000/2) = 500 service cycles, 400 beyond base
+        let served = pe.serve(&step, &BankedMemory::new(2, 0));
+        assert_eq!(served.duration, 500);
+        assert_eq!(served.mem.port_wait, 400);
+        assert_eq!(served.mem.bank_conflict, 0);
+    }
+
+    #[test]
+    fn fewer_lanes_see_fewer_conflicts() {
+        // a high-LHR layer (few lanes) cannot oversubscribe 4 banks
+        let step = StepTrace { cost: 50, accesses: 800 };
+        let mem = BankedMemory::new(0, 4);
+        let wide = PeArray::new(32).serve(&step, &mem);
+        let narrow = PeArray::new(4).serve(&step, &mem);
+        assert!(wide.mem.bank_conflict > 0);
+        assert_eq!(narrow.mem.total(), 0, "4 lanes never conflict on 4 banks");
+    }
+
+    #[test]
+    fn zero_lane_input_clamps_to_one() {
+        let pe = PeArray::new(0);
+        assert_eq!(pe.lanes, 1);
+        let step = StepTrace { cost: 10, accesses: 0 };
+        assert_eq!(pe.serve(&step, &BankedMemory::new(1, 1)).duration, 10);
+    }
+}

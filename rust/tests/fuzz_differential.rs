@@ -18,6 +18,7 @@ use snn_dse::baselines::scalar::{ScalarLayerSim, ScalarNetworkSim};
 use snn_dse::config::{ExperimentConfig, HwConfig};
 use snn_dse::sim::{CostModel, LayerSim, LayerWeights, NetworkSim};
 use snn_dse::snn::{BitVec, Layer, NetDef, SpikeTrain};
+use snn_dse::uarch::{UarchConfig, UarchSim};
 use snn_dse::util::prop::{prop_check, Gen};
 
 // ---- seeded generators ------------------------------------------------------
@@ -371,11 +372,75 @@ fn compare_batched(g: &mut Gen) -> Result<(), String> {
     Ok(())
 }
 
+/// Uarch-ideal lane: on random FC/conv/pool topologies, the event-driven
+/// simulator under `UarchConfig::ideal()` must report exactly the total
+/// cycles of the analytic `NetworkSim` recurrence, with zero stalls; a
+/// random finite configuration may only add cycles, and never more than
+/// its stall counters account for.
+fn compare_uarch_ideal(g: &mut Gen) -> Result<(), String> {
+    let net = gen_net(g);
+    let hw = gen_hw(g, &net);
+    let cfg = ExperimentConfig::new(net.clone(), hw).map_err(|e| format!("config: {e}"))?;
+    let weights = gen_weights(g, &net);
+    let input = gen_input(g, net.input_bits, net.t_steps);
+
+    let mut plain = NetworkSim::new(&cfg, weights.clone(), CostModel::default());
+    let expected = plain.run(&input);
+
+    let mut ideal_sim = UarchSim::with_network(
+        NetworkSim::new(&cfg, weights.clone(), CostModel::default()),
+        UarchConfig::ideal(),
+    );
+    let ideal = ideal_sim.run(&input);
+    if ideal.total_cycles != expected.total_cycles {
+        return Err(format!(
+            "ideal uarch {} cycles != NetworkSim {} cycles",
+            ideal.total_cycles, expected.total_cycles
+        ));
+    }
+    if ideal.stall_cycles() != 0 {
+        return Err(format!("ideal preset reported {} stall cycles", ideal.stall_cycles()));
+    }
+
+    let finite_cfg = UarchConfig {
+        fifo_depth: g.usize_in(1, 4),
+        mem_ports: g.usize_in(0, 2),
+        banks: g.usize_in(0, 3),
+    };
+    let mut finite_sim = UarchSim::with_network(
+        NetworkSim::new(&cfg, weights, CostModel::default()),
+        finite_cfg,
+    );
+    let finite = finite_sim.run(&input);
+    if finite.total_cycles < ideal.total_cycles {
+        return Err(format!(
+            "finite {} ran {} cycles, faster than ideal {}",
+            finite_cfg.label(),
+            finite.total_cycles,
+            ideal.total_cycles
+        ));
+    }
+    let gap = finite.total_cycles - ideal.total_cycles;
+    if gap > finite.stall_cycles() {
+        return Err(format!(
+            "finite {}: cycle gap {gap} exceeds stall sum {}",
+            finite_cfg.label(),
+            finite.stall_cycles()
+        ));
+    }
+    Ok(())
+}
+
 // ---- entry points -----------------------------------------------------------
 
 #[test]
 fn fuzz_networks_match_scalar_oracle() {
     prop_check(80, 0xD1FF_0001, compare_networks);
+}
+
+#[test]
+fn fuzz_uarch_ideal_matches_network_sim() {
+    prop_check(40, 0xD1FF_0004, compare_uarch_ideal);
 }
 
 #[test]
