@@ -11,7 +11,9 @@
 //! Run: `cargo bench --bench sim_microbench`
 
 use snn_dse::config::{ExperimentConfig, HwConfig};
-use snn_dse::sim::{random_spike_train, CostModel, LayerSim, LayerWeights, NetworkSim, Penc};
+use snn_dse::sim::{
+    random_spike_train, BatchKernel, CostModel, LayerSim, LayerWeights, NetworkSim, Penc,
+};
 use snn_dse::snn::{table1_net, BitVec, Layer, SpikeTrain};
 use snn_dse::util::rng::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -161,6 +163,27 @@ fn main() {
         bres.total_cycles,
         serial_total,
         serial_total as f64 / bres.total_cycles as f64
+    );
+
+    // (d4) bit-sliced batch kernel at one full lane word: 64 samples per
+    // u64 lane vs the per-sample batched path on identical inputs (both
+    // produce byte-identical results; only wall clock differs).
+    let lane_batch: Vec<SpikeTrain> = (0..64)
+        .map(|_| random_spike_train(784, 25, 0.12, &mut rng))
+        .collect();
+    let mut sim_ps = NetworkSim::with_random_weights(&cfg, 3, costs.clone());
+    let per_ps = time("net1 batched x64, per-sample kernel (T=25)", 10, || {
+        black_box(sim_ps.run_batched_timed_with(black_box(&lane_batch), BatchKernel::PerSample));
+    });
+    let mut sim_sl = NetworkSim::with_random_weights(&cfg, 3, costs.clone());
+    let per_sl = time("net1 batched x64, sliced kernel (T=25)", 10, || {
+        black_box(sim_sl.run_batched_timed_with(black_box(&lane_batch), BatchKernel::Sliced));
+    });
+    println!(
+        "  => sliced {:.0} samples/s vs per-sample {:.0} samples/s (x{:.2})",
+        64.0 / per_sl,
+        64.0 / per_ps,
+        per_ps / per_sl
     );
 
     // (e) activity-driven net-5 (the heavy Table-I row)

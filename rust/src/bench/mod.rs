@@ -2,14 +2,16 @@
 //! subcommand behind the repo's machine-readable perf trajectory.
 //!
 //! Every run drives the exact same seeded workloads (net1–net5 functional
-//! spike-train simulation, the sharded batched serve runtime, an
-//! `explore` batch, and an event-driven `uarch` replay) and emits
-//! `BENCH_sim.json`: steps/sec, samples/sec and simulated-cycles/sec per
-//! net plus serve, explore and uarch (events/sec) throughput.
+//! spike-train simulation, a batch-64 sliced-vs-per-sample kernel
+//! face-off, the sharded batched serve runtime, an `explore` batch, and
+//! an event-driven `uarch` replay) and emits `BENCH_sim.json`: steps/sec,
+//! samples/sec and simulated-cycles/sec per net plus batched, serve,
+//! explore and uarch (events/sec) throughput.
 //! CI runs `bench --smoke`, validates the emitted document against
-//! [`validate`], and archives it as an artifact, so hot-path speedups
-//! (and regressions) accumulate as comparable numbers instead of
-//! unverifiable claims.
+//! [`validate`], and diffs it against the committed `BENCH_sim.json`
+//! baseline with [`compare`] (regression-only, 20% tolerance), so
+//! hot-path speedups (and regressions) accumulate as comparable numbers
+//! instead of unverifiable claims.
 //!
 //! The *workload* is deterministic (fixed seeds end to end); only the
 //! wall-clock timings vary by host. Schema: [`BENCH_SCHEMA`].
@@ -19,7 +21,7 @@ use crate::dse::{ExploreConfig, Explorer, Objective};
 use crate::resources::EstimateCache;
 use crate::runtime::serve::{synthetic_load, LoadSpec, ServeOptions, ServeRuntime};
 use crate::runtime::BatchPolicy;
-use crate::sim::{random_spike_train, CostModel, NetworkSim};
+use crate::sim::{random_spike_train, BatchKernel, CostModel, NetworkSim};
 use crate::snn::{table1_net, NetDef};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -29,8 +31,14 @@ use std::path::Path;
 use std::time::Instant;
 
 /// Version tag carried in every `BENCH_sim.json` (`schema` field).
-/// v2 added the `uarch` section (event-driven replay events/sec).
-pub const BENCH_SCHEMA: &str = "snn-dse-bench/v2";
+/// v2 added the `uarch` section (event-driven replay events/sec);
+/// v3 adds the `batched` section (sliced vs per-sample kernel at
+/// batch 64) and the committed-baseline [`compare`] contract.
+pub const BENCH_SCHEMA: &str = "snn-dse-bench/v3";
+
+/// Fractional throughput drop tolerated by [`compare`] before a rate
+/// counts as a regression (0.2 = fail below 80% of the baseline).
+pub const DEFAULT_COMPARE_TOLERANCE: f64 = 0.20;
 
 /// Knobs of one bench run.
 #[derive(Debug, Clone)]
@@ -108,6 +116,7 @@ pub fn bench_serve(seed: u64, smoke: bool) -> Json {
             max_wait_cycles: (500.0 * clock_hz / 1e6) as u64,
         },
         weight_seed: 7,
+        kernel: BatchKernel::Auto,
     };
     let rt = ServeRuntime::new(cfg, CostModel::default(), opts).expect("valid serve options");
     let report = rt.run(requests);
@@ -122,6 +131,53 @@ pub fn bench_serve(seed: u64, smoke: bool) -> Json {
         ("sim_throughput_rps", Json::Num(report.throughput_rps)),
         ("p50_us", Json::Num(report.latency.p50_us)),
         ("p99_us", Json::Num(report.latency.p99_us)),
+    ])
+}
+
+/// Bit-sliced vs per-sample batch-kernel throughput on a fixed FC
+/// workload at batch 64 — one full lane word, the sliced kernel's sweet
+/// spot. Both kernels run the identical seeded inputs; the warmup pass
+/// doubles as the differential oracle (per-sample is ground truth), so a
+/// perf run can never quietly report numbers from diverged outputs.
+pub fn bench_batched(seed: u64, smoke: bool) -> Json {
+    let mut net = table1_net("net1");
+    if smoke {
+        net.t_steps = 4;
+    }
+    let batch = 64usize;
+    let iters = if smoke { 1 } else { 3 };
+    let cfg = ExperimentConfig::new(net.clone(), HwConfig::with_lhr(vec![1, 1, 1]))
+        .expect("valid batched bench config");
+    let mut rng = Rng::new(seed ^ 0x51ED);
+    let inputs: Vec<_> = (0..batch)
+        .map(|_| random_spike_train(net.input_bits, net.t_steps, 0.12, &mut rng))
+        .collect();
+    let time_kernel = |kernel: BatchKernel| {
+        let mut sim = NetworkSim::with_random_weights(&cfg, seed ^ 0xBE7C, CostModel::default());
+        // warmup grows every reused buffer and pins the outcomes for the
+        // differential check below
+        let (_, outcomes) = sim.run_batched_timed_with(&inputs, kernel);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            black_box(sim.run_batched_timed_with(black_box(&inputs), kernel));
+        }
+        let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+        ((batch * iters) as f64 / elapsed, outcomes)
+    };
+    let (per_sample_rate, per_sample_out) = time_kernel(BatchKernel::PerSample);
+    let (sliced_rate, sliced_out) = time_kernel(BatchKernel::Sliced);
+    assert_eq!(
+        per_sample_out, sliced_out,
+        "bench batched: sliced kernel diverged from the per-sample oracle"
+    );
+    Json::obj(vec![
+        ("net", Json::Str(net.name.clone())),
+        ("batch", Json::Num(batch as f64)),
+        ("t_steps", Json::Num(net.t_steps as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("per_sample_samples_per_sec", Json::Num(per_sample_rate)),
+        ("sliced_samples_per_sec", Json::Num(sliced_rate)),
+        ("speedup", Json::Num(sliced_rate / per_sample_rate.max(1e-12))),
     ])
 }
 
@@ -252,6 +308,13 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         );
         nets.push(rec);
     }
+    let batched = bench_batched(opts.seed, opts.smoke);
+    eprintln!(
+        "[bench] batched net1 @64: sliced {:.1} samples/s vs per-sample {:.1} (x{:.2})",
+        batched.at("sliced_samples_per_sec").as_f64().unwrap_or(0.0),
+        batched.at("per_sample_samples_per_sec").as_f64().unwrap_or(0.0),
+        batched.at("speedup").as_f64().unwrap_or(0.0),
+    );
     let serve = bench_serve(opts.seed, opts.smoke);
     eprintln!(
         "[bench] serve net1: {:.1} samples/s wall, p99 {:.1} us simulated",
@@ -276,17 +339,24 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         ("seed", Json::Num(opts.seed as f64)),
         ("smoke", Json::Bool(opts.smoke)),
         ("sim", Json::obj(vec![("nets", Json::Arr(nets))])),
+        ("batched", batched),
         ("serve", serve),
         ("explore", explore),
         ("uarch", uarch),
     ]))
 }
 
-/// Atomic write of the report (temp file + rename, like the explore
-/// checkpoints) so a crashed run never leaves a truncated document.
+/// Atomic write of the report (temp file + fsync + rename, like the
+/// explore checkpoints) so a crashed run never leaves a truncated
+/// document. The fsync before the rename matters: without it a power
+/// loss can rename an empty temp file over a good committed baseline.
 pub fn write_report(report: &Json, path: &Path) -> Result<()> {
+    use std::io::Write;
     let tmp = path.with_extension("json.tmp");
-    std::fs::write(&tmp, report.to_string_pretty())?;
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(report.to_string_pretty().as_bytes())?;
+    f.sync_all()?;
+    drop(f);
     std::fs::rename(&tmp, path)?;
     Ok(())
 }
@@ -299,14 +369,19 @@ fn expect_pos(j: &Json, ctx: &str, key: &str) -> std::result::Result<(), String>
     }
 }
 
-/// Validate a `BENCH_sim.json` document against the v1 schema. Returns a
-/// human-readable description of the first violation.
+/// Validate a `BENCH_sim.json` document against the current schema.
+/// Returns a human-readable description of the first violation. All
+/// rates must be positive and finite — NaN or negative throughput means
+/// a corrupted (or hand-mangled) report and must never become a
+/// baseline.
 pub fn validate(j: &Json) -> std::result::Result<(), String> {
     if j.at("schema").as_str() != Some(BENCH_SCHEMA) {
         return Err(format!("schema must be the string \"{BENCH_SCHEMA}\""));
     }
-    if j.at("seed").as_f64().is_none() {
-        return Err("seed must be a number".into());
+    match j.at("seed").as_f64() {
+        Some(v) if v.is_finite() && v >= 0.0 => {}
+        Some(v) => return Err(format!("seed must be >= 0 and finite, got {v}")),
+        None => return Err("seed must be a number".into()),
     }
     if j.at("smoke").as_bool().is_none() {
         return Err("smoke must be a boolean".into());
@@ -328,6 +403,7 @@ pub fn validate(j: &Json) -> std::result::Result<(), String> {
         for key in [
             "t_steps",
             "iters",
+            "input_rate",
             "total_cycles",
             "steps_per_sec",
             "samples_per_sec",
@@ -335,6 +411,20 @@ pub fn validate(j: &Json) -> std::result::Result<(), String> {
         ] {
             expect_pos(rec, &ctx, key)?;
         }
+    }
+    let batched = j.at("batched");
+    if batched.at("net").as_str().is_none() {
+        return Err("batched.net must be a string".into());
+    }
+    for key in [
+        "batch",
+        "t_steps",
+        "iters",
+        "per_sample_samples_per_sec",
+        "sliced_samples_per_sec",
+        "speedup",
+    ] {
+        expect_pos(batched, "batched", key)?;
     }
     let serve = j.at("serve");
     for key in [
@@ -367,6 +457,94 @@ pub fn validate(j: &Json) -> std::result::Result<(), String> {
     Ok(())
 }
 
+/// Diff a fresh report against the committed baseline: every shared
+/// throughput rate must land at or above `1 - tolerance` of the
+/// baseline. The check is deliberately regression-only — faster is
+/// always green — so a conservatively seeded committed baseline never
+/// blocks healthy hosts, while a real slowdown on the same host fails.
+///
+/// Returns the per-rate comparison lines on success, or a newline-joined
+/// list of regressions. Rates present in only one report are skipped
+/// (adding a net or section must not break old baselines), but comparing
+/// a smoke report against a full one is an error: the workloads differ,
+/// so the rates are not commensurable.
+pub fn compare(
+    current: &Json,
+    baseline: &Json,
+    tolerance: f64,
+) -> std::result::Result<Vec<String>, String> {
+    if baseline.at("schema").as_str() != Some(BENCH_SCHEMA) {
+        return Err(format!(
+            "baseline schema {:?} is not \"{BENCH_SCHEMA}\" — regenerate the committed baseline",
+            baseline.at("schema").as_str().unwrap_or("<missing>")
+        ));
+    }
+    if current.at("smoke").as_bool() != baseline.at("smoke").as_bool() {
+        return Err(
+            "cannot compare smoke and full reports: the workloads differ, so the rates are not commensurable"
+                .into(),
+        );
+    }
+    let mut lines = Vec::new();
+    let mut regressions = Vec::new();
+    let mut check = |label: String, cur: Option<f64>, base: Option<f64>| {
+        let (Some(cur), Some(base)) = (cur, base) else {
+            return;
+        };
+        if !(cur.is_finite() && base.is_finite() && base > 0.0) {
+            return;
+        }
+        let ratio = cur / base;
+        lines.push(format!(
+            "{label}: {cur:.2}/s vs baseline {base:.2}/s (x{ratio:.2})"
+        ));
+        if ratio < 1.0 - tolerance {
+            regressions.push(format!(
+                "{label} regressed: {cur:.2}/s is {:.0}% below the baseline {base:.2}/s",
+                (1.0 - ratio) * 100.0
+            ));
+        }
+    };
+    // per-net sim rates, matched by name so adding a net never breaks old
+    // baselines
+    if let (Some(cur_nets), Some(base_nets)) = (
+        current.at("sim").at("nets").as_arr(),
+        baseline.at("sim").at("nets").as_arr(),
+    ) {
+        for c in cur_nets {
+            let name = c.at("net").as_str().unwrap_or("?");
+            if let Some(b) = base_nets
+                .iter()
+                .find(|b| b.at("net").as_str() == Some(name))
+            {
+                check(
+                    format!("sim.{name}.samples_per_sec"),
+                    c.at("samples_per_sec").as_f64(),
+                    b.at("samples_per_sec").as_f64(),
+                );
+            }
+        }
+    }
+    for (section, key) in [
+        ("batched", "per_sample_samples_per_sec"),
+        ("batched", "sliced_samples_per_sec"),
+        ("serve", "samples_per_sec"),
+        ("explore", "configs_per_sec"),
+        ("uarch", "events_per_sec"),
+    ] {
+        check(
+            format!("{section}.{key}"),
+            current.at(section).at(key).as_f64(),
+            baseline.at(section).at(key).as_f64(),
+        );
+    }
+    if regressions.is_empty() {
+        Ok(lines)
+    } else {
+        Err(regressions.join("\n"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -377,6 +555,7 @@ mod tests {
             ("net", Json::Str("net1".into())),
             ("t_steps", Json::Num(25.0)),
             ("iters", Json::Num(2.0)),
+            ("input_rate", Json::Num(0.12)),
             ("total_cycles", Json::Num(1000.0)),
             ("steps_per_sec", Json::Num(50.0)),
             ("samples_per_sec", Json::Num(2.0)),
@@ -387,6 +566,18 @@ mod tests {
             ("seed", Json::Num(42.0)),
             ("smoke", Json::Bool(true)),
             ("sim", Json::obj(vec![("nets", Json::Arr(vec![net]))])),
+            (
+                "batched",
+                Json::obj(vec![
+                    ("net", Json::Str("net1".into())),
+                    ("batch", Json::Num(64.0)),
+                    ("t_steps", Json::Num(4.0)),
+                    ("iters", Json::Num(1.0)),
+                    ("per_sample_samples_per_sec", Json::Num(100.0)),
+                    ("sliced_samples_per_sec", Json::Num(400.0)),
+                    ("speedup", Json::Num(4.0)),
+                ]),
+            ),
             (
                 "serve",
                 Json::obj(vec![
@@ -469,6 +660,104 @@ mod tests {
             }
         }
         assert!(validate(&doc).unwrap_err().contains("stall_cycles"));
+    }
+
+    #[test]
+    fn schema_rejects_nan_and_negative_numbers() {
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("seed".into(), Json::Num(f64::NAN));
+        }
+        assert!(validate(&doc).unwrap_err().contains("seed"));
+
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(b)) = m.get_mut("batched") {
+                b.insert("sliced_samples_per_sec".into(), Json::Num(f64::NAN));
+            }
+        }
+        assert!(validate(&doc).unwrap_err().contains("sliced_samples_per_sec"));
+
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(s)) = m.get_mut("serve") {
+                s.insert("samples_per_sec".into(), Json::Num(-3.0));
+            }
+        }
+        assert!(validate(&doc).unwrap_err().contains("samples_per_sec"));
+    }
+
+    #[test]
+    fn schema_requires_the_batched_section() {
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("batched");
+        }
+        assert!(validate(&doc).unwrap_err().contains("batched"));
+    }
+
+    fn scale_rate(doc: &mut Json, section: &str, key: &str, factor: f64) {
+        if let Json::Obj(m) = doc {
+            if let Some(Json::Obj(s)) = m.get_mut(section) {
+                if let Some(Json::Num(v)) = s.get_mut(key) {
+                    *v *= factor;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compare_is_regression_only_with_tolerance() {
+        let baseline = minimal_valid_doc();
+        // identical reports pass and describe every shared rate
+        let lines = compare(&baseline, &baseline, DEFAULT_COMPARE_TOLERANCE).unwrap();
+        assert!(lines.iter().any(|l| l.contains("sim.net1.samples_per_sec")));
+        assert!(lines.iter().any(|l| l.contains("batched.sliced_samples_per_sec")));
+
+        // 10% slower is within the 20% tolerance; 4x faster is always fine
+        let mut ok = minimal_valid_doc();
+        scale_rate(&mut ok, "serve", "samples_per_sec", 0.9);
+        scale_rate(&mut ok, "explore", "configs_per_sec", 4.0);
+        compare(&ok, &baseline, DEFAULT_COMPARE_TOLERANCE).unwrap();
+
+        // 50% slower on one rate fails and names the rate
+        let mut bad = minimal_valid_doc();
+        scale_rate(&mut bad, "batched", "sliced_samples_per_sec", 0.5);
+        let err = compare(&bad, &baseline, DEFAULT_COMPARE_TOLERANCE).unwrap_err();
+        assert!(err.contains("batched.sliced_samples_per_sec"), "got: {err}");
+        assert!(err.contains("regressed"), "got: {err}");
+    }
+
+    #[test]
+    fn compare_rejects_incommensurable_reports() {
+        let baseline = minimal_valid_doc();
+        let mut full = minimal_valid_doc();
+        if let Json::Obj(m) = &mut full {
+            m.insert("smoke".into(), Json::Bool(false));
+        }
+        assert!(compare(&full, &baseline, DEFAULT_COMPARE_TOLERANCE)
+            .unwrap_err()
+            .contains("smoke"));
+
+        let mut old = minimal_valid_doc();
+        if let Json::Obj(m) = &mut old {
+            m.insert("schema".into(), Json::Str("snn-dse-bench/v2".into()));
+        }
+        assert!(compare(&baseline, &old, DEFAULT_COMPARE_TOLERANCE)
+            .unwrap_err()
+            .contains("schema"));
+    }
+
+    #[test]
+    fn bench_batched_sliced_matches_oracle_and_reports_rates() {
+        // the differential assert inside bench_batched is the real check;
+        // here we also pin the record shape the schema expects
+        let rec = bench_batched(7, true);
+        assert_eq!(rec.at("batch").as_usize(), Some(64));
+        for key in ["per_sample_samples_per_sec", "sliced_samples_per_sec", "speedup"] {
+            let v = rec.at(key).as_f64().unwrap();
+            assert!(v > 0.0 && v.is_finite(), "{key} = {v}");
+        }
     }
 
     #[test]

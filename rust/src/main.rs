@@ -74,12 +74,17 @@ const USAGE: &str = "snn-dse <simulate|resources|dse|explore|uarch|serve|bench|t
                                 checkpoint's Pareto frontier (needs --slo-us;
                                 --lhr overrides)
     --weight-seed <n>           replica weight seed (default 7)
+    --kernel <k>                batch kernel: auto|sliced|per-sample
+                                (default auto; outputs are byte-identical,
+                                only throughput changes)
     --smoke                     tiny deterministic load for CI (32 requests,
                                 2 shards)
   bench options:
     --smoke                     tiny fixed workload for CI (schema-checked)
     --iters <n>                 override per-net sim repetitions
     --out <path>                report path (default BENCH_sim.json)
+    --compare <path>            compare against a committed baseline report;
+                                fail on >20% samples/sec regression
   sweep-t-pcr options:
     --t-values <4,6,...>        spike-train lengths (default 4,6,8,10,15,20,25)
     --pops <1,10,30>            population sizes";
@@ -330,6 +335,7 @@ fn cmd_uarch(args: &Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     use snn_dse::runtime::serve::{LoadSpec, ServeOptions};
     use snn_dse::runtime::{choose_config_for_slo, synthetic_load, BatchPolicy, ServeRuntime};
+    use snn_dse::sim::BatchKernel;
 
     let net = net_of(args);
     let smoke = args.flag("smoke");
@@ -378,6 +384,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = ExperimentConfig::new(net.clone(), hw.clone())?;
     let clock_hz = cfg.hw.clock_hz;
     let max_wait_us = args.f64_or("max-wait-us", 500.0);
+    let kernel =
+        BatchKernel::parse(args.get_or("kernel", "auto")).map_err(|e| anyhow::anyhow!(e))?;
     let opts = ServeOptions {
         shards,
         policy: BatchPolicy {
@@ -385,6 +393,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             max_wait_cycles: (max_wait_us * clock_hz / 1e6).round() as u64,
         },
         weight_seed: args.usize_or("weight-seed", 7) as u64,
+        kernel,
     };
     let spec = LoadSpec {
         n_requests: args.usize_or("requests", if smoke { 32 } else { 256 }),
@@ -393,12 +402,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         seed: args.usize_or("seed", 42) as u64,
     };
     eprintln!(
-        "serving {} LHR {} — {} shards, max-batch {}, max-wait {:.0} us, {} requests @ {:.0} rps (seed {})",
+        "serving {} LHR {} — {} shards, max-batch {}, max-wait {:.0} us, kernel {}, {} requests @ {:.0} rps (seed {})",
         net.name,
         hw.label(),
         opts.shards,
         opts.policy.max_batch,
         max_wait_us,
+        kernel.as_str(),
         spec.n_requests,
         spec.rate_rps,
         spec.seed
@@ -473,6 +483,26 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let out = PathBuf::from(args.get_or("out", "BENCH_sim.json"));
     snn_dse::bench::write_report(&report, &out)?;
     println!("wrote {} (schema {})", out.display(), snn_dse::bench::BENCH_SCHEMA);
+    if let Some(baseline_path) = args.get("compare") {
+        let baseline = snn_dse::util::json::Json::parse_file(&PathBuf::from(baseline_path))?;
+        snn_dse::bench::validate(&baseline).map_err(|e| {
+            anyhow::anyhow!("baseline {baseline_path} violates the schema: {e}")
+        })?;
+        let tolerance = snn_dse::bench::DEFAULT_COMPARE_TOLERANCE;
+        match snn_dse::bench::compare(&report, &baseline, tolerance) {
+            Ok(lines) => {
+                println!(
+                    "baseline compare vs {baseline_path} (tolerance {:.0}%):",
+                    tolerance * 100.0
+                );
+                for line in lines {
+                    println!("  {line}");
+                }
+                println!("COMPARE OK");
+            }
+            Err(e) => anyhow::bail!("throughput regression vs {baseline_path}:\n{e}"),
+        }
+    }
     if opts.smoke {
         println!("SMOKE OK (bench report schema-valid)");
     }

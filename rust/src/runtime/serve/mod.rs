@@ -20,10 +20,12 @@
 //! `id % shards`, so every shard's dynamic-batching decisions (see
 //! [`queue`]) depend only on its own subsequence and the run is
 //! reproducible for a fixed seed regardless of thread scheduling.
-//! Batches execute through [`NetworkSim::run_batched_timed`], whose
+//! Batches execute through [`NetworkSim::run_batched_timed_with`] under
+//! the configured [`BatchKernel`] (default `auto`: all-FC nets at serving
+//! batch sizes take the bit-sliced 64-samples-per-word kernel), whose
 //! per-sample outputs are bit-identical to isolated single-sample runs —
-//! so serve predictions are byte-identical across shard counts and to a
-//! non-batched reference, while *latency* reflects real queueing + batch
+//! so serve predictions are byte-identical across shard counts *and*
+//! across kernels, while *latency* reflects real queueing + batch
 //! pipelining.
 //!
 //! The config-selection front door ([`ParetoFrontier::select_for_slo`])
@@ -40,7 +42,7 @@ pub use stats::{LatencySummary, ShardStats};
 
 use crate::config::ExperimentConfig;
 use crate::dse::ParetoFrontier;
-use crate::sim::{CostModel, NetworkSim};
+use crate::sim::{BatchKernel, CostModel, NetworkSim};
 use anyhow::{bail, Result};
 
 /// Serve-side knobs (the load itself is a [`LoadSpec`]).
@@ -53,6 +55,10 @@ pub struct ServeOptions {
     /// Seed for the replicas' random weights (every shard uses the same
     /// weights, so shard assignment cannot change predictions).
     pub weight_seed: u64,
+    /// Batched execution kernel every shard replica runs
+    /// (`--kernel auto|sliced|per-sample`). Results are byte-identical
+    /// across kernels; this only trades throughput.
+    pub kernel: BatchKernel,
 }
 
 impl Default for ServeOptions {
@@ -61,6 +67,7 @@ impl Default for ServeOptions {
             shards: 4,
             policy: BatchPolicy::default(),
             weight_seed: 7,
+            kernel: BatchKernel::Auto,
         }
     }
 }
@@ -212,8 +219,9 @@ impl ServeRuntime {
                     let cfg = &self.cfg;
                     let costs = &self.costs;
                     let weight_seed = self.opts.weight_seed;
+                    let kernel = self.opts.kernel;
                     scope.spawn(move || {
-                        serve_shard(shard, queue, cfg, costs, weight_seed, &policy)
+                        serve_shard(shard, queue, cfg, costs, weight_seed, &policy, kernel)
                     })
                 })
                 .collect();
@@ -311,6 +319,7 @@ fn serve_shard(
     costs: &CostModel,
     weight_seed: u64,
     policy: &BatchPolicy,
+    kernel: BatchKernel,
 ) -> ShardOutput {
     let mut sim = NetworkSim::with_random_weights(cfg, weight_seed, costs.clone());
     let mut records = Vec::new();
@@ -326,7 +335,7 @@ fn serve_shard(
             .map(|r| std::mem::take(&mut r.input))
             .collect();
         sim.reset();
-        let (result, outcomes) = sim.run_batched_timed(&inputs);
+        let (result, outcomes) = sim.run_batched_timed_with(&inputs, kernel);
         debug_assert_eq!(outcomes.len(), batch.requests.len());
         let batch_size = batch.requests.len();
         for (req, out) in batch.requests.iter().zip(&outcomes) {

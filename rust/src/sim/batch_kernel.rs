@@ -1,0 +1,395 @@
+//! Bit-sliced batch execution: advance up to 64 batch samples per u64
+//! word op (ROADMAP item: batch-level bit-slicing).
+//!
+//! The per-sample engine streams samples back-to-back through the layer
+//! pipeline, so a batch of B costs B full engine passes — every spike-word
+//! scan, buffer copy and per-step dispatch repeats per sample. This kernel
+//! transposes the batch into [`BitMat`] lane words (bit `b` = sample `b`)
+//! and runs each `(step, layer)` once for the whole lane group:
+//!
+//! * **Compress**: one occupancy-word scan over the pre-neurons builds all
+//!   64 lanes' spike address lists together — a neuron inactive in *every*
+//!   sample costs one word test for the whole batch, which is where
+//!   sparsity pays 64x instead of 1x.
+//! * **Accumulate**: per lane, the exact `fc_accumulate` fused-quad row
+//!   walk of the per-sample path (`sim::layer`). f32 addition is not
+//!   associative, so the per-lane operation *order* is shared by
+//!   construction rather than re-derived — this is what keeps membranes,
+//!   spikes and therefore predictions byte-identical.
+//! * **Activate**: lane-parallel LIF with the same leak/threshold/soft-reset
+//!   op order as `LifState::activate`, fused with the accumulator clear and
+//!   packing spikes straight into lane rows (no bool scratch, no
+//!   `fill_from_bools` pass); a 64x64 bit transpose turns those rows into
+//!   the next layer's lane words.
+//!
+//! Cycle accounting is *replayed*, not re-derived: every FC cost and
+//! `LayerStats` field is a pure function of each step's `(in_spikes,
+//! fired)` pair, so the kernel records those counts during the functional
+//! sweep and feeds them through the shared `LayerSim::fc_account` +
+//! [`advance_finish`] recurrence in the per-sample step order. The
+//! per-sample path is the differential oracle (see
+//! `rust/tests/fuzz_differential.rs`, sliced lane).
+//!
+//! Scope: all-FC topologies (the paper's net1–net4 MLPs). Conv/pool nets
+//! fall back to the per-sample engine — selection is centralized in
+//! [`selects_sliced`].
+
+use crate::sim::engine::advance_finish;
+use crate::sim::layer::fc_accumulate;
+use crate::sim::pipeline::{BatchOutcome, NetworkSim};
+use crate::sim::stats::{decode_counts, SimResult};
+use crate::snn::{BitMat, Layer, NetDef, SpikeTrain};
+
+/// Which batched execution path [`NetworkSim::run_batched_timed_with`]
+/// takes. Both kernels produce byte-identical results; the choice is
+/// purely a throughput decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchKernel {
+    /// Pick [`BatchKernel::Sliced`] when the topology is all-FC and the
+    /// batch has at least [`SLICED_AUTO_MIN_BATCH`] samples.
+    #[default]
+    Auto,
+    /// Force the bit-sliced kernel (still falls back on conv/pool nets,
+    /// which it does not implement).
+    Sliced,
+    /// Force the per-sample engine (the differential oracle).
+    PerSample,
+}
+
+impl BatchKernel {
+    /// Parse the CLI spelling (`--kernel auto|sliced|per-sample`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(BatchKernel::Auto),
+            "sliced" => Ok(BatchKernel::Sliced),
+            "per-sample" => Ok(BatchKernel::PerSample),
+            _ => Err(format!(
+                "unknown batch kernel '{s}' (expected auto, sliced or per-sample)"
+            )),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BatchKernel::Auto => "auto",
+            BatchKernel::Sliced => "sliced",
+            BatchKernel::PerSample => "per-sample",
+        }
+    }
+}
+
+/// Batch size at which [`BatchKernel::Auto`] switches to the sliced
+/// kernel: the shared occupancy scan and transpose amortize across lanes,
+/// and by ~half a lane word of samples they clearly beat the per-sample
+/// engine's per-step overheads. Serving batches (`BatchPolicy::max_batch`)
+/// of 8+ therefore get the sliced path transparently.
+pub const SLICED_AUTO_MIN_BATCH: usize = 8;
+
+/// Centralized kernel selection: the sliced path handles all-FC
+/// topologies only; anything else (or a batch below the auto threshold)
+/// runs per-sample.
+pub fn selects_sliced(kernel: BatchKernel, batch: usize, net: &NetDef) -> bool {
+    let fc_only =
+        !net.layers.is_empty() && net.layers.iter().all(|l| matches!(l, Layer::Fc { .. }));
+    match kernel {
+        BatchKernel::PerSample => false,
+        BatchKernel::Sliced => fc_only,
+        BatchKernel::Auto => fc_only && batch >= SLICED_AUTO_MIN_BATCH,
+    }
+}
+
+/// Per-layer lane-major functional state for one lane group: `lanes`
+/// contiguous accumulator/membrane blocks of `n`, plus each lane's packed
+/// output spike row.
+struct LaneState {
+    acc: Vec<f32>,
+    v: Vec<f32>,
+    rows: Vec<u64>,
+    words_per_lane: usize,
+}
+
+/// Bit-sliced batched run. Caller (`run_batched_timed_with`) has already
+/// checked [`selects_sliced`]; this panics on non-FC layers.
+///
+/// Functional layer state is reset on exit (batched runs reset state at
+/// every sample boundary anyway, so no later result can depend on it).
+pub(crate) fn run_sliced(
+    sim: &mut NetworkSim,
+    inputs: &[SpikeTrain],
+) -> (SimResult, Vec<BatchOutcome>) {
+    // mirror BatchWorkload::new's validation so both kernels reject the
+    // same malformed batches with the same messages
+    assert!(!inputs.is_empty(), "batch needs at least one sample");
+    let t_per_sample = inputs[0].len();
+    assert!(t_per_sample > 0, "samples must span at least one step");
+    assert!(
+        inputs.iter().all(|s| s.len() == t_per_sample),
+        "all batch samples must share the same spike-train length"
+    );
+
+    let n_layers = sim.layers.len();
+    let batch = inputs.len();
+    let out_bits = sim.net.layers.last().map(|l| l.output_bits()).unwrap_or(0);
+    let (classes, population) = (sim.net.classes, sim.net.population);
+
+    // per-(layer, sample, step) spike counts feeding the accounting replay
+    let cell = |l: usize, sample: usize, tau: usize| (l * batch + sample) * t_per_sample + tau;
+    let mut in_cnt = vec![0u32; n_layers * batch * t_per_sample];
+    let mut fired_cnt = vec![0u32; n_layers * batch * t_per_sample];
+
+    let mut output_counts = vec![0u32; out_bits];
+    let mut predictions: Vec<Option<usize>> = Vec::with_capacity(batch);
+
+    // ---- functional sweep, one lane group (<= 64 samples) at a time ----
+    for (g, group) in inputs.chunks(64).enumerate() {
+        let lanes = group.len();
+        let mat = BitMat::pack(group);
+        debug_assert_eq!(mat.neurons(), sim.net.input_bits, "input width mismatch");
+
+        let mut state: Vec<LaneState> = sim
+            .layers
+            .iter()
+            .map(|layer| {
+                let view = layer.fc_view().expect("sliced kernel requires an all-FC net");
+                let wpl = view.n.div_ceil(64);
+                LaneState {
+                    acc: vec![0.0; lanes * view.n],
+                    v: vec![0.0; lanes * view.n],
+                    rows: vec![0u64; lanes * wpl],
+                    words_per_lane: wpl,
+                }
+            })
+            .collect();
+        // one lane-word matrix per layer output, reused across steps
+        let mut carries: Vec<BitMat> = sim
+            .layers
+            .iter()
+            .map(|layer| BitMat::zeros(1, layer.fc_view().unwrap().n, lanes))
+            .collect();
+        let mut addrs: Vec<Vec<u32>> = vec![Vec::new(); lanes];
+        let mut lane_counts = vec![0u32; lanes * out_bits];
+
+        for tau in 0..t_per_sample {
+            for l in 0..n_layers {
+                let view = sim.layers[l].fc_view().unwrap();
+                // shared compress: one occupancy-word scan distributes
+                // ascending pre-neuron addresses to every active lane
+                for a in addrs.iter_mut() {
+                    a.clear();
+                }
+                let (src, t_src): (&BitMat, usize) =
+                    if l == 0 { (&mat, tau) } else { (&carries[l - 1], 0) };
+                src.for_each_active_lane(t_src, |i, w| {
+                    let mut w = w;
+                    while w != 0 {
+                        addrs[w.trailing_zeros() as usize].push(i as u32);
+                        w &= w - 1;
+                    }
+                });
+
+                let st = &mut state[l];
+                let is_last = l + 1 == n_layers;
+                for (lane, alist) in addrs.iter().enumerate() {
+                    let s = alist.len();
+                    let acc = &mut st.acc[lane * view.n..(lane + 1) * view.n];
+                    fc_accumulate(acc, view.w, view.n, alist);
+                    // fused LIF activate + accumulator clear + bit pack.
+                    // The f32 expression matches `LifState::activate`'s hot
+                    // path term for term; clearing acc when s == 0 writes
+                    // 0.0 over 0.0 (the per-sample path merely skips the
+                    // redundant pass), so values stay identical.
+                    let v = &mut st.v[lane * view.n..(lane + 1) * view.n];
+                    let row = &mut st.rows[lane * st.words_per_lane..(lane + 1) * st.words_per_lane];
+                    let (beta, theta) = (view.beta, view.theta);
+                    let mut fired = 0usize;
+                    let mut word = 0u64;
+                    for (j, ((v, a), &b)) in
+                        v.iter_mut().zip(acc.iter_mut()).zip(view.b).enumerate()
+                    {
+                        let v_new = beta * *v + *a + b;
+                        let spike = v_new >= theta;
+                        *v = if spike { v_new - theta } else { v_new };
+                        *a = 0.0;
+                        fired += spike as usize;
+                        word |= (spike as u64) << (j & 63);
+                        if j & 63 == 63 {
+                            row[j >> 6] = word;
+                            word = 0;
+                        }
+                    }
+                    if view.n & 63 != 0 {
+                        row[view.n >> 6] = word;
+                    }
+                    let sample = g * 64 + lane;
+                    in_cnt[cell(l, sample, tau)] = s as u32;
+                    fired_cnt[cell(l, sample, tau)] = fired as u32;
+                    if is_last {
+                        // network output: global spike accumulation plus the
+                        // per-sample population counts the decode reads
+                        let counts = &mut lane_counts[lane * out_bits..(lane + 1) * out_bits];
+                        for (wj, &rw) in row.iter().enumerate() {
+                            let mut rw = rw;
+                            while rw != 0 {
+                                let idx = (wj << 6) + rw.trailing_zeros() as usize;
+                                counts[idx] += 1;
+                                output_counts[idx] += 1;
+                                rw &= rw - 1;
+                            }
+                        }
+                    }
+                }
+                if !is_last {
+                    carries[l].fill_from_lane_rows(&st.rows);
+                }
+            }
+        }
+        for lane in 0..lanes {
+            predictions.push(decode_counts(
+                &lane_counts[lane * out_bits..(lane + 1) * out_bits],
+                classes,
+                population,
+            ));
+        }
+    }
+
+    // ---- accounting replay in the per-sample engine's step order ----
+    // (all LayerStats fields are order-independent sums/maxes, but the
+    // pipelined finish-time recurrence is not — replay it exactly)
+    let mut finish = vec![0u64; n_layers];
+    let mut serial = 0u64;
+    let mut completions: Vec<u64> = Vec::with_capacity(batch);
+    for sample in 0..batch {
+        for tau in 0..t_per_sample {
+            let mut prev_finish = 0u64;
+            for (l, layer) in sim.layers.iter_mut().enumerate() {
+                let phases = layer.fc_account(
+                    in_cnt[cell(l, sample, tau)] as usize,
+                    fired_cnt[cell(l, sample, tau)] as usize,
+                );
+                serial += phases.total();
+                prev_finish = advance_finish(&mut finish[l], prev_finish, phases.total());
+            }
+            if tau + 1 == t_per_sample {
+                completions.push(*finish.last().unwrap());
+            }
+        }
+    }
+
+    for layer in &mut sim.layers {
+        layer.reset_state();
+    }
+
+    let result = SimResult {
+        total_cycles: finish.last().copied().unwrap_or(0),
+        serial_cycles: serial,
+        per_layer: sim.layers.iter().map(|l| l.stats.clone()).collect(),
+        t_steps: batch * t_per_sample,
+        output_counts,
+        predicted_class: None,
+    };
+    let outcomes = predictions
+        .into_iter()
+        .zip(completions)
+        .map(|(prediction, completion_cycles)| BatchOutcome {
+            prediction,
+            completion_cycles,
+        })
+        .collect();
+    (result, outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, HwConfig};
+    use crate::sim::{random_spike_train, CostModel, NetworkSim};
+    use crate::snn::{fc_net, table1_net};
+    use crate::util::rng::Rng;
+
+    fn fc_sim(t_steps: usize) -> NetworkSim {
+        let net = fc_net("bk", "mnist", &[48, 33, 10], 5, 2, 0.9, t_steps);
+        let cfg = ExperimentConfig::new(net, HwConfig::with_lhr(vec![3, 2])).unwrap();
+        NetworkSim::with_random_weights(&cfg, 11, CostModel::default())
+    }
+
+    fn run_both(
+        mk: impl Fn() -> NetworkSim,
+        inputs: &[crate::snn::SpikeTrain],
+    ) -> (
+        (SimResult, Vec<BatchOutcome>),
+        (SimResult, Vec<BatchOutcome>),
+    ) {
+        let mut a = mk();
+        let mut b = mk();
+        (
+            a.run_batched_timed_with(inputs, BatchKernel::PerSample),
+            b.run_batched_timed_with(inputs, BatchKernel::Sliced),
+        )
+    }
+
+    fn assert_identical(ps: &(SimResult, Vec<BatchOutcome>), sl: &(SimResult, Vec<BatchOutcome>)) {
+        assert_eq!(ps.1, sl.1, "per-sample outcomes diverge");
+        assert_eq!(ps.0.total_cycles, sl.0.total_cycles);
+        assert_eq!(ps.0.serial_cycles, sl.0.serial_cycles);
+        assert_eq!(ps.0.t_steps, sl.0.t_steps);
+        assert_eq!(ps.0.output_counts, sl.0.output_counts);
+        assert_eq!(
+            format!("{:?}", ps.0.per_layer),
+            format!("{:?}", sl.0.per_layer),
+            "LayerStats diverge"
+        );
+    }
+
+    #[test]
+    fn sliced_matches_per_sample_across_group_boundaries() {
+        let mut rng = Rng::new(42);
+        for batch in [1usize, 5, 63, 64, 65, 130] {
+            let inputs: Vec<_> = (0..batch)
+                .map(|_| random_spike_train(48, 4, 0.25, &mut rng))
+                .collect();
+            let (ps, sl) = run_both(|| fc_sim(4), &inputs);
+            assert_identical(&ps, &sl);
+        }
+    }
+
+    #[test]
+    fn sliced_matches_on_fc_table1_nets() {
+        // trimmed step counts keep the unit test fast; the bench covers
+        // full-length runs
+        let mut rng = Rng::new(7);
+        for name in ["net1", "net2", "net3", "net4"] {
+            let mut net = table1_net(name);
+            if !net.layers.iter().all(|l| matches!(l, Layer::Fc { .. })) {
+                continue;
+            }
+            net.t_steps = 2;
+            let lhr = vec![4; net.parametric_layers().len()];
+            let cfg = ExperimentConfig::new(net.clone(), HwConfig::with_lhr(lhr)).unwrap();
+            let inputs: Vec<_> = (0..9)
+                .map(|_| random_spike_train(net.input_bits, net.t_steps, 0.12, &mut rng))
+                .collect();
+            let mk = || NetworkSim::with_random_weights(&cfg, 3, CostModel::default());
+            let (ps, sl) = run_both(mk, &inputs);
+            assert_identical(&ps, &sl);
+        }
+    }
+
+    #[test]
+    fn auto_threshold_and_topology_gate_selection() {
+        let fc = fc_net("a", "d", &[8, 4], 4, 1, 0.9, 3);
+        assert!(!selects_sliced(BatchKernel::Auto, SLICED_AUTO_MIN_BATCH - 1, &fc));
+        assert!(selects_sliced(BatchKernel::Auto, SLICED_AUTO_MIN_BATCH, &fc));
+        assert!(selects_sliced(BatchKernel::Sliced, 1, &fc));
+        assert!(!selects_sliced(BatchKernel::PerSample, 1000, &fc));
+        let conv = table1_net("net5");
+        assert!(!selects_sliced(BatchKernel::Sliced, 1000, &conv));
+    }
+
+    #[test]
+    fn kernel_parse_roundtrip() {
+        for k in [BatchKernel::Auto, BatchKernel::Sliced, BatchKernel::PerSample] {
+            assert_eq!(BatchKernel::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(BatchKernel::parse("fast").is_err());
+    }
+}

@@ -73,6 +73,61 @@ pub struct LayerSim {
     lazy_leak_ok: bool,
 }
 
+/// Borrowed FC layer internals for the bit-sliced batch kernel
+/// (`sim::batch_kernel`): enough to replicate `step_fc`'s functional
+/// arithmetic per lane without exposing `LayerSim`'s fields.
+pub(crate) struct FcView<'a> {
+    pub n_pre: usize,
+    pub n: usize,
+    /// Row-major weights: `w[a * n + j]`.
+    pub w: &'a [f32],
+    pub b: &'a [f32],
+    pub beta: f32,
+    pub theta: f32,
+}
+
+/// FC weight-row accumulation over a compressed spike address list.
+/// Four rows per pass over the accumulators, fused as two pairwise adds in
+/// sequence — element-wise the exact f32 operation order of the scalar
+/// oracle's back-to-back pairwise passes (`baselines::scalar`), so results
+/// stay bit-identical while the accumulator read/write traffic halves
+/// again. Slices elide bounds checks (§Perf #4). Shared verbatim by the
+/// per-sample `step_fc` and the bit-sliced batch kernel's per-lane
+/// accumulate, which keeps the two paths' f32 sequences identical by
+/// construction.
+pub(crate) fn fc_accumulate(acc: &mut [f32], w: &[f32], n: usize, addrs: &[u32]) {
+    let mut quads = addrs.chunks_exact(4);
+    for q in &mut quads {
+        let (a0, a1) = (q[0] as usize, q[1] as usize);
+        let (a2, a3) = (q[2] as usize, q[3] as usize);
+        let r0 = &w[a0 * n..a0 * n + n];
+        let r1 = &w[a1 * n..a1 * n + n];
+        let r2 = &w[a2 * n..a2 * n + n];
+        let r3 = &w[a3 * n..a3 * n + n];
+        for ((((acc, &w0), &w1), &w2), &w3) in
+            acc.iter_mut().zip(r0).zip(r1).zip(r2).zip(r3)
+        {
+            let t = *acc + (w0 + w1);
+            *acc = t + (w2 + w3);
+        }
+    }
+    let mut pairs = quads.remainder().chunks_exact(2);
+    for pair in &mut pairs {
+        let (a0, a1) = (pair[0] as usize, pair[1] as usize);
+        let r0 = &w[a0 * n..a0 * n + n];
+        let r1 = &w[a1 * n..a1 * n + n];
+        for ((acc, &w0), &w1) in acc.iter_mut().zip(r0).zip(r1) {
+            *acc += w0 + w1;
+        }
+    }
+    for &a in pairs.remainder() {
+        let row = &w[a as usize * n..(a as usize + 1) * n];
+        for (acc, &wv) in acc.iter_mut().zip(row) {
+            *acc += wv;
+        }
+    }
+}
+
 /// Sum over all feature-map positions of the number of in-range kernel
 /// taps under 'same' padding — `sum_{y,x} |clipped footprint(y,x)|`.
 /// The footprint factorizes into independent row and column tap counts,
@@ -343,10 +398,9 @@ impl LayerSim {
             _ => unreachable!(),
         };
         let mut addrs = std::mem::take(&mut self.addr_buf);
-        let (comp_cycles, chunks_scanned) =
+        let (comp_cycles, _chunks_scanned) =
             self.penc.compress_into(input, &self.costs, &mut addrs);
         let s = addrs.len();
-        self.stats.penc_chunks += chunks_scanned;
 
         // Accumulate: every logical neuron adds w[a][j] for each spike a.
         let (w, b) = match &self.weights {
@@ -354,48 +408,7 @@ impl LayerSim {
             _ => panic!("fc layer without fc weights"),
         };
         debug_assert_eq!(w.len(), n_pre * n);
-        // Four weight rows per pass over the accumulators, fused as two
-        // pairwise adds in sequence — element-wise the exact f32 operation
-        // order of the scalar oracle's back-to-back pairwise passes
-        // (`baselines::scalar`), so results stay bit-identical while the
-        // accumulator read/write traffic halves again. Slices elide
-        // bounds checks (§Perf #4).
-        let mut quads = addrs.chunks_exact(4);
-        for q in &mut quads {
-            let (a0, a1) = (q[0] as usize, q[1] as usize);
-            let (a2, a3) = (q[2] as usize, q[3] as usize);
-            let r0 = &w[a0 * n..a0 * n + n];
-            let r1 = &w[a1 * n..a1 * n + n];
-            let r2 = &w[a2 * n..a2 * n + n];
-            let r3 = &w[a3 * n..a3 * n + n];
-            for ((((acc, &w0), &w1), &w2), &w3) in
-                self.acc.iter_mut().zip(r0).zip(r1).zip(r2).zip(r3)
-            {
-                let t = *acc + (w0 + w1);
-                *acc = t + (w2 + w3);
-            }
-        }
-        let mut pairs = quads.remainder().chunks_exact(2);
-        for pair in &mut pairs {
-            let (a0, a1) = (pair[0] as usize, pair[1] as usize);
-            let r0 = &w[a0 * n..a0 * n + n];
-            let r1 = &w[a1 * n..a1 * n + n];
-            for ((acc, &w0), &w1) in self.acc.iter_mut().zip(r0).zip(r1) {
-                *acc += w0 + w1;
-            }
-        }
-        for &a in pairs.remainder() {
-            let row = &w[a as usize * n..(a as usize + 1) * n];
-            for (acc, &wv) in self.acc.iter_mut().zip(row) {
-                *acc += wv;
-            }
-        }
-        let stall = self.mem.stall_factor();
-        let accum_cycles =
-            s as u64 * self.nu.per_unit() as u64 * self.costs.fc_accum * stall;
-        self.mem.record_reads((s * n) as u64);
-        self.stats.weight_reads += (s * n) as u64;
-        self.stats.accum_ops += (s * n) as u64;
+        fc_accumulate(&mut self.acc, w, n, &addrs);
 
         // Activate: serial LIF pass inside each NU (parallel across NUs).
         let fired = self.lif.activate(&self.acc, b, &mut self.spike_buf);
@@ -404,20 +417,60 @@ impl LayerSim {
             // the dense clear is skipped (values identical either way)
             self.acc.iter_mut().for_each(|a| *a = 0.0);
         }
-        let activate_cycles = self.nu.per_unit() as u64 * self.costs.act_fc;
-        self.stats.membrane_accesses += 2 * n as u64;
-        self.stats.activations += n as u64;
-
-        let phases = PhaseCycles {
-            compress: comp_cycles,
-            accumulate: accum_cycles,
-            activate: activate_cycles,
-            overhead: self.costs.phase_overhead,
-        };
         out.fill_from_bools(&self.spike_buf[..n]);
-        self.stats.add_step(&phases, s, fired);
+        let phases = self.fc_account(s, fired);
+        debug_assert_eq!(phases.compress, comp_cycles);
         self.addr_buf = addrs;
         phases
+    }
+
+    /// Charge one FC step's cycles and statistics given only its spike
+    /// counts. Every FC cost and `LayerStats` field is content-independent
+    /// — a pure function of `(s, fired)` and the layer configuration — so
+    /// this is shared between the functional `step_fc` above and the
+    /// bit-sliced batch kernel's accounting replay
+    /// (`sim::batch_kernel`), which must reproduce `PhaseCycles` and
+    /// `LayerStats` byte-identically in the per-sample step order.
+    pub(crate) fn fc_account(&mut self, s: usize, fired: usize) -> PhaseCycles {
+        let (n_pre, n) = match self.layer {
+            Layer::Fc { n_pre, n } => (n_pre, n),
+            _ => panic!("fc_account on non-fc layer"),
+        };
+        self.stats.penc_chunks += n_pre.div_ceil(self.penc.width) as u64;
+        let stall = self.mem.stall_factor();
+        let accum_cycles =
+            s as u64 * self.nu.per_unit() as u64 * self.costs.fc_accum * stall;
+        self.mem.record_reads((s * n) as u64);
+        self.stats.weight_reads += (s * n) as u64;
+        self.stats.accum_ops += (s * n) as u64;
+        self.stats.membrane_accesses += 2 * n as u64;
+        self.stats.activations += n as u64;
+        let phases = PhaseCycles {
+            compress: self.penc.compress_cost(n_pre, s, &self.costs),
+            accumulate: accum_cycles,
+            activate: self.nu.per_unit() as u64 * self.costs.act_fc,
+            overhead: self.costs.phase_overhead,
+        };
+        self.stats.add_step(&phases, s, fired);
+        phases
+    }
+
+    /// Borrowed view of the pieces the bit-sliced batch kernel needs to run
+    /// this FC layer's exact arithmetic out-of-band (weights, bias, LIF
+    /// parameters). `None` for conv/pool layers — the kernel falls back to
+    /// the per-sample engine for those topologies.
+    pub(crate) fn fc_view(&self) -> Option<FcView<'_>> {
+        match (&self.layer, &self.weights) {
+            (Layer::Fc { n_pre, n }, LayerWeights::Fc { w, b }) => Some(FcView {
+                n_pre: *n_pre,
+                n: *n,
+                w,
+                b,
+                beta: self.lif.beta,
+                theta: self.lif.theta,
+            }),
+            _ => None,
+        }
     }
 
     // ---- CONV ---------------------------------------------------------------

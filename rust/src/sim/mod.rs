@@ -14,9 +14,12 @@
 //!   per-sample decoding)
 //! * [`pipeline`] — `NetworkSim`: layer construction + thin run-mode
 //!   wrappers over the engine
+//! * [`batch_kernel`] — bit-sliced batched execution: 64 samples per u64
+//!   lane word, byte-identical to the per-sample engine on FC nets
 //! * [`costs`] — the named cycle-cost coefficients in one auditable place
 //! * [`stats`] — activity counters feeding the energy model and reports
 
+pub mod batch_kernel;
 pub mod costs;
 pub mod dynamic;
 pub mod ecu;
@@ -28,6 +31,7 @@ pub mod penc;
 pub mod pipeline;
 pub mod stats;
 
+pub use batch_kernel::{selects_sliced, BatchKernel, SLICED_AUTO_MIN_BATCH};
 pub use costs::CostModel;
 pub use dynamic::{compare_static_dynamic, DynamicAllocator, DynamicResult};
 pub use ecu::{EcuFsm, EcuState};

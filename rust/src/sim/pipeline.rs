@@ -14,6 +14,7 @@
 //! and Fig. 6 explore.
 
 use crate::config::ExperimentConfig;
+use crate::sim::batch_kernel::{run_sliced, selects_sliced, BatchKernel};
 use crate::sim::costs::CostModel;
 use crate::sim::engine::{
     ActivityWorkload, BatchDecodeProbe, BatchWorkload, Engine, NullProbe, Probe,
@@ -218,7 +219,24 @@ impl NetworkSim {
     /// per-request completion times the serve runtime turns into queueing
     /// + execution latency. The last sample's completion equals the
     /// aggregate `total_cycles`.
+    ///
+    /// Uses [`BatchKernel::Auto`]: all-FC nets at serving batch sizes run
+    /// on the bit-sliced kernel ([`crate::sim::batch_kernel`]), everything
+    /// else on the per-sample engine. Results are byte-identical either
+    /// way; use [`NetworkSim::run_batched_timed_with`] to force a kernel.
     pub fn run_batched_timed(&mut self, inputs: &[SpikeTrain]) -> (SimResult, Vec<BatchOutcome>) {
+        self.run_batched_timed_with(inputs, BatchKernel::Auto)
+    }
+
+    /// [`NetworkSim::run_batched_timed`] with an explicit kernel choice.
+    pub fn run_batched_timed_with(
+        &mut self,
+        inputs: &[SpikeTrain],
+        kernel: BatchKernel,
+    ) -> (SimResult, Vec<BatchOutcome>) {
+        if selects_sliced(kernel, inputs.len(), &self.net) {
+            return run_sliced(self, inputs);
+        }
         let mut workload = BatchWorkload::new(inputs);
         let mut probe = BatchDecodeProbe::new(
             workload.t_per_sample(),

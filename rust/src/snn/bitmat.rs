@@ -1,0 +1,299 @@
+//! Transposed (bit-sliced) batch representation: one u64 *lane word* per
+//! neuron per step, where bit `b` carries batch sample `b`'s spike.
+//!
+//! The per-sample representation (`SpikeTrain` = `Vec<BitVec>`) is
+//! neuron-packed: one word covers 64 *neurons* of one sample. `BitMat` is
+//! the transpose — one word covers 64 *samples* of one neuron — so a single
+//! word op (AND/OR/popcount/scan) advances the whole batch at once. This is
+//! the layout the bit-sliced batch kernel (`sim::batch_kernel`) executes on.
+//!
+//! ```text
+//!             bit 0      bit 1    ...   bit 63
+//! word[t,i] = sample 0 | sample 1 | ... | sample 63   (spike of neuron i, step t)
+//! ```
+//!
+//! Lane-tail rule: a batch of `lanes < 64` samples occupies bits
+//! `0..lanes`; bits `lanes..64` are *always zero* (constructors never set
+//! them), and `lane_mask()` exposes the valid-bit mask for callers that
+//! build words by hand.
+
+use super::bitvec::BitVec;
+use super::SpikeTrain;
+
+/// Bit-sliced batch spike matrix for up to 64 samples ("lanes").
+#[derive(Debug, Clone)]
+pub struct BitMat {
+    /// `words[t * neurons + i]` = lane word of neuron `i` at step `t`.
+    words: Vec<u64>,
+    neurons: usize,
+    t_steps: usize,
+    lanes: usize,
+}
+
+impl BitMat {
+    /// All-zero matrix. `lanes` must be in `1..=64`.
+    pub fn zeros(t_steps: usize, neurons: usize, lanes: usize) -> Self {
+        assert!(
+            (1..=64).contains(&lanes),
+            "BitMat packs 1..=64 samples per lane word, got {lanes}"
+        );
+        BitMat {
+            words: vec![0u64; t_steps * neurons],
+            neurons,
+            t_steps,
+            lanes,
+        }
+    }
+
+    /// Pack up to 64 per-sample spike trains (all with identical step count
+    /// and bit width) into the transposed layout. Sample `b` lands in lane
+    /// bit `b`.
+    pub fn pack(samples: &[SpikeTrain]) -> Self {
+        assert!(!samples.is_empty(), "BitMat::pack needs at least one sample");
+        let t_steps = samples[0].len();
+        assert!(t_steps > 0, "BitMat::pack needs at least one time step");
+        let neurons = samples[0][0].len();
+        let mut m = BitMat::zeros(t_steps, neurons, samples.len());
+        for (lane, train) in samples.iter().enumerate() {
+            assert_eq!(train.len(), t_steps, "sample {lane}: step count mismatch");
+            for (t, step) in train.iter().enumerate() {
+                assert_eq!(step.len(), neurons, "sample {lane} step {t}: width mismatch");
+                let row = &mut m.words[t * neurons..(t + 1) * neurons];
+                step.for_each_one(|i| row[i] |= 1u64 << lane);
+            }
+        }
+        m
+    }
+
+    /// Inverse of [`pack`](Self::pack): per-sample spike trains, lane order.
+    pub fn unpack(&self) -> Vec<SpikeTrain> {
+        let mut out: Vec<SpikeTrain> = (0..self.lanes)
+            .map(|_| (0..self.t_steps).map(|_| BitVec::zeros(self.neurons)).collect())
+            .collect();
+        for t in 0..self.t_steps {
+            for (i, &w) in self.step_words(t).iter().enumerate() {
+                let mut w = w;
+                while w != 0 {
+                    let lane = w.trailing_zeros() as usize;
+                    out[lane][t].set(i);
+                    w &= w - 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Build a single-step matrix from *lane-major* packed rows: lane `b`'s
+    /// spikes as `words_per_lane` neuron-packed words at
+    /// `rows[b * words_per_lane ..]` (i.e. each lane row has the `BitVec`
+    /// word layout). This is the transpose step the batch kernel uses to
+    /// turn one layer's per-lane outputs into the next layer's lane words.
+    pub fn from_lane_rows(rows: &[u64], neurons: usize, lanes: usize) -> Self {
+        let mut m = BitMat::zeros(1, neurons, lanes);
+        m.fill_from_lane_rows(rows);
+        m
+    }
+
+    /// In-place [`from_lane_rows`](Self::from_lane_rows) for a single-step
+    /// matrix — the batch kernel's per-layer carry buffers are refilled
+    /// every step without reallocating.
+    pub fn fill_from_lane_rows(&mut self, rows: &[u64]) {
+        let (neurons, lanes) = (self.neurons, self.lanes);
+        let wpl = neurons.div_ceil(64);
+        assert!(
+            self.t_steps == 1 && rows.len() == lanes * wpl,
+            "fill_from_lane_rows: expected 1 step and {lanes} lanes x {wpl} words, got {} steps, {} words",
+            self.t_steps,
+            rows.len()
+        );
+        let mut blk = [0u64; 64];
+        for jb in 0..wpl {
+            blk.fill(0);
+            for (lane, lane_rows) in rows.chunks_exact(wpl).enumerate() {
+                blk[lane] = lane_rows[jb];
+            }
+            transpose64(&mut blk);
+            let lo = jb * 64;
+            let hi = (lo + 64).min(neurons);
+            self.words[lo..hi].copy_from_slice(&blk[..hi - lo]);
+            // tail neurons past `neurons` were zero in every lane row by the
+            // BitVec invariant, so the dropped blk words are zero too
+            debug_assert!(blk[hi - lo..].iter().all(|&w| w == 0));
+        }
+    }
+
+    pub fn neurons(&self) -> usize {
+        self.neurons
+    }
+    pub fn t_steps(&self) -> usize {
+        self.t_steps
+    }
+    /// Number of batch samples packed (1..=64).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+    /// Mask of valid lane bits: `lanes` low bits set.
+    pub fn lane_mask(&self) -> u64 {
+        if self.lanes == 64 {
+            !0
+        } else {
+            (1u64 << self.lanes) - 1
+        }
+    }
+
+    /// Lane word of neuron `i` at step `t`.
+    pub fn word(&self, t: usize, i: usize) -> u64 {
+        self.words[t * self.neurons + i]
+    }
+    /// One lane word per neuron at step `t`.
+    pub fn step_words(&self, t: usize) -> &[u64] {
+        &self.words[t * self.neurons..(t + 1) * self.neurons]
+    }
+
+    /// Visit every neuron with at least one active lane at step `t`, in
+    /// ascending neuron order, passing its lane word. One word test covers
+    /// all 64 samples — this is the batch-amortized analogue of
+    /// `BitVec::for_each_one`.
+    #[inline]
+    pub fn for_each_active_lane<F: FnMut(usize, u64)>(&self, t: usize, mut f: F) {
+        for (i, &w) in self.step_words(t).iter().enumerate() {
+            if w != 0 {
+                debug_assert_eq!(w & !self.lane_mask(), 0, "stray bits past lane {}", self.lanes);
+                f(i, w);
+            }
+        }
+    }
+
+    /// Spikes of neuron `i` at step `t` summed over the batch.
+    pub fn popcount(&self, t: usize, i: usize) -> u32 {
+        self.word(t, i).count_ones()
+    }
+}
+
+/// In-place 64x64 bit-matrix transpose (Hacker's Delight §7-3): swap
+/// progressively smaller off-diagonal blocks, log2(64) = 6 passes.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j = 32usize;
+    let mut m = 0x0000_0000_FFFF_FFFFu64;
+    while j != 0 {
+        let mut k = 0usize;
+        while k < 64 {
+            let t = (a[k] ^ (a[k | j] >> j)) & m;
+            a[k] ^= t;
+            a[k | j] ^= t << j;
+            k = ((k | j) + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn random_train(g: &mut crate::util::prop::Gen, t: usize, n: usize, p: f64) -> SpikeTrain {
+        (0..t).map(|_| BitVec::from_bools(&g.spike_bits(n, p))).collect()
+    }
+
+    #[test]
+    fn transpose64_matches_naive() {
+        prop_check(40, 0xB17A_7A01, |g| {
+            let mut a = [0u64; 64];
+            for w in a.iter_mut() {
+                *w = (g.rng().next_u64() >> 1) ^ g.rng().next_u64();
+            }
+            let orig = a;
+            transpose64(&mut a);
+            for (r, row) in orig.iter().enumerate() {
+                for c in 0..64 {
+                    let before = (row >> c) & 1;
+                    let after = (a[c] >> r) & 1;
+                    if before != after {
+                        return Err(format!("bit ({r},{c}) not transposed"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        prop_check(40, 0xB17A_7A02, |g| {
+            let batch = *g.choose(&[1usize, 2, 63, 64]);
+            let t = g.usize_in(1, 4);
+            let n = g.usize_in(1, 200);
+            let p = g.f64_in(0.0, 1.0);
+            let samples: Vec<SpikeTrain> =
+                (0..batch).map(|_| random_train(g, t, n, p)).collect();
+            let m = BitMat::pack(&samples);
+            assert_eq!((m.lanes(), m.t_steps(), m.neurons()), (batch, t, n));
+            let back = m.unpack();
+            for (lane, (a, b)) in samples.iter().zip(&back).enumerate() {
+                for (ta, tb) in a.iter().zip(b) {
+                    if ta.iter_ones().collect::<Vec<_>>() != tb.iter_ones().collect::<Vec<_>>() {
+                        return Err(format!("lane {lane} roundtrip mismatch"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lane_tail_bits_stay_zero() {
+        // 3 samples -> bits 3..64 must never be set, and lane_mask says so
+        let mut g3 = Vec::new();
+        for lane in 0..3usize {
+            let mut step = BitVec::zeros(70);
+            step.set(lane); // distinct spike per lane
+            step.set(69);
+            g3.push(vec![step]);
+        }
+        let m = BitMat::pack(&g3);
+        assert_eq!(m.lane_mask(), 0b111);
+        for i in 0..70 {
+            assert_eq!(m.word(0, i) & !m.lane_mask(), 0, "stray lane bits at neuron {i}");
+        }
+        assert_eq!(m.word(0, 69), 0b111);
+        assert_eq!(m.popcount(0, 1), 1);
+    }
+
+    #[test]
+    fn for_each_active_lane_ascending_and_sparse() {
+        let mut s0 = BitVec::zeros(130);
+        s0.set(5);
+        s0.set(128);
+        let mut s1 = BitVec::zeros(130);
+        s1.set(5);
+        let m = BitMat::pack(&[vec![s0], vec![s1]]);
+        let mut seen = Vec::new();
+        m.for_each_active_lane(0, |i, w| seen.push((i, w)));
+        assert_eq!(seen, vec![(5, 0b11), (128, 0b01)]);
+    }
+
+    #[test]
+    fn from_lane_rows_matches_pack() {
+        prop_check(40, 0xB17A_7A03, |g| {
+            let lanes = *g.choose(&[1usize, 5, 63, 64]);
+            let n = g.usize_in(1, 200);
+            let p = g.f64_in(0.0, 0.5);
+            let samples: Vec<SpikeTrain> =
+                (0..lanes).map(|_| random_train(g, 1, n, p)).collect();
+            // lane-major packed rows straight from each sample's BitVec words
+            let wpl = n.div_ceil(64);
+            let mut rows = vec![0u64; lanes * wpl];
+            for (lane, s) in samples.iter().enumerate() {
+                rows[lane * wpl..(lane + 1) * wpl].copy_from_slice(s[0].raw_words());
+            }
+            let via_rows = BitMat::from_lane_rows(&rows, n, lanes);
+            let via_pack = BitMat::pack(&samples);
+            if via_rows.step_words(0) != via_pack.step_words(0) {
+                return Err("from_lane_rows disagrees with pack".into());
+            }
+            Ok(())
+        });
+    }
+}

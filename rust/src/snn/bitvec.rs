@@ -136,6 +136,11 @@ impl BitVec {
         let n_words = self.words.len();
         let tail_bits = self.len % 64;
         for (wi, &word) in self.words.iter().enumerate() {
+            // fast-skip: at Table-I sparsity most words are all-zero, so
+            // bail before the tail-mask arithmetic and decode-loop setup
+            if word == 0 {
+                continue;
+            }
             let mut w = word;
             if wi + 1 == n_words && tail_bits != 0 {
                 // defensive tail mask: the set()/fill paths never set bits
@@ -148,6 +153,24 @@ impl BitVec {
                 w &= w - 1;
             }
         }
+    }
+
+    /// Number of set bits among indices `0..n` (n clamped to the length).
+    /// This is the lane-tail popcount the bit-sliced batch kernel uses:
+    /// full words are popcounted whole, the straddling word under a
+    /// `(1 << n%64) - 1` tail mask.
+    pub fn count_ones_upto(&self, n: usize) -> usize {
+        let n = n.min(self.len);
+        let full_words = n / 64;
+        let mut total: usize = self.words[..full_words]
+            .iter()
+            .map(|w| w.count_ones() as usize)
+            .sum();
+        let tail = n % 64;
+        if tail != 0 {
+            total += (self.words[full_words] & ((1u64 << tail) - 1)).count_ones() as usize;
+        }
+        total
     }
 
     /// Bitwise OR in place (used by the hardware maxpool model).
@@ -207,6 +230,37 @@ mod tests {
         v.clear(64);
         assert!(!v.get(64));
         assert_eq!(v.count_ones(), 2);
+    }
+
+    #[test]
+    fn count_ones_upto_word_boundaries() {
+        // bits straddling the first word boundary: 62, 63, 64, 65
+        let mut v = BitVec::zeros(130);
+        for i in [0, 62, 63, 64, 65, 129] {
+            v.set(i);
+        }
+        assert_eq!(v.count_ones_upto(0), 0);
+        assert_eq!(v.count_ones_upto(63), 2); // {0, 62}
+        assert_eq!(v.count_ones_upto(64), 3); // + {63}
+        assert_eq!(v.count_ones_upto(65), 4); // + {64}
+        assert_eq!(v.count_ones_upto(66), 5); // + {65}
+        assert_eq!(v.count_ones_upto(130), 6);
+        // n past the length clamps
+        assert_eq!(v.count_ones_upto(1000), 6);
+    }
+
+    #[test]
+    fn count_ones_upto_matches_naive_scan() {
+        prop_check(60, 0xB17A, |g| {
+            let n = g.usize_in(1, 300);
+            let p = g.f64_in(0.0, 1.0);
+            let bits = g.spike_bits(n, p);
+            let v = BitVec::from_bools(&bits);
+            let cut = g.usize_in(0, n + 2);
+            let naive = bits.iter().take(cut).filter(|&&b| b).count();
+            assert_eq!(v.count_ones_upto(cut), naive, "cut={cut} n={n}");
+            Ok(())
+        });
     }
 
     #[test]

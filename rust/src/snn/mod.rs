@@ -1,10 +1,12 @@
 //! Core SNN domain types: packed spike trains, network topology, and the
 //! golden LIF arithmetic the cycle-accurate simulator computes with.
 
+pub mod bitmat;
 pub mod bitvec;
 pub mod lif;
 pub mod topology;
 
+pub use bitmat::BitMat;
 pub use bitvec::BitVec;
 pub use lif::LifState;
 pub use topology::{fc_net, table1_net, Layer, NetDef, TABLE1_NETS};

@@ -11,12 +11,14 @@
 //! stacks and conv/pool mixes with odd dims), LHR across the lattice,
 //! input sparsity from 0 to beyond the sparse-path density threshold,
 //! and varied beta/theta/bias regimes, including the ones that force the
-//! dense fallback. On failure the harness prints the reproducing case
+//! dense fallback. A dedicated lane pits the bit-sliced batch kernel
+//! against the per-sample batched path across lane-boundary batch sizes
+//! (1/63/64/65/200). On failure the harness prints the reproducing case
 //! seed (replay with `util::prop::prop_replay`).
 
 use snn_dse::baselines::scalar::{ScalarLayerSim, ScalarNetworkSim};
 use snn_dse::config::{ExperimentConfig, HwConfig};
-use snn_dse::sim::{CostModel, LayerSim, LayerWeights, NetworkSim};
+use snn_dse::sim::{BatchKernel, CostModel, LayerSim, LayerWeights, NetworkSim};
 use snn_dse::snn::{BitVec, Layer, NetDef, SpikeTrain};
 use snn_dse::uarch::{UarchConfig, UarchSim};
 use snn_dse::util::prop::{prop_check, Gen};
@@ -372,6 +374,93 @@ fn compare_batched(g: &mut Gen) -> Result<(), String> {
     Ok(())
 }
 
+/// Bit-sliced batch-kernel lane: forcing `BatchKernel::Sliced` must be
+/// byte-identical to forcing `BatchKernel::PerSample` — per-sample
+/// outcomes, cycle totals, output counts, and every per-layer stats
+/// counter — across lane-boundary batch sizes (1/63/64/65/200), random
+/// FC depths, and input sparsity from 0 to 100%. Conv topologies ride
+/// along to pin the transparent per-sample fallback.
+fn compare_sliced_kernel(g: &mut Gen) -> Result<(), String> {
+    // small FC nets keep the 200-sample batches cheap; 1 in 5 cases uses
+    // a conv topology, where the sliced kernel must silently fall back
+    let (input_bits, layers) = if g.usize_in(0, 4) == 0 {
+        gen_conv_layers(g)
+    } else {
+        let depth = g.usize_in(1, 3);
+        let mut sizes = vec![g.usize_in(1, 80)];
+        for _ in 0..depth {
+            sizes.push(g.usize_in(1, 50));
+        }
+        let fc = sizes
+            .windows(2)
+            .map(|w| Layer::Fc {
+                n_pre: w[0],
+                n: w[1],
+            })
+            .collect();
+        (sizes[0], fc)
+    };
+    let classes = match layers.last().unwrap() {
+        Layer::Fc { n, .. } => *n,
+        _ => unreachable!("topologies always end with an FC head"),
+    };
+    let (beta, theta) = gen_beta_theta(g);
+    let net = NetDef {
+        name: "fuzz-sliced".into(),
+        dataset: "synthetic".into(),
+        input_bits,
+        layers,
+        classes,
+        population: 1,
+        beta,
+        theta,
+        t_steps: g.usize_in(1, 4),
+    };
+    let hw = gen_hw(g, &net);
+    let cfg = ExperimentConfig::new(net.clone(), hw).map_err(|e| format!("config: {e}"))?;
+    let weights = gen_weights(g, &net);
+    let batch = *g.choose(&[1usize, 63, 64, 65, 200]);
+    let samples: Vec<SpikeTrain> = (0..batch)
+        .map(|_| gen_input(g, net.input_bits, net.t_steps))
+        .collect();
+
+    let run = |kernel: BatchKernel| {
+        let mut sim = NetworkSim::new(&cfg, weights.clone(), CostModel::default());
+        sim.run_batched_timed_with(&samples, kernel)
+    };
+    let (pr, po) = run(BatchKernel::PerSample);
+    let (sr, so) = run(BatchKernel::Sliced);
+
+    for (i, (p, s)) in po.iter().zip(&so).enumerate() {
+        if p != s {
+            return Err(format!(
+                "sample {i} of {batch}: sliced outcome {s:?} != per-sample {p:?}"
+            ));
+        }
+    }
+    if pr.total_cycles != sr.total_cycles {
+        return Err(format!(
+            "total_cycles: sliced {} != per-sample {}",
+            sr.total_cycles, pr.total_cycles
+        ));
+    }
+    if pr.serial_cycles != sr.serial_cycles {
+        return Err(format!(
+            "serial_cycles: sliced {} != per-sample {}",
+            sr.serial_cycles, pr.serial_cycles
+        ));
+    }
+    if pr.output_counts != sr.output_counts {
+        return Err("output spike counts diverge across kernels".into());
+    }
+    for (l, (ps, ss)) in pr.per_layer.iter().zip(&sr.per_layer).enumerate() {
+        if let Some(d) = stats_diff(ss, ps) {
+            return Err(format!("layer {l} stats diverge across kernels:\n{d}"));
+        }
+    }
+    Ok(())
+}
+
 /// Uarch-ideal lane: on random FC/conv/pool topologies, the event-driven
 /// simulator under `UarchConfig::ideal()` must report exactly the total
 /// cycles of the analytic `NetworkSim` recurrence, with zero stalls; a
@@ -451,4 +540,9 @@ fn fuzz_single_layers_match_scalar_oracle() {
 #[test]
 fn fuzz_batched_serving_matches_scalar_oracle() {
     prop_check(24, 0xD1FF_0003, compare_batched);
+}
+
+#[test]
+fn fuzz_sliced_kernel_matches_per_sample_batched() {
+    prop_check(40, 0xD1FF_0005, compare_sliced_kernel);
 }

@@ -7,7 +7,7 @@
 use snn_dse::config::{ExperimentConfig, HwConfig};
 use snn_dse::runtime::serve::{LoadSpec, ServeOptions};
 use snn_dse::runtime::{synthetic_load, BatchPolicy, Request, ServeRuntime};
-use snn_dse::sim::{CostModel, NetworkSim};
+use snn_dse::sim::{BatchKernel, CostModel, NetworkSim};
 use snn_dse::snn::{fc_net, table1_net, NetDef};
 
 const WEIGHT_SEED: u64 = 7;
@@ -35,6 +35,14 @@ fn tiny_load(n: usize, seed: u64) -> Vec<Request> {
 }
 
 fn serve(shards: usize, load: Vec<Request>) -> snn_dse::runtime::ServeReport {
+    serve_with_kernel(shards, load, BatchKernel::Auto)
+}
+
+fn serve_with_kernel(
+    shards: usize,
+    load: Vec<Request>,
+    kernel: BatchKernel,
+) -> snn_dse::runtime::ServeReport {
     let opts = ServeOptions {
         shards,
         policy: BatchPolicy {
@@ -42,6 +50,7 @@ fn serve(shards: usize, load: Vec<Request>) -> snn_dse::runtime::ServeReport {
             max_wait_cycles: 30_000,
         },
         weight_seed: WEIGHT_SEED,
+        kernel,
     };
     ServeRuntime::new(tiny_cfg(), CostModel::default(), opts)
         .unwrap()
@@ -112,6 +121,28 @@ fn serve_report_replays_for_a_fixed_seed_and_shard_count() {
 }
 
 #[test]
+fn serve_reports_byte_identical_across_kernels() {
+    // the batch kernel is a pure throughput knob: forcing the sliced or the
+    // per-sample path must leave every record, timestamp, and shard stat
+    // untouched
+    let per_sample = serve_with_kernel(2, tiny_load(22, 13), BatchKernel::PerSample);
+    let sliced = serve_with_kernel(2, tiny_load(22, 13), BatchKernel::Sliced);
+    assert_eq!(
+        per_sample.records, sliced.records,
+        "records (incl. all timestamps) must not depend on the kernel"
+    );
+    assert_eq!(per_sample.span_cycles, sliced.span_cycles);
+    assert_eq!(per_sample.latency, sliced.latency);
+    assert_eq!(per_sample.per_shard.len(), sliced.per_shard.len());
+    for (x, y) in per_sample.per_shard.iter().zip(&sliced.per_shard) {
+        assert_eq!(x.requests, y.requests);
+        assert_eq!(x.batches, y.batches);
+        assert_eq!(x.busy_cycles, y.busy_cycles);
+        assert_eq!(x.latency, y.latency);
+    }
+}
+
+#[test]
 fn serve_sustains_a_multi_shard_table1_load() {
     // acceptance: a multi-shard synthetic load on a paper network with
     // reported p50/p99 and throughput
@@ -137,6 +168,7 @@ fn serve_sustains_a_multi_shard_table1_load() {
                 max_wait_cycles: 50_000,
             },
             weight_seed: WEIGHT_SEED,
+            kernel: BatchKernel::Auto,
         },
     )
     .unwrap()
