@@ -25,6 +25,7 @@ fn main() {
         rate_rps: 4_000.0,
         input_rate: 0.1,
         seed: 42,
+        ..Default::default()
     };
     let clock_hz = hw.clock_hz;
     let requests = synthetic_load(&net, clock_hz, &spec);
@@ -52,6 +53,7 @@ fn main() {
                     max_wait_cycles: 100_000,
                 },
                 weight_seed: 7,
+                ..Default::default()
             },
         )
         .expect("valid serve options");

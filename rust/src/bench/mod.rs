@@ -3,10 +3,11 @@
 //!
 //! Every run drives the exact same seeded workloads (net1–net5 functional
 //! spike-train simulation, a batch-64 sliced-vs-per-sample kernel
-//! face-off, the sharded batched serve runtime, an `explore` batch, and
-//! an event-driven `uarch` replay) and emits `BENCH_sim.json`: steps/sec,
-//! samples/sec and simulated-cycles/sec per net plus batched, serve,
-//! explore and uarch (events/sec) throughput.
+//! face-off, the sharded batched serve runtime, a two-pool overload
+//! scenario through the admission-controlled router, an `explore` batch,
+//! and an event-driven `uarch` replay) and emits `BENCH_sim.json`:
+//! steps/sec, samples/sec and simulated-cycles/sec per net plus batched,
+//! serve, overload, explore and uarch (events/sec) throughput.
 //! CI runs `bench --smoke`, validates the emitted document against
 //! [`validate`], and diffs it against the committed `BENCH_sim.json`
 //! baseline with [`compare`] (regression-only, 20% tolerance), so
@@ -19,7 +20,10 @@
 use crate::config::{ExperimentConfig, HwConfig};
 use crate::dse::{ExploreConfig, Explorer, Objective};
 use crate::resources::EstimateCache;
-use crate::runtime::serve::{synthetic_load, LoadSpec, ServeOptions, ServeRuntime};
+use crate::runtime::serve::{
+    parse_scenario, synthetic_load, LoadSpec, MultiPoolRuntime, PoolConfig, ServeOptions,
+    ServeRuntime,
+};
 use crate::runtime::BatchPolicy;
 use crate::sim::{random_spike_train, BatchKernel, CostModel, NetworkSim};
 use crate::snn::{table1_net, NetDef};
@@ -32,9 +36,11 @@ use std::time::Instant;
 
 /// Version tag carried in every `BENCH_sim.json` (`schema` field).
 /// v2 added the `uarch` section (event-driven replay events/sec);
-/// v3 adds the `batched` section (sliced vs per-sample kernel at
-/// batch 64) and the committed-baseline [`compare`] contract.
-pub const BENCH_SCHEMA: &str = "snn-dse-bench/v3";
+/// v3 added the `batched` section (sliced vs per-sample kernel at
+/// batch 64) and the committed-baseline [`compare`] contract;
+/// v4 adds the `overload` section (two heterogeneous replica pools
+/// under a storm scenario with a bounded admission queue).
+pub const BENCH_SCHEMA: &str = "snn-dse-bench/v4";
 
 /// Fractional throughput drop tolerated by [`compare`] before a rate
 /// counts as a regression (0.2 = fail below 80% of the baseline).
@@ -107,6 +113,7 @@ pub fn bench_serve(seed: u64, smoke: bool) -> Json {
         rate_rps: 2_000.0,
         input_rate: 0.1,
         seed,
+        ..Default::default()
     };
     let requests = synthetic_load(&net, clock_hz, &spec);
     let opts = ServeOptions {
@@ -117,6 +124,7 @@ pub fn bench_serve(seed: u64, smoke: bool) -> Json {
         },
         weight_seed: 7,
         kernel: BatchKernel::Auto,
+        ..Default::default()
     };
     let rt = ServeRuntime::new(cfg, CostModel::default(), opts).expect("valid serve options");
     let report = rt.run(requests);
@@ -131,6 +139,71 @@ pub fn bench_serve(seed: u64, smoke: bool) -> Json {
         ("sim_throughput_rps", Json::Num(report.throughput_rps)),
         ("p50_us", Json::Num(report.latency.p50_us)),
         ("p99_us", Json::Num(report.latency.p99_us)),
+    ])
+}
+
+/// Two-pool overload throughput: a fast and a slow replica pool behind
+/// the admission-controlled router, driven by the `storm` scenario
+/// (Markov-modulated bursts plus bounded-Pareto request sizes) with a
+/// small admission cap, so every bench run exercises routing, shedding
+/// and the accounting that closes `served + shed == offered`. The
+/// simulated decisions replay byte-identically across runs; only the
+/// wall-clock rate varies by host.
+pub fn bench_overload(seed: u64, smoke: bool) -> Json {
+    let net = table1_net("net1");
+    let costs = CostModel::default();
+    let weight_seed = 7;
+    let fast = ExperimentConfig::new(net.clone(), HwConfig::with_lhr(vec![1, 1, 1]))
+        .expect("valid overload bench config");
+    let slow = ExperimentConfig::new(net.clone(), HwConfig::with_lhr(vec![4, 8, 8]))
+        .expect("valid overload bench config");
+    let clock_hz = fast.hw.clock_hz;
+    let fast_label = fast.hw.label();
+    let slow_label = slow.hw.label();
+    let pools = vec![
+        PoolConfig::new(fast, fast_label, &costs, weight_seed),
+        PoolConfig::new(slow, slow_label, &costs, weight_seed),
+    ];
+    let n_requests = if smoke { 48 } else { 256 };
+    let (scenario, size) = parse_scenario("storm").expect("storm is a named preset");
+    let spec = LoadSpec {
+        n_requests,
+        rate_rps: 20_000.0,
+        input_rate: 0.1,
+        seed,
+        scenario,
+        size,
+    };
+    let requests = synthetic_load(&net, clock_hz, &spec);
+    let opts = ServeOptions {
+        shards: if smoke { 1 } else { 2 },
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait_cycles: (500.0 * clock_hz / 1e6) as u64,
+        },
+        weight_seed,
+        kernel: BatchKernel::Auto,
+        queue_cap: 4,
+    };
+    let rt = MultiPoolRuntime::new(pools, costs, opts).expect("valid overload bench pools");
+    let report = rt.run(requests);
+    assert_eq!(
+        report.records.len() + report.shed.len(),
+        n_requests,
+        "bench overload: request accounting must close"
+    );
+    Json::obj(vec![
+        ("net", Json::Str("net1".into())),
+        ("pools", Json::Num(2.0)),
+        ("requests", Json::Num(n_requests as f64)),
+        ("served", Json::Num(report.records.len() as f64)),
+        ("shed", Json::Num(report.shed.len() as f64)),
+        ("shed_rate", Json::Num(report.shed_rate())),
+        (
+            "samples_per_sec",
+            Json::Num(n_requests as f64 / report.wall_seconds.max(1e-9)),
+        ),
+        ("sim_throughput_rps", Json::Num(report.throughput_rps)),
     ])
 }
 
@@ -321,6 +394,12 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         serve.at("samples_per_sec").as_f64().unwrap_or(0.0),
         serve.at("p99_us").as_f64().unwrap_or(0.0),
     );
+    let overload = bench_overload(opts.seed, opts.smoke);
+    eprintln!(
+        "[bench] overload net1 x2 pools: {:.1} samples/s wall, shed rate {:.2}",
+        overload.at("samples_per_sec").as_f64().unwrap_or(0.0),
+        overload.at("shed_rate").as_f64().unwrap_or(0.0),
+    );
     let explore = bench_explore(opts.seed, opts.smoke)?;
     eprintln!(
         "[bench] explore net1: {:.1} configs/s ({} evaluated)",
@@ -341,6 +420,7 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         ("sim", Json::obj(vec![("nets", Json::Arr(nets))])),
         ("batched", batched),
         ("serve", serve),
+        ("overload", overload),
         ("explore", explore),
         ("uarch", uarch),
     ]))
@@ -437,6 +517,18 @@ pub fn validate(j: &Json) -> std::result::Result<(), String> {
     ] {
         expect_pos(serve, "serve", key)?;
     }
+    let overload = j.at("overload");
+    for key in ["pools", "requests", "served", "samples_per_sec", "sim_throughput_rps"] {
+        expect_pos(overload, "overload", key)?;
+    }
+    // an uncongested host workload may legitimately shed nothing
+    for key in ["shed", "shed_rate"] {
+        match overload.at(key).as_f64() {
+            Some(v) if v.is_finite() && v >= 0.0 => {}
+            Some(v) => return Err(format!("overload.{key} must be >= 0 and finite, got {v}")),
+            None => return Err(format!("overload.{key} must be a number")),
+        }
+    }
     let explore = j.at("explore");
     for key in ["rounds", "batch", "configs", "configs_per_sec", "frontier"] {
         expect_pos(explore, "explore", key)?;
@@ -529,6 +621,7 @@ pub fn compare(
         ("batched", "per_sample_samples_per_sec"),
         ("batched", "sliced_samples_per_sec"),
         ("serve", "samples_per_sec"),
+        ("overload", "samples_per_sec"),
         ("explore", "configs_per_sec"),
         ("uarch", "events_per_sec"),
     ] {
@@ -587,6 +680,19 @@ mod tests {
                     ("sim_throughput_rps", Json::Num(100.0)),
                     ("p50_us", Json::Num(200.0)),
                     ("p99_us", Json::Num(300.0)),
+                ]),
+            ),
+            (
+                "overload",
+                Json::obj(vec![
+                    ("net", Json::Str("net1".into())),
+                    ("pools", Json::Num(2.0)),
+                    ("requests", Json::Num(48.0)),
+                    ("served", Json::Num(40.0)),
+                    ("shed", Json::Num(8.0)),
+                    ("shed_rate", Json::Num(8.0 / 48.0)),
+                    ("samples_per_sec", Json::Num(20.0)),
+                    ("sim_throughput_rps", Json::Num(150.0)),
                 ]),
             ),
             (
@@ -726,6 +832,67 @@ mod tests {
         let err = compare(&bad, &baseline, DEFAULT_COMPARE_TOLERANCE).unwrap_err();
         assert!(err.contains("batched.sliced_samples_per_sec"), "got: {err}");
         assert!(err.contains("regressed"), "got: {err}");
+    }
+
+    #[test]
+    fn schema_requires_the_overload_section() {
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("overload");
+        }
+        assert!(validate(&doc).unwrap_err().contains("overload"));
+        // zero shed is a legitimate uncongested outcome...
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(o)) = m.get_mut("overload") {
+                o.insert("shed".into(), Json::Num(0.0));
+                o.insert("shed_rate".into(), Json::Num(0.0));
+            }
+        }
+        validate(&doc).unwrap();
+        // ...but a negative shed rate is a corrupted report
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(o)) = m.get_mut("overload") {
+                o.insert("shed_rate".into(), Json::Num(-0.1));
+            }
+        }
+        assert!(validate(&doc).unwrap_err().contains("shed_rate"));
+    }
+
+    #[test]
+    fn compare_tolerance_boundary_is_inclusive() {
+        let baseline = minimal_valid_doc();
+        // exactly at 80% of the baseline: `ratio < 1 - tolerance` is
+        // strict, so landing on the boundary itself still passes
+        let mut edge = minimal_valid_doc();
+        scale_rate(&mut edge, "overload", "samples_per_sec", 0.8);
+        compare(&edge, &baseline, DEFAULT_COMPARE_TOLERANCE).unwrap();
+        // one part in a million below the boundary fails
+        let mut below = minimal_valid_doc();
+        scale_rate(&mut below, "overload", "samples_per_sec", 0.8 * (1.0 - 1e-6));
+        let err = compare(&below, &baseline, DEFAULT_COMPARE_TOLERANCE).unwrap_err();
+        assert!(err.contains("overload.samples_per_sec"), "got: {err}");
+    }
+
+    #[test]
+    fn compare_skips_sections_missing_from_the_baseline() {
+        // a v4 baseline without the overload section (hand-pruned or from
+        // a partial run) must not fail the diff — rates present in only
+        // one report are skipped by contract
+        let mut baseline = minimal_valid_doc();
+        if let Json::Obj(m) = &mut baseline {
+            m.remove("overload");
+        }
+        let mut current = minimal_valid_doc();
+        scale_rate(&mut current, "overload", "samples_per_sec", 0.01);
+        let lines = compare(&current, &baseline, DEFAULT_COMPARE_TOLERANCE).unwrap();
+        assert!(
+            !lines.iter().any(|l| l.contains("overload")),
+            "skipped section must not be reported: {lines:?}"
+        );
+        // the shared rates are still diffed
+        assert!(lines.iter().any(|l| l.contains("serve.samples_per_sec")));
     }
 
     #[test]

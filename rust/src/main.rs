@@ -68,11 +68,22 @@ const USAGE: &str = "snn-dse <simulate|resources|dse|explore|uarch|serve|bench|t
     --requests <n>              synthetic requests to serve (default 256)
     --rps <f>                   mean arrival rate, simulated req/s (default 2000)
     --input-rate <f>            input spike probability per bit (default 0.1)
-    --slo-us <f>                latency SLO; reports attainment, and with
-                                --checkpoint drives config selection
+    --slo-us <f>                latency SLO; reports attainment + goodput, and
+                                with --checkpoint drives config selection
     --checkpoint <path>         pick the serving config from an explore
                                 checkpoint's Pareto frontier (needs --slo-us;
                                 --lhr overrides)
+    --pools <n>                 replica pools (default 1); with --checkpoint,
+                                pools are backed by n distinct frontier points
+                                (SLO pick, fastest, cheapest remaining)
+    --queue-cap <n>             admission cap per pool in estimated outstanding
+                                requests (default 0 = unbounded; overflow is
+                                shed deterministically, never dropped silently)
+    --scenario <s>              load shape: steady|diurnal|burst|heavy|storm
+                                (default steady; heavy/storm add bounded-Pareto
+                                request sizes)
+    --report <path>             write the deterministic replay report (JSON,
+                                excludes wall-clock) for byte-compare
     --weight-seed <n>           replica weight seed (default 7)
     --kernel <k>                batch kernel: auto|sliced|per-sample
                                 (default auto; outputs are byte-identical,
@@ -333,8 +344,11 @@ fn cmd_uarch(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    use snn_dse::runtime::serve::{LoadSpec, ServeOptions};
-    use snn_dse::runtime::{choose_config_for_slo, synthetic_load, BatchPolicy, ServeRuntime};
+    use snn_dse::runtime::serve::{LoadSpec, ServeOptions, SloChoice};
+    use snn_dse::runtime::{
+        parse_scenario, pools_from_frontier, synthetic_load, BatchPolicy, MultiPoolRuntime,
+        PoolConfig,
+    };
     use snn_dse::sim::BatchKernel;
 
     let net = net_of(args);
@@ -343,10 +357,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         v.parse::<f64>()
             .unwrap_or_else(|_| panic!("--slo-us expects a number, got '{v}'"))
     });
+    let n_pools = args.usize_or("pools", 1).max(1);
+    let queue_cap = args.usize_or("queue-cap", 0);
+    let scenario_name = args.get_or("scenario", "steady");
+    let (scenario, size) = parse_scenario(scenario_name).map_err(|e| anyhow::anyhow!(e))?;
 
     // Config-selection front door: an explicit --lhr wins; otherwise an
-    // explore checkpoint + SLO picks the cheapest frontier point that is
-    // fast enough (falling back to the fastest point).
+    // explore checkpoint + SLO picks the frontier points — the cheapest
+    // one meeting the SLO, then (for --pools > 1) the fastest point and
+    // the cheapest remaining ones, all distinct.
+    let mut frontier_choices: Option<Vec<SloChoice>> = None;
     let hw = if args.get("lhr").is_none() && args.get("checkpoint").is_some() {
         let ck = PathBuf::from(args.get("checkpoint").unwrap());
         let (ck_net, points) = dse::load_checkpoint_points(&ck)?;
@@ -363,19 +383,27 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let slo = slo_us.ok_or_else(|| {
             anyhow::anyhow!("--checkpoint config selection needs --slo-us (the latency target that picks the frontier point)")
         })?;
-        let choice = choose_config_for_slo(&frontier, slo)?;
-        if choice.slo_met {
+        let choices = pools_from_frontier(&frontier, n_pools, slo)?;
+        if choices[0].slo_met {
             eprintln!(
                 "front door: {} meets SLO {:.1} us ({:.1} us/inference, {:.3} mJ) from {} frontier points",
-                choice.label, slo, choice.latency_us, choice.energy_mj, frontier.len()
+                choices[0].label, slo, choices[0].latency_us, choices[0].energy_mj, frontier.len()
             );
         } else {
             eprintln!(
                 "front door: SLO {:.1} us infeasible on the frontier — serving the fastest point {} ({:.1} us/inference)",
-                slo, choice.label, choice.latency_us
+                slo, choices[0].label, choices[0].latency_us
             );
         }
-        HwConfig::with_lhr(choice.lhr)
+        for (i, c) in choices.iter().enumerate().skip(1) {
+            eprintln!(
+                "  pool {i}: {} ({:.1} us/inference, {:.3} mJ)",
+                c.label, c.latency_us, c.energy_mj
+            );
+        }
+        let hw0 = HwConfig::with_lhr(choices[0].lhr.clone());
+        frontier_choices = Some(choices);
+        hw0
     } else {
         hw_of(args, &net)
     };
@@ -394,43 +422,87 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         },
         weight_seed: args.usize_or("weight-seed", 7) as u64,
         kernel,
+        queue_cap,
     };
     let spec = LoadSpec {
         n_requests: args.usize_or("requests", if smoke { 32 } else { 256 }),
         rate_rps: args.f64_or("rps", 2_000.0),
         input_rate: args.f64_or("input-rate", 0.1),
         seed: args.usize_or("seed", 42) as u64,
+        scenario,
+        size,
+    };
+    let costs = CostModel::default();
+    let pools: Vec<PoolConfig> = match &frontier_choices {
+        Some(choices) => choices
+            .iter()
+            .map(|c| {
+                Ok(PoolConfig {
+                    cfg: ExperimentConfig::new(net.clone(), HwConfig::with_lhr(c.lhr.clone()))?,
+                    label: c.label.clone(),
+                    est_service_cycles: c.cycles.max(1),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?,
+        None => {
+            let pool = PoolConfig::new(cfg.clone(), hw.label(), &costs, opts.weight_seed);
+            vec![pool; n_pools]
+        }
     };
     eprintln!(
-        "serving {} LHR {} — {} shards, max-batch {}, max-wait {:.0} us, kernel {}, {} requests @ {:.0} rps (seed {})",
+        "serving {} LHR {} — {} pool(s) x {} shards, max-batch {}, max-wait {:.0} us, kernel {}, queue-cap {}, scenario {}, {} requests @ {:.0} rps (seed {})",
         net.name,
         hw.label(),
+        pools.len(),
         opts.shards,
         opts.policy.max_batch,
         max_wait_us,
         kernel.as_str(),
+        if queue_cap == 0 { "off".to_string() } else { queue_cap.to_string() },
+        scenario_name,
         spec.n_requests,
         spec.rate_rps,
         spec.seed
     );
     let requests = synthetic_load(&net, clock_hz, &spec);
-    let rt = ServeRuntime::new(cfg, CostModel::default(), opts)?;
+    let rt = MultiPoolRuntime::new(pools, costs, opts)?;
     let report = rt.run(requests);
     anyhow::ensure!(
-        report.records.len() == spec.n_requests,
-        "serve dropped requests: {} of {} completed",
+        report.records.len() + report.shed.len() == spec.n_requests,
+        "serve lost requests: {} served + {} shed != {} offered",
         report.records.len(),
+        report.shed.len(),
         spec.n_requests
     );
 
+    println!("per-pool:");
+    println!(
+        "  {:>4} {:>16} {:>8} {:>7} {:>5} {:>6} {:>7} {:>10} {:>10}",
+        "pool", "label", "offered", "served", "shed", "shed%", "util", "p50 us", "p99 us"
+    );
+    for p in &report.per_pool {
+        println!(
+            "  {:>4} {:>16} {:>8} {:>7} {:>5} {:>5.1}% {:>6.1}% {:>10.1} {:>10.1}",
+            p.pool,
+            p.label,
+            p.offered,
+            p.served,
+            p.shed,
+            p.shed_rate() * 100.0,
+            p.utilization * 100.0,
+            p.latency.p50_us,
+            p.latency.p99_us
+        );
+    }
     println!("per-shard:");
     println!(
-        "  {:>5} {:>9} {:>8} {:>10} {:>7} {:>10} {:>10} {:>10}",
-        "shard", "requests", "batches", "mean batch", "util", "p50 us", "p99 us", "max us"
+        "  {:>4} {:>5} {:>9} {:>8} {:>10} {:>7} {:>10} {:>10} {:>10}",
+        "pool", "shard", "requests", "batches", "mean batch", "util", "p50 us", "p99 us", "max us"
     );
     for s in &report.per_shard {
         println!(
-            "  {:>5} {:>9} {:>8} {:>10.2} {:>6.1}% {:>10.1} {:>10.1} {:>10.1}",
+            "  {:>4} {:>5} {:>9} {:>8} {:>10.2} {:>6.1}% {:>10.1} {:>10.1} {:>10.1}",
+            s.pool,
             s.shard,
             s.requests,
             s.batches,
@@ -450,6 +522,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         report.latency.mean_us
     );
     println!(
+        "admission : {} offered, {} served, {} shed ({:.1}%)",
+        report.offered,
+        report.records.len(),
+        report.shed.len(),
+        report.shed_rate() * 100.0
+    );
+    println!(
         "throughput: {:.0} req/s over {} simulated cycles ({:.3} s wall)",
         report.throughput_rps,
         commas(report.span_cycles),
@@ -457,10 +536,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     );
     if let Some(slo) = slo_us {
         println!(
-            "SLO {:.1} us: {:.1}% of requests within",
+            "SLO {:.1} us: {:.1}% of served within; goodput {:.0} req/s",
             slo,
-            report.slo_attainment(slo) * 100.0
+            report.slo_attainment(slo) * 100.0,
+            report.goodput_under_slo(slo)
         );
+    }
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, report.to_json().to_string_pretty())?;
+        println!("wrote {path}");
     }
     if smoke {
         println!("SMOKE OK ({} requests served)", report.records.len());

@@ -11,6 +11,8 @@ pub mod serve;
 pub use artifacts::{artifacts_root, NetArtifacts, TraceSample};
 pub use client::{Runtime, SnnExecutable};
 pub use serve::{
-    choose_config_for_slo, synthetic_load, BatchPolicy, LatencySummary, LoadSpec, Request,
-    ServeOptions, ServeReport, ServeRuntime, ShardStats, SloChoice,
+    choose_config_for_slo, estimate_service_cycles, parse_scenario, plan_routes,
+    pools_from_frontier, synthetic_load, AdmissionController, BatchPolicy, LatencySummary,
+    LoadSpec, MultiPoolRuntime, PoolConfig, PoolStats, Request, RouteDecision, Scenario,
+    ServeOptions, ServeReport, ServeRuntime, ShardStats, ShedRecord, SizeDist, SloChoice,
 };

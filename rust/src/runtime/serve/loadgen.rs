@@ -12,6 +12,17 @@
 //!   matter how many shards serve it or in which batch it lands. This is
 //!   what lets the golden tests compare serve outputs against isolated
 //!   per-sample runs across shard counts.
+//!
+//! **Scenarios.** Beyond the stationary Poisson process, the generator
+//! models diurnal rate curves (deterministic sinusoidal modulation of
+//! the arrival rate by simulated time), Markov-modulated bursts (a
+//! two-state calm/burst chain advanced by one extra seeded draw per
+//! arrival), and heavy-tailed request sizes (a bounded-Pareto multiplier
+//! on the input spike density, drawn from the request's *own* `(seed,
+//! id)` stream so sizes stay shard- and prefix-invariant). The
+//! [`Scenario::Steady`] + [`SizeDist::Fixed`] combination consumes
+//! exactly the legacy draw sequence, so pre-scenario traffic replays
+//! byte-identically.
 
 use crate::sim::random_spike_train;
 use crate::snn::{NetDef, SpikeTrain};
@@ -28,6 +39,52 @@ pub struct Request {
     pub input: SpikeTrain,
 }
 
+/// Arrival-process shape. All variants are pure functions of the seed
+/// and simulated time — never of wall clock or serve-side state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scenario {
+    /// Stationary Poisson arrivals (the legacy process).
+    Steady,
+    /// Sinusoidal rate curve: the instantaneous rate is
+    /// `rate_rps * (1 + amplitude * sin(2π t / period_cycles))`,
+    /// evaluated at the previous arrival's simulated timestamp.
+    Diurnal {
+        /// Full day length in simulated cycles.
+        period_cycles: u64,
+        /// Peak-to-mean rate swing in `[0, 1)`.
+        amplitude: f64,
+    },
+    /// Markov-modulated Poisson process: a two-state calm/burst chain
+    /// advanced by one extra seeded draw per arrival; the burst state
+    /// multiplies the arrival rate by `burst_factor`.
+    Burst {
+        /// Rate multiplier while the chain is in the burst state.
+        burst_factor: f64,
+        /// Per-arrival probability of entering a burst from calm.
+        p_enter: f64,
+        /// Per-arrival probability of leaving a burst.
+        p_exit: f64,
+    },
+}
+
+/// Per-request size distribution, realized as a multiplier on the input
+/// spike density — on sparsity-aware hardware, denser inputs are the
+/// natural analogue of "bigger requests".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SizeDist {
+    /// Every request carries `input_rate` spike density.
+    Fixed,
+    /// Bounded-Pareto multiplier `x ∈ [1, max_scale]` with shape
+    /// `alpha`, applied as `input_rate * x` (clamped to 1.0). The draw
+    /// comes from the request's own `(seed, id)` stream.
+    BoundedPareto {
+        /// Tail index; smaller means heavier tail.
+        alpha: f64,
+        /// Upper truncation of the multiplier.
+        max_scale: f64,
+    },
+}
+
 /// Synthetic-load knobs.
 #[derive(Debug, Clone)]
 pub struct LoadSpec {
@@ -39,6 +96,10 @@ pub struct LoadSpec {
     pub input_rate: f64,
     /// Seed for both the arrival process and the per-request inputs.
     pub seed: u64,
+    /// Arrival-process shape.
+    pub scenario: Scenario,
+    /// Per-request size distribution.
+    pub size: SizeDist,
 }
 
 impl Default for LoadSpec {
@@ -48,7 +109,29 @@ impl Default for LoadSpec {
             rate_rps: 2_000.0,
             input_rate: 0.1,
             seed: 42,
+            scenario: Scenario::Steady,
+            size: SizeDist::Fixed,
         }
+    }
+}
+
+/// Named scenario presets for the CLI and bench harness. Returns the
+/// `(arrival shape, size distribution)` pair for one of `steady`,
+/// `diurnal`, `burst`, `heavy` (steady arrivals, Pareto sizes) or
+/// `storm` (bursty arrivals *and* Pareto sizes).
+pub fn parse_scenario(name: &str) -> Result<(Scenario, SizeDist), String> {
+    let diurnal = Scenario::Diurnal { period_cycles: 2_000_000, amplitude: 0.8 };
+    let burst = Scenario::Burst { burst_factor: 8.0, p_enter: 0.05, p_exit: 0.25 };
+    let pareto = SizeDist::BoundedPareto { alpha: 1.3, max_scale: 8.0 };
+    match name {
+        "steady" => Ok((Scenario::Steady, SizeDist::Fixed)),
+        "diurnal" => Ok((diurnal, SizeDist::Fixed)),
+        "burst" => Ok((burst, SizeDist::Fixed)),
+        "heavy" => Ok((Scenario::Steady, pareto)),
+        "storm" => Ok((burst, pareto)),
+        other => Err(format!(
+            "unknown scenario '{other}' (expected steady|diurnal|burst|heavy|storm)"
+        )),
     }
 }
 
@@ -68,17 +151,48 @@ pub fn synthetic_load(net: &NetDef, clock_hz: f64, spec: &LoadSpec) -> Vec<Reque
     let mean_gap_cycles = clock_hz / spec.rate_rps;
     let mut arrivals = Rng::new(spec.seed ^ 0x5E2F_E000_0000_0001);
     let mut t = 0u64;
+    let mut bursting = false;
     (0..spec.n_requests)
         .map(|id| {
-            // exponential inter-arrival gap: -ln(1-u) * mean
+            // instantaneous rate multiplier at the current simulated time
+            let mult = match spec.scenario {
+                Scenario::Steady => 1.0,
+                Scenario::Diurnal { period_cycles, amplitude } => {
+                    let period = period_cycles.max(1);
+                    let phase = (t % period) as f64 / period as f64;
+                    // floor keeps the rate positive even at amplitude 1
+                    (1.0 + amplitude * (std::f64::consts::TAU * phase).sin()).max(0.05)
+                }
+                Scenario::Burst { burst_factor, p_enter, p_exit } => {
+                    let u = arrivals.f64();
+                    bursting = if bursting { u >= p_exit } else { u < p_enter };
+                    if bursting {
+                        burst_factor.max(1.0)
+                    } else {
+                        1.0
+                    }
+                }
+            };
+            // exponential inter-arrival gap: -ln(1-u) * mean / rate-mult
             let u = arrivals.f64();
-            let gap = (-(1.0 - u).ln() * mean_gap_cycles).round();
+            let gap = (-(1.0 - u).ln() * mean_gap_cycles / mult).round();
             t = t.saturating_add(gap.max(0.0) as u64);
             let mut input_rng = request_input_rng(spec.seed, id);
+            let rate = match spec.size {
+                SizeDist::Fixed => spec.input_rate,
+                SizeDist::BoundedPareto { alpha, max_scale } => {
+                    // inverse-CDF of the bounded Pareto on [1, H]
+                    let u = input_rng.f64();
+                    let h = max_scale.max(1.0);
+                    let a = alpha.max(1e-6);
+                    let x = (1.0 - u * (1.0 - h.powf(-a))).powf(-1.0 / a);
+                    (spec.input_rate * x).min(1.0)
+                }
+            };
             Request {
                 id,
                 arrival_cycles: t,
-                input: random_spike_train(net.input_bits, net.t_steps, spec.input_rate, &mut input_rng),
+                input: random_spike_train(net.input_bits, net.t_steps, rate, &mut input_rng),
             }
         })
         .collect()
@@ -140,5 +254,81 @@ mod tests {
         let slow = synthetic_load(&net, 100e6, &LoadSpec { n_requests: 64, rate_rps: 100.0, ..Default::default() });
         let fast = synthetic_load(&net, 100e6, &LoadSpec { n_requests: 64, rate_rps: 10_000.0, ..Default::default() });
         assert!(slow.last().unwrap().arrival_cycles > fast.last().unwrap().arrival_cycles);
+    }
+
+    fn spec_for(name: &str) -> LoadSpec {
+        let (scenario, size) = parse_scenario(name).unwrap();
+        LoadSpec { n_requests: 96, scenario, size, ..Default::default() }
+    }
+
+    #[test]
+    fn every_scenario_is_deterministic_and_ordered() {
+        let net = table1_net("net1");
+        for name in ["steady", "diurnal", "burst", "heavy", "storm"] {
+            let spec = spec_for(name);
+            let a = synthetic_load(&net, 100e6, &spec);
+            let b = synthetic_load(&net, 100e6, &spec);
+            assert_eq!(a.len(), b.len(), "{name}");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id, "{name}");
+                assert_eq!(x.arrival_cycles, y.arrival_cycles, "{name}");
+                assert_eq!(x.input, y.input, "{name}");
+            }
+            for w in a.windows(2) {
+                assert!(w[0].arrival_cycles <= w[1].arrival_cycles, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_steady_matches_the_legacy_default_stream() {
+        // Scenario::Steady + SizeDist::Fixed must consume exactly the
+        // pre-scenario draw sequence: same arrivals, same inputs
+        let net = table1_net("net1");
+        let legacy = synthetic_load(&net, 100e6, &LoadSpec { n_requests: 24, ..Default::default() });
+        let steady = synthetic_load(&net, 100e6, &spec_for("steady"));
+        for (x, y) in legacy.iter().zip(&steady) {
+            assert_eq!(x.arrival_cycles, y.arrival_cycles);
+            assert_eq!(x.input, y.input);
+        }
+    }
+
+    #[test]
+    fn burst_scenario_reshapes_arrivals_but_not_inputs() {
+        let net = table1_net("net1");
+        let steady = synthetic_load(&net, 100e6, &spec_for("steady"));
+        let burst = synthetic_load(&net, 100e6, &spec_for("burst"));
+        assert!(
+            steady.iter().zip(&burst).any(|(x, y)| x.arrival_cycles != y.arrival_cycles),
+            "the modulating chain must change the traffic shape"
+        );
+        // inputs are keyed by (seed, id) alone, untouched by arrivals
+        for (x, y) in steady.iter().zip(&burst) {
+            assert_eq!(x.input, y.input);
+        }
+    }
+
+    #[test]
+    fn heavy_tail_sizes_vary_and_stay_prefix_invariant() {
+        let net = table1_net("net1");
+        let spec = spec_for("heavy");
+        let load = synthetic_load(&net, 100e6, &spec);
+        let count = |r: &Request| -> usize { r.input.iter().map(|s| s.count_ones()).sum() };
+        let mut counts: Vec<usize> = load.iter().map(count).collect();
+        counts.sort_unstable();
+        let median = counts[counts.len() / 2];
+        let max = *counts.last().unwrap();
+        assert!(max > median * 2, "heavy tail: max {max} vs median {median}");
+        // request 3's size draw comes from its own (seed, id) stream
+        let short = synthetic_load(&net, 100e6, &LoadSpec { n_requests: 4, ..spec.clone() });
+        assert_eq!(short[3].input, load[3].input);
+    }
+
+    #[test]
+    fn parse_scenario_rejects_unknown_names() {
+        assert!(parse_scenario("steady").is_ok());
+        assert!(parse_scenario("storm").is_ok());
+        let err = parse_scenario("tsunami").unwrap_err();
+        assert!(err.contains("tsunami"), "{err}");
     }
 }

@@ -31,18 +31,35 @@
 //! The config-selection front door ([`ParetoFrontier::select_for_slo`])
 //! picks which hardware config the replicas instantiate from a PR-2
 //! exploration frontier given a latency SLO.
+//!
+//! **Multi-pool serving.** [`MultiPoolRuntime`] generalizes the single
+//! replica pool to N pools backed by *distinct* frontier points (see
+//! [`router`]): a deterministic pre-pass fixes each request's pool — or
+//! sheds it when every pool's estimated backlog is at the admission cap
+//! (`queue_cap`) — before any worker thread runs, so the shed set and
+//! per-pool assignment are pure functions of the request list and replay
+//! byte-identically across thread interleavings and shard counts. Within
+//! a pool, admitted requests are partitioned round-robin by their
+//! position in the pool's admission order (for a single pool with no
+//! shedding this is exactly the legacy `id % shards` partitioning).
 
 pub mod loadgen;
 pub mod queue;
+pub mod router;
 pub mod stats;
 
-pub use loadgen::{synthetic_load, LoadSpec, Request};
-pub use queue::{Batch, BatchPolicy, ShardedQueue};
-pub use stats::{LatencySummary, ShardStats};
+pub use loadgen::{parse_scenario, synthetic_load, LoadSpec, Request, Scenario, SizeDist};
+pub use queue::{AdmissionController, Batch, BatchPolicy, ShardedQueue};
+pub use router::{
+    estimate_service_cycles, plan_routes, pools_from_frontier, MultiPoolRuntime, PoolConfig,
+    RouteDecision,
+};
+pub use stats::{LatencySummary, PoolStats, ShardStats};
 
 use crate::config::ExperimentConfig;
 use crate::dse::ParetoFrontier;
 use crate::sim::{BatchKernel, CostModel, NetworkSim};
+use crate::util::json::Json;
 use anyhow::{bail, Result};
 
 /// Serve-side knobs (the load itself is a [`LoadSpec`]).
@@ -59,6 +76,11 @@ pub struct ServeOptions {
     /// (`--kernel auto|sliced|per-sample`). Results are byte-identical
     /// across kernels; this only trades throughput.
     pub kernel: BatchKernel,
+    /// Admission cap per pool, in *estimated outstanding requests*
+    /// (0 = unbounded, never shed). A request is shed when every pool's
+    /// estimated backlog is at this cap — decided deterministically in
+    /// the routing pre-pass, never from live queue occupancy.
+    pub queue_cap: usize,
 }
 
 impl Default for ServeOptions {
@@ -68,6 +90,7 @@ impl Default for ServeOptions {
             policy: BatchPolicy::default(),
             weight_seed: 7,
             kernel: BatchKernel::Auto,
+            queue_cap: 0,
         }
     }
 }
@@ -76,6 +99,8 @@ impl Default for ServeOptions {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RequestRecord {
     pub id: usize,
+    /// Replica pool the router assigned (0 for single-pool runs).
+    pub pool: usize,
     pub shard: usize,
     pub arrival_cycles: u64,
     /// When the shard started executing the batch this request rode in.
@@ -100,17 +125,34 @@ impl RequestRecord {
     }
 }
 
+/// A request the router refused at admission: every pool's estimated
+/// backlog was at `queue_cap`. Surfaced as its own outcome class — a
+/// shed request is never silently dropped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShedRecord {
+    pub id: usize,
+    pub arrival_cycles: u64,
+    /// The least-backlogged pool that still refused (bounce attribution).
+    pub pool: usize,
+}
+
 /// Everything a finished serve run reports.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
-    /// One record per request, sorted by request id.
+    /// One record per *served* request, sorted by request id.
     pub records: Vec<RequestRecord>,
+    /// Requests shed at admission, sorted by request id.
+    pub shed: Vec<ShedRecord>,
+    /// Requests offered to the runtime (`records.len() + shed.len()`).
+    pub offered: usize,
     pub per_shard: Vec<ShardStats>,
+    /// Per-pool aggregates (one entry for single-pool runs).
+    pub per_pool: Vec<PoolStats>,
     /// Aggregate latency distribution across all shards.
     pub latency: LatencySummary,
     /// Simulated span: first arrival -> last completion, in cycles.
     pub span_cycles: u64,
-    /// Requests per simulated second over the span.
+    /// Served requests per simulated second over the span.
     pub throughput_rps: f64,
     /// Clock the cycle numbers are denominated in.
     pub clock_hz: f64,
@@ -119,7 +161,8 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
-    /// Fraction of requests with end-to-end latency within `slo_us`.
+    /// Fraction of *served* requests with end-to-end latency within
+    /// `slo_us` (shed requests are accounted via [`ServeReport::shed_rate`]).
     pub fn slo_attainment(&self, slo_us: f64) -> f64 {
         if self.records.is_empty() {
             return 1.0;
@@ -132,6 +175,129 @@ impl ServeReport {
             .count();
         met as f64 / self.records.len() as f64
     }
+
+    /// Fraction of offered requests shed at admission.
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed.len() as f64 / self.offered as f64
+        }
+    }
+
+    /// Goodput under the SLO: served requests meeting `slo_us`, per
+    /// simulated second over the span — the overload figure of merit
+    /// (sheds and SLO-violating completions both score zero).
+    pub fn goodput_under_slo(&self, slo_us: f64) -> f64 {
+        let span_s = self.span_cycles as f64 / self.clock_hz;
+        if span_s <= 0.0 {
+            return 0.0;
+        }
+        let us_per_cycle = 1e6 / self.clock_hz;
+        let met = self
+            .records
+            .iter()
+            .filter(|r| r.latency_cycles() as f64 * us_per_cycle <= slo_us)
+            .count();
+        met as f64 / span_s
+    }
+
+    /// Deterministic JSON rendering of the *simulated* outcome — every
+    /// field that must replay byte-identically (records, shed set, pool
+    /// assignments, per-pool/per-shard stats). Host-dependent
+    /// `wall_seconds` is deliberately excluded so two runs of the same
+    /// workload serialize to identical bytes (the CI replay check).
+    pub fn to_json(&self) -> Json {
+        let lat = |l: &LatencySummary| {
+            Json::obj(vec![
+                ("count", Json::Num(l.count as f64)),
+                ("mean_us", Json::Num(l.mean_us)),
+                ("p50_us", Json::Num(l.p50_us)),
+                ("p95_us", Json::Num(l.p95_us)),
+                ("p99_us", Json::Num(l.p99_us)),
+                ("max_us", Json::Num(l.max_us)),
+            ])
+        };
+        let records: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", Json::Num(r.id as f64)),
+                    ("pool", Json::Num(r.pool as f64)),
+                    ("shard", Json::Num(r.shard as f64)),
+                    ("arrival_cycles", Json::Num(r.arrival_cycles as f64)),
+                    ("dispatch_cycles", Json::Num(r.dispatch_cycles as f64)),
+                    ("completion_cycles", Json::Num(r.completion_cycles as f64)),
+                    ("batch_size", Json::Num(r.batch_size as f64)),
+                    (
+                        "prediction",
+                        match r.prediction {
+                            Some(p) => Json::Num(p as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect();
+        let shed: Vec<Json> = self
+            .shed
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("id", Json::Num(s.id as f64)),
+                    ("arrival_cycles", Json::Num(s.arrival_cycles as f64)),
+                    ("pool", Json::Num(s.pool as f64)),
+                ])
+            })
+            .collect();
+        let per_pool: Vec<Json> = self
+            .per_pool
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("pool", Json::Num(p.pool as f64)),
+                    ("label", Json::Str(p.label.clone())),
+                    ("offered", Json::Num(p.offered as f64)),
+                    ("served", Json::Num(p.served as f64)),
+                    ("shed", Json::Num(p.shed as f64)),
+                    ("batches", Json::Num(p.batches as f64)),
+                    ("busy_cycles", Json::Num(p.busy_cycles as f64)),
+                    ("utilization", Json::Num(p.utilization)),
+                    ("latency", lat(&p.latency)),
+                ])
+            })
+            .collect();
+        let per_shard: Vec<Json> = self
+            .per_shard
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("pool", Json::Num(s.pool as f64)),
+                    ("shard", Json::Num(s.shard as f64)),
+                    ("requests", Json::Num(s.requests as f64)),
+                    ("batches", Json::Num(s.batches as f64)),
+                    ("mean_batch", Json::Num(s.mean_batch)),
+                    ("busy_cycles", Json::Num(s.busy_cycles as f64)),
+                    ("utilization", Json::Num(s.utilization)),
+                    ("latency", lat(&s.latency)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("offered", Json::Num(self.offered as f64)),
+            ("served", Json::Num(self.records.len() as f64)),
+            ("shed_count", Json::Num(self.shed.len() as f64)),
+            ("span_cycles", Json::Num(self.span_cycles as f64)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("clock_hz", Json::Num(self.clock_hz)),
+            ("latency", lat(&self.latency)),
+            ("per_pool", Json::Arr(per_pool)),
+            ("per_shard", Json::Arr(per_shard)),
+            ("shed", Json::Arr(shed)),
+            ("records", Json::Arr(records)),
+        ])
+    }
 }
 
 /// Outcome of the SLO front door: the config to serve with, plus whether
@@ -142,6 +308,9 @@ pub struct SloChoice {
     pub label: String,
     pub latency_us: f64,
     pub energy_mj: f64,
+    /// Single-inference cycles of the chosen point — the router's
+    /// per-request service estimate for a pool backed by this choice.
+    pub cycles: u64,
     /// False when no frontier point met the SLO and the fastest point
     /// was chosen as the fallback.
     pub slo_met: bool,
@@ -158,6 +327,7 @@ pub fn choose_config_for_slo(frontier: &ParetoFrontier, slo_us: f64) -> Result<S
             label: p.label.clone(),
             latency_us: p.latency_us,
             energy_mj: p.energy_mj,
+            cycles: p.cycles,
             slo_met: true,
         });
     }
@@ -167,6 +337,7 @@ pub fn choose_config_for_slo(frontier: &ParetoFrontier, slo_us: f64) -> Result<S
             label: p.label.clone(),
             latency_us: p.latency_us,
             energy_mj: p.energy_mj,
+            cycles: p.cycles,
             slo_met: false,
         }),
         None => bail!("cannot pick a serving config from an empty frontier"),
@@ -203,103 +374,192 @@ impl ServeRuntime {
     /// Serve `requests` (must be in arrival order, ids dense from 0) to
     /// completion and report. Deterministic for a fixed request list and
     /// options; predictions additionally do not depend on `shards` or
-    /// the batching policy at all.
+    /// the batching policy at all. With `queue_cap > 0` the single pool
+    /// sheds deterministically once its estimated backlog hits the cap.
     pub fn run(&self, requests: Vec<Request>) -> ServeReport {
-        let n_requests = requests.len();
-        let n_shards = self.opts.shards;
-        let first_arrival = requests.first().map(|r| r.arrival_cycles).unwrap_or(0);
-        let queue = ShardedQueue::new(n_shards);
-        let policy = self.opts.policy;
-        let wall_start = std::time::Instant::now();
+        // the service estimate only gates admission; skip the probe when
+        // the cap is off (a 1-pool router admits everything regardless)
+        let est_service_cycles = if self.opts.queue_cap > 0 {
+            router::estimate_service_cycles(&self.cfg, &self.costs, self.opts.weight_seed)
+        } else {
+            1
+        };
+        let pool = PoolConfig {
+            cfg: self.cfg.clone(),
+            label: self.cfg.hw.label(),
+            est_service_cycles,
+        };
+        run_pools(std::slice::from_ref(&pool), &self.costs, &self.opts, requests)
+    }
+}
 
-        let mut shard_outputs: Vec<ShardOutput> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..n_shards)
-                .map(|shard| {
-                    let queue = &queue;
-                    let cfg = &self.cfg;
-                    let costs = &self.costs;
-                    let weight_seed = self.opts.weight_seed;
-                    let kernel = self.opts.kernel;
-                    scope.spawn(move || {
-                        serve_shard(shard, queue, cfg, costs, weight_seed, &policy, kernel)
-                    })
-                })
-                .collect();
-            // producer: admit the stream in arrival order, then end it
-            for req in requests {
-                let shard = req.id % n_shards;
-                queue.push(shard, req);
-            }
-            queue.close();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("serve shard worker panicked"))
-                .collect()
-        });
-        let wall_seconds = wall_start.elapsed().as_secs_f64();
+/// The shared executor behind [`ServeRuntime`] and [`MultiPoolRuntime`]:
+/// route (or shed) every request in a deterministic pre-pass, then drive
+/// one sharded dynamic-batching queue per pool to completion on scoped
+/// worker threads.
+fn run_pools(
+    pools: &[PoolConfig],
+    costs: &CostModel,
+    opts: &ServeOptions,
+    requests: Vec<Request>,
+) -> ServeReport {
+    let n_shards = opts.shards;
+    let offered = requests.len();
+    let first_arrival = requests.first().map(|r| r.arrival_cycles).unwrap_or(0);
+    let ests: Vec<u64> = pools.iter().map(|p| p.est_service_cycles).collect();
+    // deterministic pre-pass: pool assignment + shed set are fixed here,
+    // before any worker thread exists
+    let decisions = plan_routes(&ests, opts.queue_cap, &requests);
+    let queues: Vec<ShardedQueue> =
+        (0..pools.len()).map(|_| ShardedQueue::new(n_shards)).collect();
+    let policy = opts.policy;
+    let wall_start = std::time::Instant::now();
+    let mut shed: Vec<ShedRecord> = Vec::new();
 
-        let clock_hz = self.cfg.hw.clock_hz;
-        let us = |cycles: u64| cycles as f64 / clock_hz * 1e6;
-        let last_completion = shard_outputs
-            .iter()
-            .flat_map(|out| out.records.iter())
-            .map(|r| r.completion_cycles)
-            .max()
-            .unwrap_or(0);
-        let span_cycles = last_completion.saturating_sub(first_arrival);
-        let span_s = span_cycles as f64 / clock_hz;
-        // per-shard stats come straight off each shard's own record list,
-        // before the merge below drains it
-        let per_shard: Vec<ShardStats> = shard_outputs
+    let mut pool_outputs: Vec<Vec<ShardOutput>> = std::thread::scope(|scope| {
+        let handles: Vec<Vec<_>> = pools
             .iter()
             .enumerate()
-            .map(|(shard, out)| {
-                let lats: Vec<f64> = out
-                    .records
-                    .iter()
-                    .map(|r| us(r.latency_cycles()))
-                    .collect();
-                ShardStats {
-                    shard,
-                    requests: out.records.len(),
-                    batches: out.batches,
-                    mean_batch: if out.batches > 0 {
-                        out.records.len() as f64 / out.batches as f64
-                    } else {
-                        0.0
-                    },
-                    busy_cycles: out.busy_cycles,
-                    utilization: if span_cycles > 0 {
-                        out.busy_cycles as f64 / span_cycles as f64
-                    } else {
-                        0.0
-                    },
-                    latency: LatencySummary::from_us(lats),
-                }
+            .map(|(pool, pc)| {
+                let queue = &queues[pool];
+                (0..n_shards)
+                    .map(|shard| {
+                        let cfg = &pc.cfg;
+                        let weight_seed = opts.weight_seed;
+                        let kernel = opts.kernel;
+                        scope.spawn(move || {
+                            serve_shard(
+                                pool,
+                                shard,
+                                queue,
+                                cfg,
+                                costs,
+                                weight_seed,
+                                &policy,
+                                kernel,
+                            )
+                        })
+                    })
+                    .collect()
             })
             .collect();
-
-        // merge + sort by id for a stable, shard-count-independent order
-        let mut records: Vec<RequestRecord> = Vec::with_capacity(n_requests);
-        for out in &mut shard_outputs {
-            records.append(&mut out.records);
+        // producer: admit the stream in arrival order, then end it.
+        // Within a pool, shards are assigned round-robin by admission
+        // position (== id % shards for a single pool with no shedding).
+        let mut pos = vec![0usize; pools.len()];
+        for (req, d) in requests.into_iter().zip(&decisions) {
+            match *d {
+                RouteDecision::Admit { pool } => {
+                    queues[pool].push(pos[pool] % n_shards, req);
+                    pos[pool] += 1;
+                }
+                RouteDecision::Shed { pool } => shed.push(ShedRecord {
+                    id: req.id,
+                    arrival_cycles: req.arrival_cycles,
+                    pool,
+                }),
+            }
         }
-        records.sort_by_key(|r| r.id);
-        let latency =
-            LatencySummary::from_us(records.iter().map(|r| us(r.latency_cycles())).collect());
-        ServeReport {
-            latency,
-            per_shard,
-            throughput_rps: if span_s > 0.0 {
-                records.len() as f64 / span_s
+        for q in &queues {
+            q.close();
+        }
+        handles
+            .into_iter()
+            .map(|hs| {
+                hs.into_iter()
+                    .map(|h| h.join().expect("serve shard worker panicked"))
+                    .collect()
+            })
+            .collect()
+    });
+    let wall_seconds = wall_start.elapsed().as_secs_f64();
+
+    let clock_hz = pools[0].cfg.hw.clock_hz;
+    let us = |cycles: u64| cycles as f64 / clock_hz * 1e6;
+    let last_completion = pool_outputs
+        .iter()
+        .flatten()
+        .flat_map(|out| out.records.iter())
+        .map(|r| r.completion_cycles)
+        .max()
+        .unwrap_or(0);
+    let span_cycles = last_completion.saturating_sub(first_arrival);
+    let span_s = span_cycles as f64 / clock_hz;
+    // per-shard and per-pool stats come straight off each shard's own
+    // record list, before the merge below drains it
+    let mut per_shard: Vec<ShardStats> = Vec::new();
+    let mut per_pool: Vec<PoolStats> = Vec::new();
+    for (pool, outs) in pool_outputs.iter().enumerate() {
+        let mut pool_lats: Vec<f64> = Vec::new();
+        let (mut served, mut batches, mut busy_cycles) = (0usize, 0usize, 0u64);
+        for (shard, out) in outs.iter().enumerate() {
+            let lats: Vec<f64> = out.records.iter().map(|r| us(r.latency_cycles())).collect();
+            served += out.records.len();
+            batches += out.batches;
+            busy_cycles += out.busy_cycles;
+            pool_lats.extend_from_slice(&lats);
+            per_shard.push(ShardStats {
+                pool,
+                shard,
+                requests: out.records.len(),
+                batches: out.batches,
+                mean_batch: if out.batches > 0 {
+                    out.records.len() as f64 / out.batches as f64
+                } else {
+                    0.0
+                },
+                busy_cycles: out.busy_cycles,
+                utilization: if span_cycles > 0 {
+                    out.busy_cycles as f64 / span_cycles as f64
+                } else {
+                    0.0
+                },
+                latency: LatencySummary::from_us(lats),
+            });
+        }
+        let shed_here = shed.iter().filter(|s| s.pool == pool).count();
+        per_pool.push(PoolStats {
+            pool,
+            label: pools[pool].label.clone(),
+            offered: served + shed_here,
+            served,
+            shed: shed_here,
+            batches,
+            busy_cycles,
+            utilization: if span_cycles > 0 {
+                busy_cycles as f64 / (span_cycles as f64 * n_shards as f64)
             } else {
                 0.0
             },
-            span_cycles,
-            clock_hz,
-            wall_seconds,
-            records,
+            latency: LatencySummary::from_us(pool_lats),
+        });
+    }
+
+    // merge + sort by id for a stable, shard-count-independent order
+    let mut records: Vec<RequestRecord> = Vec::with_capacity(offered);
+    for outs in &mut pool_outputs {
+        for out in outs {
+            records.append(&mut out.records);
         }
+    }
+    records.sort_by_key(|r| r.id);
+    let latency =
+        LatencySummary::from_us(records.iter().map(|r| us(r.latency_cycles())).collect());
+    ServeReport {
+        latency,
+        per_shard,
+        per_pool,
+        offered,
+        shed,
+        throughput_rps: if span_s > 0.0 {
+            records.len() as f64 / span_s
+        } else {
+            0.0
+        },
+        span_cycles,
+        clock_hz,
+        wall_seconds,
+        records,
     }
 }
 
@@ -312,7 +572,9 @@ struct ShardOutput {
 /// One shard's worker loop: pop coalesced batches until the stream ends,
 /// stream each through the shard's engine replica, and timestamp every
 /// request from the pipelined per-sample completion times.
+#[allow(clippy::too_many_arguments)]
 fn serve_shard(
+    pool: usize,
     shard: usize,
     queue: &ShardedQueue,
     cfg: &ExperimentConfig,
@@ -341,6 +603,7 @@ fn serve_shard(
         for (req, out) in batch.requests.iter().zip(&outcomes) {
             records.push(RequestRecord {
                 id: req.id,
+                pool,
                 shard,
                 arrival_cycles: req.arrival_cycles,
                 dispatch_cycles: batch.dispatch_cycles,
@@ -381,6 +644,7 @@ mod tests {
                 rate_rps: 50_000.0,
                 input_rate: 0.3,
                 seed: 11,
+                ..Default::default()
             },
         )
     }
@@ -398,8 +662,14 @@ mod tests {
         .unwrap();
         let report = rt.run(tiny_load(20));
         assert_eq!(report.records.len(), 20);
+        assert_eq!(report.offered, 20);
+        assert!(report.shed.is_empty(), "unbounded queue never sheds");
+        assert_eq!(report.per_pool.len(), 1);
+        assert_eq!(report.per_pool[0].served, 20);
+        assert_eq!(report.shed_rate(), 0.0);
         for (i, r) in report.records.iter().enumerate() {
             assert_eq!(r.id, i, "sorted, dense ids");
+            assert_eq!(r.pool, 0, "single-pool run");
             assert_eq!(r.shard, i % 3, "static partitioning");
             assert!(r.completion_cycles > r.arrival_cycles);
             assert!(r.dispatch_cycles >= r.arrival_cycles);
@@ -496,6 +766,108 @@ mod tests {
         let fallback = choose_config_for_slo(&f, 50.0).unwrap();
         assert!(!fallback.slo_met);
         assert_eq!(fallback.lhr, vec![100]);
+        assert_eq!(fallback.cycles, 100);
         assert!(choose_config_for_slo(&ParetoFrontier::new(&Objective::DEFAULT), 1.0).is_err());
+    }
+
+    // estimated-service knobs chosen well above the ~2k-cycle mean
+    // arrival gap of tiny_load so the admission gates actually fill
+    fn two_pool_rt(queue_cap: usize, shards: usize) -> MultiPoolRuntime {
+        let net = fc_net("tiny", "mnist", &[32, 16, 8], 4, 2, 0.9, 5);
+        let fast = ExperimentConfig::new(net.clone(), HwConfig::with_lhr(vec![1, 1])).unwrap();
+        let slow = ExperimentConfig::new(net, HwConfig::with_lhr(vec![4, 4])).unwrap();
+        MultiPoolRuntime::new(
+            vec![
+                PoolConfig { cfg: fast, label: "fast".into(), est_service_cycles: 10_000 },
+                PoolConfig { cfg: slow, label: "slow".into(), est_service_cycles: 40_000 },
+            ],
+            CostModel::default(),
+            ServeOptions { shards, queue_cap, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn multi_pool_overload_sheds_and_accounts_exactly() {
+        let report = two_pool_rt(2, 2).run(tiny_load(40));
+        assert_eq!(report.offered, 40);
+        assert_eq!(report.records.len() + report.shed.len(), 40, "no request vanishes");
+        assert!(!report.shed.is_empty(), "cap 2 under this burst must shed");
+        assert!(report.shed_rate() > 0.0 && report.shed_rate() < 1.0);
+        // per-pool accounting closes: offered = served + shed, pool-wise
+        assert_eq!(report.per_pool.len(), 2);
+        for p in &report.per_pool {
+            assert_eq!(p.offered, p.served + p.shed, "pool {}", p.pool);
+        }
+        let offered_total: usize = report.per_pool.iter().map(|p| p.offered).sum();
+        assert_eq!(offered_total, 40);
+        // the spill-over pool sees traffic once the fast pool saturates
+        assert!(report.per_pool[1].offered > 0, "slow pool absorbs overflow");
+        // every served id and shed id together cover 0..40 exactly once
+        let mut ids: Vec<usize> = report.records.iter().map(|r| r.id).collect();
+        ids.extend(report.shed.iter().map(|s| s.id));
+        ids.sort_unstable();
+        assert_eq!(ids, (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn multi_pool_report_replays_byte_identically() {
+        let mk = || two_pool_rt(2, 2).run(tiny_load(32)).to_json().to_string_pretty();
+        let (a, b) = (mk(), mk());
+        assert_eq!(a, b, "full report must serialize to identical bytes");
+        assert!(!a.contains("wall_seconds"), "host time is excluded from replayed bytes");
+    }
+
+    #[test]
+    fn shed_set_and_assignment_are_shard_count_invariant() {
+        let route = |shards: usize| {
+            let r = two_pool_rt(2, shards).run(tiny_load(32));
+            let pools: Vec<(usize, usize)> =
+                r.records.iter().map(|rec| (rec.id, rec.pool)).collect();
+            (pools, r.shed)
+        };
+        let (p1, s1) = route(1);
+        let (p2, s2) = route(2);
+        let (p3, s3) = route(3);
+        assert_eq!(p1, p2, "pool assignment is decided before sharding");
+        assert_eq!(p2, p3);
+        assert_eq!(s1, s2, "the shed set never depends on shard count");
+        assert_eq!(s2, s3);
+    }
+
+    #[test]
+    fn single_pool_queue_cap_sheds_deterministically() {
+        let cfg = tiny_cfg();
+        let flood = synthetic_load(
+            &cfg.net,
+            cfg.hw.clock_hz,
+            &LoadSpec {
+                n_requests: 30,
+                rate_rps: 50_000_000.0,
+                input_rate: 0.3,
+                seed: 11,
+                ..Default::default()
+            },
+        );
+        let mk = |cap: usize| {
+            ServeRuntime::new(
+                tiny_cfg(),
+                CostModel::default(),
+                ServeOptions { shards: 2, queue_cap: cap, ..Default::default() },
+            )
+            .unwrap()
+            .run(flood.clone())
+        };
+        let unbounded = mk(0);
+        assert!(unbounded.shed.is_empty(), "cap 0 never sheds");
+        assert_eq!(unbounded.records.len(), 30);
+        let capped = mk(1);
+        assert!(!capped.shed.is_empty(), "cap 1 under a flood must shed");
+        assert_eq!(capped.records.len() + capped.shed.len(), 30);
+        let again = mk(1);
+        assert_eq!(capped.shed, again.shed, "shed decisions replay exactly");
+        // goodput counts only served-within-SLO requests per second
+        assert!(capped.goodput_under_slo(f64::MAX) > 0.0);
+        assert_eq!(unbounded.goodput_under_slo(0.0), 0.0);
     }
 }

@@ -1,11 +1,21 @@
 //! Mutex-sharded admission queue with a deterministic dynamic-batching
-//! policy.
+//! policy, plus the deterministic admission controller that bounds it.
 //!
 //! One producer pushes requests (in global arrival order) into per-shard
 //! FIFO queues; each shard worker pops *batches* coalesced under a
 //! max-batch-size / max-wait policy. Contention is per shard — there is
 //! no global lock — and each shard's batching decisions depend only on
 //! its own request subsequence, never on thread interleaving.
+//!
+//! **Admission control.** [`AdmissionController`] makes the bounded-queue
+//! reject/shed decision *at enqueue time* from simulated state only: it
+//! tracks an estimated backlog (one estimated-completion timestamp per
+//! admitted request, drained as simulated time passes) and refuses
+//! admission once the backlog reaches the cap. Deliberately, it never
+//! inspects the live [`ShardedQueue`] occupancy — that depends on how
+//! fast worker threads happen to drain, i.e. on wall-clock scheduling —
+//! so the shed set is a pure function of the request stream and replays
+//! byte-exactly across runs, thread interleavings *and* shard counts.
 //!
 //! **Determinism.** Arrival times are simulated (cycle timestamps carried
 //! by the requests), so "waiting for the batch window" never consults a
@@ -90,10 +100,19 @@ impl ShardedQueue {
     /// Admit a request to `shard`'s queue. The producer must push each
     /// shard's requests in non-decreasing `arrival_cycles` order (pushing
     /// the global stream in arrival order guarantees this).
-    pub fn push(&self, shard: usize, req: Request) {
+    ///
+    /// Returns `true` if the request was enqueued. Pushing after
+    /// [`ShardedQueue::close`] is a documented no-op returning `false`:
+    /// the stream has ended, workers may already have observed the
+    /// drained-and-closed state, and silently appending would strand the
+    /// request forever — dropping it (and telling the caller) is the only
+    /// behavior that keeps the drain contract honest.
+    pub fn push(&self, shard: usize, req: Request) -> bool {
         let s = &self.shards[shard];
         let mut g = s.state.lock().unwrap();
-        debug_assert!(!g.closed, "push after close");
+        if g.closed {
+            return false;
+        }
         debug_assert!(
             g.queue.back().map(|b| b.arrival_cycles <= req.arrival_cycles).unwrap_or(true),
             "requests must be pushed in arrival order"
@@ -101,6 +120,7 @@ impl ShardedQueue {
         g.queue.push_back(req);
         drop(g);
         s.cv.notify_one();
+        true
     }
 
     /// Signal the end of the request stream: workers drain what is left
@@ -162,6 +182,80 @@ impl ShardedQueue {
             }
             g = s.cv.wait(g).unwrap();
         }
+    }
+}
+
+/// Deterministic bounded-queue admission: the reject/shed decision made
+/// at enqueue time, from simulated timestamps only.
+///
+/// The controller models its queue as a single FIFO server that needs
+/// `est_service_cycles` per request: an admitted request's *estimated*
+/// completion is `max(arrival, previous tail) + est_service_cycles`, and
+/// the backlog is the set of admitted requests whose estimate is still in
+/// the future. A request arriving while the backlog holds `cap` entries
+/// is refused (`cap == 0` = unbounded, never refuses).
+///
+/// The estimate is intentionally *shard-agnostic* (it never divides by
+/// the worker count): the shed set must be invariant across shard counts
+/// (the acceptance contract in `rust/tests/serve_runtime.rs`), so the cap
+/// bounds the whole pool's estimated backlog rather than any physical
+/// per-shard FIFO. It is a load-control estimate, not a latency oracle —
+/// the real dispatch/completion cycles still come from the engine.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    cap: usize,
+    est_service_cycles: u64,
+    /// Estimated completion cycles of admitted, not-yet-drained requests.
+    backlog: VecDeque<u64>,
+}
+
+impl AdmissionController {
+    /// `cap` = max estimated backlog (0 = unbounded);
+    /// `est_service_cycles` = per-request service estimate (clamped >= 1
+    /// so the backlog always drains).
+    pub fn new(cap: usize, est_service_cycles: u64) -> Self {
+        AdmissionController {
+            cap,
+            est_service_cycles: est_service_cycles.max(1),
+            backlog: VecDeque::new(),
+        }
+    }
+
+    /// Drop backlog entries whose estimated completion is at or before
+    /// `now` — monotone in `now`, so callers must feed non-decreasing
+    /// arrival times (the producer pushes in arrival order anyway).
+    fn drain(&mut self, now: u64) {
+        while self.backlog.front().is_some_and(|&done| done <= now) {
+            self.backlog.pop_front();
+        }
+    }
+
+    /// Estimated backlog length as of `now`.
+    pub fn backlog_len(&mut self, now: u64) -> usize {
+        self.drain(now);
+        self.backlog.len()
+    }
+
+    /// True when a request arriving at `now` would be refused.
+    pub fn saturated(&mut self, now: u64) -> bool {
+        self.cap != 0 && self.backlog_len(now) >= self.cap
+    }
+
+    /// Estimated completion cycle of a request arriving at `now`, were it
+    /// admitted next (does not commit).
+    pub fn est_completion(&self, now: u64) -> u64 {
+        let start = self.backlog.back().map_or(now, |&tail| tail.max(now));
+        start.saturating_add(self.est_service_cycles)
+    }
+
+    /// Admit a request arriving at `now`: record its completion estimate.
+    /// Callers check [`AdmissionController::saturated`] first; `admit`
+    /// itself never refuses.
+    pub fn admit(&mut self, now: u64) -> u64 {
+        self.drain(now);
+        let done = self.est_completion(now);
+        self.backlog.push_back(done);
+        done
     }
 }
 
@@ -346,5 +440,75 @@ mod tests {
                 ]
             );
         });
+    }
+
+    #[test]
+    fn push_after_close_is_a_documented_noop() {
+        // the stream has ended: a late push must be dropped (returning
+        // false), never enqueued where no worker will ever drain it
+        let q = ShardedQueue::new(2);
+        assert!(q.push(0, req(0, 10)), "open queue admits");
+        q.close();
+        assert!(!q.push(0, req(1, 20)), "closed queue refuses");
+        assert!(!q.push(1, req(2, 30)), "every shard refuses after close");
+        let p = BatchPolicy { max_batch: 4, max_wait_cycles: 0 };
+        // only the pre-close request is ever served
+        let b = q.next_batch(0, 0, &p).unwrap();
+        assert_eq!(b.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert!(q.next_batch(0, b.dispatch_cycles, &p).is_none());
+        assert!(q.next_batch(1, 0, &p).is_none(), "dropped push left shard 1 empty");
+        // close is idempotent and pushes stay refused
+        q.close();
+        assert!(!q.push(0, req(3, 40)));
+    }
+
+    #[test]
+    fn admission_controller_bounds_the_estimated_backlog() {
+        // cap 2, 100 cycles per request: two back-to-back arrivals fill
+        // the backlog, the third is refused until estimates drain
+        let mut a = AdmissionController::new(2, 100);
+        assert!(!a.saturated(0));
+        assert_eq!(a.admit(0), 100);
+        assert_eq!(a.admit(0), 200, "queued behind the first estimate");
+        assert!(a.saturated(0), "backlog at cap");
+        assert!(a.saturated(99), "estimate 100 has not drained at 99");
+        assert!(!a.saturated(100), "estimate drains at its completion");
+        assert_eq!(a.backlog_len(100), 1);
+        // an idle gap resets the queueing: estimate restarts at arrival
+        assert_eq!(a.admit(1_000), 1_100);
+    }
+
+    #[test]
+    fn admission_controller_unbounded_and_clamped_service() {
+        let mut a = AdmissionController::new(0, 0); // cap 0 = unbounded, service clamped to 1
+        for t in 0..1_000u64 {
+            assert!(!a.saturated(t));
+            a.admit(t);
+        }
+        // clamped 1-cycle service keeps estimates strictly advancing
+        assert!(a.est_completion(1_000) > 1_000);
+    }
+
+    #[test]
+    fn admission_decisions_replay_for_a_fixed_arrival_stream() {
+        let arrivals: Vec<u64> = (0..64).map(|i| (i as u64 * 37) % 900).scan(0, |acc, g| {
+            *acc += g;
+            Some(*acc)
+        }).collect();
+        let run = || {
+            let mut a = AdmissionController::new(3, 500);
+            arrivals
+                .iter()
+                .map(|&t| {
+                    if a.saturated(t) {
+                        None
+                    } else {
+                        Some(a.admit(t))
+                    }
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "shed/admit decisions are a pure function of arrivals");
+        assert!(run().iter().any(|d| d.is_none()), "the stream overloads the cap");
     }
 }

@@ -1,0 +1,336 @@
+//! Deterministic SLO-aware router over heterogeneous replica pools.
+//!
+//! The multi-pool runtime instantiates N replica pools from *distinct*
+//! [`ParetoFrontier`] points — the SLO front door's pick, the frontier's
+//! fastest point as the burst absorber, then the cheapest remaining
+//! points — and routes every request to the pool with the least
+//! *estimated* completion time (arrival-ordered least-estimated-queue-
+//! delay), shedding a request only when every pool's estimated backlog
+//! sits at the admission cap.
+//!
+//! **Determinism.** Routing and shedding are decided in a pre-pass over
+//! the arrival-ordered request list ([`plan_routes`]) using only
+//! simulated arrival timestamps and each pool's static per-request
+//! service estimate — never live queue occupancy, which depends on how
+//! the OS schedules worker threads. The resulting decision vector is a
+//! pure function of `(request list, estimates, queue_cap)`, so the shed
+//! set and per-pool assignment replay byte-identically across runs,
+//! thread interleavings *and* shard counts (the estimator is
+//! deliberately shard-agnostic: a pool is one logical server whose
+//! backlog drains at its estimated service rate).
+
+use super::queue::AdmissionController;
+use super::{choose_config_for_slo, run_pools, Request, ServeOptions, ServeReport, SloChoice};
+use crate::config::ExperimentConfig;
+use crate::dse::{evaluate, DsePoint, EvalMode, ParetoFrontier};
+use crate::sim::CostModel;
+use anyhow::{bail, Result};
+
+/// One replica pool: a hardware configuration plus the router's static
+/// per-request service estimate (its queueing currency).
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Network x hardware the pool's shard replicas instantiate.
+    pub cfg: ExperimentConfig,
+    /// Display label (the frontier point's label, or the LHR string).
+    pub label: String,
+    /// Estimated cycles to serve one request (>= 1); drives admission
+    /// and least-estimated-delay routing.
+    pub est_service_cycles: u64,
+}
+
+impl PoolConfig {
+    /// Build a pool around `cfg`, deriving the service estimate from a
+    /// deterministic activity-mode probe of the configuration.
+    pub fn new(cfg: ExperimentConfig, label: String, costs: &CostModel, seed: u64) -> PoolConfig {
+        let est_service_cycles = estimate_service_cycles(&cfg, costs, seed);
+        PoolConfig { cfg, label, est_service_cycles }
+    }
+}
+
+/// Deterministic per-request service-time estimate for a configuration:
+/// the analytic engine's single-inference cycle count under calibrated
+/// activity (the same number the DSE reports for the point).
+pub fn estimate_service_cycles(cfg: &ExperimentConfig, costs: &CostModel, seed: u64) -> u64 {
+    evaluate(&cfg.net, &cfg.hw, &EvalMode::Activity { seed }, costs).cycles.max(1)
+}
+
+/// A request's routed fate, fixed in the pre-pass before any worker runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteDecision {
+    /// Execute on replica pool `pool`.
+    Admit { pool: usize },
+    /// Every pool's estimated backlog was at the admission cap; `pool`
+    /// is the least-backlogged pool that still refused (the bounce
+    /// attribution surfaced in per-pool shed stats).
+    Shed { pool: usize },
+}
+
+/// The deterministic routing pre-pass: walk the arrival-ordered request
+/// list once, keeping one [`AdmissionController`] per pool, and commit
+/// each request to the non-saturated pool with the least estimated
+/// completion time (ties break on the lowest pool index). A request is
+/// shed only when every pool is saturated. `queue_cap == 0` disables
+/// shedding entirely.
+pub fn plan_routes(
+    est_service_cycles: &[u64],
+    queue_cap: usize,
+    requests: &[Request],
+) -> Vec<RouteDecision> {
+    assert!(!est_service_cycles.is_empty(), "route planning needs at least one pool");
+    let mut gates: Vec<AdmissionController> = est_service_cycles
+        .iter()
+        .map(|&c| AdmissionController::new(queue_cap, c))
+        .collect();
+    requests
+        .iter()
+        .map(|r| {
+            let t = r.arrival_cycles;
+            // least-estimated-completion, strict < so ties keep the
+            // lowest pool index — deterministic regardless of pool order
+            let mut best_open: Option<(u64, usize)> = None;
+            let mut best_any: Option<(u64, usize)> = None;
+            for (i, g) in gates.iter_mut().enumerate() {
+                let saturated = g.saturated(t);
+                let est = g.est_completion(t);
+                let better = match best_any {
+                    None => true,
+                    Some((b, _)) => est < b,
+                };
+                if better {
+                    best_any = Some((est, i));
+                }
+                if !saturated {
+                    let better = match best_open {
+                        None => true,
+                        Some((b, _)) => est < b,
+                    };
+                    if better {
+                        best_open = Some((est, i));
+                    }
+                }
+            }
+            match best_open {
+                Some((_, pool)) => {
+                    gates[pool].admit(t);
+                    RouteDecision::Admit { pool }
+                }
+                None => RouteDecision::Shed { pool: best_any.expect("pools exist").1 },
+            }
+        })
+        .collect()
+}
+
+fn choice_from_point(p: &DsePoint, slo_us: f64) -> SloChoice {
+    SloChoice {
+        lhr: p.lhr.clone(),
+        label: p.label.clone(),
+        latency_us: p.latency_us,
+        energy_mj: p.energy_mj,
+        cycles: p.cycles,
+        slo_met: p.latency_us <= slo_us,
+    }
+}
+
+/// Pick `n_pools` *distinct* frontier points to back the replica pools:
+/// pool 0 is the SLO front door's choice ([`choose_config_for_slo`] —
+/// cheapest point meeting `slo_us`, else the fastest); pool 1 the
+/// frontier's fastest point (the burst absorber); the rest fill in by
+/// ascending energy (ties: fewer cycles, then label). Errors when the
+/// frontier holds fewer distinct points than pools requested.
+pub fn pools_from_frontier(
+    frontier: &ParetoFrontier,
+    n_pools: usize,
+    slo_us: f64,
+) -> Result<Vec<SloChoice>> {
+    if n_pools == 0 {
+        bail!("serve: need at least one pool");
+    }
+    let mut chosen = vec![choose_config_for_slo(frontier, slo_us)?];
+    if chosen.len() < n_pools {
+        if let Some(p) = frontier.fastest() {
+            if !chosen.iter().any(|c| c.label == p.label) {
+                chosen.push(choice_from_point(p, slo_us));
+            }
+        }
+    }
+    let mut rest: Vec<&DsePoint> = frontier
+        .points()
+        .iter()
+        .filter(|p| !chosen.iter().any(|c| c.label == p.label))
+        .collect();
+    rest.sort_by(|a, b| {
+        a.energy_mj
+            .partial_cmp(&b.energy_mj)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.cycles.cmp(&b.cycles))
+            .then_with(|| a.label.cmp(&b.label))
+    });
+    for p in rest {
+        if chosen.len() == n_pools {
+            break;
+        }
+        chosen.push(choice_from_point(p, slo_us));
+    }
+    if chosen.len() < n_pools {
+        bail!(
+            "frontier has only {} distinct point(s); cannot back {} pools",
+            chosen.len(),
+            n_pools
+        );
+    }
+    Ok(chosen)
+}
+
+/// The overload-aware serve runtime over heterogeneous replica pools:
+/// [`plan_routes`] fixes every request's pool (or sheds it), then each
+/// pool runs the sharded dynamic-batching executor on its own hardware
+/// configuration. With a single pool and `queue_cap == 0` this is
+/// exactly [`super::ServeRuntime`].
+pub struct MultiPoolRuntime {
+    pools: Vec<PoolConfig>,
+    costs: CostModel,
+    opts: ServeOptions,
+}
+
+impl MultiPoolRuntime {
+    pub fn new(pools: Vec<PoolConfig>, costs: CostModel, opts: ServeOptions) -> Result<Self> {
+        if pools.is_empty() {
+            bail!("serve: need at least one pool");
+        }
+        if opts.shards == 0 {
+            bail!("serve: need at least one shard per pool");
+        }
+        if opts.policy.max_batch == 0 {
+            bail!("serve: max_batch must be >= 1");
+        }
+        if pools.iter().any(|p| p.cfg.net.name != pools[0].cfg.net.name) {
+            bail!("serve: every pool must serve the same network");
+        }
+        Ok(MultiPoolRuntime { pools, costs, opts })
+    }
+
+    pub fn pools(&self) -> &[PoolConfig] {
+        &self.pools
+    }
+
+    pub fn options(&self) -> &ServeOptions {
+        &self.opts
+    }
+
+    /// Serve `requests` (arrival order, ids dense from 0) across the
+    /// pools. The report — including the shed set and every record's
+    /// pool assignment — is deterministic for a fixed request list and
+    /// options; assignments and sheds are additionally shard-count
+    /// invariant.
+    pub fn run(&self, requests: Vec<Request>) -> ServeReport {
+        run_pools(&self.pools, &self.costs, &self.opts, requests)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::Objective;
+    use crate::resources::Resources;
+
+    fn req(id: usize, t: u64) -> Request {
+        Request { id, arrival_cycles: t, input: Vec::new() }
+    }
+
+    fn pt(cycles: u64, lut: f64, e: f64) -> DsePoint {
+        DsePoint {
+            net: "t".into(),
+            label: format!("{cycles}/{lut}/{e}"),
+            lhr: vec![cycles as usize],
+            cycles,
+            serial_cycles: cycles,
+            resources: Resources { lut, ..Default::default() },
+            energy_mj: e,
+            latency_us: cycles as f64,
+            layer_activity: vec![],
+            uarch: None,
+        }
+    }
+
+    #[test]
+    fn routes_to_least_estimated_delay() {
+        // pool 0 is 4x slower than pool 1: back-to-back arrivals should
+        // spill to the fast pool once the slow pool's backlog estimate
+        // exceeds the fast pool's
+        let ests = [400u64, 100];
+        let reqs: Vec<Request> = (0..6).map(|i| req(i, 0)).collect();
+        let routes = plan_routes(&ests, 0, &reqs);
+        // t=0: pool0 est 400 vs pool1 est 100 -> pool1; then pool1
+        // backlogs to 200, still < 400 -> pool1 again, etc.
+        assert_eq!(routes[0], RouteDecision::Admit { pool: 1 });
+        assert_eq!(routes[1], RouteDecision::Admit { pool: 1 });
+        assert_eq!(routes[2], RouteDecision::Admit { pool: 1 });
+        assert_eq!(routes[3], RouteDecision::Admit { pool: 0 });
+        assert!(routes.iter().all(|d| matches!(d, RouteDecision::Admit { .. })));
+    }
+
+    #[test]
+    fn ties_break_on_the_lowest_pool_index() {
+        let ests = [100u64, 100];
+        let routes = plan_routes(&ests, 0, &[req(0, 0)]);
+        assert_eq!(routes, vec![RouteDecision::Admit { pool: 0 }]);
+    }
+
+    #[test]
+    fn sheds_only_when_every_pool_is_saturated() {
+        // cap 1, both pools busy for 1000 cycles after one admit each
+        let ests = [1_000u64, 1_000];
+        let reqs: Vec<Request> = (0..4).map(|i| req(i, 0)).collect();
+        let routes = plan_routes(&ests, 1, &reqs);
+        assert_eq!(routes[0], RouteDecision::Admit { pool: 0 });
+        assert_eq!(routes[1], RouteDecision::Admit { pool: 1 });
+        assert!(matches!(routes[2], RouteDecision::Shed { .. }));
+        assert!(matches!(routes[3], RouteDecision::Shed { .. }));
+        // once the estimates drain, admission resumes
+        let late = plan_routes(&ests, 1, &[req(0, 0), req(1, 0), req(2, 2_000)]);
+        assert_eq!(late[2], RouteDecision::Admit { pool: 0 });
+    }
+
+    #[test]
+    fn plan_is_a_pure_function_of_arrivals() {
+        let ests = [300u64, 700, 150];
+        let reqs: Vec<Request> = (0..64).map(|i| req(i, (i as u64 * 137) % 4_000)).collect();
+        let mut sorted = reqs.clone();
+        sorted.sort_by_key(|r| r.arrival_cycles);
+        assert_eq!(plan_routes(&ests, 2, &sorted), plan_routes(&ests, 2, &sorted));
+    }
+
+    #[test]
+    fn frontier_pools_are_distinct_and_slo_led() {
+        let f = ParetoFrontier::from_points(
+            &Objective::DEFAULT,
+            vec![pt(50, 100.0, 5.0), pt(200, 40.0, 2.0), pt(400, 10.0, 0.5)],
+        );
+        let pools = pools_from_frontier(&f, 3, 250.0).unwrap();
+        assert_eq!(pools.len(), 3);
+        // pool 0: cheapest meeting the SLO; pool 1: fastest; pool 2: rest
+        assert_eq!(pools[0].cycles, 200);
+        assert!(pools[0].slo_met);
+        assert_eq!(pools[1].cycles, 50);
+        assert_eq!(pools[2].cycles, 400);
+        assert!(!pools[2].slo_met, "the 400-cycle point misses a 250 us SLO");
+        let labels: std::collections::BTreeSet<&str> =
+            pools.iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(labels.len(), 3, "points must be distinct");
+        // more pools than frontier points is an explicit error
+        assert!(pools_from_frontier(&f, 4, 250.0).is_err());
+        assert!(pools_from_frontier(&f, 0, 250.0).is_err());
+    }
+
+    #[test]
+    fn single_pool_request_is_the_slo_choice() {
+        let f = ParetoFrontier::from_points(
+            &Objective::DEFAULT,
+            vec![pt(50, 100.0, 5.0), pt(200, 40.0, 2.0)],
+        );
+        let pools = pools_from_frontier(&f, 1, 250.0).unwrap();
+        assert_eq!(pools.len(), 1);
+        assert_eq!(pools[0].cycles, 200);
+    }
+}

@@ -41,6 +41,8 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
 /// One shard's serving counters for a finished run.
 #[derive(Debug, Clone)]
 pub struct ShardStats {
+    /// Replica pool this shard belongs to (0 for single-pool runs).
+    pub pool: usize,
     pub shard: usize,
     /// Requests this shard served.
     pub requests: usize,
@@ -54,6 +56,40 @@ pub struct ShardStats {
     pub utilization: f64,
     /// Request latency (arrival -> completion) distribution.
     pub latency: LatencySummary,
+}
+
+/// One replica pool's serving counters for a finished run, aggregated
+/// over its shards plus the router's admission decisions.
+#[derive(Debug, Clone)]
+pub struct PoolStats {
+    pub pool: usize,
+    /// Frontier label of the hardware config backing this pool.
+    pub label: String,
+    /// Requests the router offered to this pool (served + shed).
+    pub offered: usize,
+    /// Requests the pool completed.
+    pub served: usize,
+    /// Requests shed at this pool's admission gate.
+    pub shed: usize,
+    /// Batches dispatched across the pool's shards.
+    pub batches: usize,
+    /// Simulated busy cycles summed over the pool's shards.
+    pub busy_cycles: u64,
+    /// Pool utilization over the run span (busy / (span * shards)).
+    pub utilization: f64,
+    /// Latency distribution of the requests the pool served.
+    pub latency: LatencySummary,
+}
+
+impl PoolStats {
+    /// Fraction of offered requests shed at admission (0 when idle).
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -86,5 +122,68 @@ mod tests {
         let s = LatencySummary::from_us(Vec::new());
         assert_eq!(s.count, 0);
         assert_eq!(s.max_us, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "percentile of an empty sample")]
+    fn percentile_of_empty_sample_panics() {
+        percentile(&[], 50.0);
+    }
+
+    #[test]
+    fn percentile_single_element_and_extreme_quantiles() {
+        let one = [7.5];
+        // every quantile of a single sample is that sample; q=0.0 would
+        // produce rank 0, which the nearest-rank clamp lifts to rank 1
+        assert_eq!(percentile(&one, 0.0), 7.5);
+        assert_eq!(percentile(&one, 1.0), 7.5);
+        assert_eq!(percentile(&one, 50.0), 7.5);
+        assert_eq!(percentile(&one, 100.0), 7.5);
+        let two = [1.0, 2.0];
+        assert_eq!(percentile(&two, 0.0), 1.0, "q=0 clamps to the minimum");
+        assert_eq!(percentile(&two, 100.0), 2.0, "q=100 clamps to the maximum");
+    }
+
+    #[test]
+    fn summary_with_duplicate_values() {
+        let s = LatencySummary::from_us(vec![5.0, 5.0, 5.0, 5.0]);
+        assert_eq!(s.count, 4);
+        assert_eq!(s.mean_us, 5.0);
+        assert_eq!(s.p50_us, 5.0);
+        assert_eq!(s.p95_us, 5.0);
+        assert_eq!(s.p99_us, 5.0);
+        assert_eq!(s.max_us, 5.0);
+        // duplicates mixed with distinct values keep nearest-rank exact
+        let t = LatencySummary::from_us(vec![9.0, 1.0, 9.0, 1.0]);
+        assert_eq!(t.p50_us, 1.0);
+        assert_eq!(t.max_us, 9.0);
+        assert_eq!(t.mean_us, 5.0);
+    }
+
+    #[test]
+    fn summary_order_invariance() {
+        let a = LatencySummary::from_us(vec![3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0]);
+        let b = LatencySummary::from_us(vec![9.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0, 1.0]);
+        assert_eq!(a, b, "summaries are a pure function of the multiset");
+    }
+
+    #[test]
+    fn pool_shed_rate_boundaries() {
+        let mut p = PoolStats {
+            pool: 0,
+            label: "lhr4".into(),
+            offered: 0,
+            served: 0,
+            shed: 0,
+            batches: 0,
+            busy_cycles: 0,
+            utilization: 0.0,
+            latency: LatencySummary::default(),
+        };
+        assert_eq!(p.shed_rate(), 0.0, "idle pool sheds nothing");
+        p.offered = 8;
+        p.served = 6;
+        p.shed = 2;
+        assert_eq!(p.shed_rate(), 0.25);
     }
 }

@@ -220,6 +220,76 @@ mod tests {
     }
 
     #[test]
+    fn transpose64_double_transpose_roundtrips() {
+        // transpose is an involution: applying it twice must restore the
+        // exact input words, for arbitrary bit patterns
+        prop_check(40, 0xB17A_7A04, |g| {
+            let mut a = [0u64; 64];
+            for w in a.iter_mut() {
+                *w = g.rng().next_u64();
+            }
+            let orig = a;
+            transpose64(&mut a);
+            transpose64(&mut a);
+            if a != orig {
+                return Err("transpose64 applied twice must be the identity".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tail_mask_invariants_at_lane_boundaries() {
+        // batches 1, 63 and 64 fit one lane word; 65 exceeds the 64-lane
+        // cap and must be packed as lane groups (64 + 1), each of which
+        // holds the tail rule: bits past the group's lane count are zero
+        // in every word, and popcounts reproduce the per-sample totals
+        prop_check(20, 0xB17A_7A05, |g| {
+            for batch in [1usize, 63, 64, 65] {
+                let t = g.usize_in(1, 3);
+                let n = g.usize_in(1, 150);
+                let p = g.f64_in(0.0, 1.0);
+                let samples: Vec<SpikeTrain> =
+                    (0..batch).map(|_| random_train(g, t, n, p)).collect();
+                for group in samples.chunks(64) {
+                    let m = BitMat::pack(group);
+                    let mask = m.lane_mask();
+                    let expect = if group.len() == 64 {
+                        !0u64
+                    } else {
+                        (1u64 << group.len()) - 1
+                    };
+                    if mask != expect {
+                        return Err(format!("batch {batch}: lane_mask {mask:#x} != {expect:#x}"));
+                    }
+                    for step in 0..m.t_steps() {
+                        for i in 0..m.neurons() {
+                            if m.word(step, i) & !mask != 0 {
+                                return Err(format!(
+                                    "batch {batch}: stray bits past lane {} at ({step},{i})",
+                                    group.len()
+                                ));
+                            }
+                        }
+                    }
+                    let total: u32 = (0..m.t_steps())
+                        .flat_map(|s| (0..m.neurons()).map(move |i| (s, i)))
+                        .map(|(s, i)| m.popcount(s, i))
+                        .sum();
+                    let expect_total: usize = group
+                        .iter()
+                        .flat_map(|tr| tr.iter().map(|st| st.count_ones()))
+                        .sum();
+                    if total as usize != expect_total {
+                        return Err(format!("batch {batch}: popcount drift"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn pack_unpack_roundtrip() {
         prop_check(40, 0xB17A_7A02, |g| {
             let batch = *g.choose(&[1usize, 2, 63, 64]);

@@ -3,10 +3,17 @@
 //! `SpikeTrainWorkload` runs, byte-identical across shard counts, and the
 //! whole report must replay deterministically for a fixed seed — the same
 //! determinism contract the PR-2 explorer holds across thread counts.
+//! The multi-pool overload tests extend the contract to admission
+//! control: the full report (shed set and per-pool assignment included)
+//! must serialize byte-identically across runs and shard counts under
+//! every load scenario.
 
 use snn_dse::config::{ExperimentConfig, HwConfig};
 use snn_dse::runtime::serve::{LoadSpec, ServeOptions};
-use snn_dse::runtime::{synthetic_load, BatchPolicy, Request, ServeRuntime};
+use snn_dse::runtime::{
+    parse_scenario, synthetic_load, BatchPolicy, MultiPoolRuntime, PoolConfig, Request,
+    ServeRuntime,
+};
 use snn_dse::sim::{BatchKernel, CostModel, NetworkSim};
 use snn_dse::snn::{fc_net, table1_net, NetDef};
 
@@ -30,6 +37,7 @@ fn tiny_load(n: usize, seed: u64) -> Vec<Request> {
             rate_rps: 40_000.0,
             input_rate: 0.3,
             seed,
+            ..Default::default()
         },
     )
 }
@@ -51,6 +59,7 @@ fn serve_with_kernel(
         },
         weight_seed: WEIGHT_SEED,
         kernel,
+        ..Default::default()
     };
     ServeRuntime::new(tiny_cfg(), CostModel::default(), opts)
         .unwrap()
@@ -156,6 +165,7 @@ fn serve_sustains_a_multi_shard_table1_load() {
             rate_rps: 3_000.0,
             input_rate: 0.1,
             seed: 42,
+            ..Default::default()
         },
     );
     let report = ServeRuntime::new(
@@ -169,6 +179,7 @@ fn serve_sustains_a_multi_shard_table1_load() {
             },
             weight_seed: WEIGHT_SEED,
             kernel: BatchKernel::Auto,
+            ..Default::default()
         },
     )
     .unwrap()
@@ -189,4 +200,148 @@ fn serve_sustains_a_multi_shard_table1_load() {
     // full SLO attainment at an absurdly loose SLO, none at an absurd one
     assert_eq!(report.slo_attainment(f64::INFINITY), 1.0);
     assert_eq!(report.slo_attainment(0.0), 0.0);
+}
+
+// ---- multi-pool overload: admission control, routing, shedding ----
+
+/// Two heterogeneous pools over the tiny net: a fast replica and a
+/// slow one with a 4x service estimate, so the router demonstrably
+/// spills to the slow pool before shedding.
+fn overload_pools() -> Vec<PoolConfig> {
+    vec![
+        PoolConfig {
+            cfg: tiny_cfg(),
+            label: "fast".into(),
+            est_service_cycles: 12_000,
+        },
+        PoolConfig {
+            cfg: ExperimentConfig::new(tiny_net(), HwConfig::with_lhr(vec![4, 4])).unwrap(),
+            label: "slow".into(),
+            est_service_cycles: 48_000,
+        },
+    ]
+}
+
+fn scenario_load(name: &str, n: usize, seed: u64) -> Vec<Request> {
+    let cfg = tiny_cfg();
+    let (scenario, size) = parse_scenario(name).unwrap();
+    synthetic_load(
+        &cfg.net,
+        cfg.hw.clock_hz,
+        &LoadSpec {
+            n_requests: n,
+            rate_rps: 40_000.0,
+            input_rate: 0.3,
+            seed,
+            scenario,
+            size,
+        },
+    )
+}
+
+fn serve_pools(
+    shards: usize,
+    queue_cap: usize,
+    load: Vec<Request>,
+) -> snn_dse::runtime::ServeReport {
+    let opts = ServeOptions {
+        shards,
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait_cycles: 30_000,
+        },
+        weight_seed: WEIGHT_SEED,
+        kernel: BatchKernel::Auto,
+        queue_cap,
+    };
+    MultiPoolRuntime::new(overload_pools(), CostModel::default(), opts)
+        .unwrap()
+        .run(load)
+}
+
+#[test]
+fn overload_report_replays_byte_identically_for_every_scenario() {
+    // the ISSUE acceptance bar: the FULL report — shed set and per-pool
+    // assignment included — serializes to identical bytes across runs,
+    // under every named load scenario
+    for name in ["steady", "diurnal", "burst", "heavy", "storm"] {
+        let a = serve_pools(2, 3, scenario_load(name, 32, 17));
+        let b = serve_pools(2, 3, scenario_load(name, 32, 17));
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "scenario {name}: overload report must replay byte-identically"
+        );
+        assert_eq!(
+            a.records.len() + a.shed.len(),
+            32,
+            "scenario {name}: accounting must close"
+        );
+    }
+}
+
+#[test]
+fn overload_shed_set_and_pool_assignment_are_shard_count_invariant() {
+    let reference = serve_pools(1, 3, scenario_load("storm", 40, 23));
+    let ref_assign: Vec<(usize, usize, Option<usize>)> = reference
+        .records
+        .iter()
+        .map(|r| (r.id, r.pool, r.prediction))
+        .collect();
+    assert!(!reference.shed.is_empty(), "storm at cap 3 must shed");
+    for shards in [2usize, 3] {
+        let report = serve_pools(shards, 3, scenario_load("storm", 40, 23));
+        let assign: Vec<(usize, usize, Option<usize>)> = report
+            .records
+            .iter()
+            .map(|r| (r.id, r.pool, r.prediction))
+            .collect();
+        assert_eq!(
+            ref_assign, assign,
+            "{shards} shards: pool assignment and predictions must not move"
+        );
+        assert_eq!(reference.shed, report.shed, "{shards} shards: shed set must not move");
+    }
+}
+
+#[test]
+fn admission_cap_sheds_under_overload_and_unbounded_serves_all() {
+    let load = scenario_load("burst", 40, 29);
+    let unbounded = serve_pools(2, 0, load.clone());
+    assert_eq!(unbounded.records.len(), 40, "cap 0 disables admission control");
+    assert!(unbounded.shed.is_empty());
+    assert_eq!(unbounded.shed_rate(), 0.0);
+    let capped = serve_pools(2, 1, load);
+    assert!(!capped.shed.is_empty(), "cap 1 under a burst load must shed");
+    assert_eq!(capped.records.len() + capped.shed.len(), 40);
+    // served and shed ids partition the offered id space exactly
+    let mut ids: Vec<usize> = capped
+        .records
+        .iter()
+        .map(|r| r.id)
+        .chain(capped.shed.iter().map(|s| s.id))
+        .collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..40).collect::<Vec<_>>());
+}
+
+#[test]
+fn per_pool_accounting_closes_and_goodput_is_bounded() {
+    let report = serve_pools(2, 2, scenario_load("storm", 48, 31));
+    assert_eq!(report.per_pool.len(), 2);
+    let offered: usize = report.per_pool.iter().map(|p| p.offered).sum();
+    assert_eq!(offered, 48, "every request is offered to exactly one pool");
+    for p in &report.per_pool {
+        assert_eq!(p.offered, p.served + p.shed, "pool {} accounting must close", p.pool);
+        let rate = p.shed_rate();
+        assert!((0.0..=1.0).contains(&rate), "pool {} shed rate {rate}", p.pool);
+    }
+    // a 4.8x-overloaded fast pool must spill traffic to the slow pool
+    assert!(
+        report.per_pool.iter().all(|p| p.offered > 0),
+        "both heterogeneous pools must see traffic under the storm"
+    );
+    // goodput is bounded by throughput and vanishes at an impossible SLO
+    assert!(report.goodput_under_slo(f64::INFINITY) <= report.throughput_rps + 1e-9);
+    assert_eq!(report.goodput_under_slo(0.0), 0.0);
 }
