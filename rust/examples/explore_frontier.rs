@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         checkpoint: Some(ckpt.clone()),
         checkpoint_every: 1,
         uarch: false,
+        partition: false,
     };
     let mut ex = Explorer::resume_or_new(&net, cfg.clone())?;
     ex.run(&net, &costs)?;

@@ -5,9 +5,11 @@
 //! spike-train simulation, a batch-64 sliced-vs-per-sample kernel
 //! face-off, the sharded batched serve runtime, a two-pool overload
 //! scenario through the admission-controlled router, an `explore` batch,
-//! and an event-driven `uarch` replay) and emits `BENCH_sim.json`:
+//! an event-driven `uarch` replay, and a two-chip `partition` replay
+//! over a finite credit-based link) and emits `BENCH_sim.json`:
 //! steps/sec, samples/sec and simulated-cycles/sec per net plus batched,
-//! serve, overload, explore and uarch (events/sec) throughput.
+//! serve, overload, explore, uarch (events/sec) and partition
+//! (inferences/sec) throughput.
 //! CI runs `bench --smoke`, validates the emitted document against
 //! [`validate`], and diffs it against the committed `BENCH_sim.json`
 //! baseline with [`compare`] (regression-only, 20% tolerance), so
@@ -38,9 +40,11 @@ use std::time::Instant;
 /// v2 added the `uarch` section (event-driven replay events/sec);
 /// v3 added the `batched` section (sliced vs per-sample kernel at
 /// batch 64) and the committed-baseline [`compare`] contract;
-/// v4 adds the `overload` section (two heterogeneous replica pools
-/// under a storm scenario with a bounded admission queue).
-pub const BENCH_SCHEMA: &str = "snn-dse-bench/v4";
+/// v4 added the `overload` section (two heterogeneous replica pools
+/// under a storm scenario with a bounded admission queue);
+/// v5 adds the `partition` section (two-chip pipelined replay over a
+/// finite credit-based link, inferences/sec).
+pub const BENCH_SCHEMA: &str = "snn-dse-bench/v5";
 
 /// Fractional throughput drop tolerated by [`compare`] before a rate
 /// counts as a regression (0.2 = fail below 80% of the baseline).
@@ -270,6 +274,7 @@ pub fn bench_explore(seed: u64, smoke: bool) -> Result<Json> {
         checkpoint: None,
         checkpoint_every: 0,
         uarch: false,
+        partition: false,
     };
     let mut explorer = Explorer::new(&net, cfg)?;
     let cache = EstimateCache::new();
@@ -285,6 +290,74 @@ pub fn bench_explore(seed: u64, smoke: bool) -> Result<Json> {
         ("configs_per_sec", Json::Num(configs as f64 / elapsed)),
         ("frontier", Json::Num(explorer.frontier().len() as f64)),
     ]))
+}
+
+/// Partitioned multi-chip replay throughput: net1 split across two
+/// chips with a finite credit-based link, repeatedly priced on the
+/// calibrated activity workload. The warmup doubles as the golden
+/// oracle: the same cut with *ideal* links must reproduce the analytic
+/// single-chip engine's cycles exactly, so a perf run can never quietly
+/// report numbers from a diverged partitioned engine.
+pub fn bench_partition(seed: u64, smoke: bool) -> Json {
+    use crate::data::ActivityModel;
+    use crate::partition::{partition_for_spec, LinkConfig, PartitionSpec};
+    use crate::sim::PartitionedNetworkSim;
+
+    let net = table1_net("net1");
+    let cfg = ExperimentConfig::new(net.clone(), HwConfig::with_lhr(vec![4, 8, 8]))
+        .expect("valid partition bench config");
+    let spec = PartitionSpec {
+        chips: 2,
+        cut_choice: 0,
+        link: LinkConfig { latency: 8, bandwidth: 16, fifo_depth: 2 },
+    };
+    let model = ActivityModel::for_net(&net);
+    let mut rng = Rng::new(seed);
+    let activity = model.sample(net.t_steps, &mut rng);
+    // golden oracle: ideal links == analytic single-chip engine
+    let ideal_spec = PartitionSpec { link: LinkConfig::ideal(), ..spec };
+    let ideal_plan = partition_for_spec(&cfg, &ideal_spec).expect("net1 splits into two chips");
+    let mut ideal_sim = PartitionedNetworkSim::cost_only(&cfg, ideal_plan, CostModel::default())
+        .expect("valid chip sub-configs");
+    let ideal_cycles = ideal_sim.run_activity(&activity).total_cycles;
+    let analytic = crate::dse::evaluate(
+        &net,
+        &cfg.hw,
+        &crate::dse::EvalMode::Activity { seed },
+        &CostModel::default(),
+    )
+    .cycles;
+    assert_eq!(
+        ideal_cycles, analytic,
+        "bench partition: ideal links diverged from the analytic engine"
+    );
+    let plan = partition_for_spec(&cfg, &spec).expect("net1 splits into two chips");
+    let mut sim = PartitionedNetworkSim::cost_only(&cfg, plan, CostModel::default())
+        .expect("valid chip sub-configs");
+    // warmup pins the finite cycles and the link stall totals
+    let warm = sim.run_activity(&activity);
+    let link_stalls: u64 = sim
+        .link_stats()
+        .iter()
+        .map(|l| l.credit_wait + l.serialization)
+        .sum();
+    let iters = if smoke { 4 } else { 32 };
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        sim.reset();
+        black_box(sim.run_activity(black_box(&activity)));
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    Json::obj(vec![
+        ("net", Json::Str("net1".into())),
+        ("chips", Json::Num(2.0)),
+        ("config", Json::Str(spec.label())),
+        ("iters", Json::Num(iters as f64)),
+        ("total_cycles", Json::Num(warm.total_cycles as f64)),
+        ("single_chip_cycles", Json::Num(analytic as f64)),
+        ("link_stall_cycles", Json::Num(link_stalls as f64)),
+        ("inferences_per_sec", Json::Num(iters as f64 / elapsed)),
+    ])
 }
 
 /// Event-driven uarch replay throughput: record net1's activity trace
@@ -413,6 +486,12 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         uarch.at("events").as_u64().unwrap_or(0),
         uarch.at("stall_cycles").as_u64().unwrap_or(0),
     );
+    let partition = bench_partition(opts.seed, opts.smoke);
+    eprintln!(
+        "[bench] partition net1 x2 chips: {:.1} inferences/s ({} link stall cycles/run)",
+        partition.at("inferences_per_sec").as_f64().unwrap_or(0.0),
+        partition.at("link_stall_cycles").as_u64().unwrap_or(0),
+    );
     Ok(Json::obj(vec![
         ("schema", Json::Str(BENCH_SCHEMA.into())),
         ("seed", Json::Num(opts.seed as f64)),
@@ -423,6 +502,7 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         ("overload", overload),
         ("explore", explore),
         ("uarch", uarch),
+        ("partition", partition),
     ]))
 }
 
@@ -546,6 +626,29 @@ pub fn validate(j: &Json) -> std::result::Result<(), String> {
     if uarch.at("config").as_str().is_none() {
         return Err("uarch.config must be a string".into());
     }
+    let partition = j.at("partition");
+    for key in [
+        "chips",
+        "iters",
+        "total_cycles",
+        "single_chip_cycles",
+        "inferences_per_sec",
+    ] {
+        expect_pos(partition, "partition", key)?;
+    }
+    // a generous link config may legitimately stall nothing
+    match partition.at("link_stall_cycles").as_f64() {
+        Some(v) if v.is_finite() && v >= 0.0 => {}
+        Some(v) => {
+            return Err(format!(
+                "partition.link_stall_cycles must be >= 0 and finite, got {v}"
+            ))
+        }
+        None => return Err("partition.link_stall_cycles must be a number".into()),
+    }
+    if partition.at("config").as_str().is_none() {
+        return Err("partition.config must be a string".into());
+    }
     Ok(())
 }
 
@@ -624,6 +727,7 @@ pub fn compare(
         ("overload", "samples_per_sec"),
         ("explore", "configs_per_sec"),
         ("uarch", "events_per_sec"),
+        ("partition", "inferences_per_sec"),
     ] {
         check(
             format!("{section}.{key}"),
@@ -715,6 +819,19 @@ mod tests {
                     ("events_per_sec", Json::Num(1000.0)),
                     ("total_cycles", Json::Num(12_000.0)),
                     ("stall_cycles", Json::Num(0.0)),
+                ]),
+            ),
+            (
+                "partition",
+                Json::obj(vec![
+                    ("net", Json::Str("net1".into())),
+                    ("chips", Json::Num(2.0)),
+                    ("config", Json::Str("P2@0·l8/w16/d2".into())),
+                    ("iters", Json::Num(4.0)),
+                    ("total_cycles", Json::Num(15_000.0)),
+                    ("single_chip_cycles", Json::Num(12_000.0)),
+                    ("link_stall_cycles", Json::Num(3_000.0)),
+                    ("inferences_per_sec", Json::Num(40.0)),
                 ]),
             ),
         ])
@@ -925,6 +1042,46 @@ mod tests {
             let v = rec.at(key).as_f64().unwrap();
             assert!(v > 0.0 && v.is_finite(), "{key} = {v}");
         }
+    }
+
+    #[test]
+    fn schema_requires_the_partition_section() {
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("partition");
+        }
+        assert!(validate(&doc).unwrap_err().contains("partition"));
+        // a stall-free run is legitimate under generous links...
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(p)) = m.get_mut("partition") {
+                p.insert("link_stall_cycles".into(), Json::Num(0.0));
+            }
+        }
+        validate(&doc).unwrap();
+        // ...but a negative stall total is a corrupted report
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(p)) = m.get_mut("partition") {
+                p.insert("link_stall_cycles".into(), Json::Num(-1.0));
+            }
+        }
+        assert!(validate(&doc).unwrap_err().contains("link_stall_cycles"));
+    }
+
+    #[test]
+    fn bench_partition_reports_positive_rate_and_slower_than_single_chip() {
+        let rec = bench_partition(7, true);
+        assert_eq!(rec.at("chips").as_usize(), Some(2));
+        for key in ["iters", "total_cycles", "single_chip_cycles", "inferences_per_sec"] {
+            let v = rec.at(key).as_f64().unwrap();
+            assert!(v > 0.0 && v.is_finite(), "{key} = {v}");
+        }
+        // the finite link can only add cycles over the single-chip engine
+        assert!(
+            rec.at("total_cycles").as_u64().unwrap()
+                >= rec.at("single_chip_cycles").as_u64().unwrap()
+        );
     }
 
     #[test]

@@ -44,8 +44,15 @@
 
 use crate::config::HwConfig;
 use crate::dse::pareto::{Objective, ParetoFrontier};
-use crate::dse::runner::{sweep_cached, sweep_uarch_cached, DsePoint, UarchSummary};
-use crate::dse::space::{lattice_dims, lattice_size, nth_lhr, split_uarch_point, uarch_dims};
+use crate::dse::runner::{
+    sweep_cached, sweep_partition_cached, sweep_uarch_cached, DsePoint, PartitionSummary,
+    UarchSummary,
+};
+use crate::dse::space::{
+    lattice_dims, lattice_size, nth_lhr, partition_dims, split_partition_point, split_uarch_point,
+    uarch_dims,
+};
+use crate::partition::PartitionSpec;
 use crate::resources::{EstimateCache, Resources};
 use crate::sim::CostModel;
 use crate::snn::NetDef;
@@ -90,6 +97,12 @@ pub struct ExploreConfig {
     /// [`crate::dse::space::uarch_dims`]) and evaluate every point
     /// through the event-driven simulator (`explore --uarch`).
     pub uarch: bool,
+    /// Extend the lattice with the five partition dimensions (chip
+    /// count, cut choice, link latency/bandwidth/FIFO depth — see
+    /// [`crate::dse::space::partition_dims`]) and evaluate every point
+    /// through the pipelined multi-chip simulator (`explore
+    /// --partition`). Mutually exclusive with `uarch`.
+    pub partition: bool,
 }
 
 impl Default for ExploreConfig {
@@ -104,6 +117,7 @@ impl Default for ExploreConfig {
             checkpoint: None,
             checkpoint_every: 5,
             uarch: false,
+            partition: false,
         }
     }
 }
@@ -152,6 +166,9 @@ impl Explorer {
         }
         if net.parametric_layers().is_empty() {
             bail!("explore: network '{}' has no parametric layers", net.name);
+        }
+        if cfg.uarch && cfg.partition {
+            bail!("explore: --uarch and --partition are mutually exclusive");
         }
         Ok(Explorer {
             frontier: ParetoFrontier::new(&cfg.objectives),
@@ -227,6 +244,14 @@ impl Explorer {
                 if cfg.uarch { "on" } else { "off" }
             );
         }
+        let ck_partition = j.at("partition").as_bool().unwrap_or(false);
+        if ck_partition != cfg.partition {
+            bail!(
+                "checkpoint {} the partition dimensions but --partition is {}",
+                if ck_partition { "explores" } else { "does not explore" },
+                if cfg.partition { "on" } else { "off" }
+            );
+        }
 
         let state_strs = j.at("rng_state").as_arr().context("checkpoint: missing rng_state")?;
         if state_strs.len() != 4 {
@@ -241,6 +266,12 @@ impl Explorer {
         ex.rng = Rng::from_state(state);
         ex.rounds_done = j.at("rounds_done").as_usize().unwrap_or(0);
         ex.scan_cursor = j.at("scan_cursor").as_usize().unwrap_or(0);
+        // every resumed point must have exactly one coordinate per
+        // current lattice axis — a point of the wrong dimensionality
+        // (truncated file, hand-edited lattice, stale axis set) would
+        // index out of bounds deep inside mutation/scan instead of
+        // failing here with a usable message
+        let n_axes = ex.dims(net).len();
         for pj in j.at("points").as_arr().context("checkpoint: missing points")? {
             let p = point_from_json(pj)?;
             let mut key = p.lhr.clone();
@@ -250,6 +281,29 @@ impl Explorer {
                 })?;
                 key.extend([u.fifo_depth, u.mem_ports, u.banks]);
             }
+            if ck_partition {
+                let s = p.partition.as_ref().with_context(|| {
+                    format!("partition checkpoint point {} lacks its partition fields", p.label)
+                })?;
+                key.extend([
+                    s.chips,
+                    s.cut_choice,
+                    s.link_latency as usize,
+                    s.link_bandwidth as usize,
+                    s.link_fifo_depth,
+                ]);
+            }
+            if key.len() != n_axes {
+                bail!(
+                    "checkpoint point {} has {} lattice coordinate{} but the current \
+                     lattice has {} axes — the checkpoint does not belong to this \
+                     network/flag combination",
+                    p.label,
+                    key.len(),
+                    if key.len() == 1 { "" } else { "s" },
+                    n_axes
+                );
+            }
             ex.visited.insert(key);
             ex.frontier.insert(p.clone());
             ex.evaluated.push(p);
@@ -258,11 +312,15 @@ impl Explorer {
     }
 
     /// The lattice axes this exploration walks: per-layer LHR choices,
-    /// plus the three uarch dimensions when `cfg.uarch` is on.
+    /// plus the three uarch dimensions when `cfg.uarch` is on, or the
+    /// five partition dimensions when `cfg.partition` is on.
     fn dims(&self, net: &NetDef) -> Vec<Vec<usize>> {
         let mut dims = lattice_dims(net, self.cfg.max_lhr);
         if self.cfg.uarch {
             dims.extend(uarch_dims());
+        }
+        if self.cfg.partition {
+            dims.extend(partition_dims());
         }
         dims
     }
@@ -292,6 +350,15 @@ impl Explorer {
                 })
                 .collect();
             sweep_uarch_cached(net, &pairs, self.cfg.seed, costs, self.cfg.threads, cache)
+        } else if self.cfg.partition {
+            let pairs: Vec<(HwConfig, PartitionSpec)> = lattice_points
+                .iter()
+                .map(|v| {
+                    let (lhr, spec) = split_partition_point(v);
+                    (HwConfig::with_lhr(lhr), spec)
+                })
+                .collect();
+            sweep_partition_cached(net, &pairs, self.cfg.seed, costs, self.cfg.threads, cache)
         } else {
             let configs: Vec<HwConfig> =
                 lattice_points.iter().cloned().map(HwConfig::with_lhr).collect();
@@ -369,6 +436,19 @@ impl Explorer {
                 .as_ref()
                 .expect("uarch exploration produced a point without uarch fields");
             key.extend([u.fifo_depth, u.mem_ports, u.banks]);
+        }
+        if self.cfg.partition {
+            let s = p
+                .partition
+                .as_ref()
+                .expect("partition exploration produced a point without partition fields");
+            key.extend([
+                s.chips,
+                s.cut_choice,
+                s.link_latency as usize,
+                s.link_bandwidth as usize,
+                s.link_fifo_depth,
+            ]);
         }
         key
     }
@@ -454,6 +534,7 @@ impl Explorer {
             ("max_lhr", Json::Num(self.cfg.max_lhr as f64)),
             ("batch", Json::Num(self.cfg.batch as f64)),
             ("uarch", Json::Bool(self.cfg.uarch)),
+            ("partition", Json::Bool(self.cfg.partition)),
             ("rounds_done", Json::Num(self.rounds_done as f64)),
             ("scan_cursor", Json::Num(self.scan_cursor as f64)),
             (
@@ -612,6 +693,22 @@ fn point_to_json(p: &DsePoint) -> Json {
             ]),
         ));
     }
+    if let Some(s) = &p.partition {
+        fields.push((
+            "partition",
+            Json::obj(vec![
+                ("chips", Json::Num(s.chips as f64)),
+                ("cut_choice", Json::Num(s.cut_choice as f64)),
+                ("cuts", Json::from_usizes(&s.cuts)),
+                ("link_latency", Json::Num(s.link_latency as f64)),
+                ("link_bandwidth", Json::Num(s.link_bandwidth as f64)),
+                ("link_fifo_depth", Json::Num(s.link_fifo_depth as f64)),
+                ("single_chip_cycles", Json::Num(s.single_chip_cycles as f64)),
+                ("link_credit_wait", Json::Num(s.link_credit_wait as f64)),
+                ("link_serialization", Json::Num(s.link_serialization as f64)),
+            ]),
+        ));
+    }
     Json::obj(fields)
 }
 
@@ -654,6 +751,41 @@ fn point_from_json(j: &Json) -> Result<DsePoint> {
                     .at("bank_conflict")
                     .as_u64()
                     .context("uarch: missing bank_conflict")?,
+            }),
+        },
+        partition: match j.get("partition") {
+            None => None,
+            Some(sj) => Some(PartitionSummary {
+                chips: sj.at("chips").as_usize().context("partition: missing chips")?,
+                cut_choice: sj
+                    .at("cut_choice")
+                    .as_usize()
+                    .context("partition: missing cut_choice")?,
+                cuts: sj.at("cuts").usize_vec(),
+                link_latency: sj
+                    .at("link_latency")
+                    .as_u64()
+                    .context("partition: missing link_latency")?,
+                link_bandwidth: sj
+                    .at("link_bandwidth")
+                    .as_u64()
+                    .context("partition: missing link_bandwidth")?,
+                link_fifo_depth: sj
+                    .at("link_fifo_depth")
+                    .as_usize()
+                    .context("partition: missing link_fifo_depth")?,
+                single_chip_cycles: sj
+                    .at("single_chip_cycles")
+                    .as_u64()
+                    .context("partition: missing single_chip_cycles")?,
+                link_credit_wait: sj
+                    .at("link_credit_wait")
+                    .as_u64()
+                    .context("partition: missing link_credit_wait")?,
+                link_serialization: sj
+                    .at("link_serialization")
+                    .as_u64()
+                    .context("partition: missing link_serialization")?,
             }),
         },
     })
@@ -854,6 +986,154 @@ mod tests {
         let mut again = Explorer::resume(&net, more, &path).unwrap();
         again.run(&net, &CostModel::default()).unwrap();
         assert!(again.evaluated().len() > ex.evaluated().len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn partition_exploration_walks_the_extended_lattice() {
+        let net = table1_net("net1");
+        let cfg = ExploreConfig {
+            rounds: 4,
+            batch: 8,
+            max_lhr: 8,
+            threads: 2,
+            partition: true,
+            ..Default::default()
+        };
+        let mut ex = Explorer::new(&net, cfg).unwrap();
+        ex.run(&net, &CostModel::default()).unwrap();
+        assert_eq!(ex.evaluated().len(), 32);
+        // every point carries its partition summary
+        assert!(ex.evaluated().iter().all(|p| p.partition.is_some()));
+        // the first proposal is fully-parallel LHR + single-chip ideal
+        let first = &ex.evaluated()[0];
+        assert_eq!(first.lhr, vec![1, 1, 1]);
+        assert!(first.partition.as_ref().unwrap().spec().is_single_chip_ideal());
+        // no duplicate (lhr, partition) evaluations
+        let mut keys: Vec<Vec<usize>> = ex
+            .evaluated()
+            .iter()
+            .map(|p| {
+                let s = p.partition.as_ref().unwrap();
+                let mut k = p.lhr.clone();
+                k.extend([
+                    s.chips,
+                    s.cut_choice,
+                    s.link_latency as usize,
+                    s.link_bandwidth as usize,
+                    s.link_fifo_depth,
+                ]);
+                k
+            })
+            .collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 32);
+        // the annealer proposed at least one genuinely multi-chip config
+        assert!(ex
+            .evaluated()
+            .iter()
+            .any(|p| !p.partition.as_ref().unwrap().spec().is_single_chip_ideal()));
+    }
+
+    #[test]
+    fn partition_point_json_roundtrips_link_stalls() {
+        let net = table1_net("net1");
+        let cache = EstimateCache::new();
+        let p = crate::dse::runner::evaluate_partition_cached(
+            &net,
+            &HwConfig::with_lhr(vec![4, 8, 8]),
+            &PartitionSpec {
+                chips: 2,
+                cut_choice: 1,
+                link: crate::partition::LinkConfig {
+                    latency: 8,
+                    bandwidth: 16,
+                    fifo_depth: 2,
+                },
+            },
+            42,
+            &CostModel::default(),
+            &cache,
+        );
+        let j = Json::parse(&point_to_json(&p).to_string()).unwrap();
+        let q = point_from_json(&j).unwrap();
+        assert_eq!(p.cycles, q.cycles);
+        assert_eq!(p.partition, q.partition, "link stalls must round-trip exactly");
+        // a point without partition fields still parses (older checkpoints)
+        let plain = crate::dse::runner::evaluate(
+            &net,
+            &HwConfig::with_lhr(vec![4, 8, 8]),
+            &crate::dse::runner::EvalMode::Activity { seed: 42 },
+            &CostModel::default(),
+        );
+        let j = Json::parse(&point_to_json(&plain).to_string()).unwrap();
+        assert!(point_from_json(&j).unwrap().partition.is_none());
+    }
+
+    #[test]
+    fn partition_checkpoint_resume_validates_the_flag_and_replays() {
+        let net = table1_net("net1");
+        let dir = std::env::temp_dir().join("snn_dse_explore_partition_ck");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        let cfg = ExploreConfig {
+            rounds: 3,
+            batch: 6,
+            max_lhr: 4,
+            threads: 2,
+            partition: true,
+            checkpoint: Some(path.clone()),
+            ..Default::default()
+        };
+        let mut ex = Explorer::new(&net, cfg.clone()).unwrap();
+        ex.run(&net, &CostModel::default()).unwrap();
+        // resuming with --partition off must be rejected
+        let mut off = cfg.clone();
+        off.partition = false;
+        let err = Explorer::resume(&net, off, &path).unwrap_err();
+        assert!(err.to_string().contains("--partition"), "{err:#}");
+        // a matching resume replays: same visited set, same frontier size
+        let resumed = Explorer::resume(&net, cfg.clone(), &path).unwrap();
+        assert_eq!(resumed.evaluated().len(), ex.evaluated().len());
+        assert_eq!(resumed.frontier().len(), ex.frontier().len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn uarch_and_partition_flags_are_mutually_exclusive() {
+        let net = table1_net("net1");
+        let cfg = ExploreConfig { uarch: true, partition: true, ..tiny_cfg() };
+        let err = Explorer::new(&net, cfg).unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err:#}");
+    }
+
+    #[test]
+    fn resume_rejects_points_of_the_wrong_dimensionality() {
+        // satellite regression: a resume file whose points don't have one
+        // coordinate per current lattice axis must fail with a
+        // descriptive error, not panic later inside mutation/scan
+        let net = table1_net("net1");
+        let dir = std::env::temp_dir().join("snn_dse_explore_bad_dims");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        let mut cfg = tiny_cfg();
+        cfg.checkpoint = Some(path.clone());
+        let mut ex = Explorer::new(&net, cfg.clone()).unwrap();
+        ex.run(&net, &CostModel::default()).unwrap();
+        // corrupt the first point: drop one LHR coordinate
+        let mut j = Json::parse_file(&path).unwrap();
+        let Json::Obj(m) = &mut j else { panic!("checkpoint root must be an object") };
+        let Some(Json::Arr(points)) = m.get_mut("points") else {
+            panic!("checkpoint must carry points")
+        };
+        let Json::Obj(pm) = &mut points[0] else { panic!("point must be an object") };
+        pm.insert("lhr".to_string(), Json::from_usizes(&[4, 8]));
+        std::fs::write(&path, j.to_string_pretty()).unwrap();
+        let err = Explorer::resume(&net, cfg, &path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("2 lattice coordinates"), "{msg}");
+        assert!(msg.contains("3 axes"), "{msg}");
         std::fs::remove_file(&path).ok();
     }
 

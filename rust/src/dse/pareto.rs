@@ -293,6 +293,7 @@ mod tests {
             latency_us: cycles as f64,
             layer_activity: vec![],
             uarch: None,
+            partition: None,
         }
     }
 

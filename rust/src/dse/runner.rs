@@ -13,8 +13,9 @@
 
 use crate::config::{ExperimentConfig, HwConfig};
 use crate::data::ActivityModel;
+use crate::partition::{partition_for_spec, LinkConfig, PartitionSpec};
 use crate::resources::{estimate, estimate_total_cached, EnergyModel, EstimateCache, Resources};
-use crate::sim::{CostModel, LayerWeights, NetworkSim, SimResult};
+use crate::sim::{CostModel, LayerWeights, NetworkSim, PartitionedNetworkSim, SimResult};
 use crate::snn::{NetDef, SpikeTrain};
 use crate::uarch::{self, UarchConfig};
 use crate::util::rng::Rng;
@@ -65,6 +66,51 @@ impl UarchSummary {
     }
 }
 
+/// Partition side of an evaluated point: the lattice spec that was
+/// applied (chip count post-clamping, chosen cuts, link knobs) plus the
+/// link stall totals the replay attributed to the boundaries. Present
+/// only on points evaluated through the partition path
+/// ([`evaluate_partition_cached`] / `explore --partition`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionSummary {
+    /// Requested chip count — the lattice coordinate as proposed, so
+    /// checkpoint keys round-trip exactly. The *effective* count after
+    /// clamping to the layer count is `cuts.len() + 1`.
+    pub chips: usize,
+    pub cut_choice: usize,
+    /// Chosen cut positions: the global layer index each chip after the
+    /// first starts at.
+    pub cuts: Vec<usize>,
+    pub link_latency: u64,
+    pub link_bandwidth: u64,
+    pub link_fifo_depth: usize,
+    /// Total cycles of the same workload on the single-chip analytic
+    /// engine — the reference the link penalty is measured from.
+    pub single_chip_cycles: u64,
+    /// Cycles producers spent holding finished steps for link credits.
+    pub link_credit_wait: u64,
+    /// Latency + serialization cycles the links added consumer-side.
+    pub link_serialization: u64,
+}
+
+impl PartitionSummary {
+    pub fn spec(&self) -> PartitionSpec {
+        PartitionSpec {
+            chips: self.chips,
+            cut_choice: self.cut_choice,
+            link: LinkConfig {
+                latency: self.link_latency,
+                bandwidth: self.link_bandwidth,
+                fifo_depth: self.link_fifo_depth,
+            },
+        }
+    }
+
+    pub fn link_stall_cycles(&self) -> u64 {
+        self.link_credit_wait + self.link_serialization
+    }
+}
+
 /// One evaluated design point.
 #[derive(Debug, Clone)]
 pub struct DsePoint {
@@ -80,6 +126,8 @@ pub struct DsePoint {
     pub layer_activity: Vec<f64>,
     /// Uarch config + stall breakdown when evaluated event-driven.
     pub uarch: Option<UarchSummary>,
+    /// Partition spec + link stall totals when evaluated multi-chip.
+    pub partition: Option<PartitionSummary>,
 }
 
 impl DsePoint {
@@ -174,6 +222,7 @@ fn eval_inner(
         latency_us: sim_result.total_cycles as f64 / cfg.hw.clock_hz * 1e6,
         layer_activity: sim_result.mean_activity(),
         uarch: None,
+        partition: None,
     }
 }
 
@@ -250,6 +299,89 @@ fn assemble_uarch_point(
             fifo_full,
             port_wait,
             bank_conflict,
+        }),
+        partition: None,
+    }
+}
+
+/// Evaluate one `(HwConfig, PartitionSpec)` pair through the pipelined
+/// multi-chip simulator, on the same calibrated activity workload as
+/// [`EvalMode::Activity`] (same `seed` ⇒ same per-step costs). With one
+/// chip and an ideal link the point's `cycles` equal the plain activity
+/// evaluation's exactly (the partition golden contract); finite links
+/// only add. Resources are the plan's aggregate: every chip plus the
+/// link FIFO/flow-control hardware, so the frontier trades chip-count
+/// area against link stall latency.
+pub fn evaluate_partition_cached(
+    net: &NetDef,
+    hw: &HwConfig,
+    spec: &PartitionSpec,
+    seed: u64,
+    costs: &CostModel,
+    cache: &EstimateCache,
+) -> DsePoint {
+    let single = single_chip_reference(net, hw, seed, costs, cache);
+    assemble_partition_point(net, hw, spec, seed, costs, &single)
+}
+
+/// The partition-independent half: the plain single-chip activity
+/// evaluation every spec at this `(net, hw, seed)` is measured against.
+fn single_chip_reference(
+    net: &NetDef,
+    hw: &HwConfig,
+    seed: u64,
+    costs: &CostModel,
+    cache: &EstimateCache,
+) -> DsePoint {
+    evaluate_cached(net, hw, &EvalMode::Activity { seed }, costs, cache)
+}
+
+fn assemble_partition_point(
+    net: &NetDef,
+    hw: &HwConfig,
+    spec: &PartitionSpec,
+    seed: u64,
+    costs: &CostModel,
+    single: &DsePoint,
+) -> DsePoint {
+    let cfg = ExperimentConfig::new(net.clone(), hw.clone()).expect("invalid config");
+    let plan = partition_for_spec(&cfg, spec)
+        .expect("lattice specs are always feasible under an unbounded budget");
+    let cuts = plan.cuts.clone();
+    let resources = plan.aggregate;
+    // the exact workload eval_inner prices (same seed ⇒ same sample)
+    let model = ActivityModel::for_net(net);
+    let mut rng = Rng::new(seed);
+    let activity = model.sample(net.t_steps, &mut rng);
+    let mut sim = PartitionedNetworkSim::cost_only(&cfg, plan, costs.clone())
+        .expect("chip sub-configs sliced from a valid config are valid");
+    let sim_result = sim.run_activity(&activity);
+    let (credit_wait, serialization) = sim
+        .link_stats()
+        .iter()
+        .fold((0u64, 0u64), |(c, s), ls| (c + ls.credit_wait, s + ls.serialization));
+    let energy = EnergyModel::default().inference_energy(&resources, &sim_result, cfg.hw.clock_hz);
+    DsePoint {
+        net: net.name.clone(),
+        label: format!("{}·{}", hw.label(), spec.label()),
+        lhr: hw.lhr.clone(),
+        cycles: sim_result.total_cycles,
+        serial_cycles: sim_result.serial_cycles,
+        resources,
+        energy_mj: energy.total_mj(),
+        latency_us: sim_result.total_cycles as f64 / cfg.hw.clock_hz * 1e6,
+        layer_activity: sim_result.mean_activity(),
+        uarch: None,
+        partition: Some(PartitionSummary {
+            chips: spec.chips,
+            cut_choice: spec.cut_choice,
+            cuts,
+            link_latency: spec.link.latency,
+            link_bandwidth: spec.link.bandwidth,
+            link_fifo_depth: spec.link.fifo_depth,
+            single_chip_cycles: single.cycles,
+            link_credit_wait: credit_wait,
+            link_serialization: serialization,
         }),
     }
 }
@@ -341,6 +473,42 @@ pub fn sweep_uarch_cached(
     sweep_with(configs, n_threads, |(hw, ucfg)| {
         let rec = &recordings[index[&key_of(hw)]];
         assemble_uarch_point(net, hw, ucfg, rec, cache)
+    })
+}
+
+/// [`sweep_cached`] over `(HwConfig, PartitionSpec)` pairs: the batch
+/// evaluator behind `explore --partition`. Same work-stealing dispatch,
+/// same thread-count-invariant results. The single-chip reference
+/// evaluation — shared by every spec at the same hardware point — runs
+/// once per *distinct* `HwConfig`, in parallel; only the pass pipeline
+/// and the partitioned replay run per pair.
+pub fn sweep_partition_cached(
+    net: &NetDef,
+    configs: &[(HwConfig, PartitionSpec)],
+    seed: u64,
+    costs: &CostModel,
+    n_threads: usize,
+    cache: &EstimateCache,
+) -> Vec<DsePoint> {
+    type RefKey = (Vec<usize>, Vec<usize>, usize);
+    let key_of = |hw: &HwConfig| -> RefKey {
+        (hw.lhr.clone(), hw.mem_blocks.clone(), hw.penc_width)
+    };
+    let mut index: HashMap<RefKey, usize> = HashMap::new();
+    let mut uniq: Vec<&HwConfig> = Vec::new();
+    for (hw, _) in configs {
+        let k = key_of(hw);
+        if !index.contains_key(&k) {
+            index.insert(k, uniq.len());
+            uniq.push(hw);
+        }
+    }
+    let references: Vec<DsePoint> = sweep_with(&uniq, n_threads, |hw| {
+        single_chip_reference(net, hw, seed, costs, cache)
+    });
+    sweep_with(configs, n_threads, |(hw, spec)| {
+        let single = &references[index[&key_of(hw)]];
+        assemble_partition_point(net, hw, spec, seed, costs, single)
     })
 }
 
@@ -614,6 +782,118 @@ mod tests {
                 assert_eq!(a.cycles, b.cycles);
                 assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits());
                 assert_eq!(a.uarch, b.uarch);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_single_chip_ideal_reproduces_the_activity_eval() {
+        // the partition golden contract at the DSE layer: one chip +
+        // ideal link prices the exact same workload at the exact same
+        // cycle count (and the same aggregate area — no link hardware)
+        let net = table1_net("net1");
+        let hw = HwConfig::with_lhr(vec![4, 8, 8]);
+        let costs = CostModel::default();
+        let cache = EstimateCache::new();
+        let analytic = evaluate(&net, &hw, &EvalMode::Activity { seed: 42 }, &costs);
+        let ideal = evaluate_partition_cached(
+            &net,
+            &hw,
+            &PartitionSpec::single_chip(),
+            42,
+            &costs,
+            &cache,
+        );
+        assert_eq!(ideal.cycles, analytic.cycles);
+        assert_eq!(ideal.serial_cycles, analytic.serial_cycles);
+        assert_eq!(ideal.resources, analytic.resources);
+        assert_eq!(ideal.energy_mj.to_bits(), analytic.energy_mj.to_bits());
+        let p = ideal.partition.as_ref().unwrap();
+        assert_eq!(p.chips, 1);
+        assert!(p.cuts.is_empty());
+        assert_eq!(p.single_chip_cycles, analytic.cycles);
+        assert_eq!(p.link_stall_cycles(), 0);
+    }
+
+    #[test]
+    fn finite_partition_point_is_slower_and_costlier_than_single_chip() {
+        let net = table1_net("net1");
+        let hw = HwConfig::with_lhr(vec![4, 8, 8]);
+        let costs = CostModel::default();
+        let cache = EstimateCache::new();
+        let spec = PartitionSpec {
+            chips: 2,
+            cut_choice: 0,
+            link: LinkConfig { latency: 32, bandwidth: 4, fifo_depth: 1 },
+        };
+        let p = evaluate_partition_cached(&net, &hw, &spec, 42, &costs, &cache);
+        let single = evaluate(&net, &hw, &EvalMode::Activity { seed: 42 }, &costs);
+        assert!(p.cycles > single.cycles, "finite links must cost cycles");
+        assert!(p.resources.lut > single.resources.lut, "link hardware must cost area");
+        let s = p.partition.as_ref().unwrap();
+        assert_eq!(s.chips, 2);
+        assert_eq!(s.cuts.len(), 1);
+        assert_eq!(s.single_chip_cycles, single.cycles);
+        assert!(s.link_serialization > 0);
+        assert_eq!(s.spec(), spec);
+    }
+
+    #[test]
+    fn partition_spec_clamps_on_shallow_nets_instead_of_failing() {
+        // net1 has 3 layers; a 3-chip lattice coordinate on a 1-layer
+        // net must degrade to fewer chips, not error
+        let net = crate::snn::fc_net("t1", "mnist", &[32, 16], 4, 2, 0.9, 5);
+        let hw = HwConfig::with_lhr(vec![1]);
+        let costs = CostModel::default();
+        let cache = EstimateCache::new();
+        let spec = PartitionSpec { chips: 3, cut_choice: 1, link: LinkConfig::ideal() };
+        let p = evaluate_partition_cached(&net, &hw, &spec, 7, &costs, &cache);
+        let s = p.partition.as_ref().unwrap();
+        assert_eq!(s.chips, 3, "the summary keeps the lattice coordinate");
+        assert!(s.cuts.is_empty(), "clamped to one effective chip");
+        let plain = evaluate(&net, &hw, &EvalMode::Activity { seed: 7 }, &costs);
+        assert_eq!(p.cycles, plain.cycles);
+    }
+
+    #[test]
+    fn partition_sweep_identical_across_thread_counts() {
+        let net = table1_net("net1");
+        let costs = CostModel::default();
+        let configs: Vec<(HwConfig, PartitionSpec)> = [
+            (vec![1, 1, 1], PartitionSpec::single_chip()),
+            (
+                vec![4, 8, 8],
+                PartitionSpec {
+                    chips: 2,
+                    cut_choice: 0,
+                    link: LinkConfig { latency: 8, bandwidth: 16, fifo_depth: 2 },
+                },
+            ),
+            (
+                vec![4, 8, 8],
+                PartitionSpec {
+                    chips: 3,
+                    cut_choice: 1,
+                    link: LinkConfig { latency: 32, bandwidth: 64, fifo_depth: 8 },
+                },
+            ),
+        ]
+        .into_iter()
+        .map(|(lhr, s)| (HwConfig::with_lhr(lhr), s))
+        .collect();
+        let serial: Vec<DsePoint> = {
+            let cache = EstimateCache::new();
+            sweep_partition_cached(&net, &configs, 42, &costs, 1, &cache)
+        };
+        for threads in [2, 8] {
+            let cache = EstimateCache::new();
+            let par = sweep_partition_cached(&net, &configs, 42, &costs, threads, &cache);
+            assert_eq!(par.len(), serial.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.cycles, b.cycles);
+                assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits());
+                assert_eq!(a.partition, b.partition);
             }
         }
     }

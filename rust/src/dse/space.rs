@@ -121,6 +121,63 @@ pub fn split_uarch_point(point: &[usize]) -> (Vec<usize>, crate::uarch::UarchCon
     )
 }
 
+/// Candidate chip counts for `explore --partition` (1 = single-chip, the
+/// golden baseline the partitioned engine must reproduce byte-exactly).
+pub const PARTITION_CHIP_CHOICES: [usize; 3] = [1, 2, 3];
+
+/// Candidate cut-choice indices for `explore --partition`: positions in
+/// the grouping pass's feasible-cut list (sorted by max per-chip LUT),
+/// taken modulo its length so every coordinate stays evaluable.
+pub const PARTITION_CUT_CHOICES: [usize; 2] = [0, 1];
+
+/// Candidate inter-chip link latencies in cycles (0 = ideal wire).
+pub const PARTITION_LINK_LATENCY_CHOICES: [u64; 3] = [0, 8, 32];
+
+/// Candidate link bandwidths in spikes/cycle (0 = infinite, no
+/// serialization).
+pub const PARTITION_LINK_BANDWIDTH_CHOICES: [u64; 3] = [0, 16, 64];
+
+/// Candidate link FIFO depths in buffered time steps (0 = unbounded, no
+/// back-pressure).
+pub const PARTITION_LINK_FIFO_CHOICES: [usize; 3] = [0, 2, 8];
+
+/// The five partition axes appended to the LHR lattice when
+/// `--partition` is on: chip count, cut choice, link latency, link
+/// bandwidth, link FIFO depth (in that order —
+/// [`crate::partition::PartitionSpec`] fields map positionally). The
+/// first choice of every axis is the single-chip ideal baseline.
+pub fn partition_dims() -> Vec<Vec<usize>> {
+    vec![
+        PARTITION_CHIP_CHOICES.to_vec(),
+        PARTITION_CUT_CHOICES.to_vec(),
+        PARTITION_LINK_LATENCY_CHOICES.iter().map(|&v| v as usize).collect(),
+        PARTITION_LINK_BANDWIDTH_CHOICES.iter().map(|&v| v as usize).collect(),
+        PARTITION_LINK_FIFO_CHOICES.to_vec(),
+    ]
+}
+
+/// Split an extended lattice point (produced under [`partition_dims`])
+/// into its LHR prefix and the [`crate::partition::PartitionSpec`] tail.
+pub fn split_partition_point(point: &[usize]) -> (Vec<usize>, crate::partition::PartitionSpec) {
+    assert!(
+        point.len() >= 5,
+        "partition lattice point needs at least the five partition dims"
+    );
+    let (lhr, tail) = point.split_at(point.len() - 5);
+    (
+        lhr.to_vec(),
+        crate::partition::PartitionSpec {
+            chips: tail[0],
+            cut_choice: tail[1],
+            link: crate::partition::LinkConfig {
+                latency: tail[2] as u64,
+                bandwidth: tail[3] as u64,
+                fifo_depth: tail[4],
+            },
+        },
+    )
+}
+
 /// The exact LHR sets of the paper's Table I (TW rows), per network.
 /// Conv networks (net5) get an implicit LHR 1 for the output layer, which
 /// the paper's 4-tuples leave fixed.
@@ -229,6 +286,29 @@ mod tests {
         assert_eq!(ucfg.fifo_depth, 8);
         assert_eq!(ucfg.mem_ports, 2);
         assert_eq!(ucfg.banks, 1);
+    }
+
+    #[test]
+    fn partition_dims_split_roundtrips() {
+        let net = fc_net("t", "mnist", &[64, 16, 8], 4, 2, 0.9, 5);
+        let mut dims = lattice_dims(&net, 16);
+        let n_param = dims.len();
+        dims.extend(partition_dims());
+        assert_eq!(dims.len(), n_param + 5);
+        // first point of every dim = fully-parallel LHR + single-chip ideal
+        let first: Vec<usize> = dims.iter().map(|d| d[0]).collect();
+        let (lhr, spec) = split_partition_point(&first);
+        assert_eq!(lhr, vec![1; n_param]);
+        assert!(spec.is_single_chip_ideal());
+        // a finite tail maps positionally: chips, cut, latency, bw, depth
+        let point = vec![2, 4, 3, 1, 8, 16, 2];
+        let (lhr, spec) = split_partition_point(&point);
+        assert_eq!(lhr, vec![2, 4]);
+        assert_eq!(spec.chips, 3);
+        assert_eq!(spec.cut_choice, 1);
+        assert_eq!(spec.link.latency, 8);
+        assert_eq!(spec.link.bandwidth, 16);
+        assert_eq!(spec.link.fifo_depth, 2);
     }
 
     #[test]

@@ -24,6 +24,12 @@
 //!   n-objective Pareto frontiers, the checkpointable [`dse::Explorer`],
 //!   constraint-driven [`dse::auto_search`], and paper-shaped reports).
 //!
+//! Scaling beyond one device: [`partition`] (the grouping → placement →
+//! link-lowering pass pipeline that maps layer groups onto multiple chip
+//! instances) and [`sim::PartitionedNetworkSim`] (the pipelined
+//! multi-chip engine, byte-identical to the single-chip engine at one
+//! chip with ideal links).
+//!
 //! Cross-cutting: [`data`] (calibrated activity models), [`baselines`]
 //! (prior-work anchors, the sparsity-oblivious latency bound, and the
 //! scalar reference step the optimized hot path is fuzzed against),
@@ -66,6 +72,7 @@ pub mod bench;
 pub mod config;
 pub mod data;
 pub mod dse;
+pub mod partition;
 pub mod resources;
 pub mod runtime;
 pub mod sim;

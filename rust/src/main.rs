@@ -6,6 +6,7 @@
 //!   dse          LHR sweep with Pareto frontier (Fig. 6 data)
 //!   explore      multi-objective Pareto exploration with checkpoint/resume
 //!   uarch        event-driven microarchitecture simulation (FIFO/port/bank stalls)
+//!   partition    multi-chip partitioning: pass pipeline + pipelined simulation
 //!   serve        sharded dynamic-batching serve runtime under synthetic load
 //!   bench        fixed-seed throughput harness emitting BENCH_sim.json
 //!   table1       reproduce the paper's Table I rows
@@ -25,7 +26,7 @@ use snn_dse::util::{commas, kfmt};
 use snn_dse::{runtime, validate};
 use std::path::PathBuf;
 
-const USAGE: &str = "snn-dse <simulate|resources|dse|explore|uarch|serve|bench|table1|sweep-t-pcr|validate|infer|firing|generate|auto|dynamic> [options]
+const USAGE: &str = "snn-dse <simulate|resources|dse|explore|uarch|partition|serve|bench|table1|sweep-t-pcr|validate|infer|firing|generate|auto|dynamic> [options]
   common options:
     --net <net1..net5>          network (default net1)
     --lhr <a,b,c,...>           per-layer logical-to-hardware ratios
@@ -50,6 +51,10 @@ const USAGE: &str = "snn-dse <simulate|resources|dse|explore|uarch|serve|bench|t
     --uarch                     extend the lattice with the microarchitecture
                                 dimensions (FIFO depth, memory ports, banks)
                                 and evaluate points event-driven
+    --partition                 extend the lattice with the multi-chip
+                                partitioning dimensions (chips, cut choice,
+                                link latency/bandwidth/FIFO depth); mutually
+                                exclusive with --uarch
     --csv <path>                dump the frontier as CSV
   uarch options:
     --net <net1..net5>          network (default net1)
@@ -61,6 +66,21 @@ const USAGE: &str = "snn-dse <simulate|resources|dse|explore|uarch|serve|bench|t
                                 default 2)
     --smoke                     verify the ideal preset against the analytic
                                 engine and print a tiny stall table (CI)
+  partition options:
+    --chips <n>                 chip instances to split the net across
+                                (default 2; clamped to the layer count)
+    --cut <n>                   which feasible cut to take, ranked by max
+                                per-chip LUT then lexicographic (default 0)
+    --link-latency <n>          inter-chip link latency in cycles (default 8)
+    --link-bandwidth <n>        spikes per cycle per link (0 = unlimited,
+                                default 16)
+    --link-fifo <n>             link FIFO depth in timestep slots
+                                (0 = unbounded, default 2)
+    --chip-lut <f>              per-chip LUT budget for the grouping pass
+    --chip-reg <f>              per-chip REG budget
+    --chip-bram <f>             per-chip BRAM36 budget
+    --smoke                     verify single-chip + ideal-link plans against
+                                the analytic engine byte-for-byte (CI)
   serve options:
     --shards <n>                engine replicas / worker threads (default 4)
     --max-batch <n>             dynamic-batching cap per dispatch (default 8)
@@ -109,6 +129,7 @@ fn main() {
         "dse" => cmd_dse(&args),
         "explore" => cmd_explore(&args),
         "uarch" => cmd_uarch(&args),
+        "partition" => cmd_partition(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
         "table1" => cmd_table1(&args),
@@ -237,6 +258,7 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
         checkpoint: args.get("checkpoint").map(PathBuf::from),
         checkpoint_every: args.usize_or("checkpoint-every", 5),
         uarch: args.flag("uarch"),
+        partition: args.flag("partition"),
     };
     let costs = CostModel::default();
     let mut explorer = snn_dse::dse::Explorer::resume_or_new(&net, cfg)?;
@@ -339,6 +361,166 @@ fn cmd_uarch(args: &Args) -> anyhow::Result<()> {
         );
         println!("SMOKE OK (ideal == analytic: {} cycles; gap {} <= stalls {})",
             commas(ideal.total_cycles), commas(gap), commas(finite.stall_cycles()));
+    }
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> anyhow::Result<()> {
+    use snn_dse::data::ActivityModel;
+    use snn_dse::partition::{partition, ChipBudget, LinkConfig, PartitionOptions};
+    use snn_dse::sim::PartitionedNetworkSim;
+    use snn_dse::util::rng::Rng;
+
+    let net = net_of(args);
+    let hw = hw_of(args, &net);
+    let seed = args.usize_or("seed", 42) as u64;
+    let budget_of = |key: &str| -> Option<f64> {
+        args.get(key).map(|v| {
+            v.parse::<f64>()
+                .unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'"))
+        })
+    };
+    let opts = PartitionOptions {
+        chips: args.usize_or("chips", 2),
+        cut_choice: args.usize_or("cut", 0),
+        budget: ChipBudget {
+            lut: budget_of("chip-lut"),
+            reg: budget_of("chip-reg"),
+            bram_36k: budget_of("chip-bram"),
+        },
+        link: LinkConfig {
+            latency: args.usize_or("link-latency", 8) as u64,
+            bandwidth: args.usize_or("link-bandwidth", 16) as u64,
+            fifo_depth: args.usize_or("link-fifo", 2),
+        },
+    };
+    let cfg = ExperimentConfig::new(net.clone(), hw.clone())?;
+    let costs = CostModel::default();
+    let plan = partition(&cfg, &opts)?;
+
+    println!("network   : {} ({})", net.name, net.topology_string());
+    println!("LHR       : {}", hw.label());
+    println!(
+        "partition : {} chip(s), cut {} of {} feasible, link {}",
+        plan.chips(),
+        opts.cut_choice,
+        plan.feasible_cuts,
+        opts.link.label()
+    );
+    println!("cuts      : {:?} (layer indices starting each chip after the first)", plan.cuts);
+    println!("per-chip resources:");
+    for (c, ((start, end), r)) in plan.groups.iter().zip(&plan.per_chip).enumerate() {
+        println!(
+            "  chip {c}: layers {start}..={end}  LUT {:>9}  REG {:>9}  BRAM {:>5}  DSP {:>5}",
+            kfmt(r.lut),
+            kfmt(r.reg),
+            r.bram_36k as u64,
+            r.dsp as u64
+        );
+    }
+    for l in &plan.links {
+        let lr = l.resources();
+        println!(
+            "  link {}→{}: boundary layer {}, {} bits wide, {}  (+{} LUT, +{} REG, +{} BRAM)",
+            l.from_chip,
+            l.to_chip,
+            l.boundary_layer,
+            l.bits,
+            l.cfg.label(),
+            kfmt(lr.lut),
+            kfmt(lr.reg),
+            lr.bram_36k as u64
+        );
+    }
+    println!(
+        "  TOTAL : LUT {:>9}  REG {:>9}  BRAM {:>5}  DSP {:>5}",
+        kfmt(plan.aggregate.lut),
+        kfmt(plan.aggregate.reg),
+        plan.aggregate.bram_36k as u64,
+        plan.aggregate.dsp as u64
+    );
+    println!("netlist   :");
+    for line in plan.netlist.summary().lines() {
+        println!("  {line}");
+    }
+
+    // price the same calibrated workload three ways: analytic single
+    // chip, the plan with ideal links, and the plan as configured
+    let model = ActivityModel::for_net(&net);
+    let mut rng = Rng::new(seed);
+    let activity = model.sample(net.t_steps, &mut rng);
+    let analytic = dse::evaluate(&net, &hw, &EvalMode::Activity { seed }, &CostModel::default());
+    let ideal_opts = PartitionOptions { link: LinkConfig::ideal(), ..opts };
+    let ideal_plan = partition(&cfg, &ideal_opts)?;
+    let mut ideal_sim = PartitionedNetworkSim::cost_only(&cfg, ideal_plan, costs.clone())?;
+    let ideal = ideal_sim.run_activity(&activity);
+    let mut finite_sim = PartitionedNetworkSim::cost_only(&cfg, plan, costs.clone())?;
+    let finite = finite_sim.run_activity(&activity);
+
+    println!("single    : {} cycles (analytic one-chip engine)", commas(analytic.cycles));
+    println!("ideal link: {} cycles (must match the single-chip engine)", commas(ideal.total_cycles));
+    let gap = finite.total_cycles - ideal.total_cycles;
+    println!(
+        "finite    : {} cycles (+{} from links, x{:.3} vs ideal)",
+        commas(finite.total_cycles),
+        commas(gap),
+        finite.total_cycles as f64 / ideal.total_cycles.max(1) as f64
+    );
+    println!("link stall breakdown:");
+    println!(
+        "  {:>8} {:>10} {:>12} {:>14} {:>9}",
+        "boundary", "spikes", "credit wait", "serialization", "max occ"
+    );
+    for ls in finite_sim.link_stats() {
+        println!(
+            "  {:>8} {:>10} {:>12} {:>14} {:>9}",
+            ls.boundary_layer,
+            commas(ls.spikes),
+            commas(ls.credit_wait),
+            commas(ls.serialization),
+            ls.max_occupancy
+        );
+    }
+
+    if args.flag("smoke") {
+        // golden reconciliation, executed in CI: any plan with ideal
+        // links — single- or multi-chip — must price the workload at
+        // exactly the analytic engine's cycles
+        anyhow::ensure!(
+            ideal.total_cycles == analytic.cycles,
+            "ideal-link partition {} cycles != analytic engine {} cycles",
+            ideal.total_cycles,
+            analytic.cycles
+        );
+        let single_plan = partition(&cfg, &PartitionOptions::single_chip())?;
+        anyhow::ensure!(single_plan.chips() == 1, "single-chip preset produced {} chips", single_plan.chips());
+        let mut single_sim = PartitionedNetworkSim::cost_only(&cfg, single_plan, costs.clone())?;
+        let single = single_sim.run_activity(&activity);
+        anyhow::ensure!(
+            single.total_cycles == analytic.cycles,
+            "single-chip partition {} cycles != analytic engine {} cycles",
+            single.total_cycles,
+            analytic.cycles
+        );
+        anyhow::ensure!(
+            finite.total_cycles >= ideal.total_cycles,
+            "finite links ran faster than ideal links"
+        );
+        let stalls: u64 = finite_sim
+            .link_stats()
+            .iter()
+            .map(|ls| ls.credit_wait + ls.serialization)
+            .sum();
+        anyhow::ensure!(
+            gap == 0 || stalls > 0,
+            "cycle gap {gap} with no reported link stalls"
+        );
+        println!(
+            "SMOKE OK (ideal == analytic: {} cycles; finite +{} with {} stall cycles attributed)",
+            commas(analytic.cycles),
+            commas(gap),
+            commas(stalls)
+        );
     }
     Ok(())
 }

@@ -1,0 +1,875 @@
+//! Multi-accelerator partitioning — a compiler-pass pipeline from a
+//! network topology to a pipelined multi-chip design.
+//!
+//! The paper's DSE sizes *one* accelerator instance per network, but its
+//! own scaling argument (layer-wise LHR tuning under resource budgets)
+//! runs into single-device LUT/BRAM ceilings on deep or wide nets. This
+//! module maps contiguous layer groups onto multiple accelerator
+//! instances ("chips") connected by credit-based spike links, structured
+//! as a pass pipeline:
+//!
+//! ```text
+//!   NetDef x HwConfig
+//!        |
+//!        v
+//!   [grouping]       enumerate contiguous cut-points under per-chip
+//!        |           LUT/REG/BRAM budgets (resources::estimate)
+//!        v
+//!   [placement]      assign layer groups to chip instances (dataflow
+//!        |           order: group g -> chip g)
+//!        v
+//!   [link-lowering]  materialize inter-chip spike channels as
+//!        |           credit-based bounded FIFOs (uarch::SpikeFifo
+//!        v           semantics) in a multi-chip arch::Netlist
+//!   PartitionPlan
+//! ```
+//!
+//! Each [`Pass`] validates its own output ([`Pass::validate`]) before the
+//! [`PassManager`] hands the context to the next pass — the same
+//! stage-then-check discipline `dse/explore.rs` applies between explore
+//! rounds.
+//!
+//! **Determinism contract.** Like [`crate::uarch::UarchConfig::ideal`],
+//! [`LinkConfig::ideal`] (zero latency, infinite bandwidth, unbounded
+//! FIFO) makes the partitioned simulator collapse to the analytic
+//! single-chip recurrence: with one chip and ideal links,
+//! [`crate::sim::PartitionedNetworkSim`] is byte-identical to
+//! [`crate::sim::NetworkSim`].
+
+use crate::arch::netlist::{Instance, Netlist};
+use crate::config::{ExperimentConfig, HwConfig};
+use crate::resources::{estimate, ResourceEstimate, Resources};
+use crate::snn::NetDef;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Buffer depth charged for an unbounded (`fifo_depth == 0`) link when
+/// sizing hardware — the same convention as
+/// [`crate::uarch::IDEAL_FIFO_DEPTH`]: "unbounded" is a modeling ideal,
+/// the resource adder still has to pick a real buffer.
+pub const LINK_IDEAL_FIFO_DEPTH: usize = 64;
+
+// ---- link model -------------------------------------------------------------
+
+/// One inter-chip spike channel's parameters. Follows the
+/// [`crate::uarch::UarchConfig`] 0-sentinel convention: `0` means
+/// "ideal/unbounded" on every knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkConfig {
+    /// Fixed cycles per boundary crossing (wire + SERDES). 0 = ideal wire.
+    pub latency: u64,
+    /// Spikes transferred per cycle. 0 = infinite (no serialization).
+    pub bandwidth: u64,
+    /// Buffered time steps in the link FIFO. 0 = unbounded (no
+    /// back-pressure), exactly like [`crate::uarch::SpikeFifo`] depth 0.
+    pub fifo_depth: usize,
+}
+
+impl LinkConfig {
+    /// The ideal link: the partitioned engine degenerates to the analytic
+    /// single-chip recurrence (the golden-equivalence contract).
+    pub fn ideal() -> Self {
+        LinkConfig { latency: 0, bandwidth: 0, fifo_depth: 0 }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        self.latency == 0 && self.bandwidth == 0 && self.fifo_depth == 0
+    }
+
+    /// Compact label like `l8/w16/d2`; ideal knobs render as ∞-style
+    /// markers (`l0/w∞/d∞`), mirroring `UarchConfig::label`.
+    pub fn label(&self) -> String {
+        let knob = |v: u64| -> String {
+            if v == 0 {
+                "∞".into()
+            } else {
+                v.to_string()
+            }
+        };
+        format!(
+            "l{}/w{}/d{}",
+            self.latency,
+            knob(self.bandwidth),
+            knob(self.fifo_depth as u64)
+        )
+    }
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        LinkConfig::ideal()
+    }
+}
+
+// ---- budgets and options ----------------------------------------------------
+
+/// Per-chip resource ceiling. `None` on a component means unconstrained.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChipBudget {
+    pub lut: Option<f64>,
+    pub reg: Option<f64>,
+    pub bram_36k: Option<f64>,
+}
+
+impl ChipBudget {
+    pub fn unbounded() -> Self {
+        ChipBudget::default()
+    }
+
+    /// First budget component `r` violates, as a human-readable clause
+    /// (`"LUT 61killion > budget 1000"` style), or `None` when `r` fits.
+    pub fn violation(&self, r: &Resources) -> Option<String> {
+        let over = |name: &str, used: f64, cap: Option<f64>| -> Option<String> {
+            match cap {
+                Some(c) if used > c => Some(format!("{name} {used:.0} > budget {c:.0}")),
+                _ => None,
+            }
+        };
+        over("LUT", r.lut, self.lut)
+            .or_else(|| over("REG", r.reg, self.reg))
+            .or_else(|| over("BRAM", r.bram_36k, self.bram_36k))
+    }
+
+    pub fn fits(&self, r: &Resources) -> bool {
+        self.violation(r).is_none()
+    }
+}
+
+/// Full partitioner input: how many chips, which feasible cut to take,
+/// the per-chip budget and the link parameters.
+#[derive(Debug, Clone)]
+pub struct PartitionOptions {
+    /// Number of chip instances (>= 1, <= layer count).
+    pub chips: usize,
+    /// Index into the feasible cut list (sorted by max per-chip LUT,
+    /// then lexicographic cut positions), taken modulo the list length —
+    /// so every lattice coordinate maps to *some* feasible cut.
+    pub cut_choice: usize,
+    pub budget: ChipBudget,
+    pub link: LinkConfig,
+}
+
+impl PartitionOptions {
+    pub fn single_chip() -> Self {
+        PartitionOptions {
+            chips: 1,
+            cut_choice: 0,
+            budget: ChipBudget::unbounded(),
+            link: LinkConfig::ideal(),
+        }
+    }
+}
+
+/// The DSE-facing compact spec: just the lattice coordinates (chip count,
+/// cut choice, link knobs), no budget. [`PartitionSpec::options_for`]
+/// clamps the chip count to the layer count so every lattice point stays
+/// evaluable on shallow nets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionSpec {
+    pub chips: usize,
+    pub cut_choice: usize,
+    pub link: LinkConfig,
+}
+
+impl PartitionSpec {
+    pub fn single_chip() -> Self {
+        PartitionSpec { chips: 1, cut_choice: 0, link: LinkConfig::ideal() }
+    }
+
+    /// True for the golden baseline: one chip, ideal link — the
+    /// configuration contracted to reproduce the single-chip engine.
+    pub fn is_single_chip_ideal(&self) -> bool {
+        self.chips <= 1 && self.link.is_ideal()
+    }
+
+    /// Label like `P2@0·l8/w16/d2`.
+    pub fn label(&self) -> String {
+        format!("P{}@{}·{}", self.chips, self.cut_choice, self.link.label())
+    }
+
+    /// Expand to full [`PartitionOptions`] for a net with `n_layers`
+    /// layers (chip count clamped, unbounded budget).
+    pub fn options_for(&self, n_layers: usize) -> PartitionOptions {
+        PartitionOptions {
+            chips: self.chips.clamp(1, n_layers.max(1)),
+            cut_choice: self.cut_choice,
+            budget: ChipBudget::unbounded(),
+            link: self.link,
+        }
+    }
+}
+
+// ---- plan -------------------------------------------------------------------
+
+/// One lowered inter-chip spike channel.
+#[derive(Debug, Clone)]
+pub struct LinkSpec {
+    pub from_chip: usize,
+    pub to_chip: usize,
+    /// Global index of the producing layer (the cut sits after it).
+    pub boundary_layer: usize,
+    /// Spike-bus width: the producing layer's output bits.
+    pub bits: usize,
+    pub cfg: LinkConfig,
+}
+
+impl LinkSpec {
+    /// FIFO + flow-control hardware the link adds to the aggregate
+    /// estimate. Monotone in buffer depth and bus width; an unbounded
+    /// FIFO is charged at [`LINK_IDEAL_FIFO_DEPTH`] steps.
+    pub fn resources(&self) -> Resources {
+        let depth = if self.cfg.fifo_depth == 0 {
+            LINK_IDEAL_FIFO_DEPTH
+        } else {
+            self.cfg.fifo_depth
+        } as f64;
+        let bits = self.bits as f64;
+        Resources {
+            // credit counters, serializer mux, handshake FSM
+            lut: 48.0 + bits / 8.0,
+            // tx/rx hold registers + credit state
+            reg: 2.0 * bits + 16.0,
+            // step buffer: depth time steps of `bits`-wide spike words
+            bram_36k: (depth * bits / (36.0 * 1024.0)).ceil(),
+            dsp: 0.0,
+        }
+    }
+}
+
+/// Output of the pass pipeline: the chosen grouping, lowered links,
+/// per-chip and aggregate resource totals, and the multi-chip netlist.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    pub net: String,
+    /// Half-open global layer ranges, one per chip, covering `0..L`.
+    pub groups: Vec<(usize, usize)>,
+    /// Cut positions (each `c` splits layers `..c` / `c..`).
+    pub cuts: Vec<usize>,
+    /// How many cuts satisfied the budget (the grouping pass's search
+    /// space for `cut_choice`).
+    pub feasible_cuts: usize,
+    pub links: Vec<LinkSpec>,
+    /// Per-chip resource totals (summed layer estimates).
+    pub per_chip: Vec<Resources>,
+    /// All chips plus all link hardware.
+    pub aggregate: Resources,
+    pub netlist: Netlist,
+}
+
+impl PartitionPlan {
+    pub fn chips(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+/// Derive chip `chip_index`'s sub-configuration: the group's layer slice
+/// as its own [`NetDef`] (input bits re-anchored to the upstream
+/// boundary) with the matching slice of the LHR / memory-block knobs.
+pub fn chip_config(
+    cfg: &ExperimentConfig,
+    group: (usize, usize),
+    chip_index: usize,
+) -> Result<ExperimentConfig> {
+    let (start, end) = group;
+    let net = &cfg.net;
+    assert!(start < end && end <= net.layers.len(), "malformed group {group:?}");
+    let input_bits = if start == 0 {
+        net.input_bits
+    } else {
+        net.layers[start - 1].output_bits()
+    };
+    let chip_net = NetDef {
+        name: format!("{}.chip{}", net.name, chip_index),
+        dataset: net.dataset.clone(),
+        input_bits,
+        layers: net.layers[start..end].to_vec(),
+        classes: net.classes,
+        population: net.population,
+        beta: net.beta,
+        theta: net.theta,
+        t_steps: net.t_steps,
+    };
+    // slice the per-parametric-layer knobs to the group's layers
+    let param = net.parametric_layers();
+    let keep: Vec<usize> = param
+        .iter()
+        .enumerate()
+        .filter(|(_, &li)| li >= start && li < end)
+        .map(|(k, _)| k)
+        .collect();
+    let lhr: Vec<usize> = keep.iter().map(|&k| cfg.hw.lhr[k]).collect();
+    let mem_blocks: Vec<usize> = if cfg.hw.mem_blocks.is_empty() {
+        Vec::new()
+    } else {
+        keep.iter().map(|&k| cfg.hw.mem_blocks[k]).collect()
+    };
+    let hw = HwConfig {
+        lhr,
+        mem_blocks,
+        penc_width: cfg.hw.penc_width,
+        clock_hz: cfg.hw.clock_hz,
+        weight_bits: cfg.hw.weight_bits,
+    };
+    ExperimentConfig::new(chip_net, hw)
+        .with_context(|| format!("partition: chip {chip_index} sub-config invalid"))
+}
+
+// ---- the pass pipeline ------------------------------------------------------
+
+/// Mutable state threaded through the pipeline.
+pub struct PassContext<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub opts: &'a PartitionOptions,
+    /// Full-design per-layer estimate (the grouping currency).
+    pub estimate: ResourceEstimate,
+    /// Filled by the grouping pass.
+    pub groups: Vec<(usize, usize)>,
+    pub feasible_cuts: usize,
+    /// Filled by the placement pass: group index -> chip id.
+    pub placement: Vec<usize>,
+    /// Filled by the link-lowering pass.
+    pub links: Vec<LinkSpec>,
+    pub netlist: Option<Netlist>,
+}
+
+impl<'a> PassContext<'a> {
+    pub fn new(cfg: &'a ExperimentConfig, opts: &'a PartitionOptions) -> Self {
+        PassContext {
+            cfg,
+            opts,
+            estimate: estimate(cfg),
+            groups: Vec::new(),
+            feasible_cuts: 0,
+            placement: Vec::new(),
+            links: Vec::new(),
+            netlist: None,
+        }
+    }
+
+    /// Sum of the per-layer estimates in `group`.
+    fn group_resources(&self, group: (usize, usize)) -> Resources {
+        let mut r = Resources::default();
+        for l in &self.estimate.per_layer[group.0..group.1] {
+            r.add(l.resources);
+        }
+        r
+    }
+}
+
+/// One compiler pass. `run` transforms the context; `validate` re-checks
+/// the pass's own postconditions before the manager moves on — per-pass
+/// validation in the same spirit as explore's per-round checkpointing.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, ctx: &mut PassContext) -> Result<()>;
+    fn validate(&self, ctx: &PassContext) -> Result<()>;
+}
+
+/// Runs passes in order, validating each before the next starts.
+#[derive(Default)]
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl PassManager {
+    pub fn new() -> Self {
+        PassManager::default()
+    }
+
+    pub fn add(mut self, pass: Box<dyn Pass>) -> Self {
+        self.passes.push(pass);
+        self
+    }
+
+    /// The canonical grouping -> placement -> link-lowering pipeline.
+    pub fn standard() -> Self {
+        PassManager::new()
+            .add(Box::new(GroupingPass))
+            .add(Box::new(PlacementPass))
+            .add(Box::new(LinkLoweringPass))
+    }
+
+    pub fn run(&self, ctx: &mut PassContext) -> Result<()> {
+        for pass in &self.passes {
+            pass.run(ctx)
+                .with_context(|| format!("partition pass '{}'", pass.name()))?;
+            pass.validate(ctx)
+                .with_context(|| format!("partition pass '{}' postcondition", pass.name()))?;
+        }
+        Ok(())
+    }
+}
+
+/// Enumerates contiguous cut-points under the per-chip budget and picks
+/// `cut_choice` from the feasible list (sorted by max per-chip LUT, ties
+/// by cut positions).
+pub struct GroupingPass;
+
+/// All `choose(k)` cut sets over positions `1..n_layers`, lexicographic.
+fn enumerate_cuts(n_layers: usize, k: usize) -> Vec<Vec<usize>> {
+    fn rec(from: usize, n_layers: usize, left: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if left == 0 {
+            out.push(cur.clone());
+            return;
+        }
+        for c in from..n_layers {
+            cur.push(c);
+            rec(c + 1, n_layers, left - 1, cur, out);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    rec(1, n_layers, k, &mut Vec::new(), &mut out);
+    out
+}
+
+fn groups_of(cuts: &[usize], n_layers: usize) -> Vec<(usize, usize)> {
+    let mut bounds = vec![0usize];
+    bounds.extend_from_slice(cuts);
+    bounds.push(n_layers);
+    bounds.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+impl Pass for GroupingPass {
+    fn name(&self) -> &'static str {
+        "grouping"
+    }
+
+    fn run(&self, ctx: &mut PassContext) -> Result<()> {
+        let n_layers = ctx.cfg.net.layers.len();
+        let chips = ctx.opts.chips;
+        if chips == 0 {
+            bail!("need at least one chip");
+        }
+        if chips > n_layers {
+            bail!(
+                "{} chips requested but '{}' has only {} layer{} (contiguous grouping \
+                 cannot leave a chip empty)",
+                chips,
+                ctx.cfg.net.name,
+                n_layers,
+                if n_layers == 1 { "" } else { "s" }
+            );
+        }
+        let mut feasible: Vec<(f64, Vec<usize>)> = Vec::new();
+        for cuts in enumerate_cuts(n_layers, chips - 1) {
+            let groups = groups_of(&cuts, n_layers);
+            let mut max_lut = 0.0f64;
+            let mut fits = true;
+            for &g in &groups {
+                let r = ctx.group_resources(g);
+                if !ctx.opts.budget.fits(&r) {
+                    fits = false;
+                    break;
+                }
+                max_lut = max_lut.max(r.lut);
+            }
+            if fits {
+                feasible.push((max_lut, cuts));
+            }
+        }
+        if feasible.is_empty() {
+            // satellite diagnostic: a single layer that cannot fit any
+            // chip is unfixable by cutting — name it
+            for le in &ctx.estimate.per_layer {
+                if let Some(v) = ctx.opts.budget.violation(&le.resources) {
+                    bail!(
+                        "layer '{}' alone exceeds the per-chip budget ({v}); no {}-chip \
+                         partition of '{}' can satisfy it",
+                        le.name,
+                        chips,
+                        ctx.cfg.net.name
+                    );
+                }
+            }
+            bail!(
+                "no feasible {}-chip cut of '{}' under the per-chip budget",
+                chips,
+                ctx.cfg.net.name
+            );
+        }
+        feasible.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.1.cmp(&b.1))
+        });
+        ctx.feasible_cuts = feasible.len();
+        let pick = ctx.opts.cut_choice % feasible.len();
+        ctx.groups = groups_of(&feasible[pick].1, n_layers);
+        Ok(())
+    }
+
+    fn validate(&self, ctx: &PassContext) -> Result<()> {
+        let n_layers = ctx.cfg.net.layers.len();
+        if ctx.groups.len() != ctx.opts.chips {
+            bail!("expected {} groups, got {}", ctx.opts.chips, ctx.groups.len());
+        }
+        let mut expect = 0usize;
+        for &(start, end) in &ctx.groups {
+            if start != expect || start >= end {
+                bail!("groups are not a contiguous cover: {:?}", ctx.groups);
+            }
+            expect = end;
+            let r = ctx.group_resources((start, end));
+            if let Some(v) = ctx.opts.budget.violation(&r) {
+                bail!("selected group {start}..{end} violates the budget: {v}");
+            }
+        }
+        if expect != n_layers {
+            bail!("groups cover {expect} of {n_layers} layers");
+        }
+        Ok(())
+    }
+}
+
+/// Assigns layer groups to chip instances. The spike stream is a linear
+/// pipeline, so placement is dataflow order: group `g` -> chip `g`.
+pub struct PlacementPass;
+
+impl Pass for PlacementPass {
+    fn name(&self) -> &'static str {
+        "placement"
+    }
+
+    fn run(&self, ctx: &mut PassContext) -> Result<()> {
+        ctx.placement = (0..ctx.groups.len()).collect();
+        Ok(())
+    }
+
+    fn validate(&self, ctx: &PassContext) -> Result<()> {
+        if ctx.placement.len() != ctx.groups.len() {
+            bail!("placement must cover every group");
+        }
+        // chips must be distinct and honor dataflow order
+        for (g, w) in ctx.placement.windows(2).enumerate() {
+            if w[0] >= w[1] {
+                bail!("placement breaks dataflow order at group {g}: {:?}", ctx.placement);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Materializes one credit-based spike channel per group boundary and
+/// lowers the whole design to a multi-chip [`Netlist`].
+pub struct LinkLoweringPass;
+
+impl Pass for LinkLoweringPass {
+    fn name(&self) -> &'static str {
+        "link-lowering"
+    }
+
+    fn run(&self, ctx: &mut PassContext) -> Result<()> {
+        let net = &ctx.cfg.net;
+        let mut nl = Netlist::new(format!("{}_multichip", net.name));
+        let mut upstream = nl.add_net("spikes_in", net.input_bits);
+        ctx.links.clear();
+        for (c, &(start, end)) in ctx.groups.iter().enumerate() {
+            let out_bits = net.layers[end - 1].output_bits();
+            let out_net = nl.add_net(format!("chip{c}_out"), out_bits);
+            let mut params = BTreeMap::new();
+            params.insert("FIRST_LAYER".into(), start as i64);
+            params.insert("N_LAYERS".into(), (end - start) as i64);
+            nl.add_instance(Instance {
+                name: format!("chip{}", ctx.placement[c]),
+                module: "snn_chip".into(),
+                params,
+                connections: [
+                    ("spikes_in".to_string(), upstream.clone()),
+                    ("spikes_out".to_string(), out_net.clone()),
+                ]
+                .into_iter()
+                .collect(),
+            });
+            if c + 1 < ctx.groups.len() {
+                let rx_net = nl.add_net(format!("link{c}_rx"), out_bits);
+                let link = LinkSpec {
+                    from_chip: ctx.placement[c],
+                    to_chip: ctx.placement[c + 1],
+                    boundary_layer: end - 1,
+                    bits: out_bits,
+                    cfg: ctx.opts.link,
+                };
+                let mut lp = BTreeMap::new();
+                lp.insert("LATENCY".into(), link.cfg.latency as i64);
+                lp.insert("BANDWIDTH".into(), link.cfg.bandwidth as i64);
+                lp.insert(
+                    "DEPTH".into(),
+                    if link.cfg.fifo_depth == 0 {
+                        LINK_IDEAL_FIFO_DEPTH
+                    } else {
+                        link.cfg.fifo_depth
+                    } as i64,
+                );
+                nl.add_instance(Instance {
+                    name: format!("link{c}"),
+                    module: "spike_link".into(),
+                    params: lp,
+                    connections: [
+                        ("tx".to_string(), out_net.clone()),
+                        ("rx".to_string(), rx_net.clone()),
+                    ]
+                    .into_iter()
+                    .collect(),
+                });
+                ctx.links.push(link);
+                upstream = rx_net;
+            }
+        }
+        ctx.netlist = Some(nl);
+        Ok(())
+    }
+
+    fn validate(&self, ctx: &PassContext) -> Result<()> {
+        if ctx.links.len() + 1 != ctx.groups.len() {
+            bail!(
+                "{} links lowered for {} chips (need exactly chips-1)",
+                ctx.links.len(),
+                ctx.groups.len()
+            );
+        }
+        for (link, w) in ctx.links.iter().zip(ctx.groups.windows(2)) {
+            let bits = ctx.cfg.net.layers[w[0].1 - 1].output_bits();
+            if link.bits != bits || link.boundary_layer != w[0].1 - 1 {
+                bail!("link at boundary {} does not match the cut", link.boundary_layer);
+            }
+        }
+        let nl = ctx.netlist.as_ref().context("netlist not lowered")?;
+        nl.check().map_err(|e| anyhow::anyhow!("netlist lint: {e}"))?;
+        if nl.count_of("snn_chip") != ctx.groups.len()
+            || nl.count_of("spike_link") != ctx.links.len()
+        {
+            bail!("netlist instance counts disagree with the plan");
+        }
+        Ok(())
+    }
+}
+
+// ---- entry points -----------------------------------------------------------
+
+/// Run the standard pipeline and assemble the [`PartitionPlan`].
+pub fn partition(cfg: &ExperimentConfig, opts: &PartitionOptions) -> Result<PartitionPlan> {
+    let mut ctx = PassContext::new(cfg, opts);
+    PassManager::standard().run(&mut ctx)?;
+    let per_chip: Vec<Resources> = ctx.groups.iter().map(|&g| ctx.group_resources(g)).collect();
+    let mut aggregate = Resources::default();
+    for r in &per_chip {
+        aggregate.add(*r);
+    }
+    for link in &ctx.links {
+        aggregate.add(link.resources());
+    }
+    Ok(PartitionPlan {
+        net: cfg.net.name.clone(),
+        cuts: ctx.groups.iter().skip(1).map(|g| g.0).collect(),
+        groups: ctx.groups,
+        feasible_cuts: ctx.feasible_cuts,
+        links: ctx.links,
+        per_chip,
+        aggregate,
+        netlist: ctx.netlist.expect("link-lowering ran"),
+    })
+}
+
+/// [`partition`] from a DSE lattice spec (chip count clamped to the
+/// layer count, unbounded budget).
+pub fn partition_for_spec(cfg: &ExperimentConfig, spec: &PartitionSpec) -> Result<PartitionPlan> {
+    partition(cfg, &spec.options_for(cfg.net.layers.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::{fc_net, table1_net};
+
+    fn cfg(net: &str, lhr: Vec<usize>) -> ExperimentConfig {
+        ExperimentConfig::new(table1_net(net), HwConfig::with_lhr(lhr)).unwrap()
+    }
+
+    #[test]
+    fn single_chip_plan_is_the_whole_net_with_no_links() {
+        let cfg = cfg("net1", vec![4, 8, 8]);
+        let plan = partition(&cfg, &PartitionOptions::single_chip()).unwrap();
+        assert_eq!(plan.groups, vec![(0, 3)]);
+        assert!(plan.links.is_empty());
+        assert!(plan.cuts.is_empty());
+        // no link hardware: aggregate equals the single-chip estimate
+        assert_eq!(plan.aggregate, estimate(&cfg).total);
+        assert_eq!(plan.netlist.count_of("snn_chip"), 1);
+        assert_eq!(plan.netlist.count_of("spike_link"), 0);
+    }
+
+    #[test]
+    fn two_chip_cuts_cover_the_net_and_lower_one_link() {
+        let cfg = cfg("net1", vec![4, 8, 8]);
+        let opts = PartitionOptions {
+            chips: 2,
+            link: LinkConfig { latency: 8, bandwidth: 16, fifo_depth: 2 },
+            ..PartitionOptions::single_chip()
+        };
+        let plan = partition(&cfg, &opts).unwrap();
+        assert_eq!(plan.groups.len(), 2);
+        assert_eq!(plan.groups[0].0, 0);
+        assert_eq!(plan.groups[1].1, 3);
+        assert_eq!(plan.groups[0].1, plan.groups[1].0);
+        assert_eq!(plan.links.len(), 1);
+        let cut = plan.cuts[0];
+        assert_eq!(plan.links[0].bits, cfg.net.layers[cut - 1].output_bits());
+        assert!(plan.netlist.check().is_ok());
+        assert_eq!(plan.netlist.count_of("snn_chip"), 2);
+        assert_eq!(plan.netlist.count_of("spike_link"), 1);
+        // link hardware makes the multi-chip aggregate strictly costlier
+        assert!(plan.aggregate.lut > estimate(&cfg).total.lut);
+    }
+
+    #[test]
+    fn one_layer_net_has_no_cuts() {
+        let net = fc_net("tiny1", "mnist", &[32, 16], 4, 4, 0.9, 5);
+        let cfg = ExperimentConfig::new(net, HwConfig::with_lhr(vec![1])).unwrap();
+        let plan = partition(&cfg, &PartitionOptions::single_chip()).unwrap();
+        assert_eq!(plan.groups, vec![(0, 1)]);
+        assert_eq!(plan.feasible_cuts, 1, "exactly one (empty) cut set");
+        let err = partition(
+            &cfg,
+            &PartitionOptions { chips: 2, ..PartitionOptions::single_chip() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("only 1 layer"), "{err:#}");
+    }
+
+    #[test]
+    fn chips_exceeding_layers_is_a_descriptive_error() {
+        let cfg = cfg("net1", vec![1, 1, 1]);
+        let err = partition(
+            &cfg,
+            &PartitionOptions { chips: 4, ..PartitionOptions::single_chip() },
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("4 chips requested"), "{msg}");
+        assert!(msg.contains("3 layers"), "{msg}");
+    }
+
+    #[test]
+    fn single_layer_over_budget_names_the_layer() {
+        let cfg = cfg("net1", vec![1, 1, 1]);
+        let opts = PartitionOptions {
+            chips: 3,
+            budget: ChipBudget { lut: Some(1.0), ..ChipBudget::default() },
+            ..PartitionOptions::single_chip()
+        };
+        let err = partition(&cfg, &opts).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("layer 'fc0' alone exceeds the per-chip budget"), "{msg}");
+    }
+
+    #[test]
+    fn infeasible_total_without_single_layer_blame() {
+        // every layer fits a chip on its own, but one chip cannot hold
+        // the whole net: the error must not blame a single layer
+        let cfg = cfg("net1", vec![1, 1, 1]);
+        let worst = estimate(&cfg)
+            .per_layer
+            .iter()
+            .map(|l| l.resources.lut)
+            .fold(0.0f64, f64::max);
+        let opts = PartitionOptions {
+            chips: 1,
+            budget: ChipBudget { lut: Some(worst * 1.01), ..ChipBudget::default() },
+            ..PartitionOptions::single_chip()
+        };
+        let err = partition(&cfg, &opts).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("no feasible 1-chip cut"), "{msg}");
+    }
+
+    #[test]
+    fn cut_choice_indexes_the_feasible_list_with_wraparound() {
+        let cfg = cfg("net1", vec![4, 8, 8]);
+        let plan_at = |choice: usize| {
+            partition(
+                &cfg,
+                &PartitionOptions { chips: 2, cut_choice: choice, ..PartitionOptions::single_chip() },
+            )
+            .unwrap()
+        };
+        let p0 = plan_at(0);
+        assert_eq!(p0.feasible_cuts, 2, "net1 has 2 two-chip cuts");
+        let p1 = plan_at(1);
+        assert_ne!(p0.cuts, p1.cuts);
+        // cut 0 minimizes the max per-chip LUT
+        let max_lut = |p: &PartitionPlan| {
+            p.per_chip.iter().map(|r| r.lut).fold(0.0f64, f64::max)
+        };
+        assert!(max_lut(&p0) <= max_lut(&p1));
+        // wraparound: choice N == choice N % feasible
+        assert_eq!(plan_at(2).cuts, p0.cuts);
+    }
+
+    #[test]
+    fn per_chip_resources_sum_to_the_chip_free_aggregate() {
+        let cfg = cfg("net2", vec![2, 2, 4, 4]);
+        let opts = PartitionOptions { chips: 3, ..PartitionOptions::single_chip() };
+        let plan = partition(&cfg, &opts).unwrap();
+        let chips_sum: f64 = plan.per_chip.iter().map(|r| r.lut).sum();
+        let links_sum: f64 = plan.links.iter().map(|l| l.resources().lut).sum();
+        assert!((chips_sum + links_sum - plan.aggregate.lut).abs() < 1e-6);
+        let single = estimate(&cfg).total.lut;
+        assert!((chips_sum - single).abs() < 1e-6, "cutting does not change layer hardware");
+    }
+
+    #[test]
+    fn chip_configs_slice_the_knobs() {
+        let cfg = cfg("net5", vec![1, 1, 8, 32, 1]);
+        let opts = PartitionOptions { chips: 2, ..PartitionOptions::single_chip() };
+        let plan = partition(&cfg, &opts).unwrap();
+        let mut lhr_seen = Vec::new();
+        for (c, &g) in plan.groups.iter().enumerate() {
+            let ccfg = chip_config(&cfg, g, c).unwrap();
+            assert_eq!(ccfg.net.layers.len(), g.1 - g.0);
+            if c > 0 {
+                assert_eq!(ccfg.net.input_bits, cfg.net.layers[g.0 - 1].output_bits());
+            }
+            lhr_seen.extend(ccfg.hw.lhr);
+        }
+        assert_eq!(lhr_seen, cfg.hw.lhr, "concatenated chip LHRs must be the full vector");
+    }
+
+    #[test]
+    fn link_resources_are_monotone_in_depth_and_bits() {
+        let mk = |bits: usize, depth: usize| LinkSpec {
+            from_chip: 0,
+            to_chip: 1,
+            boundary_layer: 0,
+            bits,
+            cfg: LinkConfig { latency: 0, bandwidth: 0, fifo_depth: depth },
+        };
+        let base = mk(512, 2).resources();
+        assert!(mk(512, 8).resources().bram_36k >= base.bram_36k);
+        assert!(mk(1024, 2).resources().lut > base.lut);
+        // unbounded is charged at the ideal depth, never below a real one
+        assert!(mk(512, 0).resources().bram_36k >= mk(512, LINK_IDEAL_FIFO_DEPTH).resources().bram_36k);
+    }
+
+    #[test]
+    fn link_labels_render_ideal_knobs_as_infinity() {
+        assert_eq!(LinkConfig::ideal().label(), "l0/w∞/d∞");
+        assert_eq!(
+            LinkConfig { latency: 8, bandwidth: 16, fifo_depth: 2 }.label(),
+            "l8/w16/d2"
+        );
+        assert!(LinkConfig::ideal().is_ideal());
+        assert!(PartitionSpec::single_chip().is_single_chip_ideal());
+        assert_eq!(
+            PartitionSpec { chips: 2, cut_choice: 1, link: LinkConfig::ideal() }.label(),
+            "P2@1·l0/w∞/d∞"
+        );
+    }
+
+    #[test]
+    fn spec_clamps_chips_to_the_layer_count() {
+        let spec = PartitionSpec { chips: 3, cut_choice: 0, link: LinkConfig::ideal() };
+        assert_eq!(spec.options_for(1).chips, 1);
+        assert_eq!(spec.options_for(7).chips, 3);
+    }
+}

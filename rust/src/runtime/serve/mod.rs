@@ -58,7 +58,8 @@ pub use stats::{LatencySummary, PoolStats, ShardStats};
 
 use crate::config::ExperimentConfig;
 use crate::dse::ParetoFrontier;
-use crate::sim::{BatchKernel, CostModel, NetworkSim};
+use crate::partition::{partition_for_spec, PartitionSpec};
+use crate::sim::{BatchKernel, BatchOutcome, CostModel, NetworkSim, PartitionedNetworkSim, SimResult};
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 
@@ -388,6 +389,7 @@ impl ServeRuntime {
             cfg: self.cfg.clone(),
             label: self.cfg.hw.label(),
             est_service_cycles,
+            partition: None,
         };
         run_pools(std::slice::from_ref(&pool), &self.costs, &self.opts, requests)
     }
@@ -425,6 +427,7 @@ fn run_pools(
                 (0..n_shards)
                     .map(|shard| {
                         let cfg = &pc.cfg;
+                        let partition = pc.partition;
                         let weight_seed = opts.weight_seed;
                         let kernel = opts.kernel;
                         scope.spawn(move || {
@@ -433,6 +436,7 @@ fn run_pools(
                                 shard,
                                 queue,
                                 cfg,
+                                partition,
                                 costs,
                                 weight_seed,
                                 &policy,
@@ -569,6 +573,64 @@ struct ShardOutput {
     busy_cycles: u64,
 }
 
+/// The engine a shard worker drives: a single-chip replica, or a
+/// multi-chip partitioned replica when the pool carries a
+/// [`PartitionSpec`]. Partitioned replicas always run the per-sample
+/// engine chip-by-chip, so the batch-kernel knob does not apply to them
+/// (results are kernel-invariant either way).
+enum ShardReplica {
+    Single(NetworkSim),
+    Partitioned(PartitionedNetworkSim),
+}
+
+impl ShardReplica {
+    fn build(
+        cfg: &ExperimentConfig,
+        partition: Option<PartitionSpec>,
+        weight_seed: u64,
+        costs: &CostModel,
+    ) -> ShardReplica {
+        match partition {
+            None => ShardReplica::Single(NetworkSim::with_random_weights(
+                cfg,
+                weight_seed,
+                costs.clone(),
+            )),
+            Some(spec) => {
+                let plan = partition_for_spec(cfg, &spec)
+                    .expect("pool partition spec validated at runtime construction");
+                ShardReplica::Partitioned(
+                    PartitionedNetworkSim::with_random_weights(
+                        cfg,
+                        plan,
+                        weight_seed,
+                        costs.clone(),
+                    )
+                    .expect("pool partition spec validated at runtime construction"),
+                )
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        match self {
+            ShardReplica::Single(sim) => sim.reset(),
+            ShardReplica::Partitioned(sim) => sim.reset(),
+        }
+    }
+
+    fn run_batch(
+        &mut self,
+        inputs: &[crate::snn::SpikeTrain],
+        kernel: BatchKernel,
+    ) -> (SimResult, Vec<BatchOutcome>) {
+        match self {
+            ShardReplica::Single(sim) => sim.run_batched_timed_with(inputs, kernel),
+            ShardReplica::Partitioned(sim) => sim.run_batched_timed(inputs),
+        }
+    }
+}
+
 /// One shard's worker loop: pop coalesced batches until the stream ends,
 /// stream each through the shard's engine replica, and timestamp every
 /// request from the pipelined per-sample completion times.
@@ -578,12 +640,13 @@ fn serve_shard(
     shard: usize,
     queue: &ShardedQueue,
     cfg: &ExperimentConfig,
+    partition: Option<PartitionSpec>,
     costs: &CostModel,
     weight_seed: u64,
     policy: &BatchPolicy,
     kernel: BatchKernel,
 ) -> ShardOutput {
-    let mut sim = NetworkSim::with_random_weights(cfg, weight_seed, costs.clone());
+    let mut sim = ShardReplica::build(cfg, partition, weight_seed, costs);
     let mut records = Vec::new();
     let mut batches = 0usize;
     let mut busy_cycles = 0u64;
@@ -597,7 +660,7 @@ fn serve_shard(
             .map(|r| std::mem::take(&mut r.input))
             .collect();
         sim.reset();
-        let (result, outcomes) = sim.run_batched_timed_with(&inputs, kernel);
+        let (result, outcomes) = sim.run_batch(&inputs, kernel);
         debug_assert_eq!(outcomes.len(), batch.requests.len());
         let batch_size = batch.requests.len();
         for (req, out) in batch.requests.iter().zip(&outcomes) {
@@ -755,6 +818,7 @@ mod tests {
             latency_us: cycles as f64,
             layer_activity: vec![],
             uarch: None,
+            partition: None,
         };
         let f = ParetoFrontier::from_points(
             &Objective::DEFAULT,
@@ -778,8 +842,18 @@ mod tests {
         let slow = ExperimentConfig::new(net, HwConfig::with_lhr(vec![4, 4])).unwrap();
         MultiPoolRuntime::new(
             vec![
-                PoolConfig { cfg: fast, label: "fast".into(), est_service_cycles: 10_000 },
-                PoolConfig { cfg: slow, label: "slow".into(), est_service_cycles: 40_000 },
+                PoolConfig {
+                    cfg: fast,
+                    label: "fast".into(),
+                    est_service_cycles: 10_000,
+                    partition: None,
+                },
+                PoolConfig {
+                    cfg: slow,
+                    label: "slow".into(),
+                    est_service_cycles: 40_000,
+                    partition: None,
+                },
             ],
             CostModel::default(),
             ServeOptions { shards, queue_cap, ..Default::default() },
@@ -869,5 +943,63 @@ mod tests {
         // goodput counts only served-within-SLO requests per second
         assert!(capped.goodput_under_slo(f64::MAX) > 0.0);
         assert_eq!(unbounded.goodput_under_slo(0.0), 0.0);
+    }
+
+    #[test]
+    fn partitioned_pool_with_single_chip_ideal_replays_byte_identically() {
+        // the golden serve contract: a pool whose replicas are
+        // PartitionedNetworkSim instances with one chip and an ideal link
+        // must serialize the exact same report bytes as a plain pool
+        let costs = CostModel::default();
+        let run = |partition: Option<crate::partition::PartitionSpec>| {
+            let mut pool = PoolConfig::new(tiny_cfg(), "p".into(), &costs, 7);
+            if let Some(spec) = partition {
+                pool = pool.with_partition(spec);
+            }
+            MultiPoolRuntime::new(
+                vec![pool],
+                costs.clone(),
+                ServeOptions { shards: 2, ..Default::default() },
+            )
+            .unwrap()
+            .run(tiny_load(24))
+            .to_json()
+            .to_string_pretty()
+        };
+        let plain = run(None);
+        let partitioned = run(Some(crate::partition::PartitionSpec::single_chip()));
+        assert_eq!(plain, partitioned, "P=1 + ideal link must be byte-identical");
+    }
+
+    #[test]
+    fn partitioned_pool_with_finite_links_serves_all_with_identical_predictions() {
+        use crate::partition::{LinkConfig, PartitionSpec};
+        let costs = CostModel::default();
+        let spec = PartitionSpec {
+            chips: 2,
+            cut_choice: 0,
+            link: LinkConfig { latency: 8, bandwidth: 16, fifo_depth: 2 },
+        };
+        let run = |partition: Option<PartitionSpec>| {
+            let mut pool = PoolConfig::new(tiny_cfg(), "p".into(), &costs, 7);
+            if let Some(s) = partition {
+                pool = pool.with_partition(s);
+            }
+            MultiPoolRuntime::new(vec![pool], costs.clone(), ServeOptions::default())
+                .unwrap()
+                .run(tiny_load(20))
+        };
+        let plain = run(None);
+        let multi = run(Some(spec));
+        assert_eq!(multi.records.len(), 20, "finite links never drop requests");
+        // predictions are a functional property — link timing cannot
+        // change them, only latency
+        let p = |r: &ServeReport| -> Vec<(usize, Option<usize>)> {
+            r.records.iter().map(|x| (x.id, x.prediction)).collect()
+        };
+        assert_eq!(p(&plain), p(&multi));
+        // replays deterministically like every other pool flavor
+        let again = run(Some(spec));
+        assert_eq!(multi.records, again.records);
     }
 }

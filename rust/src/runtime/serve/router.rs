@@ -23,8 +23,9 @@ use super::queue::AdmissionController;
 use super::{choose_config_for_slo, run_pools, Request, ServeOptions, ServeReport, SloChoice};
 use crate::config::ExperimentConfig;
 use crate::dse::{evaluate, DsePoint, EvalMode, ParetoFrontier};
+use crate::partition::PartitionSpec;
 use crate::sim::CostModel;
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 /// One replica pool: a hardware configuration plus the router's static
 /// per-request service estimate (its queueing currency).
@@ -37,6 +38,12 @@ pub struct PoolConfig {
     /// Estimated cycles to serve one request (>= 1); drives admission
     /// and least-estimated-delay routing.
     pub est_service_cycles: u64,
+    /// When set, each shard replica is a multi-chip
+    /// [`crate::sim::PartitionedNetworkSim`] built from this spec instead
+    /// of a single-chip [`crate::sim::NetworkSim`]. A single-chip spec
+    /// with an ideal link replays byte-identically to `None`. The spec's
+    /// feasibility is validated at [`MultiPoolRuntime::new`].
+    pub partition: Option<PartitionSpec>,
 }
 
 impl PoolConfig {
@@ -44,7 +51,13 @@ impl PoolConfig {
     /// deterministic activity-mode probe of the configuration.
     pub fn new(cfg: ExperimentConfig, label: String, costs: &CostModel, seed: u64) -> PoolConfig {
         let est_service_cycles = estimate_service_cycles(&cfg, costs, seed);
-        PoolConfig { cfg, label, est_service_cycles }
+        PoolConfig { cfg, label, est_service_cycles, partition: None }
+    }
+
+    /// Back this pool's replicas with a partitioned multi-chip engine.
+    pub fn with_partition(mut self, spec: PartitionSpec) -> PoolConfig {
+        self.partition = Some(spec);
+        self
     }
 }
 
@@ -207,6 +220,15 @@ impl MultiPoolRuntime {
         if pools.iter().any(|p| p.cfg.net.name != pools[0].cfg.net.name) {
             bail!("serve: every pool must serve the same network");
         }
+        // fail fast on an infeasible partition spec: shard workers build
+        // their plans with expect() on the strength of this check
+        for (i, p) in pools.iter().enumerate() {
+            if let Some(spec) = p.partition {
+                crate::partition::partition_for_spec(&p.cfg, &spec).with_context(|| {
+                    format!("serve: pool {i} ('{}') partition spec {}", p.label, spec.label())
+                })?;
+            }
+        }
         Ok(MultiPoolRuntime { pools, costs, opts })
     }
 
@@ -250,6 +272,7 @@ mod tests {
             latency_us: cycles as f64,
             layer_activity: vec![],
             uarch: None,
+            partition: None,
         }
     }
 

@@ -97,6 +97,33 @@ pub struct NullProbe;
 
 impl Probe for NullProbe {}
 
+/// Forwards every hook to two probes in order — chained observers, e.g.
+/// the partitioned simulator's per-step cost capture running alongside
+/// the per-sample [`BatchDecodeProbe`] on the final chip.
+pub struct TeeProbe<'a, A: Probe, B: Probe> {
+    pub a: &'a mut A,
+    pub b: &'a mut B,
+}
+
+impl<A: Probe, B: Probe> Probe for TeeProbe<'_, A, B> {
+    fn on_layer_step(&mut self, l: usize, t: usize, phases: &PhaseCycles, layer: &LayerSim) {
+        self.a.on_layer_step(l, t, phases, layer);
+        self.b.on_layer_step(l, t, phases, layer);
+    }
+    fn on_layer_output(&mut self, l: usize, t: usize, out: &BitVec) {
+        self.a.on_layer_output(l, t, out);
+        self.b.on_layer_output(l, t, out);
+    }
+    fn on_network_output(&mut self, t: usize, out: &BitVec) {
+        self.a.on_network_output(t, out);
+        self.b.on_network_output(t, out);
+    }
+    fn on_step_finish(&mut self, t: usize, finish_cycles: u64) {
+        self.a.on_step_finish(t, finish_cycles);
+        self.b.on_step_finish(t, finish_cycles);
+    }
+}
+
 /// Captures every layer's full output spike train (spike-to-spike
 /// validation against the JAX reference).
 pub struct TraceProbe {

@@ -14,6 +14,10 @@
 //!   per-sample decoding)
 //! * [`pipeline`] — `NetworkSim`: layer construction + thin run-mode
 //!   wrappers over the engine
+//! * [`partitioned`] — `PartitionedNetworkSim`: multi-chip pipelining of
+//!   `NetworkSim` instances over a [`crate::partition`] plan, with
+//!   credit-based inter-chip links (ideal links reproduce the
+//!   single-chip engine byte-identically)
 //! * [`batch_kernel`] — bit-sliced batched execution: 64 samples per u64
 //!   lane word, byte-identical to the per-sample engine on FC nets
 //! * [`costs`] — the named cycle-cost coefficients in one auditable place
@@ -27,6 +31,7 @@ pub mod engine;
 pub mod layer;
 pub mod memory;
 pub mod neural_unit;
+pub mod partitioned;
 pub mod penc;
 pub mod pipeline;
 pub mod stats;
@@ -37,11 +42,12 @@ pub use dynamic::{compare_static_dynamic, DynamicAllocator, DynamicResult};
 pub use ecu::{EcuFsm, EcuState};
 pub use engine::{
     advance_finish, ActivityWorkload, BatchDecodeProbe, BatchWorkload, Engine, NullProbe, Probe,
-    SpikeTrainWorkload, TraceProbe, Workload,
+    SpikeTrainWorkload, TeeProbe, TraceProbe, Workload,
 };
 pub use layer::{LayerSim, LayerWeights};
 pub use memory::MemoryUnit;
 pub use neural_unit::NuMap;
+pub use partitioned::{LinkStats, PartitionedNetworkSim};
 pub use penc::Penc;
 pub use pipeline::{random_spike_train, random_weights, BatchOutcome, NetworkSim};
 pub use stats::{decode_counts, LayerStats, PhaseCycles, SimResult};

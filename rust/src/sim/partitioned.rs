@@ -1,0 +1,601 @@
+//! Pipelined multi-chip simulation: a [`PartitionedNetworkSim`] runs one
+//! [`NetworkSim`] per chip of a [`PartitionPlan`] and threads the spike
+//! stream through credit-based inter-chip links.
+//!
+//! ## Execution model
+//!
+//! Functional state is exact and link-independent: chips run in dataflow
+//! order through the unified engine, each boundary spike train captured
+//! by a probe and fed verbatim to the next chip. Links only reshape
+//! *time*, never data, so timing is recovered by replaying the captured
+//! per-layer, per-step costs through the analytic recurrence with the
+//! link inserted at every chip boundary:
+//!
+//! ```text
+//! accept[t]  = max(done[p][t], start_q[t-D])      credit (FIFO depth D)
+//! arrival[t] = accept[t] + latency + ceil(spikes[t]/bandwidth)
+//! ```
+//!
+//! where `p` is the boundary's producing layer and `start_q[t']` the
+//! cycle its consumer began step `t'`. Holding the producer's output
+//! register until the credit frees (`done[p][t] := accept[t]`) makes
+//! back-pressure propagate upstream through the producer's own
+//! next-step dependency — the same emit-to-consume credit window
+//! [`crate::uarch::SpikeFifo`] models, which is also used here to replay
+//! and *check* every boundary's credit protocol after the fact.
+//!
+//! ## Determinism contract
+//!
+//! With one chip (no boundary) — or any chip count under
+//! [`LinkConfig::ideal`] links for total latency — the replay collapses
+//! to `finish[l][t] = max(finish[l][t-1], finish[l-1][t]) + c_l(t)`,
+//! i.e. exactly [`crate::sim::engine::Engine::run`]. The golden tests
+//! pin byte-identity against [`NetworkSim`] on the Table-1 nets.
+
+use crate::config::ExperimentConfig;
+use crate::partition::{chip_config, LinkConfig, PartitionPlan};
+use crate::sim::costs::CostModel;
+use crate::sim::engine::{
+    ActivityWorkload, BatchDecodeProbe, BatchWorkload, Probe, SpikeTrainWorkload, TeeProbe,
+};
+use crate::sim::layer::{LayerSim, LayerWeights};
+use crate::sim::pipeline::{random_weights, BatchOutcome, NetworkSim};
+use crate::sim::stats::{PhaseCycles, SimResult};
+use crate::snn::{BitVec, SpikeTrain};
+use crate::uarch::SpikeFifo;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Per-boundary stall/traffic accounting from the last timed replay.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    /// Global index of the producing layer.
+    pub boundary_layer: usize,
+    /// Spikes that crossed the boundary.
+    pub spikes: u64,
+    /// Cycles producers spent holding finished steps for a credit.
+    pub credit_wait: u64,
+    /// Latency + serialization cycles added on the consumer side.
+    pub serialization: u64,
+    /// Peak buffered steps observed (validates against the FIFO depth).
+    pub max_occupancy: usize,
+}
+
+/// A partitioned accelerator: one [`NetworkSim`] per chip, pipelined
+/// through the plan's inter-chip links.
+pub struct PartitionedNetworkSim {
+    pub plan: PartitionPlan,
+    pub chips: Vec<NetworkSim>,
+    link: LinkConfig,
+    classes: usize,
+    population: usize,
+    link_stats: Vec<LinkStats>,
+}
+
+/// Captures what the link replay needs from inside the engine loop:
+/// every layer's per-step cost, plus (optionally) the last layer's
+/// output train — the next chip's input.
+struct ChipCapture {
+    last_layer: usize,
+    capture_boundary: bool,
+    costs: Vec<Vec<u64>>,
+    boundary: SpikeTrain,
+}
+
+impl ChipCapture {
+    fn new(n_layers: usize, t_steps: usize, capture_boundary: bool) -> Self {
+        ChipCapture {
+            last_layer: n_layers - 1,
+            capture_boundary,
+            costs: vec![Vec::with_capacity(t_steps); n_layers],
+            boundary: Vec::new(),
+        }
+    }
+}
+
+impl Probe for ChipCapture {
+    fn on_layer_step(&mut self, l: usize, _t: usize, phases: &PhaseCycles, _layer: &LayerSim) {
+        self.costs[l].push(phases.total());
+    }
+    fn on_layer_output(&mut self, l: usize, _t: usize, out: &BitVec) {
+        if self.capture_boundary && l == self.last_layer {
+            self.boundary.push(out.clone());
+        }
+    }
+}
+
+impl PartitionedNetworkSim {
+    /// Build with the *full network's* random weight stream split across
+    /// chips: one `Rng::new(seed)` draws weights in full-net parametric
+    /// order (the exact sequence [`NetworkSim::with_random_weights`]
+    /// draws), then each chip takes its contiguous slice — so a
+    /// partitioned replica computes bit-identical spikes to the
+    /// single-chip replica it stands in for.
+    pub fn with_random_weights(
+        cfg: &ExperimentConfig,
+        plan: PartitionPlan,
+        seed: u64,
+        costs: CostModel,
+    ) -> Result<Self> {
+        let mut rng = Rng::new(seed);
+        let all: Vec<LayerWeights> = cfg
+            .net
+            .parametric_layers()
+            .iter()
+            .map(|&i| random_weights(&cfg.net.layers[i], &mut rng))
+            .collect();
+        let mut w_iter = all.into_iter();
+        let mut chips = Vec::with_capacity(plan.chips());
+        for (c, &g) in plan.groups.iter().enumerate() {
+            let ccfg = chip_config(cfg, g, c)?;
+            let n_param = ccfg.net.parametric_layers().len();
+            let w: Vec<LayerWeights> = w_iter.by_ref().take(n_param).collect();
+            chips.push(NetworkSim::new(&ccfg, w, costs.clone()));
+        }
+        Ok(PartitionedNetworkSim {
+            link: plan.links.first().map(|l| l.cfg).unwrap_or_else(LinkConfig::ideal),
+            classes: cfg.net.classes,
+            population: cfg.net.population,
+            link_stats: Vec::new(),
+            plan,
+            chips,
+        })
+    }
+
+    /// Cost-only chips for activity-driven runs (the DSE path).
+    pub fn cost_only(cfg: &ExperimentConfig, plan: PartitionPlan, costs: CostModel) -> Result<Self> {
+        let mut chips = Vec::with_capacity(plan.chips());
+        for (c, &g) in plan.groups.iter().enumerate() {
+            let ccfg = chip_config(cfg, g, c)?;
+            chips.push(NetworkSim::cost_only(&ccfg, costs.clone()));
+        }
+        Ok(PartitionedNetworkSim {
+            link: plan.links.first().map(|l| l.cfg).unwrap_or_else(LinkConfig::ideal),
+            classes: cfg.net.classes,
+            population: cfg.net.population,
+            link_stats: Vec::new(),
+            plan,
+            chips,
+        })
+    }
+
+    pub fn reset(&mut self) {
+        for chip in &mut self.chips {
+            chip.reset();
+        }
+    }
+
+    /// Per-boundary link accounting from the most recent run.
+    pub fn link_stats(&self) -> &[LinkStats] {
+        &self.link_stats
+    }
+
+    /// Functional run over one input spike train.
+    pub fn run(&mut self, input: &SpikeTrain) -> SimResult {
+        let t_steps = input.len();
+        let n_chips = self.chips.len();
+        let mut costs: Vec<Vec<u64>> = Vec::new();
+        let mut boundary_spikes: Vec<Vec<u64>> = Vec::new();
+        let mut chip_results: Vec<SimResult> = Vec::new();
+        let mut owned: SpikeTrain = Vec::new();
+        for c in 0..n_chips {
+            let cur: &SpikeTrain = if c == 0 { input } else { &owned };
+            let n_layers = self.chips[c].layers.len();
+            let mut probe = ChipCapture::new(n_layers, t_steps, c + 1 < n_chips);
+            let mut workload = SpikeTrainWorkload::new(cur);
+            let r = self.chips[c].run_engine(&mut workload, &mut probe);
+            costs.append(&mut probe.costs);
+            chip_results.push(r);
+            if c + 1 < n_chips {
+                boundary_spikes
+                    .push(probe.boundary.iter().map(|b| b.count_ones() as u64).collect());
+                owned = probe.boundary;
+            }
+        }
+        let mut result = self.assemble(chip_results, &costs, &boundary_spikes, t_steps).0;
+        result.decode(self.classes, self.population);
+        result
+    }
+
+    /// Activity-driven (cost-only) run: `activity[0]` is the network
+    /// input counts, `activity[l+1]` global layer `l`'s output counts —
+    /// the same convention as [`NetworkSim::run_activity`]; boundary
+    /// traffic is read straight from the producing layer's row.
+    pub fn run_activity(&mut self, activity: &[Vec<usize>]) -> SimResult {
+        let n_layers: usize = self.chips.iter().map(|c| c.layers.len()).sum();
+        assert_eq!(
+            activity.len(),
+            n_layers + 1,
+            "activity needs input + one entry per global layer"
+        );
+        let t_steps = activity[0].len();
+        let groups = self.plan.groups.clone();
+        let mut costs: Vec<Vec<u64>> = Vec::new();
+        let mut chip_results: Vec<SimResult> = Vec::new();
+        for (c, &(start, end)) in groups.iter().enumerate() {
+            let slice = &activity[start..=end];
+            let mut probe = ChipCapture::new(end - start, t_steps, false);
+            let mut workload = ActivityWorkload::new(slice, end - start);
+            let r = self.chips[c].run_engine(&mut workload, &mut probe);
+            costs.append(&mut probe.costs);
+            chip_results.push(r);
+        }
+        let boundary_spikes: Vec<Vec<u64>> = self
+            .plan
+            .groups
+            .windows(2)
+            .map(|w| activity[w[0].1].iter().map(|&s| s as u64).collect())
+            .collect();
+        self.assemble(chip_results, &costs, &boundary_spikes, t_steps).0
+    }
+
+    /// Batched serving run with per-sample completions, the partitioned
+    /// analogue of [`NetworkSim::run_batched_timed`]. Samples stream
+    /// back-to-back through every chip; the captured boundary train is
+    /// re-chunked per sample so each downstream chip resets its membrane
+    /// state at the same sample boundaries the single-chip engine does.
+    pub fn run_batched_timed(&mut self, inputs: &[SpikeTrain]) -> (SimResult, Vec<BatchOutcome>) {
+        assert!(!inputs.is_empty(), "batch needs at least one sample");
+        let tps = inputs[0].len();
+        let n_chips = self.chips.len();
+        let t_steps = inputs.len() * tps;
+        let mut costs: Vec<Vec<u64>> = Vec::new();
+        let mut boundary_spikes: Vec<Vec<u64>> = Vec::new();
+        let mut chip_results: Vec<SimResult> = Vec::new();
+        let mut owned: Vec<SpikeTrain> = Vec::new();
+        let mut decode = BatchDecodeProbe::new(tps, self.classes, self.population);
+        for c in 0..n_chips {
+            let cur: &[SpikeTrain] = if c == 0 { inputs } else { &owned };
+            let n_layers = self.chips[c].layers.len();
+            let mut probe = ChipCapture::new(n_layers, t_steps, c + 1 < n_chips);
+            let mut workload = BatchWorkload::new(cur);
+            let r = if c + 1 == n_chips {
+                let mut tee = TeeProbe { a: &mut probe, b: &mut decode };
+                self.chips[c].run_engine(&mut workload, &mut tee)
+            } else {
+                self.chips[c].run_engine(&mut workload, &mut probe)
+            };
+            costs.append(&mut probe.costs);
+            chip_results.push(r);
+            if c + 1 < n_chips {
+                boundary_spikes
+                    .push(probe.boundary.iter().map(|b| b.count_ones() as u64).collect());
+                owned = probe
+                    .boundary
+                    .chunks(tps)
+                    .map(|chunk| chunk.to_vec())
+                    .collect();
+            }
+        }
+        let (result, finish_last) = self.assemble(chip_results, &costs, &boundary_spikes, t_steps);
+        let outcomes = decode
+            .predictions
+            .into_iter()
+            .enumerate()
+            .map(|(s, prediction)| BatchOutcome {
+                prediction,
+                completion_cycles: finish_last[(s + 1) * tps - 1],
+            })
+            .collect();
+        (result, outcomes)
+    }
+
+    /// Merge per-chip engine results and replay the captured costs with
+    /// links inserted at every boundary. Returns the assembled result
+    /// plus the final layer's per-step finish times (batched completion
+    /// accounting reads per-sample boundaries out of it).
+    fn assemble(
+        &mut self,
+        chip_results: Vec<SimResult>,
+        costs: &[Vec<u64>],
+        boundary_spikes: &[Vec<u64>],
+        t_steps: usize,
+    ) -> (SimResult, Vec<u64>) {
+        let (total_cycles, finish_last, link_stats) =
+            replay_links(costs, &self.plan.groups, boundary_spikes, self.link);
+        self.link_stats = link_stats;
+        let serial_cycles = chip_results.iter().map(|r| r.serial_cycles).sum();
+        let mut per_layer = Vec::with_capacity(costs.len());
+        for (&(start, _), r) in self.plan.groups.iter().zip(&chip_results) {
+            for (local, mut stats) in r.per_layer.iter().cloned().enumerate() {
+                let global = start + local;
+                let kind = self.plan_layer_kind(global);
+                stats.name = format!("{kind}{global}");
+                per_layer.push(stats);
+            }
+        }
+        let last = chip_results.last().expect("at least one chip");
+        let result = SimResult {
+            total_cycles,
+            serial_cycles,
+            per_layer,
+            t_steps,
+            output_counts: last.output_counts.clone(),
+            predicted_class: None,
+        };
+        (result, finish_last)
+    }
+
+    fn plan_layer_kind(&self, global: usize) -> &'static str {
+        // chips carry NetDef slices, so recover the kind from the chip
+        // that owns the global layer
+        for (c, &(start, end)) in self.plan.groups.iter().enumerate() {
+            if global >= start && global < end {
+                return self.chips[c].net.layers[global - start].kind_str();
+            }
+        }
+        unreachable!("global layer {global} outside every group")
+    }
+}
+
+/// Replay per-layer, per-step costs through the pipelined recurrence
+/// with a credit-based link at every chip boundary. Pure function of its
+/// inputs; with ideal links it IS the analytic recurrence.
+///
+/// Returns `(total_cycles, final-layer finish per step, per-link stats)`.
+fn replay_links(
+    costs: &[Vec<u64>],
+    groups: &[(usize, usize)],
+    boundary_spikes: &[Vec<u64>],
+    link: LinkConfig,
+) -> (u64, Vec<u64>, Vec<LinkStats>) {
+    let n_layers = costs.len();
+    let t_steps = costs.first().map(|c| c.len()).unwrap_or(0);
+    let n_bounds = groups.len() - 1;
+    debug_assert_eq!(boundary_spikes.len(), n_bounds);
+    // boundary b: producer = groups[b].1 - 1, consumer = producer + 1
+    let mut producer_of = vec![usize::MAX; n_layers];
+    for (b, g) in groups[..n_bounds].iter().enumerate() {
+        producer_of[g.1 - 1] = b;
+    }
+    let mut finish = vec![vec![0u64; t_steps]; n_layers];
+    let mut accepts = vec![vec![0u64; t_steps]; n_bounds];
+    let mut starts = vec![vec![0u64; t_steps]; n_bounds];
+    let mut stats: Vec<LinkStats> = groups[..n_bounds]
+        .iter()
+        .map(|g| LinkStats { boundary_layer: g.1 - 1, ..LinkStats::default() })
+        .collect();
+
+    for t in 0..t_steps {
+        let mut upstream = 0u64; // when layer g's step-t input is available
+        let mut pending_boundary: Option<usize> = None;
+        for g in 0..n_layers {
+            let own_prev = if t == 0 { 0 } else { finish[g][t - 1] };
+            let start = own_prev.max(upstream);
+            if let Some(b) = pending_boundary.take() {
+                starts[b][t] = start; // the link consumer began step t
+            }
+            finish[g][t] = start + costs[g][t];
+            let b = producer_of[g];
+            if b == usize::MAX {
+                upstream = finish[g][t];
+            } else {
+                // hold the finished step until a FIFO credit is free:
+                // depth D means the consumer must have *started* step
+                // t-D before step t can be emitted
+                let raw = finish[g][t];
+                let mut accept = raw;
+                let d = link.fifo_depth;
+                if d > 0 && t >= d {
+                    accept = accept.max(starts[b][t - d]);
+                }
+                stats[b].credit_wait += accept - raw;
+                finish[g][t] = accept; // back-pressure: next step waits
+                accepts[b][t] = accept;
+                let xfer = if link.bandwidth == 0 {
+                    0
+                } else {
+                    boundary_spikes[b][t].div_ceil(link.bandwidth)
+                };
+                stats[b].spikes += boundary_spikes[b][t];
+                stats[b].serialization += link.latency + xfer;
+                upstream = accept + link.latency + xfer;
+                pending_boundary = Some(b);
+            }
+        }
+    }
+
+    // Replay every boundary through a real SpikeFifo in simulated-time
+    // order: a slot is held from producer emit (accept) to consumer
+    // start. `push` panics if the accept rule ever over-fills the FIFO,
+    // so this doubles as a credit-protocol check on the recurrence.
+    for (b, stat) in stats.iter_mut().enumerate() {
+        // merge the in-order push (emit) and pop (consumer-start) streams
+        // by simulated time; at equal timestamps an *earlier* step's pop
+        // frees its credit before the push uses it, while a step can
+        // never pop before its own push
+        let mut fifo = SpikeFifo::new(link.fifo_depth);
+        let (mut pi, mut qi) = (0usize, 0usize);
+        while pi < t_steps || qi < t_steps {
+            let do_pop = qi < t_steps
+                && (pi >= t_steps
+                    || starts[b][qi] < accepts[b][pi]
+                    || (starts[b][qi] == accepts[b][pi] && qi < pi));
+            if do_pop {
+                fifo.pop();
+                qi += 1;
+            } else {
+                fifo.push();
+                pi += 1;
+            }
+        }
+        stat.max_occupancy = fifo.max_occupancy();
+    }
+
+    let finish_last = finish.last().cloned().unwrap_or_default();
+    let total = finish_last.last().copied().unwrap_or(0);
+    (total, finish_last, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+    use crate::partition::{partition, PartitionOptions};
+    use crate::sim::pipeline::random_spike_train;
+    use crate::snn::fc_net;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let net = fc_net("tinyp", "mnist", &[32, 24, 16, 8], 4, 2, 0.9, 6);
+        ExperimentConfig::new(net, HwConfig::with_lhr(vec![2, 1, 2])).unwrap()
+    }
+
+    fn build(cfg: &ExperimentConfig, chips: usize, link: LinkConfig) -> PartitionedNetworkSim {
+        let opts = PartitionOptions { chips, link, ..PartitionOptions::single_chip() };
+        let plan = partition(cfg, &opts).unwrap();
+        PartitionedNetworkSim::with_random_weights(cfg, plan, 7, CostModel::default()).unwrap()
+    }
+
+    #[test]
+    fn single_chip_ideal_matches_network_sim_exactly() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(11);
+        let input = random_spike_train(32, 6, 0.3, &mut rng);
+        let mut single = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let expect = single.run(&input);
+        let mut part = build(&cfg, 1, LinkConfig::ideal());
+        let got = part.run(&input);
+        assert_eq!(got.total_cycles, expect.total_cycles);
+        assert_eq!(got.serial_cycles, expect.serial_cycles);
+        assert_eq!(got.output_counts, expect.output_counts);
+        assert_eq!(got.predicted_class, expect.predicted_class);
+        assert!(part.link_stats().is_empty());
+    }
+
+    #[test]
+    fn multi_chip_ideal_links_keep_the_analytic_latency() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(12);
+        let input = random_spike_train(32, 6, 0.35, &mut rng);
+        let mut single = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let expect = single.run(&input);
+        for chips in [2usize, 3] {
+            let mut part = build(&cfg, chips, LinkConfig::ideal());
+            let got = part.run(&input);
+            assert_eq!(got.total_cycles, expect.total_cycles, "{chips} chips");
+            assert_eq!(got.serial_cycles, expect.serial_cycles);
+            assert_eq!(got.output_counts, expect.output_counts);
+            assert_eq!(got.predicted_class, expect.predicted_class);
+            // ideal links stall nothing
+            for ls in part.link_stats() {
+                assert_eq!(ls.credit_wait, 0);
+                assert_eq!(ls.serialization, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn finite_links_never_change_function_and_never_speed_up() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(13);
+        let input = random_spike_train(32, 6, 0.35, &mut rng);
+        let mut ideal = build(&cfg, 2, LinkConfig::ideal());
+        let base = ideal.run(&input);
+        let mut slow = build(&cfg, 2, LinkConfig { latency: 16, bandwidth: 2, fifo_depth: 1 });
+        let got = slow.run(&input);
+        assert_eq!(got.output_counts, base.output_counts, "links reshape time, not data");
+        assert_eq!(got.predicted_class, base.predicted_class);
+        assert!(got.total_cycles > base.total_cycles);
+        let ls = &slow.link_stats()[0];
+        assert!(ls.serialization > 0);
+        assert!(ls.spikes > 0);
+        assert!(ls.max_occupancy <= 1, "depth-1 FIFO can hold at most one step");
+    }
+
+    #[test]
+    fn link_latency_is_monotone_in_every_knob() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(14);
+        let input = random_spike_train(32, 6, 0.4, &mut rng);
+        let cycles = |link: LinkConfig| {
+            let mut sim = build(&cfg, 3, link);
+            sim.run(&input).total_cycles
+        };
+        let base = cycles(LinkConfig { latency: 4, bandwidth: 8, fifo_depth: 8 });
+        assert!(cycles(LinkConfig { latency: 32, bandwidth: 8, fifo_depth: 8 }) >= base);
+        assert!(cycles(LinkConfig { latency: 4, bandwidth: 1, fifo_depth: 8 }) >= base);
+        assert!(cycles(LinkConfig { latency: 4, bandwidth: 8, fifo_depth: 1 }) >= base);
+    }
+
+    #[test]
+    fn activity_replay_matches_functional_cycles() {
+        // the same identity NetworkSim pins for the single-chip engine:
+        // cost-only replay of recorded activity must reproduce the
+        // functional run's latency, links included
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(15);
+        let input = random_spike_train(32, 6, 0.3, &mut rng);
+        let link = LinkConfig { latency: 8, bandwidth: 4, fifo_depth: 2 };
+        let mut fsim = build(&cfg, 2, link);
+        let fr = fsim.run(&input);
+        // record global activity from a single-chip functional run
+        let mut single = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let (_, traces) = single.run_recording(&input);
+        let mut activity = vec![input.iter().map(|b| b.count_ones()).collect::<Vec<_>>()];
+        for tr in &traces {
+            activity.push(tr.iter().map(|b| b.count_ones()).collect());
+        }
+        let plan = partition(
+            &cfg,
+            &PartitionOptions { chips: 2, link, ..PartitionOptions::single_chip() },
+        )
+        .unwrap();
+        let mut asim =
+            PartitionedNetworkSim::cost_only(&cfg, plan, CostModel::default()).unwrap();
+        let ar = asim.run_activity(&activity);
+        assert_eq!(fr.total_cycles, ar.total_cycles);
+        assert_eq!(fr.serial_cycles, ar.serial_cycles);
+        assert_eq!(fsim.link_stats(), asim.link_stats());
+    }
+
+    #[test]
+    fn batched_single_chip_matches_network_sim() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(16);
+        let samples: Vec<SpikeTrain> =
+            (0..3).map(|_| random_spike_train(32, 6, 0.3, &mut rng)).collect();
+        let mut single = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let (er, eo) = single.run_batched_timed(&samples);
+        let mut part = build(&cfg, 1, LinkConfig::ideal());
+        let (gr, go) = part.run_batched_timed(&samples);
+        assert_eq!(gr.total_cycles, er.total_cycles);
+        assert_eq!(gr.serial_cycles, er.serial_cycles);
+        assert_eq!(go, eo);
+    }
+
+    #[test]
+    fn batched_multi_chip_preserves_predictions_and_orders_completions() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(17);
+        let samples: Vec<SpikeTrain> =
+            (0..4).map(|_| random_spike_train(32, 6, 0.35, &mut rng)).collect();
+        let mut single = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let (_, eo) = single.run_batched_timed(&samples);
+        let mut part = build(&cfg, 2, LinkConfig { latency: 8, bandwidth: 4, fifo_depth: 2 });
+        let (gr, go) = part.run_batched_timed(&samples);
+        let epreds: Vec<_> = eo.iter().map(|o| o.prediction).collect();
+        let gpreds: Vec<_> = go.iter().map(|o| o.prediction).collect();
+        assert_eq!(gpreds, epreds, "links must not change functional outputs");
+        for w in go.windows(2) {
+            assert!(w[0].completion_cycles < w[1].completion_cycles);
+        }
+        assert_eq!(go.last().unwrap().completion_cycles, gr.total_cycles);
+        // finite links delay every completion relative to ideal
+        let mut ideal = build(&cfg, 2, LinkConfig::ideal());
+        let (_, io) = ideal.run_batched_timed(&samples);
+        for (g, i) in go.iter().zip(&io) {
+            assert!(g.completion_cycles >= i.completion_cycles);
+        }
+    }
+
+    #[test]
+    fn per_layer_stats_use_global_names() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(18);
+        let input = random_spike_train(32, 6, 0.3, &mut rng);
+        let mut part = build(&cfg, 3, LinkConfig::ideal());
+        let r = part.run(&input);
+        let names: Vec<&str> = r.per_layer.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, vec!["fc0", "fc1", "fc2"]);
+    }
+}

@@ -1,0 +1,358 @@
+//! Golden equivalence, link-stall monotonicity, and DSE acceptance for
+//! the multi-chip partitioning pipeline (`partition/` +
+//! `sim::PartitionedNetworkSim`).
+//!
+//! The load-bearing contract mirrors the uarch one: with one chip — or
+//! any chip count under [`LinkConfig::ideal`] links — the partitioned
+//! simulator is **byte-identical** to the single-chip analytic engine on
+//! every Table-I network: total cycles, serial cycles, per-layer stats
+//! field by field, output counts, predictions, and batched completion
+//! cycles. Finite links only reshape *time*, never data; every added
+//! cycle is attributed to a per-boundary credit-wait or serialization
+//! counter, and the gap never exceeds the stall sum. `explore
+//! --partition` explores the five new axes thread-deterministically, and
+//! a killed-and-resumed exploration is byte-identical to one that never
+//! stopped.
+
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::data::ActivityModel;
+use snn_dse::dse::{ExploreConfig, Explorer, Objective};
+use snn_dse::partition::{partition_for_spec, LinkConfig, PartitionSpec};
+use snn_dse::sim::{
+    random_spike_train, CostModel, NetworkSim, PartitionedNetworkSim, SimResult,
+};
+use snn_dse::snn::{table1_net, NetDef, SpikeTrain, TABLE1_NETS};
+use snn_dse::util::rng::Rng;
+
+fn fully_parallel_cfg(net: &NetDef) -> ExperimentConfig {
+    let n = net.parametric_layers().len();
+    ExperimentConfig::new(net.clone(), HwConfig::fully_parallel(n)).unwrap()
+}
+
+fn sampled_activity(net: &NetDef, seed: u64) -> Vec<Vec<usize>> {
+    let model = ActivityModel::for_net(net);
+    let mut rng = Rng::new(seed);
+    model.sample(net.t_steps, &mut rng)
+}
+
+fn partitioned_cost_only(cfg: &ExperimentConfig, spec: PartitionSpec) -> PartitionedNetworkSim {
+    let plan = partition_for_spec(cfg, &spec).unwrap();
+    PartitionedNetworkSim::cost_only(cfg, plan, CostModel::default()).unwrap()
+}
+
+fn partitioned_functional(
+    cfg: &ExperimentConfig,
+    spec: PartitionSpec,
+    seed: u64,
+) -> PartitionedNetworkSim {
+    let plan = partition_for_spec(cfg, &spec).unwrap();
+    PartitionedNetworkSim::with_random_weights(cfg, plan, seed, CostModel::default()).unwrap()
+}
+
+/// Field-by-field [`SimResult`] equality, per-layer stats included
+/// (neither struct implements `PartialEq`, and the golden contract is
+/// *every* field, not just the totals).
+fn assert_byte_identical(got: &SimResult, expect: &SimResult, ctx: &str) {
+    assert_eq!(got.total_cycles, expect.total_cycles, "{ctx}: total_cycles");
+    assert_eq!(got.serial_cycles, expect.serial_cycles, "{ctx}: serial_cycles");
+    assert_eq!(got.t_steps, expect.t_steps, "{ctx}: t_steps");
+    assert_eq!(got.output_counts, expect.output_counts, "{ctx}: output_counts");
+    assert_eq!(got.predicted_class, expect.predicted_class, "{ctx}: predicted_class");
+    assert_eq!(got.per_layer.len(), expect.per_layer.len(), "{ctx}: layer count");
+    for (g, e) in got.per_layer.iter().zip(&expect.per_layer) {
+        let lctx = format!("{ctx}/{}", e.name);
+        assert_eq!(g.name, e.name, "{lctx}: name");
+        assert_eq!(g.busy_cycles, e.busy_cycles, "{lctx}: busy_cycles");
+        assert_eq!(g.compress_cycles, e.compress_cycles, "{lctx}: compress_cycles");
+        assert_eq!(g.accum_cycles, e.accum_cycles, "{lctx}: accum_cycles");
+        assert_eq!(g.activate_cycles, e.activate_cycles, "{lctx}: activate_cycles");
+        assert_eq!(g.overhead_cycles, e.overhead_cycles, "{lctx}: overhead_cycles");
+        assert_eq!(g.in_spikes, e.in_spikes, "{lctx}: in_spikes");
+        assert_eq!(g.out_spikes, e.out_spikes, "{lctx}: out_spikes");
+        assert_eq!(g.weight_reads, e.weight_reads, "{lctx}: weight_reads");
+        assert_eq!(g.membrane_accesses, e.membrane_accesses, "{lctx}: membrane_accesses");
+        assert_eq!(g.penc_chunks, e.penc_chunks, "{lctx}: penc_chunks");
+        assert_eq!(g.max_shift_depth, e.max_shift_depth, "{lctx}: max_shift_depth");
+        assert_eq!(g.accum_ops, e.accum_ops, "{lctx}: accum_ops");
+        assert_eq!(g.activations, e.activations, "{lctx}: activations");
+    }
+}
+
+// ---- golden equivalence -----------------------------------------------------
+
+#[test]
+fn single_chip_ideal_partition_is_byte_identical_on_all_table1_nets() {
+    for name in TABLE1_NETS {
+        let net = table1_net(name);
+        let cfg = fully_parallel_cfg(&net);
+        let activity = sampled_activity(&net, 42);
+
+        let mut plain = NetworkSim::cost_only(&cfg, CostModel::default());
+        let expected = plain.run_activity(&activity);
+
+        let mut part = partitioned_cost_only(&cfg, PartitionSpec::single_chip());
+        let got = part.run_activity(&activity);
+
+        assert_byte_identical(&got, &expected, name);
+        assert!(part.link_stats().is_empty(), "{name}: one chip has no links");
+    }
+}
+
+#[test]
+fn multi_chip_ideal_links_are_byte_identical_on_all_table1_nets() {
+    // ideal links at ANY chip count collapse to the analytic recurrence:
+    // same totals, same per-layer stats under the global renaming
+    for name in TABLE1_NETS {
+        let net = table1_net(name);
+        let cfg = fully_parallel_cfg(&net);
+        let activity = sampled_activity(&net, 42);
+        let mut plain = NetworkSim::cost_only(&cfg, CostModel::default());
+        let expected = plain.run_activity(&activity);
+
+        for chips in [2usize, 3] {
+            let spec = PartitionSpec { chips, cut_choice: 0, link: LinkConfig::ideal() };
+            let mut part = partitioned_cost_only(&cfg, spec);
+            let got = part.run_activity(&activity);
+            assert_byte_identical(&got, &expected, &format!("{name}/P{chips}"));
+            for ls in part.link_stats() {
+                assert_eq!(ls.credit_wait, 0, "{name}/P{chips}: ideal link credit-stalled");
+                assert_eq!(ls.serialization, 0, "{name}/P{chips}: ideal link serialized");
+            }
+        }
+    }
+}
+
+#[test]
+fn single_chip_ideal_partition_matches_functional_runs() {
+    // functional path (real weights, real spike propagation): FC nets at
+    // full T, the conv net at a short train — the property is per-step
+    let mut nets: Vec<NetDef> = vec![table1_net("net1"), table1_net("net2")];
+    let mut net5 = table1_net("net5");
+    net5.t_steps = 6;
+    nets.push(net5);
+    for net in nets {
+        let cfg = fully_parallel_cfg(&net);
+        let mut rng = Rng::new(11);
+        let rate = if net.name == "net5" { 0.02 } else { 0.1 };
+        let input = random_spike_train(net.input_bits, net.t_steps, rate, &mut rng);
+
+        let mut plain = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+        let expected = plain.run(&input);
+
+        let mut part = partitioned_functional(&cfg, PartitionSpec::single_chip(), 7);
+        let got = part.run(&input);
+        assert_byte_identical(&got, &expected, &net.name);
+
+        // the full-net weight stream split across two chips computes the
+        // same spikes: predictions survive the cut
+        let two = PartitionSpec { chips: 2, cut_choice: 0, link: LinkConfig::ideal() };
+        let mut part2 = partitioned_functional(&cfg, two, 7);
+        let got2 = part2.run(&input);
+        assert_byte_identical(&got2, &expected, &format!("{}/P2", net.name));
+    }
+}
+
+#[test]
+fn batched_completion_cycles_match_single_chip_on_p1_ideal() {
+    let net = table1_net("net1");
+    let cfg = fully_parallel_cfg(&net);
+    let mut rng = Rng::new(21);
+    let samples: Vec<SpikeTrain> = (0..3)
+        .map(|_| random_spike_train(net.input_bits, net.t_steps, 0.1, &mut rng))
+        .collect();
+
+    let mut plain = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+    let (er, eo) = plain.run_batched_timed(&samples);
+
+    let mut part = partitioned_functional(&cfg, PartitionSpec::single_chip(), 7);
+    let (gr, go) = part.run_batched_timed(&samples);
+
+    assert_byte_identical(&gr, &er, "net1 batched");
+    assert_eq!(go, eo, "per-sample predictions + completion cycles");
+}
+
+// ---- finite-link monotonicity -----------------------------------------------
+
+#[test]
+fn positive_link_latency_strictly_slows_every_multi_chip_table1_net() {
+    for name in TABLE1_NETS {
+        let net = table1_net(name);
+        let cfg = fully_parallel_cfg(&net);
+        let activity = sampled_activity(&net, 42);
+        let ideal_spec = PartitionSpec { chips: 2, cut_choice: 0, link: LinkConfig::ideal() };
+        let mut ideal = partitioned_cost_only(&cfg, ideal_spec);
+        let base = ideal.run_activity(&activity);
+
+        let finite_spec = PartitionSpec {
+            chips: 2,
+            cut_choice: 0,
+            link: LinkConfig { latency: 8, bandwidth: 16, fifo_depth: 2 },
+        };
+        let mut finite = partitioned_cost_only(&cfg, finite_spec);
+        let got = finite.run_activity(&activity);
+
+        assert!(
+            got.total_cycles > base.total_cycles,
+            "{name}: latency-8 link did not slow the pipeline ({} vs {})",
+            got.total_cycles,
+            base.total_cycles
+        );
+        // cost accounting is link-independent
+        assert_eq!(got.serial_cycles, base.serial_cycles, "{name}: serial_cycles");
+        // every added cycle is attributed to a boundary counter
+        let gap = got.total_cycles - base.total_cycles;
+        let stalls: u64 = finite
+            .link_stats()
+            .iter()
+            .map(|ls| ls.credit_wait + ls.serialization)
+            .sum();
+        assert!(
+            gap <= stalls,
+            "{name}: gap {gap} exceeds attributed link stalls {stalls}"
+        );
+    }
+}
+
+#[test]
+fn tightening_each_link_knob_never_speeds_up_net1() {
+    let net = table1_net("net1");
+    let cfg = fully_parallel_cfg(&net);
+    let activity = sampled_activity(&net, 42);
+    let cycles_of = |link: LinkConfig| -> (u64, u64) {
+        let spec = PartitionSpec { chips: 3, cut_choice: 0, link };
+        let mut sim = partitioned_cost_only(&cfg, spec);
+        let r = sim.run_activity(&activity);
+        let stalls = sim
+            .link_stats()
+            .iter()
+            .map(|ls| ls.credit_wait + ls.serialization)
+            .sum();
+        (r.total_cycles, stalls)
+    };
+    let (ideal, _) = cycles_of(LinkConfig::ideal());
+
+    // tighten one knob at a time (0 = ideal/unbounded, then tighter)
+    for knob in ["latency", "bandwidth", "fifo"] {
+        let chain: [u64; 4] = [0, 64, 8, 1];
+        let mut prev = ideal;
+        for &v in &chain {
+            let link = match knob {
+                "latency" => LinkConfig { latency: v, bandwidth: 0, fifo_depth: 0 },
+                "bandwidth" => LinkConfig { latency: 0, bandwidth: v, fifo_depth: 0 },
+                _ => LinkConfig { latency: 0, bandwidth: 0, fifo_depth: v as usize },
+            };
+            // the chain is ordered most- to least-generous, except the
+            // leading 0 which is ideal on every knob
+            let (total, stalls) = cycles_of(link);
+            assert!(
+                total >= prev,
+                "net1: tightening {knob} to {v} decreased cycles ({prev} -> {total})"
+            );
+            assert!(total >= ideal);
+            let gap = total - ideal;
+            assert!(
+                gap <= stalls,
+                "net1 {knob}={v}: gap {gap} exceeds attributed stalls {stalls}"
+            );
+            prev = total;
+        }
+    }
+}
+
+// ---- explore --partition acceptance -----------------------------------------
+
+/// Compressed identity of an evaluated point: everything the checkpoint
+/// must round-trip and determinism must pin (`DsePoint` itself has no
+/// `PartialEq`; `PartitionSummary` does).
+fn point_key(p: &snn_dse::dse::DsePoint) -> (String, u64, Option<snn_dse::dse::PartitionSummary>) {
+    (p.label.clone(), p.cycles, p.partition.clone())
+}
+
+#[test]
+fn explore_partition_is_thread_deterministic_and_resumes_byte_identically() {
+    // Pin the LHR lattice to a single point (max_lhr = 1) so the budget
+    // exhausts the whole extended lattice (1 x 3 x 2 x 3 x 3 x 3 = 162
+    // points) and every partition coordinate is provably visited.
+    let net = table1_net("net1");
+    let dir = std::env::temp_dir().join("snn_dse_partition_accept");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_with = |threads: usize, rounds: usize, ck: &std::path::Path| ExploreConfig {
+        objectives: Objective::DEFAULT.to_vec(),
+        seed: 42,
+        rounds,
+        batch: 8,
+        max_lhr: 1,
+        threads,
+        checkpoint: Some(ck.to_path_buf()),
+        checkpoint_every: 0,
+        uarch: false,
+        partition: true,
+    };
+
+    // run A: one shot, 4 threads, to exhaustion
+    let ck_a = dir.join("ck_a.json");
+    std::fs::remove_file(&ck_a).ok();
+    let mut ex_a = Explorer::new(&net, cfg_with(4, 25, &ck_a)).unwrap();
+    ex_a.run(&net, &CostModel::default()).unwrap();
+    assert!(ex_a.exhausted(), "162-point lattice must exhaust in 25x8");
+    assert_eq!(ex_a.evaluated().len(), 162);
+
+    // run B: single thread, killed after 8 rounds, resumed to exhaustion
+    let ck_b = dir.join("ck_b.json");
+    std::fs::remove_file(&ck_b).ok();
+    let mut ex_b = Explorer::new(&net, cfg_with(1, 8, &ck_b)).unwrap();
+    ex_b.run(&net, &CostModel::default()).unwrap();
+    assert!(!ex_b.exhausted(), "8x8 budget must stop short of 162");
+    drop(ex_b);
+    let mut ex_b = Explorer::resume_or_new(&net, cfg_with(1, 25, &ck_b)).unwrap();
+    assert_eq!(ex_b.rounds_done(), 8, "must resume, not restart");
+    ex_b.run(&net, &CostModel::default()).unwrap();
+    assert!(ex_b.exhausted());
+
+    // thread determinism + kill/resume byte-identity in one comparison:
+    // same points, same order, same cycles, same stall attribution
+    let keys_a: Vec<_> = ex_a.evaluated().iter().map(point_key).collect();
+    let keys_b: Vec<_> = ex_b.evaluated().iter().map(point_key).collect();
+    assert_eq!(keys_a, keys_b, "4-thread one-shot vs 1-thread kill/resume");
+
+    // every point went through the partition path, and its cycles are
+    // anchored to the single-chip reference of the same workload
+    let mut stalled = 0usize;
+    for p in ex_a.evaluated() {
+        let ps = p.partition.as_ref().expect("partition summary on every point");
+        assert!(
+            p.cycles >= ps.single_chip_cycles,
+            "{}: partitioning may never beat the single chip",
+            p.label
+        );
+        if ps.spec().is_single_chip_ideal() {
+            assert_eq!(
+                p.cycles, ps.single_chip_cycles,
+                "{}: golden baseline must reproduce the single chip exactly",
+                p.label
+            );
+        }
+        if ps.link_latency > 0 && !ps.cuts.is_empty() {
+            assert!(
+                p.cycles > ps.single_chip_cycles,
+                "{}: a latency-{} link across a real cut must add cycles",
+                p.label,
+                ps.link_latency
+            );
+        }
+        if ps.link_stall_cycles() > 0 {
+            stalled += 1;
+        }
+    }
+    assert!(stalled > 0, "some finite-link point must record link stalls");
+
+    // stall attributions survive the checkpoint JSON round trip
+    let (ck_net, points) = snn_dse::dse::load_checkpoint_points(&ck_a).unwrap();
+    assert_eq!(ck_net, "net1");
+    assert_eq!(points.len(), ex_a.evaluated().len());
+    for (a, b) in ex_a.evaluated().iter().zip(&points) {
+        assert_eq!(point_key(a), point_key(b), "{}: checkpoint round trip", a.label);
+    }
+    std::fs::remove_file(&ck_a).ok();
+    std::fs::remove_file(&ck_b).ok();
+}

@@ -243,6 +243,7 @@ fn explore_uarch_admits_finite_frontier_points_and_checkpoints_them() {
         checkpoint: Some(path.clone()),
         checkpoint_every: 0,
         uarch: true,
+        partition: false,
     };
     let mut ex = Explorer::new(&net, cfg).unwrap();
     ex.run(&net, &CostModel::default()).unwrap();
