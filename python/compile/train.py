@@ -150,6 +150,8 @@ def dump_artifacts(spec: model.NetSpec, params, acc, counts, test_set,
     ] + [np.asarray(tr[:, 0]).reshape(eval_t, -1).sum(axis=1).tolist()
          for tr in traces]
 
+    accuracy_lut = _accuracy_lut(spec, params)
+
     manifest = {
         "name": spec.name,
         "dataset": spec.dataset,
@@ -169,10 +171,33 @@ def dump_artifacts(spec: model.NetSpec, params, acc, counts, test_set,
         "per_step_counts_sample0": per_step_counts,
         "layers": layers_meta,
     }
+    if accuracy_lut is not None:
+        manifest["accuracy_lut"] = accuracy_lut
     with open(os.path.join(out_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
     print(f"  [{spec.name}] artifacts -> {out_dir} (acc {acc:.3f}, "
           f"spikes/layer {[round(float(c),1) for c in counts]})")
+
+
+def _accuracy_lut(spec: model.NetSpec, params, seed: int = 0):
+    """Accuracy across eval-time T at the trained population — the per-net
+    `accuracy_lut` manifest field `explore --model` consumes (same shape as
+    the fig7 sweep: strictly increasing t_values, one series per
+    population). Rate-coded datasets only; DVS traces are tied to their
+    recorded T, so those nets fall back to the calibrated curve Rust-side.
+    """
+    if spec.dataset == "dvs":
+        return None
+    t_values = [4, 6, 8, 10, 15, 20, 25]
+    imgs, labels = _dataset_for(spec, 256, seed + 7)
+    accs = []
+    for t in t_values:
+        x = _encode(spec, imgs, t, seed + t)
+        acc, _ = model.eval_batch(params, model.with_t(spec, t),
+                                  jnp.asarray(x), jnp.asarray(labels))
+        accs.append(float(acc))
+    return {"t_values": t_values,
+            "series": {f"pop_{spec.population}": accs}}
 
 
 def fig1_firing(out_path: str, seed: int = 0):

@@ -76,7 +76,8 @@ fn main() {
     for budget in [16usize, 64, 256] {
         let mut rng = Rng::new(42);
         let activity = model.sample(net.t_steps, &mut rng);
-        let r = compare_static_dynamic(&net, &activity, budget, &costs);
+        let r = compare_static_dynamic(&net, &activity, budget, &costs)
+            .expect("net1 is an FC network with a non-empty train");
         println!("  budget {budget:4}: static {:>10}  dynamic {:>10}  x{:.3}",
             commas(r.static_cycles), commas(r.dynamic_cycles), r.speedup());
     }

@@ -45,15 +45,16 @@
 use crate::config::HwConfig;
 use crate::dse::pareto::{Objective, ParetoFrontier};
 use crate::dse::runner::{
-    sweep_cached, sweep_partition_cached, sweep_uarch_cached, DsePoint, PartitionSummary,
-    UarchSummary,
+    sweep_cached, sweep_model_cached, sweep_partition_cached, sweep_uarch_cached, DsePoint,
+    ModelSummary, PartitionSummary, UarchSummary,
 };
 use crate::dse::space::{
-    lattice_dims, lattice_size, nth_lhr, partition_dims, split_partition_point, split_uarch_point,
-    uarch_dims,
+    lattice_dims, lattice_size, model_dims, nth_lhr, partition_dims, split_model_point,
+    split_partition_point, split_uarch_point, uarch_dims, ModelSpec,
 };
 use crate::partition::PartitionSpec;
 use crate::resources::{EstimateCache, Resources};
+use crate::runtime::AccuracyModel;
 use crate::sim::CostModel;
 use crate::snn::NetDef;
 use crate::util::json::Json;
@@ -103,6 +104,14 @@ pub struct ExploreConfig {
     /// through the pipelined multi-chip simulator (`explore
     /// --partition`). Mutually exclusive with `uarch`.
     pub partition: bool,
+    /// Extend the lattice with the two model dimensions — spike-train
+    /// length and population, with the axis choices taken from this
+    /// accuracy model's measured coverage
+    /// ([`crate::dse::space::model_dims`]) — and re-evaluate every point
+    /// at the chosen `(T, pop)` while scoring accuracy from the LUT
+    /// (`explore --model`). Mutually exclusive with `uarch` and
+    /// `partition`.
+    pub model: Option<AccuracyModel>,
 }
 
 impl Default for ExploreConfig {
@@ -118,6 +127,7 @@ impl Default for ExploreConfig {
             checkpoint_every: 5,
             uarch: false,
             partition: false,
+            model: None,
         }
     }
 }
@@ -169,6 +179,18 @@ impl Explorer {
         }
         if cfg.uarch && cfg.partition {
             bail!("explore: --uarch and --partition are mutually exclusive");
+        }
+        if cfg.model.is_some() && (cfg.uarch || cfg.partition) {
+            bail!("explore: --model is mutually exclusive with --uarch and --partition");
+        }
+        if let Some(m) = &cfg.model {
+            if m.net != net.name {
+                bail!(
+                    "explore: the accuracy model was measured for net '{}', not '{}'",
+                    m.net,
+                    net.name
+                );
+            }
         }
         Ok(Explorer {
             frontier: ParetoFrontier::new(&cfg.objectives),
@@ -252,6 +274,31 @@ impl Explorer {
                 if cfg.partition { "on" } else { "off" }
             );
         }
+        // absent in pre-model checkpoints == false
+        let ck_model = j.at("model").as_bool().unwrap_or(false);
+        if ck_model != cfg.model.is_some() {
+            bail!(
+                "checkpoint {} the model dimensions but --model is {}",
+                if ck_model { "explores" } else { "does not explore" },
+                if cfg.model.is_some() { "on" } else { "off" }
+            );
+        }
+        if let Some(m) = &cfg.model {
+            // the model axes are LUT-derived, so the same flag can still
+            // mean a different lattice — a resume against a different
+            // accuracy table must fail loudly, not silently re-key
+            let ck_t = j.at("model_t_values").usize_vec();
+            let ck_pops = j.at("model_pops").usize_vec();
+            if ck_t != m.t_values || ck_pops != m.pops {
+                bail!(
+                    "checkpoint model axes (T {ck_t:?}, populations {ck_pops:?}) != the \
+                     loaded accuracy model's (T {:?}, populations {:?}) — the checkpoint \
+                     was written against a different accuracy table",
+                    m.t_values,
+                    m.pops
+                );
+            }
+        }
 
         let state_strs = j.at("rng_state").as_arr().context("checkpoint: missing rng_state")?;
         if state_strs.len() != 4 {
@@ -293,6 +340,12 @@ impl Explorer {
                     s.link_fifo_depth,
                 ]);
             }
+            if ck_model {
+                let m = p.model.as_ref().with_context(|| {
+                    format!("model checkpoint point {} lacks its model fields", p.label)
+                })?;
+                key.extend([m.t_steps, m.pop]);
+            }
             if key.len() != n_axes {
                 bail!(
                     "checkpoint point {} has {} lattice coordinate{} but the current \
@@ -312,8 +365,10 @@ impl Explorer {
     }
 
     /// The lattice axes this exploration walks: per-layer LHR choices,
-    /// plus the three uarch dimensions when `cfg.uarch` is on, or the
-    /// five partition dimensions when `cfg.partition` is on.
+    /// plus the three uarch dimensions when `cfg.uarch` is on, the five
+    /// partition dimensions when `cfg.partition` is on, or the two model
+    /// dimensions (taken from the accuracy model's measured coverage)
+    /// when `cfg.model` is on.
     fn dims(&self, net: &NetDef) -> Vec<Vec<usize>> {
         let mut dims = lattice_dims(net, self.cfg.max_lhr);
         if self.cfg.uarch {
@@ -321,6 +376,9 @@ impl Explorer {
         }
         if self.cfg.partition {
             dims.extend(partition_dims());
+        }
+        if let Some(m) = &self.cfg.model {
+            dims.extend(model_dims(m));
         }
         dims
     }
@@ -359,6 +417,15 @@ impl Explorer {
                 })
                 .collect();
             sweep_partition_cached(net, &pairs, self.cfg.seed, costs, self.cfg.threads, cache)
+        } else if let Some(m) = &self.cfg.model {
+            let pairs: Vec<(HwConfig, ModelSpec)> = lattice_points
+                .iter()
+                .map(|v| {
+                    let (lhr, spec) = split_model_point(v);
+                    (HwConfig::with_lhr(lhr), spec)
+                })
+                .collect();
+            sweep_model_cached(net, &pairs, m, self.cfg.seed, costs, self.cfg.threads, cache)
         } else {
             let configs: Vec<HwConfig> =
                 lattice_points.iter().cloned().map(HwConfig::with_lhr).collect();
@@ -450,6 +517,13 @@ impl Explorer {
                 s.link_fifo_depth,
             ]);
         }
+        if self.cfg.model.is_some() {
+            let m = p
+                .model
+                .as_ref()
+                .expect("model exploration produced a point without model fields");
+            key.extend([m.t_steps, m.pop]);
+        }
         key
     }
 
@@ -516,7 +590,7 @@ impl Explorer {
     /// evaluated point) as a JSON value.
     pub fn checkpoint_json(&self) -> Json {
         let state = self.rng.state();
-        Json::obj(vec![
+        let mut fields = vec![
             ("version", Json::Num(CHECKPOINT_VERSION as f64)),
             ("net", Json::Str(self.net_name.clone())),
             ("topology", Json::Str(self.topology.clone())),
@@ -535,6 +609,16 @@ impl Explorer {
             ("batch", Json::Num(self.cfg.batch as f64)),
             ("uarch", Json::Bool(self.cfg.uarch)),
             ("partition", Json::Bool(self.cfg.partition)),
+            ("model", Json::Bool(self.cfg.model.is_some())),
+        ];
+        if let Some(m) = &self.cfg.model {
+            // the model axes come from the LUT, not from constants — a
+            // resume against a different LUT would silently re-key the
+            // lattice, so the axes are stored and validated
+            fields.push(("model_t_values", Json::from_usizes(&m.t_values)));
+            fields.push(("model_pops", Json::from_usizes(&m.pops)));
+        }
+        fields.extend(vec![
             ("rounds_done", Json::Num(self.rounds_done as f64)),
             ("scan_cursor", Json::Num(self.scan_cursor as f64)),
             (
@@ -550,7 +634,8 @@ impl Explorer {
                 "points",
                 Json::Arr(self.evaluated.iter().map(point_to_json).collect()),
             ),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     /// Atomically write the checkpoint (temp file + rename, so a kill
@@ -709,6 +794,18 @@ fn point_to_json(p: &DsePoint) -> Json {
             ]),
         ));
     }
+    if let Some(a) = p.accuracy {
+        fields.push(("accuracy", Json::Num(a)));
+    }
+    if let Some(m) = &p.model {
+        fields.push((
+            "model",
+            Json::obj(vec![
+                ("t_steps", Json::Num(m.t_steps as f64)),
+                ("pop", Json::Num(m.pop as f64)),
+            ]),
+        ));
+    }
     Json::obj(fields)
 }
 
@@ -786,6 +883,17 @@ fn point_from_json(j: &Json) -> Result<DsePoint> {
                     .at("link_serialization")
                     .as_u64()
                     .context("partition: missing link_serialization")?,
+            }),
+        },
+        accuracy: match j.get("accuracy") {
+            None => None,
+            Some(a) => Some(a.as_f64().context("point: malformed accuracy")?),
+        },
+        model: match j.get("model") {
+            None => None,
+            Some(mj) => Some(ModelSummary {
+                t_steps: mj.at("t_steps").as_usize().context("model: missing t_steps")?,
+                pop: mj.at("pop").as_usize().context("model: missing pop")?,
             }),
         },
     })
@@ -1106,6 +1214,162 @@ mod tests {
         let cfg = ExploreConfig { uarch: true, partition: true, ..tiny_cfg() };
         let err = Explorer::new(&net, cfg).unwrap_err();
         assert!(err.to_string().contains("mutually exclusive"), "{err:#}");
+    }
+
+    #[test]
+    fn model_exploration_walks_the_extended_lattice() {
+        let net = table1_net("net1");
+        let acc = AccuracyModel::calibrated(&net);
+        let cfg = ExploreConfig {
+            rounds: 4,
+            batch: 8,
+            max_lhr: 8,
+            threads: 2,
+            objectives: vec![
+                Objective::Cycles,
+                Objective::Lut,
+                Objective::Energy,
+                Objective::Accuracy,
+            ],
+            model: Some(acc.clone()),
+            ..Default::default()
+        };
+        let mut ex = Explorer::new(&net, cfg).unwrap();
+        ex.run(&net, &CostModel::default()).unwrap();
+        assert_eq!(ex.evaluated().len(), 32);
+        // every point carries its model summary and an accuracy score
+        assert!(ex.evaluated().iter().all(|p| p.model.is_some() && p.accuracy.is_some()));
+        // the first proposal is fully-parallel LHR + the first model axes
+        let first = &ex.evaluated()[0];
+        assert_eq!(first.lhr, vec![1, 1, 1]);
+        let fm = first.model.as_ref().unwrap();
+        assert_eq!(fm.t_steps, acc.t_values[0]);
+        assert_eq!(fm.pop, acc.pops[0]);
+        // no duplicate (lhr, model) evaluations
+        let mut keys: Vec<Vec<usize>> = ex
+            .evaluated()
+            .iter()
+            .map(|p| {
+                let m = p.model.as_ref().unwrap();
+                let mut k = p.lhr.clone();
+                k.extend([m.t_steps, m.pop]);
+                k
+            })
+            .collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 32);
+        // the annealer walked more than one spike-train length, so the
+        // frontier has a real accuracy/latency trade-off to expose
+        let mut ts: Vec<usize> =
+            ex.evaluated().iter().map(|p| p.model.as_ref().unwrap().t_steps).collect();
+        ts.sort_unstable();
+        ts.dedup();
+        assert!(ts.len() > 1, "only one T value was ever proposed");
+        // every attached accuracy matches the LUT at the point's axes
+        for p in ex.evaluated() {
+            let m = p.model.as_ref().unwrap();
+            let want = acc.accuracy_at(m.t_steps, m.pop).unwrap();
+            assert_eq!(p.accuracy.unwrap().to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn model_point_json_roundtrips_accuracy() {
+        let net = table1_net("net1");
+        let acc = AccuracyModel::calibrated(&net);
+        let cache = EstimateCache::new();
+        let p = crate::dse::runner::evaluate_model_cached(
+            &net,
+            &HwConfig::with_lhr(vec![4, 8, 8]),
+            &ModelSpec { t_steps: 10, pop: 10 },
+            &acc,
+            42,
+            &CostModel::default(),
+            &cache,
+        );
+        let j = Json::parse(&point_to_json(&p).to_string()).unwrap();
+        let q = point_from_json(&j).unwrap();
+        assert_eq!(p.cycles, q.cycles);
+        assert_eq!(p.model, q.model, "model axes must round-trip exactly");
+        assert_eq!(
+            p.accuracy.unwrap().to_bits(),
+            q.accuracy.unwrap().to_bits(),
+            "accuracy must round-trip bit-exactly"
+        );
+        // a point without model fields still parses (older checkpoints)
+        let plain = crate::dse::runner::evaluate(
+            &net,
+            &HwConfig::with_lhr(vec![4, 8, 8]),
+            &crate::dse::runner::EvalMode::Activity { seed: 42 },
+            &CostModel::default(),
+        );
+        let j = Json::parse(&point_to_json(&plain).to_string()).unwrap();
+        let q = point_from_json(&j).unwrap();
+        assert!(q.model.is_none());
+        assert!(q.accuracy.is_none());
+    }
+
+    #[test]
+    fn model_checkpoint_resume_validates_flag_and_axes_and_replays() {
+        let net = table1_net("net1");
+        let acc = AccuracyModel::calibrated(&net);
+        let dir = std::env::temp_dir().join("snn_dse_explore_model_ck");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        let cfg = ExploreConfig {
+            rounds: 3,
+            batch: 6,
+            max_lhr: 4,
+            threads: 2,
+            model: Some(acc.clone()),
+            checkpoint: Some(path.clone()),
+            ..Default::default()
+        };
+        let mut ex = Explorer::new(&net, cfg.clone()).unwrap();
+        ex.run(&net, &CostModel::default()).unwrap();
+        // resuming with --model off must be rejected
+        let mut off = cfg.clone();
+        off.model = None;
+        let err = Explorer::resume(&net, off, &path).unwrap_err();
+        assert!(err.to_string().contains("--model"), "{err:#}");
+        // resuming against a different accuracy table must be rejected:
+        // same flag, different measured axes
+        let mut other_lut = acc.clone();
+        other_lut.t_values.pop();
+        for row in &mut other_lut.acc {
+            row.pop();
+        }
+        let mut bad = cfg.clone();
+        bad.model = Some(other_lut);
+        let err = Explorer::resume(&net, bad, &path).unwrap_err();
+        assert!(err.to_string().contains("different accuracy table"), "{err:#}");
+        // a matching resume replays: same visited set, same frontier size
+        let resumed = Explorer::resume(&net, cfg.clone(), &path).unwrap();
+        assert_eq!(resumed.evaluated().len(), ex.evaluated().len());
+        assert_eq!(resumed.frontier().len(), ex.frontier().len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn model_flag_is_mutually_exclusive_with_uarch_and_partition() {
+        let net = table1_net("net1");
+        let acc = AccuracyModel::calibrated(&net);
+        for (uarch, partition) in [(true, false), (false, true)] {
+            let cfg = ExploreConfig {
+                uarch,
+                partition,
+                model: Some(acc.clone()),
+                ..tiny_cfg()
+            };
+            let err = Explorer::new(&net, cfg).unwrap_err();
+            assert!(err.to_string().contains("mutually exclusive"), "{err:#}");
+        }
+        // and a model measured for a different net is rejected up front
+        let net3 = table1_net("net3");
+        let cfg = ExploreConfig { model: Some(acc), ..tiny_cfg() };
+        let err = Explorer::new(&net3, cfg).unwrap_err();
+        assert!(err.to_string().contains("net1"), "{err:#}");
     }
 
     #[test]

@@ -33,16 +33,23 @@ pub enum Objective {
     Bram,
     /// Energy per inference (mJ).
     Energy,
+    /// Classification error rate `1 - accuracy` — the model-parameter
+    /// objective of `explore --model`. Points evaluated without the
+    /// model axes carry no accuracy and score the worst possible error
+    /// (1.0), so hardware-only points never spuriously dominate a
+    /// model-axis frontier on this objective.
+    Accuracy,
 }
 
 impl Objective {
     /// Every supported objective.
-    pub const ALL: [Objective; 5] = [
+    pub const ALL: [Objective; 6] = [
         Objective::Cycles,
         Objective::Lut,
         Objective::Reg,
         Objective::Bram,
         Objective::Energy,
+        Objective::Accuracy,
     ];
 
     /// The paper's default trade-off triple: latency, LUT area, energy.
@@ -56,6 +63,7 @@ impl Objective {
             Objective::Reg => p.resources.reg,
             Objective::Bram => p.resources.bram_36k,
             Objective::Energy => p.energy_mj,
+            Objective::Accuracy => 1.0 - p.accuracy.unwrap_or(0.0),
         }
     }
 
@@ -67,6 +75,7 @@ impl Objective {
             Objective::Reg => "reg",
             Objective::Bram => "bram",
             Objective::Energy => "energy",
+            Objective::Accuracy => "accuracy",
         }
     }
 
@@ -79,6 +88,7 @@ impl Objective {
             "reg" => Some(Objective::Reg),
             "bram" => Some(Objective::Bram),
             "energy" => Some(Objective::Energy),
+            "accuracy" | "acc" | "error" => Some(Objective::Accuracy),
             _ => None,
         }
     }
@@ -88,7 +98,10 @@ impl Objective {
         let mut out = Vec::new();
         for part in s.split(',').filter(|p| !p.trim().is_empty()) {
             let o = Objective::parse(part).ok_or_else(|| {
-                format!("unknown objective '{}' (cycles|lut|reg|bram|energy)", part.trim())
+                format!(
+                    "unknown objective '{}' (cycles|lut|reg|bram|energy|accuracy)",
+                    part.trim()
+                )
             })?;
             if !out.contains(&o) {
                 out.push(o);
@@ -294,6 +307,8 @@ mod tests {
             layer_activity: vec![],
             uarch: None,
             partition: None,
+            accuracy: None,
+            model: None,
         }
     }
 
@@ -382,9 +397,33 @@ mod tests {
     }
 
     #[test]
+    fn accuracy_objective_minimizes_error_rate() {
+        // same hardware cost, higher accuracy -> dominates on (cycles, acc)
+        let mut a = pt(100, 10.0, 1.0);
+        a.accuracy = Some(0.9);
+        let mut b = pt(100, 10.0, 1.0);
+        b.accuracy = Some(0.7);
+        let objectives = [Objective::Cycles, Objective::Accuracy];
+        assert!(dominates_on(&a, &b, &objectives));
+        assert!(!dominates_on(&b, &a, &objectives));
+        // a point without accuracy scores the worst error (1.0): any
+        // measured point at equal hardware cost dominates it
+        let c = pt(100, 10.0, 1.0);
+        assert_eq!(Objective::Accuracy.value(&c), 1.0);
+        assert!(dominates_on(&b, &c, &objectives));
+        // the trade-off survives: slower but more accurate is incomparable
+        let mut slow = pt(200, 10.0, 1.0);
+        slow.accuracy = Some(0.95);
+        assert!(!dominates_on(&a, &slow, &objectives));
+        assert!(!dominates_on(&slow, &a, &objectives));
+    }
+
+    #[test]
     fn parse_objectives() {
         assert_eq!(Objective::parse("latency"), Some(Objective::Cycles));
         assert_eq!(Objective::parse("AREA"), Some(Objective::Lut));
+        assert_eq!(Objective::parse("acc"), Some(Objective::Accuracy));
+        assert_eq!(Objective::parse("error"), Some(Objective::Accuracy));
         assert_eq!(Objective::parse("nope"), None);
         let v = Objective::parse_list("cycles, lut,energy,cycles").unwrap();
         assert_eq!(v, vec![Objective::Cycles, Objective::Lut, Objective::Energy]);

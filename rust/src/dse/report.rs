@@ -77,6 +77,9 @@ pub fn frontier_block(net_name: &str, points: &[DsePoint]) -> String {
     let mut sorted: Vec<&DsePoint> = points.iter().collect();
     sorted.sort_by(|a, b| a.cycles.cmp(&b.cycles).then_with(|| a.label.cmp(&b.label)));
     let base = sorted.first().copied();
+    // accuracy-aware explorations (`--model`) get an extra column; plain
+    // frontiers keep the original shape
+    let with_acc = sorted.iter().any(|p| p.accuracy.is_some());
     let rows: Vec<Vec<String>> = sorted
         .iter()
         .map(|p| {
@@ -87,7 +90,7 @@ pub fn frontier_block(net_name: &str, points: &[DsePoint]) -> String {
                     format!("x{bl:.2}, x{bc:.2}")
                 })
                 .unwrap_or_else(|| "—".into());
-            vec![
+            let mut row = vec![
                 format!("TW-{}", p.label),
                 format!("{}/{}", kfmt(p.resources.lut), kfmt(p.resources.reg)),
                 crate::util::commas(p.cycles),
@@ -98,37 +101,50 @@ pub fn frontier_block(net_name: &str, points: &[DsePoint]) -> String {
                     format!("x{lut_i:.2}, x{lat_i:.2}")
                 },
                 vs_base,
-            ]
+            ];
+            if with_acc {
+                row.push(
+                    p.accuracy
+                        .map(|a| format!("{:.2}", a * 100.0))
+                        .unwrap_or_else(|| "—".into()),
+                );
+            }
+            row
         })
         .collect();
+    let mut headers = vec![
+        "Work",
+        "Est. Area LUT/REG",
+        "Cycles/Image",
+        "Energy/Image",
+        "LUT-Lat. vs prior",
+        "LUT-Lat. vs fastest",
+    ];
+    if with_acc {
+        headers.push("Acc. [%]");
+    }
     format!(
         "### {} — Pareto frontier ({} points)\n\n{}",
         net_name,
         points.len(),
-        markdown_table(
-            &[
-                "Work",
-                "Est. Area LUT/REG",
-                "Cycles/Image",
-                "Energy/Image",
-                "LUT-Lat. vs prior",
-                "LUT-Lat. vs fastest",
-            ],
-            &rows,
-        )
+        markdown_table(&headers, &rows)
     )
 }
 
 /// One-line streaming row for a point newly admitted to the frontier —
 /// emitted live while an exploration runs.
 pub fn frontier_stream_row(round: usize, p: &DsePoint) -> String {
-    format!(
+    let mut row = format!(
         "[round {round:>3}] + {:18} {:>12} cycles  {:>9} LUT  {:.3} mJ",
         p.label,
         crate::util::commas(p.cycles),
         kfmt(p.resources.lut),
         p.energy_mj
-    )
+    );
+    if let Some(a) = p.accuracy {
+        row.push_str(&format!("  acc {:.3}", a));
+    }
+    row
 }
 
 /// CSV for Fig. 6: one line per configuration `net,label,lut,cycles`.
@@ -316,5 +332,29 @@ mod tests {
         let r = frontier_stream_row(7, &points()[0]);
         assert!(r.contains("[round   7]"));
         assert!(r.contains("(1,1,1)"));
+        assert!(!r.contains("acc"), "plain points carry no accuracy column");
+    }
+
+    #[test]
+    fn accuracy_bearing_points_add_the_accuracy_column() {
+        let net = table1_net("net1");
+        let acc = crate::runtime::AccuracyModel::calibrated(&net);
+        let cache = crate::resources::EstimateCache::new();
+        let p = crate::dse::runner::evaluate_model_cached(
+            &net,
+            &HwConfig::with_lhr(vec![4, 8, 8]),
+            &crate::dse::space::ModelSpec { t_steps: 10, pop: 10 },
+            &acc,
+            1,
+            &CostModel::default(),
+            &cache,
+        );
+        let r = frontier_stream_row(1, &p);
+        assert!(r.contains("acc 0."), "{r}");
+        let s = frontier_block("net1", &[p]);
+        assert!(s.contains("Acc. [%]"), "{s}");
+        // plain frontiers keep the original header set
+        let plain = frontier_block("net1", &points());
+        assert!(!plain.contains("Acc. [%]"));
     }
 }

@@ -13,10 +13,12 @@
 
 use crate::config::{ExperimentConfig, HwConfig};
 use crate::data::ActivityModel;
+use crate::dse::space::ModelSpec;
 use crate::partition::{partition_for_spec, LinkConfig, PartitionSpec};
 use crate::resources::{estimate, estimate_total_cached, EnergyModel, EstimateCache, Resources};
+use crate::runtime::AccuracyModel;
 use crate::sim::{CostModel, LayerWeights, NetworkSim, PartitionedNetworkSim, SimResult};
-use crate::snn::{NetDef, SpikeTrain};
+use crate::snn::{Layer, NetDef, SpikeTrain};
 use crate::uarch::{self, UarchConfig};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
@@ -111,6 +113,29 @@ impl PartitionSummary {
     }
 }
 
+/// Model-parameter side of an evaluated point: the two lattice
+/// coordinates of `explore --model` ([`crate::dse::space::ModelSpec`],
+/// as *requested* — LHR clamping never rewrites them, so checkpoint keys
+/// round-trip exactly). Present only on points evaluated through the
+/// model path ([`evaluate_model_cached`] / `explore --model`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSummary {
+    /// Spike-train length the point was re-simulated at.
+    pub t_steps: usize,
+    /// Population size; the output layer was resized to
+    /// `classes * pop` logical neurons before evaluation.
+    pub pop: usize,
+}
+
+impl ModelSummary {
+    pub fn spec(&self) -> ModelSpec {
+        ModelSpec {
+            t_steps: self.t_steps,
+            pop: self.pop,
+        }
+    }
+}
+
 /// One evaluated design point.
 #[derive(Debug, Clone)]
 pub struct DsePoint {
@@ -128,6 +153,11 @@ pub struct DsePoint {
     pub uarch: Option<UarchSummary>,
     /// Partition spec + link stall totals when evaluated multi-chip.
     pub partition: Option<PartitionSummary>,
+    /// Test accuracy from the accuracy LUT at the point's model
+    /// parameters, when evaluated through the model path.
+    pub accuracy: Option<f64>,
+    /// Model parameters (T, population) when evaluated via `--model`.
+    pub model: Option<ModelSummary>,
 }
 
 impl DsePoint {
@@ -223,6 +253,8 @@ fn eval_inner(
         layer_activity: sim_result.mean_activity(),
         uarch: None,
         partition: None,
+        accuracy: None,
+        model: None,
     }
 }
 
@@ -301,6 +333,8 @@ fn assemble_uarch_point(
             bank_conflict,
         }),
         partition: None,
+        accuracy: None,
+        model: None,
     }
 }
 
@@ -383,7 +417,92 @@ fn assemble_partition_point(
             link_credit_wait: credit_wait,
             link_serialization: serialization,
         }),
+        accuracy: None,
+        model: None,
     }
+}
+
+/// Rewrite `net`/`hw` for one model lattice point: set the spike-train
+/// length, the population, resize the output FC layer to
+/// `classes * pop`, and clamp each effective LHR to the (possibly
+/// shrunken) layer it now shares — `HwConfig::validate` rejects
+/// `lhr > logical_units`, and a population of 1 can shrink the output
+/// layer below the proposed LHR. The *requested* LHR stays on the
+/// returned point (see [`evaluate_model_cached`]).
+fn apply_model_spec(net: &NetDef, hw: &HwConfig, spec: &ModelSpec) -> (NetDef, HwConfig) {
+    let mut modified = net.clone();
+    modified.t_steps = spec.t_steps;
+    modified.population = spec.pop;
+    if let Some(Layer::Fc { n, .. }) = modified.layers.last_mut() {
+        *n = modified.classes * spec.pop;
+    }
+    let mut eff = hw.clone();
+    for (slot, li) in modified.parametric_layers().iter().enumerate() {
+        if slot < eff.lhr.len() {
+            let cap = modified.layers[*li].logical_units();
+            eff.lhr[slot] = eff.lhr[slot].min(cap).max(1);
+        }
+    }
+    (modified, eff)
+}
+
+/// Evaluate one `(HwConfig, ModelSpec)` pair for `explore --model`: the
+/// network is re-simulated at the spec's spike-train length and
+/// population (output layer resized to `classes * pop`, effective LHR
+/// clamped to the resized layer), so cycles/energy/resources reflect the
+/// *model* choice, while `accuracy` comes from the per-net LUT at the
+/// same `(T, pop)`. The returned point keeps the *requested* `hw.lhr`
+/// as its lattice coordinate — like [`PartitionSummary::chips`], the
+/// checkpoint key must round-trip even when clamping changed what ran.
+///
+/// Panics if `spec` is outside the LUT's coverage; `explore --model`
+/// derives its lattice axes from the LUT
+/// ([`crate::dse::space::model_dims`]), so every proposed spec is
+/// covered by construction.
+pub fn evaluate_model_cached(
+    net: &NetDef,
+    hw: &HwConfig,
+    spec: &ModelSpec,
+    acc: &AccuracyModel,
+    seed: u64,
+    costs: &CostModel,
+    cache: &EstimateCache,
+) -> DsePoint {
+    let (modified, eff) = apply_model_spec(net, hw, spec);
+    let mut p = evaluate_cached(&modified, &eff, &EvalMode::Activity { seed }, costs, cache);
+    p.net = net.name.clone();
+    p.lhr = hw.lhr.clone();
+    p.label = format!("{}·T{}·p{}", hw.label(), spec.t_steps, spec.pop);
+    p.accuracy = Some(
+        acc.accuracy_at(spec.t_steps, spec.pop)
+            .expect("model lattice axes are derived from the LUT coverage"),
+    );
+    p.model = Some(ModelSummary {
+        t_steps: spec.t_steps,
+        pop: spec.pop,
+    });
+    p
+}
+
+/// [`sweep_cached`] over `(HwConfig, ModelSpec)` pairs: the batch
+/// evaluator behind `explore --model`. Same work-stealing dispatch, same
+/// thread-count-invariant results. No shared-recording stage: each pair
+/// rewrites the network (T, population) before evaluating, so nothing
+/// expensive is common across specs at the same hardware point — the
+/// [`EstimateCache`] already dedups the resource estimates, keyed by the
+/// rewritten topology.
+pub fn sweep_model_cached(
+    net: &NetDef,
+    configs: &[(HwConfig, ModelSpec)],
+    acc: &AccuracyModel,
+    seed: u64,
+    costs: &CostModel,
+    n_threads: usize,
+    cache: &EstimateCache,
+) -> Vec<DsePoint> {
+    sweep_with(configs, n_threads, |(hw, spec)| {
+        evaluate_model_cached(net, hw, spec, acc, seed, costs, cache)
+    })
 }
 
 /// Evaluate one `(HwConfig, UarchConfig)` pair through the event-driven
@@ -894,6 +1013,108 @@ mod tests {
                 assert_eq!(a.cycles, b.cycles);
                 assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits());
                 assert_eq!(a.partition, b.partition);
+            }
+        }
+    }
+
+    #[test]
+    fn model_eval_at_the_nets_own_parameters_reproduces_the_plain_eval() {
+        // with (T, pop) equal to the registry net's own parameters the
+        // rewrite is the identity, so cycles/resources/energy must match
+        // the plain activity evaluation exactly
+        let net = table1_net("net1");
+        let hw = HwConfig::with_lhr(vec![4, 8, 8]);
+        let costs = CostModel::default();
+        let cache = EstimateCache::new();
+        let acc = AccuracyModel::calibrated(&net);
+        let spec = ModelSpec { t_steps: net.t_steps, pop: net.population };
+        let plain = evaluate(&net, &hw, &EvalMode::Activity { seed: 42 }, &costs);
+        let p = evaluate_model_cached(&net, &hw, &spec, &acc, 42, &costs, &cache);
+        assert_eq!(p.cycles, plain.cycles);
+        assert_eq!(p.serial_cycles, plain.serial_cycles);
+        assert_eq!(p.resources, plain.resources);
+        assert_eq!(p.energy_mj.to_bits(), plain.energy_mj.to_bits());
+        assert_eq!(p.lhr, hw.lhr);
+        assert_eq!(
+            p.model,
+            Some(ModelSummary { t_steps: net.t_steps, pop: net.population })
+        );
+        let a = p.accuracy.expect("model path always attaches accuracy");
+        assert!((0.0..=1.0).contains(&a));
+    }
+
+    #[test]
+    fn model_eval_shorter_train_is_faster_and_less_accurate() {
+        let net = table1_net("net1");
+        let hw = HwConfig::with_lhr(vec![4, 8, 8]);
+        let costs = CostModel::default();
+        let cache = EstimateCache::new();
+        let acc = AccuracyModel::calibrated(&net);
+        let pop = net.population;
+        let short = evaluate_model_cached(
+            &net, &hw, &ModelSpec { t_steps: 4, pop }, &acc, 42, &costs, &cache,
+        );
+        let long = evaluate_model_cached(
+            &net, &hw, &ModelSpec { t_steps: 25, pop }, &acc, 42, &costs, &cache,
+        );
+        assert!(short.cycles < long.cycles, "fewer time steps must cost fewer cycles");
+        assert!(
+            short.accuracy.unwrap() < long.accuracy.unwrap(),
+            "the calibrated LUT is strictly increasing in T"
+        );
+        // resources don't depend on T: same topology, same area
+        assert_eq!(short.resources, long.resources);
+    }
+
+    #[test]
+    fn model_eval_clamps_effective_lhr_but_keeps_the_requested_coordinate() {
+        // net1's output layer has classes * population units; at pop 1 it
+        // shrinks to `classes` (10), below an output LHR of 16 — the
+        // evaluation must clamp what runs, not reject, and the point must
+        // keep the requested lattice coordinate for checkpoint round-tripping
+        let net = table1_net("net1");
+        assert!(net.classes < 16, "test premise: pop 1 shrinks the output below LHR 16");
+        let hw = HwConfig::with_lhr(vec![4, 8, 16]);
+        let costs = CostModel::default();
+        let cache = EstimateCache::new();
+        let acc = AccuracyModel::calibrated(&net);
+        let spec = ModelSpec { t_steps: net.t_steps, pop: 1 };
+        let p = evaluate_model_cached(&net, &hw, &spec, &acc, 42, &costs, &cache);
+        assert_eq!(p.lhr, vec![4, 8, 16], "requested coordinate survives clamping");
+        assert_eq!(p.model.as_ref().unwrap().pop, 1);
+        assert!(p.cycles > 0);
+        // a smaller output layer can only shed area vs the full net
+        let full = evaluate(&net, &hw, &EvalMode::Activity { seed: 42 }, &costs);
+        assert!(p.resources.lut <= full.resources.lut);
+    }
+
+    #[test]
+    fn model_sweep_identical_across_thread_counts() {
+        let net = table1_net("net1");
+        let costs = CostModel::default();
+        let acc = AccuracyModel::calibrated(&net);
+        let configs: Vec<(HwConfig, ModelSpec)> = [
+            (vec![1, 1, 1], ModelSpec { t_steps: 4, pop: 1 }),
+            (vec![4, 8, 8], ModelSpec { t_steps: 10, pop: net.population }),
+            (vec![4, 4, 4], ModelSpec { t_steps: 25, pop: 10 }),
+        ]
+        .into_iter()
+        .map(|(lhr, s)| (HwConfig::with_lhr(lhr), s))
+        .collect();
+        let serial: Vec<DsePoint> = {
+            let cache = EstimateCache::new();
+            sweep_model_cached(&net, &configs, &acc, 42, &costs, 1, &cache)
+        };
+        for threads in [2, 8] {
+            let cache = EstimateCache::new();
+            let par = sweep_model_cached(&net, &configs, &acc, 42, &costs, threads, &cache);
+            assert_eq!(par.len(), serial.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.cycles, b.cycles);
+                assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits());
+                assert_eq!(a.accuracy.unwrap().to_bits(), b.accuracy.unwrap().to_bits());
+                assert_eq!(a.model, b.model);
             }
         }
     }

@@ -178,6 +178,43 @@ pub fn split_partition_point(point: &[usize]) -> (Vec<usize>, crate::partition::
     )
 }
 
+/// One point on the two *model* axes of `explore --model`: the network
+/// parameters the paper's robustness study varies jointly with hardware.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelSpec {
+    /// Spike-train length the point is evaluated (and scored) at.
+    pub t_steps: usize,
+    /// Population-coding size: the output layer holds
+    /// `classes * population` logical neurons.
+    pub pop: usize,
+}
+
+/// The two model axes appended to the LHR lattice when `--model` is on:
+/// spike-train length T, then population size ([`ModelSpec`] fields map
+/// positionally). Unlike the uarch/partition axes the choices are not
+/// hard-coded — they are exactly the accuracy LUT's measured coverage,
+/// so the explorer can never propose a point the LUT cannot score.
+pub fn model_dims(acc: &crate::runtime::AccuracyModel) -> Vec<Vec<usize>> {
+    vec![acc.t_values.clone(), acc.pops.clone()]
+}
+
+/// Split an extended lattice point (produced under [`model_dims`]) into
+/// its LHR prefix and the [`ModelSpec`] tail.
+pub fn split_model_point(point: &[usize]) -> (Vec<usize>, ModelSpec) {
+    assert!(
+        point.len() >= 2,
+        "model lattice point needs at least the two model dims"
+    );
+    let (lhr, tail) = point.split_at(point.len() - 2);
+    (
+        lhr.to_vec(),
+        ModelSpec {
+            t_steps: tail[0],
+            pop: tail[1],
+        },
+    )
+}
+
 /// The exact LHR sets of the paper's Table I (TW rows), per network.
 /// Conv networks (net5) get an implicit LHR 1 for the output layer, which
 /// the paper's 4-tuples leave fixed.
@@ -309,6 +346,36 @@ mod tests {
         assert_eq!(spec.link.latency, 8);
         assert_eq!(spec.link.bandwidth, 16);
         assert_eq!(spec.link.fifo_depth, 2);
+    }
+
+    #[test]
+    fn model_dims_split_roundtrips() {
+        let net = table1_net("net1");
+        let acc = crate::runtime::AccuracyModel::calibrated(&net);
+        let mut dims = lattice_dims(&net, 16);
+        let n_param = dims.len();
+        dims.extend(model_dims(&acc));
+        assert_eq!(dims.len(), n_param + 2);
+        // the axes are exactly the LUT's measured coverage
+        assert_eq!(dims[n_param], acc.t_values);
+        assert_eq!(dims[n_param + 1], acc.pops);
+        // first point of every dim = fully-parallel LHR + smallest T/pop
+        let first: Vec<usize> = dims.iter().map(|d| d[0]).collect();
+        let (lhr, spec) = split_model_point(&first);
+        assert_eq!(lhr, vec![1; n_param]);
+        assert_eq!(spec.t_steps, acc.t_values[0]);
+        assert_eq!(spec.pop, acc.pops[0]);
+        // a tail maps positionally: T then pop
+        let point = vec![2, 4, 15, 30];
+        let (lhr, spec) = split_model_point(&point);
+        assert_eq!(lhr, vec![2, 4]);
+        assert_eq!(spec, ModelSpec { t_steps: 15, pop: 30 });
+        // every lattice coordinate is scoreable by construction
+        for &t in &acc.t_values {
+            for &p in &acc.pops {
+                acc.accuracy_at(t, p).unwrap();
+            }
+        }
     }
 
     #[test]

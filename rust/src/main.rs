@@ -39,8 +39,8 @@ const USAGE: &str = "snn-dse <simulate|resources|dse|explore|uarch|partition|ser
     --threads <n>               worker threads (default 8)
     --csv <path>                dump swept points as CSV
   explore options:
-    --objectives <list>         comma list of cycles|lut|reg|bram|energy
-                                (default cycles,lut,energy)
+    --objectives <list>         comma list of cycles|lut|reg|bram|energy|accuracy
+                                (default cycles,lut,energy; --model adds accuracy)
     --rounds <n>                exploration rounds (default 32)
     --batch <n>                 configs evaluated per round (default 16)
     --max-lhr <n>               lattice bound (default 32)
@@ -55,6 +55,14 @@ const USAGE: &str = "snn-dse <simulate|resources|dse|explore|uarch|partition|ser
                                 partitioning dimensions (chips, cut choice,
                                 link latency/bandwidth/FIFO depth); mutually
                                 exclusive with --uarch
+    --model                     extend the lattice with the model dimensions
+                                (spike-train length T, population) and score
+                                accuracy from the trained manifest's
+                                accuracy_lut (calibrated stand-in curve when
+                                artifacts are absent); adds accuracy to the
+                                default objectives; mutually exclusive with
+                                --uarch and --partition
+    --artifacts <dir>           artifacts root for --model (default artifacts)
     --csv <path>                dump the frontier as CSV
   uarch options:
     --net <net1..net5>          network (default net1)
@@ -243,8 +251,46 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_explore(args: &Args) -> anyhow::Result<()> {
     let net = net_of(args);
+    // --model: co-explore (T, population) with the hardware lattice,
+    // scoring accuracy from the trained manifest's LUT when it exists
+    // and the calibrated stand-in curve otherwise
+    let model = if args.flag("model") {
+        let manifest = artifacts_dir(args).join(&net.name).join("manifest.json");
+        match snn_dse::runtime::AccuracyModel::load_manifest(&manifest)? {
+            Some(m) => {
+                eprintln!(
+                    "accuracy model: measured LUT from {} ({} T values x {} populations)",
+                    manifest.display(),
+                    m.t_values.len(),
+                    m.pops.len()
+                );
+                Some(m)
+            }
+            None => {
+                let m = snn_dse::runtime::AccuracyModel::calibrated(&net);
+                eprintln!(
+                    "accuracy model: no accuracy_lut in {} — using the calibrated \
+                     stand-in curve ({} T values x {} populations)",
+                    manifest.display(),
+                    m.t_values.len(),
+                    m.pops.len()
+                );
+                Some(m)
+            }
+        }
+    } else {
+        None
+    };
     let objectives = match args.get("objectives") {
         Some(s) => snn_dse::dse::Objective::parse_list(s).map_err(|e| anyhow::anyhow!(e))?,
+        // with --model the frontier trades accuracy too, so it joins the
+        // default objective set
+        None if model.is_some() => vec![
+            snn_dse::dse::Objective::Cycles,
+            snn_dse::dse::Objective::Lut,
+            snn_dse::dse::Objective::Energy,
+            snn_dse::dse::Objective::Accuracy,
+        ],
         None => snn_dse::dse::Objective::DEFAULT.to_vec(),
     };
     let objective_names: Vec<&str> = objectives.iter().map(|o| o.name()).collect();
@@ -259,6 +305,7 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
         checkpoint_every: args.usize_or("checkpoint-every", 5),
         uarch: args.flag("uarch"),
         partition: args.flag("partition"),
+        model,
     };
     let costs = CostModel::default();
     let mut explorer = snn_dse::dse::Explorer::resume_or_new(&net, cfg)?;
@@ -975,16 +1022,13 @@ fn cmd_auto(args: &Args) -> anyhow::Result<()> {
 fn cmd_dynamic(args: &Args) -> anyhow::Result<()> {
     // Future-work ablation: run-time sparsity-aware neuron allocation.
     let net = net_of(args);
-    anyhow::ensure!(net.layers.iter().all(|l|
-        matches!(l, snn_dse::snn::Layer::Fc { .. })),
-        "dynamic allocation ablation covers FC networks (net1..net4)");
     let budget = args.usize_or("budget", 64);
     let seed = args.usize_or("seed", 42) as u64;
     let model = snn_dse::data::ActivityModel::for_net(&net);
     let mut rng = snn_dse::util::rng::Rng::new(seed);
     let activity = model.sample(net.t_steps, &mut rng);
     let r = snn_dse::sim::compare_static_dynamic(
-        &net, &activity, budget, &CostModel::default());
+        &net, &activity, budget, &CostModel::default())?;
     println!("dynamic vs static allocation on {} (budget {} NUs):", net.name, budget);
     println!("  static : {} cycles", commas(r.static_cycles));
     println!("  dynamic: {} cycles (x{:.3} speedup incl. reconfig cost)",

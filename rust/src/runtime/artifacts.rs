@@ -10,6 +10,178 @@ use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
+/// Per-net accuracy look-up table over the two *model* axes the paper's
+/// robustness study (§VI-C) varies: spike-train length T and population
+/// size. Loaded from the `accuracy_lut` field of an artifacts manifest
+/// (written by `python/compile/train.py::dump_artifacts`, shaped exactly
+/// like the Fig. 7a sweep: `{"t_values": [...], "series": {"pop_<p>":
+/// [...]}}`), or synthesized by [`AccuracyModel::calibrated`] when no
+/// artifacts were built.
+///
+/// Lookups at a measured `(T, pop)` grid point return the stored value;
+/// a T strictly between two measured points is linearly interpolated —
+/// which preserves the per-bracket monotonicity of the measured series —
+/// and anything outside the measured coverage (T below/above the range,
+/// a population with no series) is a descriptive error rather than an
+/// extrapolation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccuracyModel {
+    /// Network the table was measured for.
+    pub net: String,
+    /// Measured spike-train lengths, strictly increasing.
+    pub t_values: Vec<usize>,
+    /// Population sizes with a measured series, strictly increasing.
+    pub pops: Vec<usize>,
+    /// `acc[pop_index][t_index]`, each in `0.0..=1.0`.
+    pub acc: Vec<Vec<f64>>,
+}
+
+impl AccuracyModel {
+    /// Parse the `accuracy_lut` manifest field. `ctx` names the source
+    /// (a path) for error messages.
+    pub fn from_lut_json(net: &str, j: &Json, ctx: &str) -> Result<AccuracyModel> {
+        let t_values = j.at("t_values").usize_vec();
+        if t_values.is_empty() {
+            bail!("{ctx}: accuracy_lut has no t_values");
+        }
+        if !t_values.windows(2).all(|w| w[0] < w[1]) {
+            bail!("{ctx}: accuracy_lut t_values {t_values:?} must be strictly increasing");
+        }
+        let Some(Json::Obj(series)) = j.get("series") else {
+            bail!("{ctx}: accuracy_lut lacks a \"series\" object");
+        };
+        let mut by_pop: Vec<(usize, Vec<f64>)> = Vec::new();
+        for (key, vals) in series {
+            let pop: usize = key
+                .strip_prefix("pop_")
+                .and_then(|p| p.parse().ok())
+                .with_context(|| {
+                    format!("{ctx}: accuracy_lut series key '{key}' is not 'pop_<n>'")
+                })?;
+            let accs = vals.f64_vec();
+            if accs.len() != t_values.len() {
+                bail!(
+                    "{ctx}: accuracy_lut series '{key}' has {} values for {} t_values",
+                    accs.len(),
+                    t_values.len()
+                );
+            }
+            for (i, &a) in accs.iter().enumerate() {
+                if !a.is_finite() || !(0.0..=1.0).contains(&a) {
+                    bail!(
+                        "{ctx}: accuracy_lut series '{key}'[{i}] = {a} outside the \
+                         valid fraction range 0.0..=1.0"
+                    );
+                }
+            }
+            by_pop.push((pop, accs));
+        }
+        if by_pop.is_empty() {
+            bail!("{ctx}: accuracy_lut series is empty");
+        }
+        by_pop.sort_by_key(|(p, _)| *p);
+        if by_pop.windows(2).any(|w| w[0].0 == w[1].0) {
+            bail!("{ctx}: accuracy_lut has duplicate population series");
+        }
+        Ok(AccuracyModel {
+            net: net.to_string(),
+            t_values: t_values.clone(),
+            pops: by_pop.iter().map(|(p, _)| *p).collect(),
+            acc: by_pop.into_iter().map(|(_, a)| a).collect(),
+        })
+    }
+
+    /// Load the `accuracy_lut` from an artifacts manifest. `Ok(None)`
+    /// when the manifest doesn't exist or predates the field (callers
+    /// fall back to [`AccuracyModel::calibrated`]); `Err` only when a
+    /// present field is malformed.
+    pub fn load_manifest(path: &Path) -> Result<Option<AccuracyModel>> {
+        if !path.exists() {
+            return Ok(None);
+        }
+        let m = Json::parse_file(path)?;
+        let net = m.at("name").as_str().unwrap_or("unknown").to_string();
+        match m.get("accuracy_lut") {
+            None => Ok(None),
+            Some(j) => Ok(Some(AccuracyModel::from_lut_json(
+                &net,
+                j,
+                &path.display().to_string(),
+            )?)),
+        }
+    }
+
+    /// Built-in deterministic stand-in for nets without trained
+    /// artifacts (CI, fresh checkouts): a saturating rational curve
+    /// `sat(pop) * T / (T + half(pop))` over the Fig. 7 grid — strictly
+    /// increasing in T and in population, so the co-exploration has a
+    /// real accuracy/latency trade-off to walk. Pure rational f64
+    /// arithmetic, so the table is bit-identical everywhere.
+    pub fn calibrated(net: &NetDef) -> AccuracyModel {
+        let t_values = vec![4usize, 6, 8, 10, 15, 20, 25];
+        let mut pops = vec![1usize, 10, net.population.max(1)];
+        pops.sort_unstable();
+        pops.dedup();
+        let acc = pops
+            .iter()
+            .map(|&p| {
+                let sat = 0.86 + 0.04 * p as f64 / (p as f64 + 4.0);
+                let half = 8.0 / (1.0 + 0.1 * p as f64);
+                t_values
+                    .iter()
+                    .map(|&t| sat * t as f64 / (t as f64 + half))
+                    .collect()
+            })
+            .collect();
+        AccuracyModel {
+            net: net.name.clone(),
+            t_values,
+            pops,
+            acc,
+        }
+    }
+
+    /// Accuracy at spike-train length `t` for population `pop`.
+    /// Measured points are returned exactly; a `t` between two measured
+    /// lengths is linearly interpolated; anything outside the coverage
+    /// is a descriptive error.
+    pub fn accuracy_at(&self, t: usize, pop: usize) -> Result<f64> {
+        let Some(pi) = self.pops.iter().position(|&p| p == pop) else {
+            bail!(
+                "accuracy LUT for '{}' has no series for population {pop} \
+                 (measured populations: {:?})",
+                self.net,
+                self.pops
+            );
+        };
+        let row = &self.acc[pi];
+        let (lo, hi) = (self.t_values[0], *self.t_values.last().unwrap());
+        if t < lo {
+            bail!(
+                "T={t} is below the accuracy LUT's measured range {lo}..={hi} \
+                 for '{}' — no extrapolation",
+                self.net
+            );
+        }
+        if t > hi {
+            bail!(
+                "T={t} is above the accuracy LUT's measured range {lo}..={hi} \
+                 for '{}' — no extrapolation",
+                self.net
+            );
+        }
+        match self.t_values.iter().position(|&tv| tv >= t) {
+            Some(i) if self.t_values[i] == t => Ok(row[i]),
+            Some(i) => {
+                let (t0, t1) = (self.t_values[i - 1] as f64, self.t_values[i] as f64);
+                let frac = (t as f64 - t0) / (t1 - t0);
+                Ok(row[i - 1] + (row[i] - row[i - 1]) * frac)
+            }
+            None => unreachable!("t <= hi guarantees a bracketing index"),
+        }
+    }
+}
+
 /// Parsed manifest + loaded tensors for one trained network.
 pub struct NetArtifacts {
     pub net: NetDef,
@@ -19,6 +191,9 @@ pub struct NetArtifacts {
     pub traces: Vec<TraceSample>,
     /// Model accuracy reported by the training phase.
     pub accuracy: f64,
+    /// Accuracy over the (T, population) grid, when the manifest carries
+    /// the `accuracy_lut` field (older artifacts predate it).
+    pub accuracy_lut: Option<AccuracyModel>,
     /// Mean spikes/step: input + every layer (the Table-I caption stats).
     pub avg_spikes_per_layer: Vec<f64>,
     /// Time steps in the traces (may differ from net.t_steps).
@@ -140,11 +315,21 @@ impl NetArtifacts {
             });
         }
 
+        let accuracy_lut = match manifest.get("accuracy_lut") {
+            None => None,
+            Some(j) => Some(AccuracyModel::from_lut_json(
+                &net.name,
+                j,
+                &dir.join("manifest.json").display().to_string(),
+            )?),
+        };
+
         Ok(NetArtifacts {
             net,
             weights,
             traces,
             accuracy,
+            accuracy_lut,
             avg_spikes_per_layer: manifest.at("avg_spikes_per_layer").f64_vec(),
             trace_t,
             dir: dir.to_path_buf(),
@@ -324,6 +509,124 @@ mod tests {
         assert!((art.accuracy - 0.91).abs() < 1e-12);
         assert_eq!(art.weights.len(), 1);
         assert!(art.traces.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn lut_json(t_values: &str, series: &str) -> Json {
+        Json::parse(&format!(
+            r#"{{"t_values":{t_values},"series":{series}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn accuracy_lut_parses_and_looks_up_measured_points() {
+        let j = lut_json(
+            "[4,10,25]",
+            r#"{"pop_1":[0.3,0.5,0.7],"pop_30":[0.4,0.6,0.8]}"#,
+        );
+        let m = AccuracyModel::from_lut_json("net1", &j, "test").unwrap();
+        assert_eq!(m.pops, vec![1, 30]);
+        assert_eq!(m.accuracy_at(4, 1).unwrap(), 0.3);
+        assert_eq!(m.accuracy_at(25, 30).unwrap(), 0.8);
+    }
+
+    #[test]
+    fn accuracy_lut_interpolates_monotonically_between_t_points() {
+        let j = lut_json("[4,10,25]", r#"{"pop_1":[0.3,0.5,0.7]}"#);
+        let m = AccuracyModel::from_lut_json("net1", &j, "test").unwrap();
+        // halfway between T=4 (0.3) and T=10 (0.5)
+        let a7 = m.accuracy_at(7, 1).unwrap();
+        assert!((a7 - 0.4).abs() < 1e-12, "{a7}");
+        // interpolation stays within the bracket and is monotone in T
+        let mut prev = 0.0;
+        for t in 4..=25 {
+            let a = m.accuracy_at(t, 1).unwrap();
+            assert!(a >= prev, "accuracy must be monotone: T={t} gave {a} < {prev}");
+            assert!((0.3..=0.7).contains(&a));
+            prev = a;
+        }
+    }
+
+    #[test]
+    fn accuracy_lut_boundaries_are_descriptive_errors() {
+        // satellite coverage: T below/above the measured range and an
+        // uncovered population must not extrapolate
+        let j = lut_json("[4,10,25]", r#"{"pop_1":[0.3,0.5,0.7]}"#);
+        let m = AccuracyModel::from_lut_json("net1", &j, "test").unwrap();
+        let below = m.accuracy_at(3, 1).unwrap_err().to_string();
+        assert!(below.contains("below") && below.contains("4..=25"), "{below}");
+        let above = m.accuracy_at(26, 1).unwrap_err().to_string();
+        assert!(above.contains("above") && above.contains("4..=25"), "{above}");
+        let no_pop = m.accuracy_at(10, 7).unwrap_err().to_string();
+        assert!(
+            no_pop.contains("population 7") && no_pop.contains("[1]"),
+            "{no_pop}"
+        );
+    }
+
+    #[test]
+    fn malformed_accuracy_lut_rejected() {
+        // out-of-range value
+        let j = lut_json("[4,10]", r#"{"pop_1":[0.3,1.5]}"#);
+        let err = AccuracyModel::from_lut_json("n", &j, "test").unwrap_err().to_string();
+        assert!(err.contains("0.0..=1.0"), "{err}");
+        // series length mismatch
+        let j = lut_json("[4,10]", r#"{"pop_1":[0.3]}"#);
+        assert!(AccuracyModel::from_lut_json("n", &j, "test").is_err());
+        // non-increasing t_values
+        let j = lut_json("[10,4]", r#"{"pop_1":[0.3,0.5]}"#);
+        let err = AccuracyModel::from_lut_json("n", &j, "test").unwrap_err().to_string();
+        assert!(err.contains("strictly increasing"), "{err}");
+        // bad series key
+        let j = lut_json("[4]", r#"{"population_1":[0.3]}"#);
+        assert!(AccuracyModel::from_lut_json("n", &j, "test").is_err());
+    }
+
+    #[test]
+    fn calibrated_fallback_is_monotone_in_t_and_pop() {
+        let net = crate::snn::table1_net("net1");
+        let m = AccuracyModel::calibrated(&net);
+        assert_eq!(m.pops, vec![1, 10, 30]);
+        for (pi, row) in m.acc.iter().enumerate() {
+            assert!(row.windows(2).all(|w| w[0] < w[1]), "row {pi} not increasing");
+            assert!(row.iter().all(|a| (0.0..=1.0).contains(a)));
+        }
+        // more population neurons never hurt accuracy in the stand-in
+        for ti in 0..m.t_values.len() {
+            assert!(m.acc[0][ti] < m.acc[2][ti]);
+        }
+        // the same net always yields the same table (bit-determinism)
+        let again = AccuracyModel::calibrated(&net);
+        assert_eq!(m, again);
+    }
+
+    #[test]
+    fn load_manifest_absent_file_and_absent_field_are_none() {
+        let missing = std::env::temp_dir().join("snn_dse_no_such_manifest.json");
+        assert!(AccuracyModel::load_manifest(&missing).unwrap().is_none());
+        let dir = write_artifact_dir("no_lut", r#""accuracy":0.9,"#);
+        assert!(AccuracyModel::load_manifest(&dir.join("manifest.json"))
+            .unwrap()
+            .is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn artifacts_load_carries_the_lut() {
+        let dir = write_artifact_dir(
+            "with_lut",
+            r#""accuracy":0.9,
+               "accuracy_lut":{"t_values":[4,10],"series":{"pop_1":[0.4,0.6]}},"#,
+        );
+        let art = NetArtifacts::load(&dir).unwrap();
+        let lut = art.accuracy_lut.expect("manifest carries the LUT");
+        assert_eq!(lut.accuracy_at(10, 1).unwrap(), 0.6);
+        // and the standalone loader agrees
+        let m = AccuracyModel::load_manifest(&dir.join("manifest.json"))
+            .unwrap()
+            .expect("field present");
+        assert_eq!(m, lut);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -8,7 +8,7 @@ pub mod artifacts;
 pub mod client;
 pub mod serve;
 
-pub use artifacts::{artifacts_root, NetArtifacts, TraceSample};
+pub use artifacts::{artifacts_root, AccuracyModel, NetArtifacts, TraceSample};
 pub use client::{Runtime, SnnExecutable};
 pub use serve::{
     choose_config_for_slo, estimate_service_cycles, parse_scenario, plan_routes,

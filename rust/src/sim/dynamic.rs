@@ -12,6 +12,7 @@
 use crate::sim::costs::CostModel;
 use crate::sim::engine::advance_finish;
 use crate::snn::{Layer, NetDef};
+use anyhow::{bail, Result};
 
 /// Dynamic allocator over a global NU budget.
 #[derive(Debug, Clone)]
@@ -42,16 +43,24 @@ impl DynamicAllocator {
             .iter()
             .map(|&s| 1 + spare * s / total)
             .collect();
-        // distribute rounding remainder to the busiest layers
-        let mut leftover = self.budget - units.iter().sum::<usize>();
+        // Distribute the rounding remainder: an equal share to every layer
+        // first (the remainder can approach the whole spare pool when the
+        // spike counts are all zero), then one extra unit per layer in
+        // busiest-first order until the budget is exhausted. Equivalent to
+        // cycling busiest-first one unit at a time, but O(n) instead of
+        // O(leftover) — and, unlike the old `take(n * 4)` cap, never drops
+        // units when leftover > 4n.
+        let leftover = self.budget - units.iter().sum::<usize>();
+        let share = leftover / n;
+        if share > 0 {
+            for u in units.iter_mut() {
+                *u += share;
+            }
+        }
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by_key(|&i| std::cmp::Reverse(spikes_in[i]));
-        for &i in order.iter().cycle().take(n * 4) {
-            if leftover == 0 {
-                break;
-            }
+        for &i in order.iter().take(leftover % n) {
             units[i] += 1;
-            leftover -= 1;
         }
         units
     }
@@ -94,22 +103,45 @@ impl DynamicResult {
 /// activity) against per-step dynamic allocation, on an FC network with
 /// per-step activity `activity[stage][t]` (input + per layer, as produced
 /// by `data::ActivityModel::sample`). Pipelined latency for both.
+///
+/// Errors on non-FC layers (the ablation's allocation unit is the FC
+/// neural unit) and on an empty spike train — a `t_steps` of zero would
+/// otherwise NaN-cast every mean activity to 0.
 pub fn compare_static_dynamic(
     net: &NetDef,
     activity: &[Vec<usize>],
     budget: usize,
     costs: &CostModel,
-) -> DynamicResult {
-    let fc: Vec<(usize, usize)> = net
-        .layers
-        .iter()
-        .map(|l| match l {
-            Layer::Fc { n_pre, n } => (*n_pre, *n),
-            _ => panic!("dynamic allocation ablation covers FC networks"),
-        })
-        .collect();
+) -> Result<DynamicResult> {
+    let mut fc: Vec<(usize, usize)> = Vec::with_capacity(net.layers.len());
+    for (i, l) in net.layers.iter().enumerate() {
+        match l {
+            Layer::Fc { n_pre, n } => fc.push((*n_pre, *n)),
+            other => bail!(
+                "dynamic allocation ablation covers FC networks only, but layer {i} \
+                 of '{}' is a {} layer",
+                net.name,
+                other.kind_str()
+            ),
+        }
+    }
     let n_layers = fc.len();
+    if activity.len() < n_layers {
+        bail!(
+            "activity has {} stages but '{}' needs {} (input + one per layer but the last)",
+            activity.len(),
+            net.name,
+            n_layers
+        );
+    }
     let t_steps = activity[0].len();
+    if t_steps == 0 {
+        bail!(
+            "empty spike train: the activity for '{}' has 0 time steps, so mean \
+             activity is undefined",
+            net.name
+        );
+    }
     let alloc = DynamicAllocator::new(budget);
 
     // static: allocate once from mean activity
@@ -137,11 +169,11 @@ pub fn compare_static_dynamic(
             prev_d = advance_finish(&mut dynamic_finish[l], prev_d, cd);
         }
     }
-    DynamicResult {
+    Ok(DynamicResult {
         static_cycles: *static_finish.last().unwrap(),
         dynamic_cycles: *dynamic_finish.last().unwrap(),
         budget,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -187,6 +219,63 @@ mod tests {
     }
 
     #[test]
+    fn prop_sum_invariant_with_large_remainders() {
+        // Regression: the remainder loop used to stop after `n * 4`
+        // hand-outs, silently dropping units whenever leftover > 4n. The
+        // worst case is all-zero spike counts (the entire spare pool is
+        // remainder) with a budget far above 5n — cover that regime plus
+        // heavily skewed counts across random large budgets.
+        prop_check(256, 0x5D0B, |g| {
+            let n = g.usize_in(1, 8);
+            let budget = g.usize_in(n, 100_000);
+            let spikes: Vec<usize> = (0..n)
+                .map(|_| if g.usize_in(0, 2) == 0 { 0 } else { g.usize_in(1, 1 << 20) })
+                .collect();
+            let u = DynamicAllocator::new(budget).allocate(&spikes);
+            if u.iter().sum::<usize>() != budget {
+                return Err(format!(
+                    "sum(units) {} != budget {budget} for spikes {spikes:?}: {u:?}",
+                    u.iter().sum::<usize>()
+                ));
+            }
+            if u.iter().any(|&x| x == 0) {
+                return Err("layer starved".into());
+            }
+            Ok(())
+        });
+        // the deterministic worst case spelled out: leftover = 9996 > 4n
+        let u = DynamicAllocator::new(10_000).allocate(&[0, 0, 0, 0]);
+        assert_eq!(u.iter().sum::<usize>(), 10_000);
+    }
+
+    #[test]
+    fn non_fc_layer_is_a_descriptive_error_not_a_panic() {
+        // regression: conv/pool nets fed to the ablation used to panic
+        let net = table1_net("net5");
+        let activity = vec![vec![10usize; 4]; net.layers.len()];
+        let err = compare_static_dynamic(&net, &activity, 64, &CostModel::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("conv"), "error must name the layer kind: {err}");
+        assert!(err.contains("net5"), "error must name the net: {err}");
+    }
+
+    #[test]
+    fn empty_spike_train_is_an_error_not_nan_zero() {
+        // regression: t_steps == 0 NaN-cast every mean activity to 0 and
+        // produced a bogus 0-cycle comparison instead of failing
+        let net = table1_net("net1");
+        let activity = vec![Vec::<usize>::new(); 4];
+        let err = compare_static_dynamic(&net, &activity, 64, &CostModel::default())
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("0 time steps"),
+            "error must describe the empty train: {err}"
+        );
+    }
+
+    #[test]
     fn dynamic_beats_static_on_bursty_traffic() {
         // Alternating bursts between layers: static splits the pool evenly,
         // dynamic follows the burst — dynamic must win despite reconfig.
@@ -199,7 +288,7 @@ mod tests {
             activity[2][step] = 10;
             activity[3][step] = 5;
         }
-        let r = compare_static_dynamic(&net, &activity, 64, &CostModel::default());
+        let r = compare_static_dynamic(&net, &activity, 64, &CostModel::default()).unwrap();
         assert!(
             r.speedup() > 1.05,
             "dynamic should win on bursty traffic: x{:.3}",
@@ -215,7 +304,7 @@ mod tests {
         let model = ActivityModel::for_net(&net);
         let mut rng = Rng::new(3);
         let activity = model.sample(40, &mut rng);
-        let r = compare_static_dynamic(&net, &activity, 64, &CostModel::default());
+        let r = compare_static_dynamic(&net, &activity, 64, &CostModel::default()).unwrap();
         assert!(
             r.speedup() < 1.1,
             "stationary traffic shouldn't favor dynamic much: x{:.3}",

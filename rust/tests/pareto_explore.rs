@@ -8,6 +8,7 @@ use snn_dse::dse::{
     evaluate, pareto_front_on, table1_lhr_sets, DsePoint, EvalMode, ExploreConfig, Explorer,
     Objective, ParetoFrontier,
 };
+use snn_dse::runtime::AccuracyModel;
 use snn_dse::sim::CostModel;
 use snn_dse::snn::table1_net;
 use std::path::PathBuf;
@@ -42,6 +43,8 @@ fn points_identical(a: &[DsePoint], b: &[DsePoint]) -> bool {
                 && p.latency_us.to_bits() == q.latency_us.to_bits()
                 && p.layer_activity.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
                     == q.layer_activity.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                && p.accuracy.map(f64::to_bits) == q.accuracy.map(f64::to_bits)
+                && p.model == q.model
         })
 }
 
@@ -157,6 +160,165 @@ fn checkpoint_roundtrip_restores_identical_frontier() {
         restored.frontier().points()
     ));
     std::fs::remove_file(&path).ok();
+}
+
+fn model_cfg(net: &snn_dse::snn::NetDef, rounds: usize, threads: usize) -> ExploreConfig {
+    ExploreConfig {
+        objectives: vec![
+            Objective::Cycles,
+            Objective::Lut,
+            Objective::Energy,
+            Objective::Accuracy,
+        ],
+        model: Some(AccuracyModel::calibrated(net)),
+        ..cfg(rounds, 6, 8, threads)
+    }
+}
+
+#[test]
+fn model_frontier_trades_accuracy_at_distinct_train_lengths() {
+    // acceptance: an accuracy-aware net-1 exploration emits a frontier
+    // with points that dominate on accuracy at distinct T values — the
+    // co-exploration exposes a real accuracy/latency trade-off instead
+    // of collapsing to one model point
+    let net = table1_net("net1");
+    let costs = CostModel::default();
+    let mut ex = Explorer::new(&net, model_cfg(&net, 10, 4)).unwrap();
+    ex.run(&net, &costs).unwrap();
+    let frontier = ex.frontier().points();
+    assert!(!frontier.is_empty());
+    let mut ts: Vec<usize> = frontier
+        .iter()
+        .map(|p| p.model.as_ref().expect("model exploration points carry model fields").t_steps)
+        .collect();
+    ts.sort_unstable();
+    ts.dedup();
+    assert!(
+        ts.len() > 1,
+        "frontier collapsed to a single spike-train length: {ts:?}"
+    );
+    // the longest-T frontier member is strictly more accurate than the
+    // shortest-T one (the calibrated LUT is strictly increasing in T),
+    // and the shortest-T one is faster — both survive because each
+    // dominates on its own axis
+    let shortest = frontier
+        .iter()
+        .min_by_key(|p| p.model.as_ref().unwrap().t_steps)
+        .unwrap();
+    let longest = frontier
+        .iter()
+        .max_by_key(|p| p.model.as_ref().unwrap().t_steps)
+        .unwrap();
+    assert!(longest.accuracy.unwrap() > shortest.accuracy.unwrap());
+    // every frontier point scores a finite accuracy in (0, 1]
+    for p in frontier {
+        let a = p.accuracy.expect("model exploration points carry accuracy");
+        assert!(a.is_finite() && a > 0.0 && a <= 1.0);
+    }
+}
+
+#[test]
+fn model_explore_identical_across_thread_counts() {
+    let net = table1_net("net1");
+    let costs = CostModel::default();
+    let mut serial = Explorer::new(&net, model_cfg(&net, 4, 1)).unwrap();
+    serial.run(&net, &costs).unwrap();
+    for threads in [2, 8] {
+        let mut par = Explorer::new(&net, model_cfg(&net, 4, threads)).unwrap();
+        par.run(&net, &costs).unwrap();
+        assert!(
+            points_identical(serial.evaluated(), par.evaluated()),
+            "model evaluation history differs at {threads} threads"
+        );
+        assert!(
+            points_identical(serial.frontier().points(), par.frontier().points()),
+            "model frontier differs at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn model_killed_and_resumed_run_matches_uninterrupted() {
+    // acceptance: kill a --model exploration after 3 of 6 rounds, resume
+    // from the checkpoint, and the final checkpoint is byte-identical to
+    // an uninterrupted 6-round run's
+    let net = table1_net("net1");
+    let costs = CostModel::default();
+
+    let full_path = tmp_ckpt("model_full.json");
+    std::fs::remove_file(&full_path).ok();
+    let mut full = model_cfg(&net, 6, 4);
+    full.checkpoint = Some(full_path.clone());
+    let mut uninterrupted = Explorer::resume_or_new(&net, full).unwrap();
+    uninterrupted.run(&net, &costs).unwrap();
+
+    let path = tmp_ckpt("model_kill_resume.json");
+    std::fs::remove_file(&path).ok();
+    let mut first = model_cfg(&net, 3, 4); // "killed" after round 3
+    first.checkpoint = Some(path.clone());
+    let mut killed = Explorer::resume_or_new(&net, first).unwrap();
+    killed.run(&net, &costs).unwrap();
+    assert_eq!(killed.rounds_done(), 3);
+
+    let mut rest = model_cfg(&net, 6, 4);
+    rest.checkpoint = Some(path.clone());
+    let mut resumed = Explorer::resume_or_new(&net, rest).unwrap();
+    assert_eq!(resumed.rounds_done(), 3, "must pick up from the checkpoint");
+    resumed.run(&net, &costs).unwrap();
+
+    assert!(
+        points_identical(uninterrupted.evaluated(), resumed.evaluated()),
+        "resumed model evaluation history diverged"
+    );
+    // the strongest form of the contract: the serialized checkpoints are
+    // byte-identical (what the CI cmp step asserts)
+    let a = std::fs::read(&full_path).unwrap();
+    let b = std::fs::read(&path).unwrap();
+    assert_eq!(a, b, "final checkpoints differ between killed+resumed and uninterrupted");
+    std::fs::remove_file(&full_path).ok();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn model_checkpoint_rejects_plain_resume_and_vice_versa() {
+    // satellite regression (extends the PR 8 dimensionality guard): a
+    // --model checkpoint resumed without --model (and the reverse) must
+    // fail with a descriptive error, not walk a mis-keyed lattice
+    let net = table1_net("net1");
+    let costs = CostModel::default();
+
+    let path = tmp_ckpt("model_flag_guard.json");
+    std::fs::remove_file(&path).ok();
+    let mut mc = model_cfg(&net, 2, 2);
+    mc.checkpoint = Some(path.clone());
+    let mut ex = Explorer::resume_or_new(&net, mc.clone()).unwrap();
+    ex.run(&net, &costs).unwrap();
+
+    // model checkpoint, plain resume — objectives must match the
+    // checkpoint's so the earlier objective check doesn't mask the flag
+    // check this test is about
+    let mut plain = cfg(2, 6, 8, 2);
+    plain.objectives = mc.objectives.clone();
+    plain.checkpoint = Some(path.clone());
+    let err = Explorer::resume(&net, plain.clone(), &path).unwrap_err();
+    assert!(format!("{err:#}").contains("--model"), "{err:#}");
+
+    // plain checkpoint, model resume
+    let plain_path = tmp_ckpt("plain_flag_guard.json");
+    std::fs::remove_file(&plain_path).ok();
+    plain.objectives = Objective::DEFAULT.to_vec();
+    plain.checkpoint = Some(plain_path.clone());
+    let mut px = Explorer::resume_or_new(&net, plain).unwrap();
+    px.run(&net, &costs).unwrap();
+    let mut model_resume = mc;
+    model_resume.checkpoint = Some(plain_path.clone());
+    // objectives must match the plain checkpoint's to reach the flag check
+    model_resume.objectives = Objective::DEFAULT.to_vec();
+    let err = Explorer::resume(&net, model_resume, &plain_path).unwrap_err();
+    assert!(format!("{err:#}").contains("--model"), "{err:#}");
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&plain_path).ok();
 }
 
 #[test]
