@@ -5,11 +5,12 @@
 //! spike-train simulation, a batch-64 sliced-vs-per-sample kernel
 //! face-off, the sharded batched serve runtime, a two-pool overload
 //! scenario through the admission-controlled router, an `explore` batch,
-//! an event-driven `uarch` replay, and a two-chip `partition` replay
-//! over a finite credit-based link) and emits `BENCH_sim.json`:
-//! steps/sec, samples/sec and simulated-cycles/sec per net plus batched,
-//! serve, overload, explore, uarch (events/sec) and partition
-//! (inferences/sec) throughput.
+//! an event-driven `uarch` replay, a two-chip `partition` replay
+//! over a finite credit-based link, and a DVS-style `events` stream
+//! through the runtime-adaptive LHR controller) and emits
+//! `BENCH_sim.json`: steps/sec, samples/sec and simulated-cycles/sec per
+//! net plus batched, serve, overload, explore, uarch (events/sec),
+//! partition (inferences/sec) and events (stream events/sec) throughput.
 //! CI runs `bench --smoke`, validates the emitted document against
 //! [`validate`], and diffs it against the committed `BENCH_sim.json`
 //! baseline with [`compare`] (regression-only, 20% tolerance), so
@@ -42,9 +43,11 @@ use std::time::Instant;
 /// batch 64) and the committed-baseline [`compare`] contract;
 /// v4 added the `overload` section (two heterogeneous replica pools
 /// under a storm scenario with a bounded admission queue);
-/// v5 adds the `partition` section (two-chip pipelined replay over a
-/// finite credit-based link, inferences/sec).
-pub const BENCH_SCHEMA: &str = "snn-dse-bench/v5";
+/// v5 added the `partition` section (two-chip pipelined replay over a
+/// finite credit-based link, inferences/sec);
+/// v6 adds the `events` section (seeded DVS-style burst stream through
+/// the runtime-adaptive LHR controller, stream events/sec).
+pub const BENCH_SCHEMA: &str = "snn-dse-bench/v6";
 
 /// Fractional throughput drop tolerated by [`compare`] before a rate
 /// counts as a regression (0.2 = fail below 80% of the baseline).
@@ -275,6 +278,8 @@ pub fn bench_explore(seed: u64, smoke: bool) -> Result<Json> {
         checkpoint_every: 0,
         uarch: false,
         partition: false,
+        model: None,
+        events: false,
     };
     let mut explorer = Explorer::new(&net, cfg)?;
     let cache = EstimateCache::new();
@@ -404,6 +409,71 @@ pub fn bench_uarch(seed: u64, smoke: bool) -> Json {
     ])
 }
 
+/// Event-stream adaptive-controller throughput: generate one seeded
+/// DVS-style burst stream, bin it at the standard window, and time
+/// repeated adaptive-LHR controller runs. The warmup doubles as the
+/// golden oracle: with the controller off the adaptive recurrence must
+/// reproduce the static allocation's cycles exactly, so a perf run can
+/// never quietly report numbers from a diverged controller.
+pub fn bench_events(seed: u64, smoke: bool) -> Json {
+    use crate::events::{
+        event_driven_activity, lhr_budget, run_adaptive, synthetic_stream, AdaptiveLhrConfig,
+        EventWorkload, StreamSpec,
+    };
+
+    let mut net = table1_net("net1");
+    if smoke {
+        net.t_steps = 10;
+    }
+    let bin_window = 8u64;
+    let spec = StreamSpec {
+        n_bits: net.input_bits,
+        duration: net.t_steps as u64 * bin_window,
+        mean_rate: 12.0,
+        seed,
+        ..StreamSpec::default()
+    };
+    let stream = synthetic_stream(&spec);
+    let wl = EventWorkload::new(&stream, bin_window);
+    let activity = event_driven_activity(&net, &wl.input_counts(), seed);
+    let budget = lhr_budget(&net, &[4, 8, 8]);
+    // golden oracle: controller off == static allocation, exactly
+    let off = AdaptiveLhrConfig { threshold: None, ..AdaptiveLhrConfig::new(budget) };
+    let off_run =
+        run_adaptive(&net, &activity, &off, &CostModel::default()).expect("net1 is fully connected");
+    assert_eq!(
+        off_run.adaptive_cycles, off_run.static_cycles,
+        "bench events: controller-off run diverged from the static allocation"
+    );
+    let acfg = AdaptiveLhrConfig::new(budget);
+    // warmup pins the cycles and the reallocation count
+    let warm =
+        run_adaptive(&net, &activity, &acfg, &CostModel::default()).expect("net1 is fully connected");
+    let iters = if smoke { 4 } else { 64 };
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        black_box(
+            run_adaptive(&net, black_box(&activity), &acfg, &CostModel::default())
+                .expect("net1 is fully connected"),
+        );
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    Json::obj(vec![
+        ("net", Json::Str("net1".into())),
+        ("pattern", Json::Str("storm".into())),
+        ("bin_window", Json::Num(bin_window as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("events", Json::Num(stream.n_events() as f64)),
+        (
+            "events_per_sec",
+            Json::Num(stream.n_events() as f64 * iters as f64 / elapsed),
+        ),
+        ("static_cycles", Json::Num(warm.static_cycles as f64)),
+        ("adaptive_cycles", Json::Num(warm.adaptive_cycles as f64)),
+        ("realloc_events", Json::Num(warm.realloc_events as f64)),
+    ])
+}
+
 /// Per-net sim workloads of one mode: `(net, lhr, default_iters, rate)`.
 fn sim_specs(smoke: bool) -> Vec<(NetDef, Vec<usize>, usize, f64)> {
     if smoke {
@@ -492,6 +562,13 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         partition.at("inferences_per_sec").as_f64().unwrap_or(0.0),
         partition.at("link_stall_cycles").as_u64().unwrap_or(0),
     );
+    let events = bench_events(opts.seed, opts.smoke);
+    eprintln!(
+        "[bench] events net1: {:.3e} stream events/s ({} events/stream, {} reallocs)",
+        events.at("events_per_sec").as_f64().unwrap_or(0.0),
+        events.at("events").as_u64().unwrap_or(0),
+        events.at("realloc_events").as_u64().unwrap_or(0),
+    );
     Ok(Json::obj(vec![
         ("schema", Json::Str(BENCH_SCHEMA.into())),
         ("seed", Json::Num(opts.seed as f64)),
@@ -503,6 +580,7 @@ pub fn run(opts: &BenchOptions) -> Result<Json> {
         ("explore", explore),
         ("uarch", uarch),
         ("partition", partition),
+        ("events", events),
     ]))
 }
 
@@ -649,6 +727,30 @@ pub fn validate(j: &Json) -> std::result::Result<(), String> {
     if partition.at("config").as_str().is_none() {
         return Err("partition.config must be a string".into());
     }
+    let events = j.at("events");
+    for key in [
+        "bin_window",
+        "iters",
+        "events",
+        "events_per_sec",
+        "static_cycles",
+        "adaptive_cycles",
+    ] {
+        expect_pos(events, "events", key)?;
+    }
+    // a stationary stream legitimately triggers zero reallocations
+    match events.at("realloc_events").as_f64() {
+        Some(v) if v.is_finite() && v >= 0.0 => {}
+        Some(v) => {
+            return Err(format!(
+                "events.realloc_events must be >= 0 and finite, got {v}"
+            ))
+        }
+        None => return Err("events.realloc_events must be a number".into()),
+    }
+    if events.at("pattern").as_str().is_none() {
+        return Err("events.pattern must be a string".into());
+    }
     Ok(())
 }
 
@@ -728,6 +830,7 @@ pub fn compare(
         ("explore", "configs_per_sec"),
         ("uarch", "events_per_sec"),
         ("partition", "inferences_per_sec"),
+        ("events", "events_per_sec"),
     ] {
         check(
             format!("{section}.{key}"),
@@ -832,6 +935,20 @@ mod tests {
                     ("single_chip_cycles", Json::Num(12_000.0)),
                     ("link_stall_cycles", Json::Num(3_000.0)),
                     ("inferences_per_sec", Json::Num(40.0)),
+                ]),
+            ),
+            (
+                "events",
+                Json::obj(vec![
+                    ("net", Json::Str("net1".into())),
+                    ("pattern", Json::Str("storm".into())),
+                    ("bin_window", Json::Num(8.0)),
+                    ("iters", Json::Num(4.0)),
+                    ("events", Json::Num(2_000.0)),
+                    ("events_per_sec", Json::Num(8_000.0)),
+                    ("static_cycles", Json::Num(10_000.0)),
+                    ("adaptive_cycles", Json::Num(9_000.0)),
+                    ("realloc_events", Json::Num(3.0)),
                 ]),
             ),
         ])
@@ -1082,6 +1199,49 @@ mod tests {
             rec.at("total_cycles").as_u64().unwrap()
                 >= rec.at("single_chip_cycles").as_u64().unwrap()
         );
+    }
+
+    #[test]
+    fn schema_requires_the_events_section() {
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            m.remove("events");
+        }
+        assert!(validate(&doc).unwrap_err().contains("events"));
+        // zero reallocations is a legitimate stationary outcome...
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(e)) = m.get_mut("events") {
+                e.insert("realloc_events".into(), Json::Num(0.0));
+            }
+        }
+        validate(&doc).unwrap();
+        // ...but a negative count is a corrupted report
+        let mut doc = minimal_valid_doc();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Obj(e)) = m.get_mut("events") {
+                e.insert("realloc_events".into(), Json::Num(-1.0));
+            }
+        }
+        assert!(validate(&doc).unwrap_err().contains("realloc_events"));
+    }
+
+    #[test]
+    fn bench_events_reports_positive_stream_rate() {
+        let rec = bench_events(7, true);
+        for key in [
+            "bin_window",
+            "iters",
+            "events",
+            "events_per_sec",
+            "static_cycles",
+            "adaptive_cycles",
+        ] {
+            let v = rec.at(key).as_f64().unwrap();
+            assert!(v > 0.0 && v.is_finite(), "{key} = {v}");
+        }
+        assert!(rec.at("realloc_events").as_f64().unwrap() >= 0.0);
+        assert_eq!(rec.at("pattern").as_str(), Some("storm"));
     }
 
     #[test]

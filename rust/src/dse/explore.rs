@@ -45,12 +45,13 @@
 use crate::config::HwConfig;
 use crate::dse::pareto::{Objective, ParetoFrontier};
 use crate::dse::runner::{
-    sweep_cached, sweep_model_cached, sweep_partition_cached, sweep_uarch_cached, DsePoint,
-    ModelSummary, PartitionSummary, UarchSummary,
+    sweep_cached, sweep_events_cached, sweep_model_cached, sweep_partition_cached,
+    sweep_uarch_cached, DsePoint, EventsSummary, ModelSummary, PartitionSummary, UarchSummary,
 };
 use crate::dse::space::{
-    lattice_dims, lattice_size, model_dims, nth_lhr, partition_dims, split_model_point,
-    split_partition_point, split_uarch_point, uarch_dims, ModelSpec,
+    events_dims, lattice_dims, lattice_size, model_dims, nth_lhr, partition_dims,
+    split_events_point, split_model_point, split_partition_point, split_uarch_point, uarch_dims,
+    EventsSpec, ModelSpec,
 };
 use crate::partition::PartitionSpec;
 use crate::resources::{EstimateCache, Resources};
@@ -112,6 +113,13 @@ pub struct ExploreConfig {
     /// (`explore --model`). Mutually exclusive with `uarch` and
     /// `partition`.
     pub model: Option<AccuracyModel>,
+    /// Extend the lattice with the two event-workload dimensions —
+    /// bin window and adaptive-controller aggressiveness (see
+    /// [`crate::dse::space::events_dims`]) — and evaluate every point on
+    /// a synthetic DVS-style event stream through the runtime-adaptive
+    /// LHR controller (`explore --events`). FC-only networks; mutually
+    /// exclusive with `uarch`, `partition` and `model`.
+    pub events: bool,
 }
 
 impl Default for ExploreConfig {
@@ -128,6 +136,7 @@ impl Default for ExploreConfig {
             uarch: false,
             partition: false,
             model: None,
+            events: false,
         }
     }
 }
@@ -182,6 +191,23 @@ impl Explorer {
         }
         if cfg.model.is_some() && (cfg.uarch || cfg.partition) {
             bail!("explore: --model is mutually exclusive with --uarch and --partition");
+        }
+        if cfg.events && (cfg.uarch || cfg.partition || cfg.model.is_some()) {
+            bail!("explore: --events is mutually exclusive with --uarch, --partition and --model");
+        }
+        if cfg.events {
+            // the adaptive LHR controller reallocates over fc_step_cost,
+            // so the event lattice is FC-only — reject conv nets up front
+            // with the offending layer named, not deep inside a sweep
+            if let Some(l) = net.layers.iter().find(|l| !matches!(l, crate::snn::Layer::Fc { .. }))
+            {
+                bail!(
+                    "explore --events: network '{}' has a {} layer, but event-driven \
+                     adaptive exploration supports fully-connected networks only",
+                    net.name,
+                    l.kind_str()
+                );
+            }
         }
         if let Some(m) = &cfg.model {
             if m.net != net.name {
@@ -274,6 +300,15 @@ impl Explorer {
                 if cfg.partition { "on" } else { "off" }
             );
         }
+        // absent in pre-events checkpoints == false
+        let ck_events = j.at("events").as_bool().unwrap_or(false);
+        if ck_events != cfg.events {
+            bail!(
+                "checkpoint {} the events dimensions but --events is {}",
+                if ck_events { "explores" } else { "does not explore" },
+                if cfg.events { "on" } else { "off" }
+            );
+        }
         // absent in pre-model checkpoints == false
         let ck_model = j.at("model").as_bool().unwrap_or(false);
         if ck_model != cfg.model.is_some() {
@@ -346,6 +381,12 @@ impl Explorer {
                 })?;
                 key.extend([m.t_steps, m.pop]);
             }
+            if ck_events {
+                let e = p.events.as_ref().with_context(|| {
+                    format!("events checkpoint point {} lacks its events fields", p.label)
+                })?;
+                key.extend([e.bin_window, e.aggressiveness]);
+            }
             if key.len() != n_axes {
                 bail!(
                     "checkpoint point {} has {} lattice coordinate{} but the current \
@@ -366,9 +407,10 @@ impl Explorer {
 
     /// The lattice axes this exploration walks: per-layer LHR choices,
     /// plus the three uarch dimensions when `cfg.uarch` is on, the five
-    /// partition dimensions when `cfg.partition` is on, or the two model
+    /// partition dimensions when `cfg.partition` is on, the two model
     /// dimensions (taken from the accuracy model's measured coverage)
-    /// when `cfg.model` is on.
+    /// when `cfg.model` is on, or the two event-workload dimensions
+    /// (bin window, controller aggressiveness) when `cfg.events` is on.
     fn dims(&self, net: &NetDef) -> Vec<Vec<usize>> {
         let mut dims = lattice_dims(net, self.cfg.max_lhr);
         if self.cfg.uarch {
@@ -379,6 +421,9 @@ impl Explorer {
         }
         if let Some(m) = &self.cfg.model {
             dims.extend(model_dims(m));
+        }
+        if self.cfg.events {
+            dims.extend(events_dims());
         }
         dims
     }
@@ -426,6 +471,15 @@ impl Explorer {
                 })
                 .collect();
             sweep_model_cached(net, &pairs, m, self.cfg.seed, costs, self.cfg.threads, cache)
+        } else if self.cfg.events {
+            let pairs: Vec<(HwConfig, EventsSpec)> = lattice_points
+                .iter()
+                .map(|v| {
+                    let (lhr, spec) = split_events_point(v);
+                    (HwConfig::with_lhr(lhr), spec)
+                })
+                .collect();
+            sweep_events_cached(net, &pairs, self.cfg.seed, costs, self.cfg.threads, cache)
         } else {
             let configs: Vec<HwConfig> =
                 lattice_points.iter().cloned().map(HwConfig::with_lhr).collect();
@@ -524,6 +578,13 @@ impl Explorer {
                 .expect("model exploration produced a point without model fields");
             key.extend([m.t_steps, m.pop]);
         }
+        if self.cfg.events {
+            let e = p
+                .events
+                .as_ref()
+                .expect("events exploration produced a point without events fields");
+            key.extend([e.bin_window, e.aggressiveness]);
+        }
         key
     }
 
@@ -610,6 +671,7 @@ impl Explorer {
             ("uarch", Json::Bool(self.cfg.uarch)),
             ("partition", Json::Bool(self.cfg.partition)),
             ("model", Json::Bool(self.cfg.model.is_some())),
+            ("events", Json::Bool(self.cfg.events)),
         ];
         if let Some(m) = &self.cfg.model {
             // the model axes come from the LUT, not from constants — a
@@ -806,6 +868,18 @@ fn point_to_json(p: &DsePoint) -> Json {
             ]),
         ));
     }
+    if let Some(e) = &p.events {
+        fields.push((
+            "events",
+            Json::obj(vec![
+                ("bin_window", Json::Num(e.bin_window as f64)),
+                ("aggressiveness", Json::Num(e.aggressiveness as f64)),
+                ("realloc_events", Json::Num(e.realloc_events as f64)),
+                ("reconfig_charged", Json::Num(e.reconfig_charged as f64)),
+                ("static_cycles", Json::Num(e.static_cycles as f64)),
+            ]),
+        ));
+    }
     Json::obj(fields)
 }
 
@@ -894,6 +968,31 @@ fn point_from_json(j: &Json) -> Result<DsePoint> {
             Some(mj) => Some(ModelSummary {
                 t_steps: mj.at("t_steps").as_usize().context("model: missing t_steps")?,
                 pop: mj.at("pop").as_usize().context("model: missing pop")?,
+            }),
+        },
+        events: match j.get("events") {
+            None => None,
+            Some(ej) => Some(EventsSummary {
+                bin_window: ej
+                    .at("bin_window")
+                    .as_usize()
+                    .context("events: missing bin_window")?,
+                aggressiveness: ej
+                    .at("aggressiveness")
+                    .as_usize()
+                    .context("events: missing aggressiveness")?,
+                realloc_events: ej
+                    .at("realloc_events")
+                    .as_u64()
+                    .context("events: missing realloc_events")?,
+                reconfig_charged: ej
+                    .at("reconfig_charged")
+                    .as_u64()
+                    .context("events: missing reconfig_charged")?,
+                static_cycles: ej
+                    .at("static_cycles")
+                    .as_u64()
+                    .context("events: missing static_cycles")?,
             }),
         },
     })
@@ -1370,6 +1469,139 @@ mod tests {
         let cfg = ExploreConfig { model: Some(acc), ..tiny_cfg() };
         let err = Explorer::new(&net3, cfg).unwrap_err();
         assert!(err.to_string().contains("net1"), "{err:#}");
+    }
+
+    #[test]
+    fn events_exploration_walks_the_extended_lattice() {
+        let net = table1_net("net1");
+        let cfg = ExploreConfig {
+            rounds: 4,
+            batch: 8,
+            max_lhr: 8,
+            threads: 2,
+            events: true,
+            ..Default::default()
+        };
+        let mut ex = Explorer::new(&net, cfg).unwrap();
+        ex.run(&net, &CostModel::default()).unwrap();
+        assert_eq!(ex.evaluated().len(), 32);
+        // every point carries its events summary
+        assert!(ex.evaluated().iter().all(|p| p.events.is_some()));
+        // the first proposal is fully-parallel LHR + the first axis
+        // choices: bin window 1, controller off
+        let first = &ex.evaluated()[0];
+        assert_eq!(first.lhr, vec![1, 1, 1]);
+        let fe = first.events.as_ref().unwrap();
+        assert_eq!(fe.bin_window, crate::dse::space::EVENTS_WINDOW_CHOICES[0]);
+        assert_eq!(fe.aggressiveness, crate::dse::space::EVENTS_AGGR_CHOICES[0]);
+        // controller off means no reallocations and no charge
+        assert_eq!(fe.realloc_events, 0);
+        assert_eq!(fe.reconfig_charged, 0);
+        // no duplicate (lhr, events) evaluations
+        let mut keys: Vec<Vec<usize>> = ex
+            .evaluated()
+            .iter()
+            .map(|p| {
+                let e = p.events.as_ref().unwrap();
+                let mut k = p.lhr.clone();
+                k.extend([e.bin_window, e.aggressiveness]);
+                k
+            })
+            .collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 32);
+        // the annealer walked beyond the default axis choices
+        assert!(ex.evaluated().iter().any(|p| {
+            let e = p.events.as_ref().unwrap();
+            e.bin_window != 1 || e.aggressiveness != 0
+        }));
+    }
+
+    #[test]
+    fn events_point_json_roundtrips_the_summary() {
+        let net = table1_net("net1");
+        let cache = EstimateCache::new();
+        let p = crate::dse::runner::evaluate_events_cached(
+            &net,
+            &HwConfig::with_lhr(vec![4, 8, 8]),
+            &EventsSpec { bin_window: 8, aggressiveness: 2 },
+            42,
+            &CostModel::default(),
+            &cache,
+        );
+        let j = Json::parse(&point_to_json(&p).to_string()).unwrap();
+        let q = point_from_json(&j).unwrap();
+        assert_eq!(p.cycles, q.cycles);
+        assert_eq!(p.events, q.events, "events summary must round-trip exactly");
+        // a point without events fields still parses (older checkpoints)
+        let plain = crate::dse::runner::evaluate(
+            &net,
+            &HwConfig::with_lhr(vec![4, 8, 8]),
+            &crate::dse::runner::EvalMode::Activity { seed: 42 },
+            &CostModel::default(),
+        );
+        let j = Json::parse(&point_to_json(&plain).to_string()).unwrap();
+        assert!(point_from_json(&j).unwrap().events.is_none());
+    }
+
+    #[test]
+    fn events_checkpoint_resume_validates_the_flag_and_replays() {
+        let net = table1_net("net1");
+        let dir = std::env::temp_dir().join("snn_dse_explore_events_ck");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        let cfg = ExploreConfig {
+            rounds: 3,
+            batch: 6,
+            max_lhr: 4,
+            threads: 2,
+            events: true,
+            checkpoint: Some(path.clone()),
+            ..Default::default()
+        };
+        let mut ex = Explorer::new(&net, cfg.clone()).unwrap();
+        ex.run(&net, &CostModel::default()).unwrap();
+        // resuming with --events off must be rejected
+        let mut off = cfg.clone();
+        off.events = false;
+        let err = Explorer::resume(&net, off, &path).unwrap_err();
+        assert!(err.to_string().contains("--events"), "{err:#}");
+        // a matching resume replays: same visited set, same frontier size
+        let resumed = Explorer::resume(&net, cfg.clone(), &path).unwrap();
+        assert_eq!(resumed.evaluated().len(), ex.evaluated().len());
+        assert_eq!(resumed.frontier().len(), ex.frontier().len());
+        // extending the budget keeps proposing fresh extended-lattice keys
+        let more = ExploreConfig { rounds: 4, ..cfg };
+        let mut again = Explorer::resume(&net, more, &path).unwrap();
+        again.run(&net, &CostModel::default()).unwrap();
+        assert!(again.evaluated().len() > ex.evaluated().len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn events_flag_is_mutually_exclusive_and_fc_only() {
+        let net = table1_net("net1");
+        for (uarch, partition, model) in
+            [(true, false, false), (false, true, false), (false, false, true)]
+        {
+            let cfg = ExploreConfig {
+                uarch,
+                partition,
+                model: model.then(|| AccuracyModel::calibrated(&net)),
+                events: true,
+                ..tiny_cfg()
+            };
+            let err = Explorer::new(&net, cfg).unwrap_err();
+            assert!(err.to_string().contains("mutually exclusive"), "{err:#}");
+        }
+        // a conv network is rejected up front with the layer kind named
+        let net5 = table1_net("net5");
+        let cfg = ExploreConfig { events: true, ..tiny_cfg() };
+        let err = Explorer::new(&net5, cfg).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("conv"), "{msg}");
+        assert!(msg.contains("fully-connected"), "{msg}");
     }
 
     #[test]

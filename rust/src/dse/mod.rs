@@ -28,14 +28,16 @@ pub use pareto::{
     dominates, dominates_on, knee_point, pareto_front, pareto_front_on, Objective, ParetoFrontier,
 };
 pub use runner::{
-    evaluate, evaluate_cached, evaluate_model_cached, evaluate_partition_cached,
-    evaluate_uarch_cached, sweep, sweep_cached, sweep_model_cached, sweep_partition_cached,
-    sweep_uarch_cached, DsePoint, EvalMode, ModelSummary, PartitionSummary, UarchSummary,
+    evaluate, evaluate_cached, evaluate_events_cached, evaluate_model_cached,
+    evaluate_partition_cached, evaluate_uarch_cached, sweep, sweep_cached, sweep_events_cached,
+    sweep_model_cached, sweep_partition_cached, sweep_uarch_cached, DsePoint, EvalMode,
+    EventsSummary, ModelSummary, PartitionSummary, UarchSummary, EVENTS_TICKS_PER_STEP,
 };
 pub use space::{
-    enumerate_capped, enumerate_lhr, lattice_dims, lattice_size, lhr_choices, model_dims, nth_lhr,
-    partition_dims, split_model_point, split_partition_point, split_uarch_point, table1_lhr_sets,
-    uarch_dims, ModelSpec,
+    enumerate_capped, enumerate_lhr, events_dims, lattice_dims, lattice_size, lhr_choices,
+    model_dims, nth_lhr, partition_dims, split_events_point, split_model_point,
+    split_partition_point, split_uarch_point, table1_lhr_sets, uarch_dims, EventsSpec, ModelSpec,
+    EVENTS_AGGR_CHOICES, EVENTS_WINDOW_CHOICES,
     PARTITION_CHIP_CHOICES, PARTITION_CUT_CHOICES, PARTITION_LINK_BANDWIDTH_CHOICES,
     PARTITION_LINK_FIFO_CHOICES, PARTITION_LINK_LATENCY_CHOICES, UARCH_BANK_CHOICES,
     UARCH_FIFO_CHOICES, UARCH_PORT_CHOICES,

@@ -13,7 +13,11 @@
 
 use crate::config::{ExperimentConfig, HwConfig};
 use crate::data::ActivityModel;
-use crate::dse::space::ModelSpec;
+use crate::dse::space::{EventsSpec, ModelSpec};
+use crate::events::{
+    aggressiveness_threshold, event_driven_activity, lhr_budget, run_adaptive, synthetic_stream,
+    AdaptiveLhrConfig, EventPattern, EventWorkload, StreamSpec,
+};
 use crate::partition::{partition_for_spec, LinkConfig, PartitionSpec};
 use crate::resources::{estimate, estimate_total_cached, EnergyModel, EstimateCache, Resources};
 use crate::runtime::AccuracyModel;
@@ -136,6 +140,35 @@ impl ModelSummary {
     }
 }
 
+/// Event-workload side of an evaluated point: the two lattice
+/// coordinates of `explore --events` plus what the runtime LHR
+/// controller did on the stream. Present only on points evaluated
+/// through the events path ([`evaluate_events_cached`] /
+/// `explore --events`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EventsSummary {
+    /// Ticks per simulator step the stream was binned at.
+    pub bin_window: usize,
+    /// Controller aggressiveness level (0 = controller off).
+    pub aggressiveness: usize,
+    /// Reallocations the controller committed.
+    pub realloc_events: u64,
+    /// Total reconfiguration cycles charged across layers.
+    pub reconfig_charged: u64,
+    /// Cycles of the static mean-rate allocation on the same stream —
+    /// the reference the controller's win/loss is measured from.
+    pub static_cycles: u64,
+}
+
+impl EventsSummary {
+    pub fn spec(&self) -> EventsSpec {
+        EventsSpec {
+            bin_window: self.bin_window,
+            aggressiveness: self.aggressiveness,
+        }
+    }
+}
+
 /// One evaluated design point.
 #[derive(Debug, Clone)]
 pub struct DsePoint {
@@ -158,6 +191,9 @@ pub struct DsePoint {
     pub accuracy: Option<f64>,
     /// Model parameters (T, population) when evaluated via `--model`.
     pub model: Option<ModelSummary>,
+    /// Event-stream binning + adaptive-controller outcome when evaluated
+    /// via `--events`.
+    pub events: Option<EventsSummary>,
 }
 
 impl DsePoint {
@@ -255,6 +291,7 @@ fn eval_inner(
         partition: None,
         accuracy: None,
         model: None,
+        events: None,
     }
 }
 
@@ -335,6 +372,7 @@ fn assemble_uarch_point(
         partition: None,
         accuracy: None,
         model: None,
+        events: None,
     }
 }
 
@@ -419,6 +457,7 @@ fn assemble_partition_point(
         }),
         accuracy: None,
         model: None,
+        events: None,
     }
 }
 
@@ -628,6 +667,162 @@ pub fn sweep_partition_cached(
     sweep_with(configs, n_threads, |(hw, spec)| {
         let single = &references[index[&key_of(hw)]];
         assemble_partition_point(net, hw, spec, seed, costs, single)
+    })
+}
+
+/// Ticks of stream time per *native* simulator step: the synthetic
+/// stream behind `explore --events` spans `t_steps * 8` ticks, so a bin
+/// window of 8 reproduces the net's own step count while a window of 1
+/// runs 8x finer.
+pub const EVENTS_TICKS_PER_STEP: u64 = 8;
+
+/// Sliding-window length (steps) of the runtime controller on the
+/// events path.
+const EVENTS_CONTROLLER_WINDOW: usize = 4;
+
+/// The stream every events-path evaluation of `(net, seed)` shares: a
+/// burst-storm pattern calibrated so the mean binned input rate at the
+/// widest window matches the net's calibrated input activity. Depends
+/// only on `(net, seed)` — never on the hardware point or the events
+/// spec — so every lattice point of one exploration prices the same
+/// events.
+fn events_stream_spec(net: &NetDef, seed: u64) -> StreamSpec {
+    let model = ActivityModel::for_net(net);
+    StreamSpec {
+        n_bits: net.input_bits,
+        duration: net.t_steps as u64 * EVENTS_TICKS_PER_STEP,
+        mean_rate: model.means[0] / EVENTS_TICKS_PER_STEP as f64,
+        spatial_sigma: 0.12,
+        burst_factor: 8.0,
+        p_enter: 0.05,
+        p_exit: 0.25,
+        pattern: EventPattern::BurstStorm,
+        seed,
+    }
+}
+
+/// The spec-independent-but-window-dependent half of an events
+/// evaluation: the binned per-step input counts and the event-driven
+/// activity derived from them. One recording per distinct bin window
+/// serves every `(hw, aggressiveness)` variant in a sweep.
+struct EventsRecording {
+    /// `activity[0]` = binned input counts; `activity[l+1]` = layer `l`
+    /// output counts.
+    activity: Vec<Vec<usize>>,
+}
+
+fn record_events_workload(net: &NetDef, bin_window: usize, seed: u64) -> EventsRecording {
+    let stream = synthetic_stream(&events_stream_spec(net, seed));
+    let wl = EventWorkload::new(&stream, bin_window as u64);
+    let counts = wl.input_counts();
+    EventsRecording {
+        activity: event_driven_activity(net, &counts, seed),
+    }
+}
+
+fn assemble_events_point(
+    net: &NetDef,
+    hw: &HwConfig,
+    spec: &EventsSpec,
+    rec: &EventsRecording,
+    costs: &CostModel,
+    cache: &EstimateCache,
+) -> DsePoint {
+    let cfg = ExperimentConfig::new(net.clone(), hw.clone()).expect("invalid config");
+    let acfg = AdaptiveLhrConfig {
+        budget: lhr_budget(net, &hw.lhr),
+        window: EVENTS_CONTROLLER_WINDOW,
+        threshold: aggressiveness_threshold(spec.aggressiveness),
+        reconfig_cycles: 8,
+    };
+    let r = run_adaptive(net, &rec.activity, &acfg, costs)
+        .expect("explore --events validates FC networks before proposing points");
+    // engine run on the same activity: per-layer stats for the activity
+    // snapshot and the energy model's per-phase counters
+    let mut sim = NetworkSim::cost_only(&cfg, costs.clone());
+    let engine = sim.run_activity(&rec.activity);
+    let sim_result = SimResult {
+        total_cycles: r.adaptive_cycles,
+        serial_cycles: r.adaptive_serial_cycles,
+        per_layer: engine.per_layer.clone(),
+        t_steps: rec.activity[0].len(),
+        output_counts: Vec::new(),
+        predicted_class: None,
+    };
+    let resources = estimate_total_cached(&cfg, cache);
+    let energy = EnergyModel::default().inference_energy(&resources, &sim_result, cfg.hw.clock_hz);
+    DsePoint {
+        net: net.name.clone(),
+        label: format!("{}·w{}·a{}", hw.label(), spec.bin_window, spec.aggressiveness),
+        lhr: hw.lhr.clone(),
+        cycles: r.adaptive_cycles,
+        serial_cycles: r.adaptive_serial_cycles,
+        resources,
+        energy_mj: energy.total_mj(),
+        latency_us: r.adaptive_cycles as f64 / cfg.hw.clock_hz * 1e6,
+        layer_activity: sim_result.mean_activity(),
+        uarch: None,
+        partition: None,
+        accuracy: None,
+        model: None,
+        events: Some(EventsSummary {
+            bin_window: spec.bin_window,
+            aggressiveness: spec.aggressiveness,
+            realloc_events: r.realloc_events,
+            reconfig_charged: r.reconfig_charged,
+            static_cycles: r.static_cycles,
+        }),
+    }
+}
+
+/// Evaluate one `(HwConfig, EventsSpec)` pair on the shared synthetic
+/// burst-storm stream: the stream is binned at `spec.bin_window`, the
+/// runtime LHR controller runs at `spec.aggressiveness` over the NU pool
+/// the hardware point's LHR implies, and the point's `cycles` are the
+/// controller's pipelined latency (aggressiveness 0 = controller off =
+/// the static allocation's cycles exactly). FC networks only — the
+/// explorer validates the topology before proposing points.
+pub fn evaluate_events_cached(
+    net: &NetDef,
+    hw: &HwConfig,
+    spec: &EventsSpec,
+    seed: u64,
+    costs: &CostModel,
+    cache: &EstimateCache,
+) -> DsePoint {
+    let rec = record_events_workload(net, spec.bin_window, seed);
+    assemble_events_point(net, hw, spec, &rec, costs, cache)
+}
+
+/// [`sweep_cached`] over `(HwConfig, EventsSpec)` pairs: the batch
+/// evaluator behind `explore --events`. Same work-stealing dispatch,
+/// same thread-count-invariant results. Stream generation + binning +
+/// activity derivation — the expensive, hardware-independent half — run
+/// once per *distinct bin window*, in parallel, and are shared by every
+/// point binned at that window; only the controller run and the engine
+/// stats pass run per pair.
+pub fn sweep_events_cached(
+    net: &NetDef,
+    configs: &[(HwConfig, EventsSpec)],
+    seed: u64,
+    costs: &CostModel,
+    n_threads: usize,
+    cache: &EstimateCache,
+) -> Vec<DsePoint> {
+    let mut index: HashMap<usize, usize> = HashMap::new();
+    let mut windows: Vec<usize> = Vec::new();
+    for (_, spec) in configs {
+        if !index.contains_key(&spec.bin_window) {
+            index.insert(spec.bin_window, windows.len());
+            windows.push(spec.bin_window);
+        }
+    }
+    let recordings: Vec<EventsRecording> = sweep_with(&windows, n_threads, |w| {
+        record_events_workload(net, *w, seed)
+    });
+    sweep_with(configs, n_threads, |(hw, spec)| {
+        let rec = &recordings[index[&spec.bin_window]];
+        assemble_events_point(net, hw, spec, rec, costs, cache)
     })
 }
 
@@ -901,6 +1096,74 @@ mod tests {
                 assert_eq!(a.cycles, b.cycles);
                 assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits());
                 assert_eq!(a.uarch, b.uarch);
+            }
+        }
+    }
+
+    #[test]
+    fn events_aggressiveness_zero_is_the_static_baseline() {
+        // the events-path golden anchor: controller off prices the static
+        // mean-rate allocation exactly, with nothing reallocated or charged
+        let net = table1_net("net1");
+        let hw = HwConfig::with_lhr(vec![4, 8, 8]);
+        let costs = CostModel::default();
+        let cache = EstimateCache::new();
+        let spec = EventsSpec { bin_window: 8, aggressiveness: 0 };
+        let p = evaluate_events_cached(&net, &hw, &spec, 42, &costs, &cache);
+        let e = p.events.as_ref().unwrap();
+        assert_eq!(p.cycles, e.static_cycles);
+        assert_eq!(e.realloc_events, 0);
+        assert_eq!(e.reconfig_charged, 0);
+        assert_eq!(e.spec(), spec);
+        assert!(p.cycles > 0 && p.cycles <= p.serial_cycles);
+        assert_eq!(p.label, "(4,8,8)·w8·a0");
+    }
+
+    #[test]
+    fn events_finer_windows_schedule_more_steps() {
+        let net = table1_net("net1");
+        let hw = HwConfig::with_lhr(vec![4, 8, 8]);
+        let costs = CostModel::default();
+        let cache = EstimateCache::new();
+        let fine = evaluate_events_cached(
+            &net, &hw, &EventsSpec { bin_window: 1, aggressiveness: 0 }, 42, &costs, &cache,
+        );
+        let coarse = evaluate_events_cached(
+            &net, &hw, &EventsSpec { bin_window: 8, aggressiveness: 0 }, 42, &costs, &cache,
+        );
+        // 8x the steps of the same stream cost more total work
+        assert!(fine.serial_cycles > coarse.serial_cycles);
+        // resources are the static hardware either way
+        assert_eq!(fine.resources, coarse.resources);
+    }
+
+    #[test]
+    fn events_sweep_identical_across_thread_counts() {
+        let net = table1_net("net1");
+        let costs = CostModel::default();
+        let configs: Vec<(HwConfig, EventsSpec)> = [
+            (vec![1, 1, 1], EventsSpec { bin_window: 1, aggressiveness: 0 }),
+            (vec![4, 8, 8], EventsSpec { bin_window: 4, aggressiveness: 2 }),
+            (vec![4, 4, 4], EventsSpec { bin_window: 8, aggressiveness: 3 }),
+            (vec![4, 8, 8], EventsSpec { bin_window: 4, aggressiveness: 1 }),
+        ]
+        .into_iter()
+        .map(|(lhr, s)| (HwConfig::with_lhr(lhr), s))
+        .collect();
+        let serial: Vec<DsePoint> = {
+            let cache = EstimateCache::new();
+            sweep_events_cached(&net, &configs, 42, &costs, 1, &cache)
+        };
+        for threads in [2, 8] {
+            let cache = EstimateCache::new();
+            let par = sweep_events_cached(&net, &configs, 42, &costs, threads, &cache);
+            assert_eq!(par.len(), serial.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.cycles, b.cycles);
+                assert_eq!(a.serial_cycles, b.serial_cycles);
+                assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits());
+                assert_eq!(a.events, b.events);
             }
         }
     }

@@ -178,6 +178,53 @@ pub fn split_partition_point(point: &[usize]) -> (Vec<usize>, crate::partition::
     )
 }
 
+/// Candidate bin windows (ticks per simulator step) for
+/// `explore --events`. The first choice (1 tick/step) is the native
+/// resolution the golden round-trip pins.
+pub const EVENTS_WINDOW_CHOICES: [usize; 4] = [1, 2, 4, 8];
+
+/// Candidate adaptive-controller aggressiveness levels for
+/// `explore --events` (0 = controller off, the static baseline; higher
+/// levels reallocate on smaller rate deviations — see
+/// [`crate::events::aggressiveness_threshold`]).
+pub const EVENTS_AGGR_CHOICES: [usize; 4] = [0, 1, 2, 3];
+
+/// One point on the two *event* axes of `explore --events`: how the
+/// stream is binned onto steps, and how eagerly the runtime LHR
+/// controller chases the observed rates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EventsSpec {
+    /// Ticks per simulator step the event stream is binned at.
+    pub bin_window: usize,
+    /// Controller aggressiveness level (index into the threshold map).
+    pub aggressiveness: usize,
+}
+
+/// The two event axes appended to the LHR lattice when `--events` is
+/// on: bin window, then aggressiveness ([`EventsSpec`] fields map
+/// positionally). The first choice of each axis is the static
+/// native-resolution baseline.
+pub fn events_dims() -> Vec<Vec<usize>> {
+    vec![EVENTS_WINDOW_CHOICES.to_vec(), EVENTS_AGGR_CHOICES.to_vec()]
+}
+
+/// Split an extended lattice point (produced under [`events_dims`]) into
+/// its LHR prefix and the [`EventsSpec`] tail.
+pub fn split_events_point(point: &[usize]) -> (Vec<usize>, EventsSpec) {
+    assert!(
+        point.len() >= 2,
+        "events lattice point needs at least the two event dims"
+    );
+    let (lhr, tail) = point.split_at(point.len() - 2);
+    (
+        lhr.to_vec(),
+        EventsSpec {
+            bin_window: tail[0],
+            aggressiveness: tail[1],
+        },
+    )
+}
+
 /// One point on the two *model* axes of `explore --model`: the network
 /// parameters the paper's robustness study varies jointly with hardware.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -323,6 +370,38 @@ mod tests {
         assert_eq!(ucfg.fifo_depth, 8);
         assert_eq!(ucfg.mem_ports, 2);
         assert_eq!(ucfg.banks, 1);
+    }
+
+    #[test]
+    fn events_dims_split_roundtrips() {
+        let net = fc_net("t", "mnist", &[64, 16, 8], 4, 2, 0.9, 5);
+        let mut dims = lattice_dims(&net, 16);
+        let n_param = dims.len();
+        dims.extend(events_dims());
+        assert_eq!(dims.len(), n_param + 2);
+        // first point of every dim = fully-parallel LHR + static
+        // native-resolution baseline
+        let first: Vec<usize> = dims.iter().map(|d| d[0]).collect();
+        let (lhr, spec) = split_events_point(&first);
+        assert_eq!(lhr, vec![1; n_param]);
+        assert_eq!(spec.bin_window, 1);
+        assert_eq!(spec.aggressiveness, 0);
+        // a tail maps positionally: window then aggressiveness
+        let point = vec![2, 4, 8, 2];
+        let (lhr, spec) = split_events_point(&point);
+        assert_eq!(lhr, vec![2, 4]);
+        assert_eq!(
+            spec,
+            EventsSpec {
+                bin_window: 8,
+                aggressiveness: 2
+            }
+        );
+        // every aggressiveness choice maps onto a threshold level
+        for &a in &EVENTS_AGGR_CHOICES {
+            let th = crate::events::aggressiveness_threshold(a);
+            assert_eq!(th.is_none(), a == 0);
+        }
     }
 
     #[test]

@@ -1,0 +1,394 @@
+//! Runtime-adaptive LHR control — the event-driven generalization of the
+//! one-shot ablation in [`crate::sim::dynamic`].
+//!
+//! That ablation re-partitions the NU pool **every** step from the true
+//! instantaneous spike counts with a flat per-step reconfiguration tax —
+//! an oracle upper bound no hardware controller reaches. This module
+//! models the implementable version: a controller that *observes*
+//! per-layer firing rates over a sliding window, proposes a
+//! [`DynamicAllocator`] split from the window means, and commits it only
+//! when the proposal deviates from the live allocation by more than a
+//! hysteresis threshold — charging `reconfig_cycles` into every layer's
+//! finish recurrence on each commit (a crossbar re-arm stalls the whole
+//! pipeline).
+//!
+//! ## Convergence invariant (pinned in `events_golden.rs`)
+//!
+//! On a stationary stream (constant per-layer rates) the first window
+//! mean already equals the global mean, so the initial allocation *is*
+//! the static allocation and the controller never fires again:
+//! `adaptive_cycles == static_cycles` exactly, independent of
+//! `reconfig_cycles`.
+
+use crate::sim::costs::CostModel;
+use crate::sim::dynamic::{fc_step_cost, DynamicAllocator};
+use crate::sim::engine::advance_finish;
+use crate::sim::neural_unit::NuMap;
+use crate::snn::{Layer, NetDef};
+use anyhow::{bail, Result};
+
+/// Controller knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveLhrConfig {
+    /// Global pool of hardware neural units to split across layers.
+    pub budget: usize,
+    /// Sliding-window length in steps the rate observer averages over.
+    pub window: usize,
+    /// Hysteresis: reallocate only when some layer's proposed unit count
+    /// deviates from its live count by more than this relative fraction.
+    /// `None` disables the controller entirely (pure static allocation).
+    pub threshold: Option<f64>,
+    /// Cycles charged to *every* layer's step on each reallocation.
+    pub reconfig_cycles: u64,
+}
+
+impl AdaptiveLhrConfig {
+    pub fn new(budget: usize) -> Self {
+        AdaptiveLhrConfig {
+            budget,
+            window: 4,
+            threshold: Some(0.25),
+            reconfig_cycles: 8,
+        }
+    }
+}
+
+/// Map an `explore --events` aggressiveness level onto a hysteresis
+/// threshold. Level 0 = controller off (the static baseline the first
+/// lattice choice anchors); higher levels reallocate on smaller
+/// deviations.
+pub fn aggressiveness_threshold(level: usize) -> Option<f64> {
+    match level {
+        0 => None,
+        1 => Some(0.5),
+        2 => Some(0.25),
+        _ => Some(0.0),
+    }
+}
+
+/// The NU budget a hardware configuration's LHR implies: the pool the
+/// controller may re-partition is exactly the units the static mapping
+/// instantiates.
+pub fn lhr_budget(net: &NetDef, lhr: &[usize]) -> usize {
+    net.parametric_layers()
+        .iter()
+        .zip(lhr)
+        .map(|(&i, &r)| NuMap::from_lhr(net.layers[i].logical_units(), r).units)
+        .sum()
+}
+
+/// Outcome of one adaptive-vs-static run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdaptiveResult {
+    /// Pipelined cycles under the runtime controller.
+    pub adaptive_cycles: u64,
+    /// Serial (un-pipelined) cycle sum under the controller, reconfig
+    /// charges included.
+    pub adaptive_serial_cycles: u64,
+    /// Pipelined cycles under the static mean-rate allocation.
+    pub static_cycles: u64,
+    /// Number of committed reallocations.
+    pub realloc_events: u64,
+    /// Total reconfiguration cycles charged across layers
+    /// (`realloc_events * n_layers * reconfig_cycles` by construction).
+    pub reconfig_charged: u64,
+    pub budget: usize,
+}
+
+impl AdaptiveResult {
+    pub fn speedup(&self) -> f64 {
+        self.static_cycles as f64 / self.adaptive_cycles as f64
+    }
+}
+
+/// Run the sliding-window controller against the static baseline on an
+/// FC network with per-step activity `activity[stage][t]` (stage `l` is
+/// layer `l`'s *incoming* spike count, as in
+/// [`crate::sim::compare_static_dynamic`]).
+pub fn run_adaptive(
+    net: &NetDef,
+    activity: &[Vec<usize>],
+    cfg: &AdaptiveLhrConfig,
+    costs: &CostModel,
+) -> Result<AdaptiveResult> {
+    let mut fc: Vec<(usize, usize)> = Vec::with_capacity(net.layers.len());
+    for (i, l) in net.layers.iter().enumerate() {
+        match l {
+            Layer::Fc { n_pre, n } => fc.push((*n_pre, *n)),
+            other => bail!(
+                "adaptive LHR control covers FC networks only, but layer {i} of '{}' \
+                 is a {} layer",
+                net.name,
+                other.kind_str()
+            ),
+        }
+    }
+    let n_layers = fc.len();
+    if activity.len() < n_layers {
+        bail!(
+            "activity has {} stages but '{}' needs {} (input + one per layer but the last)",
+            activity.len(),
+            net.name,
+            n_layers
+        );
+    }
+    let t_steps = activity[0].len();
+    if t_steps == 0 {
+        bail!(
+            "empty event stream: the activity for '{}' has 0 time steps",
+            net.name
+        );
+    }
+    if cfg.window == 0 {
+        bail!("adaptive controller window must be at least 1 step");
+    }
+    let alloc = DynamicAllocator {
+        budget: cfg.budget,
+        reconfig_cycles: cfg.reconfig_cycles,
+    };
+
+    // static baseline: one allocation from the global mean rates
+    let means: Vec<usize> = (0..n_layers)
+        .map(|l| (activity[l].iter().sum::<usize>() as f64 / t_steps as f64).round() as usize)
+        .collect();
+    let static_units = alloc.allocate(&means);
+
+    let mut static_finish = vec![0u64; n_layers];
+    let mut adaptive_finish = vec![0u64; n_layers];
+    let mut win_sums = vec![0usize; n_layers];
+    let mut adaptive_serial = 0u64;
+    let mut current: Option<Vec<usize>> = None;
+    let mut realloc_events = 0u64;
+    let mut reconfig_charged = 0u64;
+
+    for t in 0..t_steps {
+        let spikes_t: Vec<usize> = (0..n_layers).map(|l| activity[l][t]).collect();
+        for l in 0..n_layers {
+            win_sums[l] += spikes_t[l];
+            if t >= cfg.window {
+                win_sums[l] -= activity[l][t - cfg.window];
+            }
+        }
+        let mut reconfig_now = 0u64;
+        if let Some(threshold) = cfg.threshold {
+            let len = (t + 1).min(cfg.window);
+            let wmeans: Vec<usize> = win_sums
+                .iter()
+                .map(|&s| (s as f64 / len as f64).round() as usize)
+                .collect();
+            let desired = alloc.allocate(&wmeans);
+            match &mut current {
+                // the boot-time allocation is free: it happens before the
+                // stream starts, exactly like the static partition
+                None => current = Some(desired),
+                Some(live) => {
+                    let deviation = live
+                        .iter()
+                        .zip(&desired)
+                        .map(|(&c, &d)| (d.abs_diff(c)) as f64 / c.max(1) as f64)
+                        .fold(0.0f64, f64::max);
+                    if deviation > threshold {
+                        *live = desired;
+                        realloc_events += 1;
+                        reconfig_now = cfg.reconfig_cycles;
+                        reconfig_charged += cfg.reconfig_cycles * n_layers as u64;
+                    }
+                }
+            }
+        }
+        let units = current.as_deref().unwrap_or(&static_units);
+        let mut prev_s = 0u64;
+        let mut prev_a = 0u64;
+        for l in 0..n_layers {
+            let (n_pre, n) = fc[l];
+            let s_in = spikes_t[l];
+            let cs = fc_step_cost(n_pre, n, static_units[l], s_in, 64, costs);
+            let ca = fc_step_cost(n_pre, n, units[l], s_in, 64, costs) + reconfig_now;
+            adaptive_serial += ca;
+            prev_s = advance_finish(&mut static_finish[l], prev_s, cs);
+            prev_a = advance_finish(&mut adaptive_finish[l], prev_a, ca);
+        }
+    }
+    Ok(AdaptiveResult {
+        adaptive_cycles: *adaptive_finish.last().unwrap(),
+        adaptive_serial_cycles: adaptive_serial,
+        static_cycles: *static_finish.last().unwrap(),
+        realloc_events,
+        reconfig_charged,
+        budget: cfg.budget,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::table1_net;
+    use crate::util::prop::prop_check;
+
+    fn net1_activity(f: impl Fn(usize, usize) -> usize, t: usize) -> Vec<Vec<usize>> {
+        (0..4).map(|l| (0..t).map(|s| f(l, s)).collect()).collect()
+    }
+
+    #[test]
+    fn stationary_stream_matches_static_exactly() {
+        // constant rates: the first window mean equals the global mean, so
+        // the boot allocation is the static allocation and the controller
+        // never fires — exact equality, whatever reconfig costs
+        let net = table1_net("net1");
+        let activity = net1_activity(|l, _| [95, 81, 86, 29][l], 60);
+        for window in [1usize, 4, 8] {
+            let cfg = AdaptiveLhrConfig {
+                window,
+                ..AdaptiveLhrConfig::new(64)
+            };
+            let r = run_adaptive(&net, &activity, &cfg, &CostModel::default()).unwrap();
+            assert_eq!(r.adaptive_cycles, r.static_cycles, "window {window}");
+            assert_eq!(r.realloc_events, 0);
+            assert_eq!(r.reconfig_charged, 0);
+            assert!(r.adaptive_serial_cycles >= r.adaptive_cycles);
+        }
+    }
+
+    #[test]
+    fn controller_off_is_the_static_baseline() {
+        let net = table1_net("net1");
+        let activity = net1_activity(|l, s| if s % 2 == 0 { 400 / (l + 1) } else { 5 }, 40);
+        let cfg = AdaptiveLhrConfig {
+            threshold: None,
+            ..AdaptiveLhrConfig::new(64)
+        };
+        let r = run_adaptive(&net, &activity, &cfg, &CostModel::default()).unwrap();
+        assert_eq!(r.adaptive_cycles, r.static_cycles);
+        assert_eq!(r.realloc_events, 0);
+    }
+
+    #[test]
+    fn hysteresis_prevents_per_step_thrash() {
+        // rates flip between two layers every step; a window >= 2 smooths
+        // the observation, so the controller must not reallocate every step
+        let net = table1_net("net1");
+        let t = 40;
+        let activity = net1_activity(
+            |l, s| match (l, s % 2) {
+                (0, 0) | (1, 1) => 400,
+                (0, 1) | (1, 0) => 5,
+                _ => 10,
+            },
+            t,
+        );
+        let cfg = AdaptiveLhrConfig {
+            window: 4,
+            threshold: Some(0.25),
+            ..AdaptiveLhrConfig::new(64)
+        };
+        let r = run_adaptive(&net, &activity, &cfg, &CostModel::default()).unwrap();
+        assert!(
+            r.realloc_events <= t as u64 / 4,
+            "oscillation must not reallocate every window: {} events over {t} steps",
+            r.realloc_events
+        );
+    }
+
+    #[test]
+    fn controller_tracks_a_sustained_rate_shift() {
+        // a genuine regime change (not oscillation) must trigger at least
+        // one reallocation and beat the static split despite the charge
+        let net = table1_net("net1");
+        let t = 80;
+        let activity = net1_activity(
+            |l, s| match (l, s < t / 2) {
+                (0, true) | (1, false) => 500,
+                (0, false) | (1, true) => 5,
+                _ => 10,
+            },
+            t,
+        );
+        let cfg = AdaptiveLhrConfig {
+            window: 4,
+            threshold: Some(0.25),
+            ..AdaptiveLhrConfig::new(64)
+        };
+        let r = run_adaptive(&net, &activity, &cfg, &CostModel::default()).unwrap();
+        assert!(r.realloc_events >= 1);
+        assert!(
+            r.speedup() > 1.0,
+            "controller should win on a regime shift: x{:.3}",
+            r.speedup()
+        );
+    }
+
+    #[test]
+    fn prop_reconfig_charge_is_monotone_in_realloc_events() {
+        // the charge is realloc_events * n_layers * reconfig_cycles by
+        // construction; verify the identity on random traffic and that the
+        // ordering of realloc counts always matches the ordering of charges
+        let net = table1_net("net1");
+        let costs = CostModel::default();
+        prop_check(48, 0xADA7, |g| {
+            let t = g.usize_in(4, 32);
+            let mk = |g: &mut crate::util::prop::Gen| -> Vec<Vec<usize>> {
+                (0..4)
+                    .map(|_| (0..t).map(|_| g.usize_in(0, 600)).collect())
+                    .collect()
+            };
+            let a1 = mk(g);
+            let a2 = mk(g);
+            let cfg = AdaptiveLhrConfig {
+                window: g.usize_in(1, 6),
+                threshold: Some(g.f64_in(0.0, 0.6)),
+                reconfig_cycles: g.usize_in(1, 64) as u64,
+                budget: 64,
+            };
+            let r1 = run_adaptive(&net, &a1, &cfg, &costs).map_err(|e| e.to_string())?;
+            let r2 = run_adaptive(&net, &a2, &cfg, &costs).map_err(|e| e.to_string())?;
+            for r in [&r1, &r2] {
+                if r.reconfig_charged != r.realloc_events * 4 * cfg.reconfig_cycles {
+                    return Err(format!(
+                        "charge identity broken: {} events, {} charged",
+                        r.realloc_events, r.reconfig_charged
+                    ));
+                }
+            }
+            if (r1.realloc_events <= r2.realloc_events)
+                != (r1.reconfig_charged <= r2.reconfig_charged)
+            {
+                return Err(format!(
+                    "charge not monotone in events: ({}, {}) vs ({}, {})",
+                    r1.realloc_events, r1.reconfig_charged, r2.realloc_events, r2.reconfig_charged
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn conv_net_is_a_descriptive_error() {
+        let net = table1_net("net5");
+        let activity = vec![vec![10usize; 4]; net.layers.len()];
+        let err = run_adaptive(
+            &net,
+            &activity,
+            &AdaptiveLhrConfig::new(64),
+            &CostModel::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("conv"), "{err}");
+        assert!(err.contains("net5"), "{err}");
+    }
+
+    #[test]
+    fn lhr_budget_counts_units() {
+        let net = table1_net("net1"); // 500, 500, 300 neurons
+        assert_eq!(lhr_budget(&net, &[1, 1, 1]), 1300);
+        assert_eq!(lhr_budget(&net, &[4, 8, 8]), 125 + 63 + 38);
+    }
+
+    #[test]
+    fn aggressiveness_levels_map_to_thresholds() {
+        assert_eq!(aggressiveness_threshold(0), None);
+        assert_eq!(aggressiveness_threshold(1), Some(0.5));
+        assert_eq!(aggressiveness_threshold(2), Some(0.25));
+        assert_eq!(aggressiveness_threshold(3), Some(0.0));
+    }
+}

@@ -1,0 +1,214 @@
+//! Per-burst microarchitecture stall analysis: slice an event workload's
+//! recorded trace at its burst boundaries and replay each burst through
+//! the `uarch` event queue, quantifying how finite FIFOs and memory
+//! ports degrade under exactly the steps where the stream spikes.
+
+use crate::uarch::{replay, LayerTrace, UarchConfig, UarchResult};
+
+/// One maximal run of consecutive steps whose input event count exceeds
+/// `factor x` the stream mean. `end` is exclusive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BurstSegment {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl BurstSegment {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+/// Find the burst segments of a per-step input count series: maximal
+/// runs of steps with `count > factor * mean(count)`. A uniformly quiet
+/// (or empty) series has no bursts.
+pub fn burst_segments(counts: &[usize], factor: f64) -> Vec<BurstSegment> {
+    if counts.is_empty() {
+        return Vec::new();
+    }
+    let mean = counts.iter().sum::<usize>() as f64 / counts.len() as f64;
+    let cut = factor * mean;
+    let mut out = Vec::new();
+    let mut start = None;
+    for (i, &c) in counts.iter().enumerate() {
+        match (c as f64 > cut, start) {
+            (true, None) => start = Some(i),
+            (false, Some(s)) => {
+                out.push(BurstSegment { start: s, end: i });
+                start = None;
+            }
+            _ => {}
+        }
+    }
+    if let Some(s) = start {
+        out.push(BurstSegment {
+            start: s,
+            end: counts.len(),
+        });
+    }
+    out
+}
+
+/// Stall breakdown of one burst replayed under a finite config, with the
+/// ideal replay of the same steps as the stall-free reference.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BurstRow {
+    pub segment: BurstSegment,
+    /// Input events inside the segment.
+    pub events: usize,
+    pub cycles: u64,
+    pub ideal_cycles: u64,
+    pub fifo_full: u64,
+    pub port_wait: u64,
+    pub bank_conflict: u64,
+    /// Peak inter-layer FIFO occupancy across layers during the burst.
+    pub max_occupancy: usize,
+}
+
+/// Slice `traces` to one step range (every layer trace keeps its name
+/// and lane count, only the steps narrow).
+fn slice_traces(traces: &[LayerTrace], seg: BurstSegment) -> Vec<LayerTrace> {
+    traces
+        .iter()
+        .map(|t| LayerTrace {
+            name: t.name.clone(),
+            lanes: t.lanes,
+            steps: t.steps[seg.start..seg.end].to_vec(),
+        })
+        .collect()
+}
+
+fn max_occupancy(r: &UarchResult) -> usize {
+    r.per_layer
+        .iter()
+        .map(|l| l.max_out_occupancy)
+        .max()
+        .unwrap_or(0)
+}
+
+/// Replay every burst of a recorded event workload under `cfg`,
+/// returning one row per burst. `counts` is the per-step input event
+/// count the segmentation keys on (the workload's `input_counts()`);
+/// `factor` is the burst threshold in multiples of the mean rate.
+pub fn burst_stall_rows(
+    traces: &[LayerTrace],
+    counts: &[usize],
+    cfg: &UarchConfig,
+    factor: f64,
+) -> Vec<BurstRow> {
+    burst_segments(counts, factor)
+        .into_iter()
+        .map(|seg| {
+            let sliced = slice_traces(traces, seg);
+            let finite = replay(&sliced, cfg);
+            let ideal = replay(&sliced, &UarchConfig::ideal());
+            let (f, p, b) = finite.stall_breakdown();
+            BurstRow {
+                segment: seg,
+                events: counts[seg.start..seg.end].iter().sum(),
+                cycles: finite.total_cycles,
+                ideal_cycles: ideal.total_cycles,
+                fifo_full: f,
+                port_wait: p,
+                bank_conflict: b,
+                max_occupancy: max_occupancy(&finite),
+            }
+        })
+        .collect()
+}
+
+/// Render burst rows as an aligned text table (the `events` subcommand's
+/// burst section).
+pub fn render_burst_table(rows: &[BurstRow]) -> String {
+    let mut s = format!(
+        "  {:<10} {:>6} {:>8} {:>12} {:>12} {:>10} {:>10} {:>14} {:>8}\n",
+        "burst", "steps", "events", "cycles", "ideal", "fifo_full", "port_wait", "bank_conflict",
+        "max occ"
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "  {:<10} {:>6} {:>8} {:>12} {:>12} {:>10} {:>10} {:>14} {:>8}\n",
+            format!("[{}..{})", r.segment.start, r.segment.end),
+            r.segment.len(),
+            r.events,
+            crate::util::commas(r.cycles),
+            crate::util::commas(r.ideal_cycles),
+            crate::util::commas(r.fifo_full),
+            crate::util::commas(r.port_wait),
+            crate::util::commas(r.bank_conflict),
+            r.max_occupancy
+        ));
+    }
+    if rows.is_empty() {
+        s.push_str("  (no bursts above threshold)\n");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, HwConfig};
+    use crate::events::stream::{synthetic_stream, StreamSpec};
+    use crate::events::workload::{event_driven_activity, EventWorkload};
+    use crate::sim::{CostModel, NetworkSim};
+    use crate::snn::table1_net;
+    use crate::uarch::record_activity;
+
+    #[test]
+    fn segmentation_finds_maximal_runs() {
+        //               mean = 55; 2x mean = 110
+        let counts = [10, 10, 200, 210, 10, 300, 10, 10];
+        let segs = burst_segments(&counts, 2.0);
+        assert_eq!(
+            segs,
+            vec![
+                BurstSegment { start: 2, end: 4 },
+                BurstSegment { start: 5, end: 6 }
+            ]
+        );
+        // trailing burst closes at the end
+        let segs = burst_segments(&[1, 1, 50, 60], 2.0);
+        assert_eq!(segs, vec![BurstSegment { start: 2, end: 4 }]);
+        assert!(burst_segments(&[5, 5, 5], 2.0).is_empty());
+        assert!(burst_segments(&[], 2.0).is_empty());
+    }
+
+    #[test]
+    fn burst_rows_bound_stalls_by_the_ideal_gap() {
+        let net = table1_net("net1");
+        let stream = synthetic_stream(&StreamSpec {
+            duration: 60,
+            seed: 5,
+            ..StreamSpec::default()
+        });
+        let wl = EventWorkload::new(&stream, 1);
+        let counts = wl.input_counts();
+        let activity = event_driven_activity(&net, &counts, 5);
+        let cfg = ExperimentConfig::new(net, HwConfig::with_lhr(vec![4, 8, 8])).unwrap();
+        let mut sim = NetworkSim::cost_only(&cfg, CostModel::default());
+        let traces = record_activity(&mut sim, &activity);
+        let ucfg = UarchConfig {
+            fifo_depth: 1,
+            mem_ports: 1,
+            banks: 1,
+        };
+        let rows = burst_stall_rows(&traces, &counts, &ucfg, 2.0);
+        assert!(!rows.is_empty(), "the storm pattern must produce bursts");
+        for r in &rows {
+            assert!(r.cycles >= r.ideal_cycles);
+            let stalls = r.fifo_full + r.port_wait + r.bank_conflict;
+            assert!(
+                r.cycles - r.ideal_cycles <= stalls,
+                "finite-vs-ideal gap {} must be bounded by stalls {stalls}",
+                r.cycles - r.ideal_cycles
+            );
+        }
+        let table = render_burst_table(&rows);
+        assert!(table.contains("bank_conflict"));
+        assert_eq!(table.lines().count(), rows.len() + 1);
+    }
+}

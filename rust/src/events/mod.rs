@@ -1,0 +1,38 @@
+//! Event-driven workload subsystem: deterministic DVS-style spike
+//! streams, the binned [`EventWorkload`] that drives the unified engine,
+//! a runtime-adaptive LHR controller, and per-burst microarchitecture
+//! stall analysis.
+//!
+//! The paper's sparsity-aware hardware argument is strongest when input
+//! activity is *dynamic* — an event camera's rate swings over orders of
+//! magnitude between quiet scenes and bursts, so any static allocation
+//! over- or under-provisions most of the time. This module supplies that
+//! regime as a first-class workload:
+//!
+//! * [`stream`] — [`EventStream`]: timestamped sparse spike events, plus
+//!   the seeded synthetic generator ([`synthetic_stream`]) with
+//!   moving-edge / flicker / burst-storm patterns, MMPP burstiness, and
+//!   a loadgen-style prefix/shard-invariant determinism contract;
+//! * [`workload`] — [`bin_events`] / [`EventWorkload`]: events binned
+//!   into per-step input `BitVec`s at a configurable tick window,
+//!   byte-identical to `SpikeTrainWorkload` on rate-coded inputs, and
+//!   [`event_driven_activity`] for cost-only runs;
+//! * [`adaptive`] — [`run_adaptive`]: the sliding-window hysteresis LHR
+//!   controller grown out of `sim/dynamic.rs`'s one-shot ablation, with
+//!   the stationary-convergence golden invariant;
+//! * [`burst`] — [`burst_stall_rows`]: event streams replayed through
+//!   the `uarch` queue burst-by-burst (FIFO occupancy, stall table).
+
+pub mod adaptive;
+pub mod burst;
+pub mod stream;
+pub mod workload;
+
+pub use adaptive::{
+    aggressiveness_threshold, lhr_budget, run_adaptive, AdaptiveLhrConfig, AdaptiveResult,
+};
+pub use burst::{burst_segments, burst_stall_rows, render_burst_table, BurstRow, BurstSegment};
+pub use stream::{
+    parse_pattern, synthetic_stream, EventPattern, EventStream, SpikeEvent, StreamSpec,
+};
+pub use workload::{bin_events, event_driven_activity, EventWorkload};

@@ -1,0 +1,336 @@
+//! Timestamped sparse spike-event streams and the seeded synthetic
+//! DVS-style generator behind the `events` subcommand and
+//! `explore --events`.
+//!
+//! ## Determinism contract (mirrors `runtime/serve/loadgen.rs`)
+//!
+//! A stream is a pure function of its [`StreamSpec`]. Two independent
+//! random processes are kept on **separate seeded streams** so that
+//! generated traces are prefix- and shard-invariant:
+//!
+//! * the **modulation chain** (MMPP burst state) draws exactly one
+//!   uniform per tick from `Rng::new(seed ^ CHAIN_STREAM)`, regardless
+//!   of the state it lands in — tick `t`'s burst state never depends on
+//!   how many events earlier ticks emitted;
+//! * the **event content** of tick `t` (event count and spatial
+//!   positions) comes from `Rng::new(seed).fork(t + 1)`, a pure function
+//!   of `(seed, t)` — regenerating any sub-range of ticks reproduces the
+//!   same events byte-for-byte.
+//!
+//! Consequently `synthetic_stream(spec)` truncated to the first `d`
+//! ticks equals `synthetic_stream(spec with duration d)` exactly.
+
+use crate::snn::SpikeTrain;
+use crate::util::rng::Rng;
+
+/// Seed-domain separator for the MMPP modulation chain (one draw per
+/// tick, independent of per-tick event content).
+const CHAIN_STREAM: u64 = 0x0E17_AD00_0000_0001;
+
+/// One spike event: input bit `bit` fired at tick `t` (ticks are the
+/// stream's native time resolution; the bin window maps ticks onto
+/// simulator time steps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SpikeEvent {
+    pub t: u64,
+    pub bit: u32,
+}
+
+/// A finite event stream over `n_bits` input lines and `duration` ticks.
+/// Events are sorted by `(t, bit)` and deduplicated — the canonical form
+/// every generator and converter produces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EventStream {
+    pub n_bits: usize,
+    pub duration: u64,
+    pub events: Vec<SpikeEvent>,
+}
+
+impl EventStream {
+    /// Total number of events.
+    pub fn n_events(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Mean events per tick.
+    pub fn mean_rate(&self) -> f64 {
+        if self.duration == 0 {
+            return 0.0;
+        }
+        self.events.len() as f64 / self.duration as f64
+    }
+
+    /// Lift a rate-coded spike train into an event stream: every set bit
+    /// of step `s` becomes an event at tick `s * window`. Binning the
+    /// result back at the same `window` reproduces the original train
+    /// exactly (the golden round-trip `events_golden.rs` pins).
+    pub fn from_spike_train(train: &SpikeTrain, window: u64) -> EventStream {
+        assert!(window > 0, "bin window must be at least one tick");
+        let n_bits = train.first().map(|b| b.len()).unwrap_or(0);
+        let mut events = Vec::new();
+        for (s, frame) in train.iter().enumerate() {
+            let t = s as u64 * window;
+            frame.for_each_one(|bit| events.push(SpikeEvent { t, bit: bit as u32 }));
+        }
+        EventStream {
+            n_bits,
+            duration: train.len() as u64 * window,
+            events,
+        }
+    }
+}
+
+/// Spatio-temporal pattern of the synthetic generator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventPattern {
+    /// A spatial activity center sweeping linearly across the input
+    /// lines (a DVS edge crossing the field of view).
+    MovingEdge,
+    /// A fixed center whose intensity square-waves between dim and
+    /// bright (full-field flicker).
+    Flicker,
+    /// The center jumps to a new position each burst episode while the
+    /// MMPP chain drives rate bursts (worst-case queue pressure).
+    BurstStorm,
+}
+
+impl EventPattern {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventPattern::MovingEdge => "edge",
+            EventPattern::Flicker => "flicker",
+            EventPattern::BurstStorm => "storm",
+        }
+    }
+}
+
+/// Parse a pattern name as the CLI spells it.
+pub fn parse_pattern(name: &str) -> Result<EventPattern, String> {
+    match name {
+        "edge" => Ok(EventPattern::MovingEdge),
+        "flicker" => Ok(EventPattern::Flicker),
+        "storm" => Ok(EventPattern::BurstStorm),
+        other => Err(format!(
+            "unknown event pattern '{other}' (expected edge|flicker|storm)"
+        )),
+    }
+}
+
+/// Full parameterization of one synthetic stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamSpec {
+    /// Input lines the events land on.
+    pub n_bits: usize,
+    /// Stream length in ticks.
+    pub duration: u64,
+    /// Mean events per tick in the non-burst state.
+    pub mean_rate: f64,
+    /// Spatial spread of events around the pattern center, as a fraction
+    /// of `n_bits` (one standard deviation).
+    pub spatial_sigma: f64,
+    /// Rate multiplier while the MMPP chain is in the burst state.
+    pub burst_factor: f64,
+    /// Per-tick probability of entering the burst state.
+    pub p_enter: f64,
+    /// Per-tick probability of leaving the burst state.
+    pub p_exit: f64,
+    pub pattern: EventPattern,
+    pub seed: u64,
+}
+
+impl Default for StreamSpec {
+    fn default() -> Self {
+        StreamSpec {
+            n_bits: 784,
+            duration: 200,
+            mean_rate: 95.0,
+            spatial_sigma: 0.12,
+            burst_factor: 8.0,
+            p_enter: 0.05,
+            p_exit: 0.25,
+            pattern: EventPattern::BurstStorm,
+            seed: 42,
+        }
+    }
+}
+
+/// Pattern center (fraction of `n_bits`) and intensity multiplier at one
+/// tick — a pure function of `(pattern, tick)` so it never perturbs the
+/// random streams.
+fn pattern_at(pattern: EventPattern, tick: u64) -> (f64, f64) {
+    match pattern {
+        EventPattern::MovingEdge => {
+            let period = 64u64;
+            ((tick % period) as f64 / period as f64, 1.0)
+        }
+        EventPattern::Flicker => {
+            let bright = (tick / 8) % 2 == 0;
+            (0.5, if bright { 1.6 } else { 0.4 })
+        }
+        EventPattern::BurstStorm => {
+            // golden-ratio low-discrepancy hop per 16-tick episode
+            let episode = tick / 16;
+            let center = (episode as f64 * 0.618_033_988_749_895).fract();
+            (center, 1.0)
+        }
+    }
+}
+
+/// Poisson sample with mean `lambda` (Knuth for small means, a clamped
+/// normal approximation above 30 — the generator's means sit well inside
+/// either regime).
+fn poisson(lambda: f64, rng: &mut Rng) -> usize {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    if lambda > 30.0 {
+        let x = lambda + lambda.sqrt() * rng.normal();
+        return x.max(0.0).round() as usize;
+    }
+    let l = (-lambda).exp();
+    let mut k = 0usize;
+    let mut p = 1.0f64;
+    loop {
+        p *= rng.f64();
+        if p <= l {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// Generate a synthetic DVS-style stream — a pure function of `spec`
+/// (see the module docs for the exact determinism contract).
+pub fn synthetic_stream(spec: &StreamSpec) -> EventStream {
+    assert!(spec.n_bits > 0, "stream needs at least one input line");
+    let mut chain = Rng::new(spec.seed ^ CHAIN_STREAM);
+    let mut bursting = false;
+    let mut events = Vec::new();
+    for tick in 0..spec.duration {
+        // exactly one chain draw per tick, in every state
+        let u = chain.f64();
+        bursting = if bursting {
+            u >= spec.p_exit
+        } else {
+            u < spec.p_enter
+        };
+        let (center, intensity) = pattern_at(spec.pattern, tick);
+        let mult = if bursting { spec.burst_factor } else { 1.0 };
+        let lambda = spec.mean_rate * mult * intensity;
+        let mut content = Rng::new(spec.seed).fork(tick + 1);
+        let count = poisson(lambda, &mut content).min(spec.n_bits);
+        let mut bits: Vec<u32> = (0..count)
+            .map(|_| {
+                let x = center + content.normal() * spec.spatial_sigma;
+                let b = (x.rem_euclid(1.0) * spec.n_bits as f64) as usize;
+                b.min(spec.n_bits - 1) as u32
+            })
+            .collect();
+        bits.sort_unstable();
+        bits.dedup();
+        events.extend(bits.into_iter().map(|bit| SpikeEvent { t: tick, bit }));
+    }
+    EventStream {
+        n_bits: spec.n_bits,
+        duration: spec.duration,
+        events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::random_spike_train;
+
+    #[test]
+    fn stream_is_deterministic_and_canonical() {
+        let spec = StreamSpec::default();
+        let a = synthetic_stream(&spec);
+        let b = synthetic_stream(&spec);
+        assert_eq!(a, b, "same spec must reproduce the same stream");
+        // canonical order: sorted by (t, bit), no duplicates
+        let mut sorted = a.events.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(a.events, sorted);
+        assert!(a.events.iter().all(|e| (e.bit as usize) < a.n_bits));
+    }
+
+    #[test]
+    fn stream_is_prefix_invariant() {
+        // generating a shorter stream equals truncating a longer one —
+        // the same contract loadgen's arrival process keeps
+        let long = synthetic_stream(&StreamSpec {
+            duration: 160,
+            ..StreamSpec::default()
+        });
+        let short = synthetic_stream(&StreamSpec {
+            duration: 40,
+            ..StreamSpec::default()
+        });
+        let truncated: Vec<_> = long
+            .events
+            .iter()
+            .copied()
+            .filter(|e| e.t < 40)
+            .collect();
+        assert_eq!(short.events, truncated);
+    }
+
+    #[test]
+    fn mean_rate_lands_near_target_without_bursts() {
+        let s = synthetic_stream(&StreamSpec {
+            n_bits: 2048,
+            duration: 400,
+            mean_rate: 60.0,
+            spatial_sigma: 0.25,
+            burst_factor: 1.0, // bursts rate-neutral
+            pattern: EventPattern::MovingEdge,
+            ..StreamSpec::default()
+        });
+        let r = s.mean_rate();
+        assert!((40.0..80.0).contains(&r), "mean rate {r}");
+    }
+
+    #[test]
+    fn burst_factor_raises_the_mean_rate() {
+        let calm = synthetic_stream(&StreamSpec {
+            burst_factor: 1.0,
+            n_bits: 4096,
+            ..StreamSpec::default()
+        });
+        let stormy = synthetic_stream(&StreamSpec {
+            burst_factor: 8.0,
+            n_bits: 4096,
+            ..StreamSpec::default()
+        });
+        assert!(
+            stormy.n_events() > calm.n_events(),
+            "bursts must add events: {} vs {}",
+            stormy.n_events(),
+            calm.n_events()
+        );
+    }
+
+    #[test]
+    fn patterns_parse_and_reject_with_names() {
+        assert_eq!(parse_pattern("edge").unwrap(), EventPattern::MovingEdge);
+        assert_eq!(parse_pattern("flicker").unwrap(), EventPattern::Flicker);
+        assert_eq!(parse_pattern("storm").unwrap(), EventPattern::BurstStorm);
+        let err = parse_pattern("spiral").unwrap_err();
+        assert!(err.contains("spiral"), "error must name the pattern: {err}");
+        assert!(err.contains("edge|flicker|storm"));
+    }
+
+    #[test]
+    fn from_spike_train_places_events_on_window_boundaries() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let train = random_spike_train(64, 6, 0.2, &mut rng);
+        let s = EventStream::from_spike_train(&train, 4);
+        assert_eq!(s.n_bits, 64);
+        assert_eq!(s.duration, 24);
+        let total: usize = train.iter().map(|b| b.count_ones()).sum();
+        assert_eq!(s.n_events(), total);
+        assert!(s.events.iter().all(|e| e.t % 4 == 0));
+    }
+}

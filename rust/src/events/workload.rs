@@ -1,0 +1,165 @@
+//! Binning event streams into engine workloads.
+//!
+//! ## Bin-window semantics
+//!
+//! The simulator advances in discrete time steps; an [`EventStream`]
+//! lives on finer-grained ticks. `bin_events` maps tick `t` onto step
+//! `t / window` and ORs all events of a step into one input `BitVec` —
+//! a wider window trades temporal resolution (and responsiveness of the
+//! adaptive controller) for fewer, denser steps. A stream produced by
+//! [`EventStream::from_spike_train`] at window `w` bins back at the same
+//! `w` to the original train exactly, which makes [`EventWorkload`]
+//! byte-identical to [`crate::sim::SpikeTrainWorkload`] on rate-coded
+//! inputs (pinned in `rust/tests/events_golden.rs`).
+
+use crate::data::ActivityModel;
+use crate::events::stream::EventStream;
+use crate::sim::layer::LayerSim;
+use crate::sim::stats::PhaseCycles;
+use crate::sim::Workload;
+use crate::snn::{BitVec, NetDef, SpikeTrain};
+use crate::util::rng::Rng;
+
+/// Bin an event stream into per-step input frames at `window` ticks per
+/// step. Produces `ceil(duration / window)` frames; multiple events on
+/// one bit within a window OR into a single spike.
+pub fn bin_events(stream: &EventStream, window: u64) -> SpikeTrain {
+    assert!(window > 0, "bin window must be at least one tick");
+    let steps = stream.duration.div_ceil(window) as usize;
+    let mut frames: SpikeTrain = (0..steps).map(|_| BitVec::zeros(stream.n_bits)).collect();
+    for e in &stream.events {
+        frames[(e.t / window) as usize].set(e.bit as usize);
+    }
+    frames
+}
+
+/// Functional workload over a binned event stream — drives the unified
+/// engine exactly like [`crate::sim::SpikeTrainWorkload`], but owns its
+/// frames (they are synthesized, not borrowed from a dataset).
+pub struct EventWorkload {
+    frames: SpikeTrain,
+}
+
+impl EventWorkload {
+    /// Bin `stream` at `window` ticks per step.
+    pub fn new(stream: &EventStream, window: u64) -> Self {
+        EventWorkload {
+            frames: bin_events(stream, window),
+        }
+    }
+
+    /// Wrap pre-binned frames directly.
+    pub fn from_frames(frames: SpikeTrain) -> Self {
+        EventWorkload { frames }
+    }
+
+    pub fn frames(&self) -> &SpikeTrain {
+        &self.frames
+    }
+
+    /// Events per step — the controller's observable input rate signal.
+    pub fn input_counts(&self) -> Vec<usize> {
+        self.frames.iter().map(|f| f.count_ones()).collect()
+    }
+}
+
+impl Workload for EventWorkload {
+    fn t_steps(&self) -> usize {
+        self.frames.len()
+    }
+    fn begin_step(&mut self, t: usize, input: &mut BitVec) {
+        input.copy_from(&self.frames[t]);
+    }
+    fn step_layer(
+        &mut self,
+        layer: &mut LayerSim,
+        _l: usize,
+        _t: usize,
+        input: &BitVec,
+        output: &mut BitVec,
+    ) -> PhaseCycles {
+        layer.step_into(input, output)
+    }
+}
+
+/// Cost-only activity driven by an event stream: the calibrated per-layer
+/// means of [`ActivityModel`] modulated step-by-step by the stream's
+/// observed input intensity (count / mean count), with the model's usual
+/// jitter drawn from per-stage forked streams — a pure function of
+/// `(net, input_counts, seed)`.
+///
+/// `result[0]` is the *actual* per-step input count; `result[l+1]` is
+/// layer `l`'s modeled output count.
+pub fn event_driven_activity(
+    net: &NetDef,
+    input_counts: &[usize],
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    let model = ActivityModel::for_net(net);
+    let t_steps = input_counts.len();
+    let mean_in = (input_counts.iter().sum::<usize>() as f64 / t_steps.max(1) as f64).max(1.0);
+    let mut out = Vec::with_capacity(model.means.len());
+    out.push(input_counts.to_vec());
+    for (stage, &m) in model.means.iter().enumerate().skip(1) {
+        let mut rng = Rng::new(seed).fork(stage as u64);
+        let counts = (0..t_steps)
+            .map(|t| {
+                let intensity = input_counts[t] as f64 / mean_in;
+                let x = m * intensity * (1.0 + model.jitter * rng.normal());
+                x.max(0.0).round() as usize
+            })
+            .collect();
+        out.push(counts);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::stream::{synthetic_stream, EventStream, StreamSpec};
+    use crate::sim::random_spike_train;
+    use crate::snn::table1_net;
+
+    #[test]
+    fn binning_round_trips_a_spike_train() {
+        let mut rng = Rng::new(3);
+        let train = random_spike_train(128, 9, 0.3, &mut rng);
+        for window in [1u64, 2, 4] {
+            let stream = EventStream::from_spike_train(&train, window);
+            let frames = bin_events(&stream, window);
+            assert_eq!(frames, train, "window {window}");
+        }
+    }
+
+    #[test]
+    fn wider_windows_produce_fewer_denser_frames() {
+        let stream = synthetic_stream(&StreamSpec::default());
+        let fine = EventWorkload::new(&stream, 1);
+        let coarse = EventWorkload::new(&stream, 8);
+        assert_eq!(fine.t_steps(), stream.duration as usize);
+        assert_eq!(coarse.t_steps(), stream.duration.div_ceil(8) as usize);
+        let mean = |w: &EventWorkload| {
+            w.input_counts().iter().sum::<usize>() as f64 / w.t_steps() as f64
+        };
+        assert!(
+            mean(&coarse) > mean(&fine),
+            "coarse bins OR more events per frame"
+        );
+    }
+
+    #[test]
+    fn event_activity_is_deterministic_and_tracks_intensity() {
+        let net = table1_net("net1");
+        let counts = vec![10usize, 10, 400, 400, 10, 10];
+        let a = event_driven_activity(&net, &counts, 7);
+        let b = event_driven_activity(&net, &counts, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), net.layers.len() + 1);
+        assert_eq!(a[0], counts, "stage 0 is the observed input");
+        // burst steps drive more downstream activity than calm steps
+        let burst: usize = a[1][2] + a[1][3];
+        let calm: usize = a[1][0] + a[1][1];
+        assert!(burst > calm, "burst {burst} vs calm {calm}");
+    }
+}

@@ -30,7 +30,9 @@
 //! multi-chip engine, byte-identical to the single-chip engine at one
 //! chip with ideal links).
 //!
-//! Cross-cutting: [`data`] (calibrated activity models), [`baselines`]
+//! Cross-cutting: [`data`] (calibrated activity models), [`events`]
+//! (deterministic DVS-style event streams, the binned event workload,
+//! and the runtime-adaptive LHR controller), [`baselines`]
 //! (prior-work anchors, the sparsity-oblivious latency bound, and the
 //! scalar reference step the optimized hot path is fuzzed against),
 //! [`bench`] (the fixed-seed throughput harness behind the `bench`
@@ -72,6 +74,7 @@ pub mod bench;
 pub mod config;
 pub mod data;
 pub mod dse;
+pub mod events;
 pub mod partition;
 pub mod resources;
 pub mod runtime;

@@ -6,6 +6,7 @@
 //!   dse          LHR sweep with Pareto frontier (Fig. 6 data)
 //!   explore      multi-objective Pareto exploration with checkpoint/resume
 //!   uarch        event-driven microarchitecture simulation (FIFO/port/bank stalls)
+//!   events       DVS-style event streams + runtime-adaptive LHR controller
 //!   partition    multi-chip partitioning: pass pipeline + pipelined simulation
 //!   serve        sharded dynamic-batching serve runtime under synthetic load
 //!   bench        fixed-seed throughput harness emitting BENCH_sim.json
@@ -20,13 +21,13 @@ use snn_dse::config::{ExperimentConfig, HwConfig};
 use snn_dse::dse::{self, EvalMode};
 use snn_dse::resources::{estimate, EnergyModel};
 use snn_dse::sim::{CostModel, NetworkSim};
-use snn_dse::snn::table1_net;
+use snn_dse::snn::{by_name, table1_net};
 use snn_dse::util::cli::Args;
 use snn_dse::util::{commas, kfmt};
 use snn_dse::{runtime, validate};
 use std::path::PathBuf;
 
-const USAGE: &str = "snn-dse <simulate|resources|dse|explore|uarch|partition|serve|bench|table1|sweep-t-pcr|validate|infer|firing|generate|auto|dynamic> [options]
+const USAGE: &str = "snn-dse <simulate|resources|dse|explore|uarch|events|partition|serve|bench|table1|sweep-t-pcr|validate|infer|firing|generate|auto|dynamic> [options]
   common options:
     --net <net1..net5>          network (default net1)
     --lhr <a,b,c,...>           per-layer logical-to-hardware ratios
@@ -62,6 +63,12 @@ const USAGE: &str = "snn-dse <simulate|resources|dse|explore|uarch|partition|ser
                                 artifacts are absent); adds accuracy to the
                                 default objectives; mutually exclusive with
                                 --uarch and --partition
+    --events                    extend the lattice with the event-workload
+                                dimensions (bin window, adaptive-controller
+                                aggressiveness) and evaluate points on a
+                                synthetic DVS-style event stream; FC nets
+                                only; mutually exclusive with --uarch,
+                                --partition and --model
     --artifacts <dir>           artifacts root for --model (default artifacts)
     --csv <path>                dump the frontier as CSV
   uarch options:
@@ -74,6 +81,23 @@ const USAGE: &str = "snn-dse <simulate|resources|dse|explore|uarch|partition|ser
                                 default 2)
     --smoke                     verify the ideal preset against the analytic
                                 engine and print a tiny stall table (CI)
+  events options:
+    --pattern <p>               stream shape: edge|flicker|storm (default storm)
+    --rate <f>                  mean events per stream tick (default 12)
+    --window <n>                binning window in stream ticks per simulator
+                                step (default 8)
+    --aggressiveness <0..3>     adaptive LHR controller level: 0 = off,
+                                1 = conservative, 2 = default, 3 = eager
+    --budget <n>                controller unit budget (default: the units
+                                the configured LHR provisions)
+    --fifo-depth/--ports/--banks  uarch config for the burst stall table
+                                (defaults 2/1/2)
+    --burst-threshold <f>       burst cut in multiples of the mean per-step
+                                event count (default 2.0)
+    --report <path>             write the deterministic report for byte-compare
+    --smoke                     regenerate the report twice, require byte
+                                identity, and check the controller-off run
+                                against the static allocation (CI)
   partition options:
     --chips <n>                 chip instances to split the net across
                                 (default 2; clamped to the layer count)
@@ -137,6 +161,7 @@ fn main() {
         "dse" => cmd_dse(&args),
         "explore" => cmd_explore(&args),
         "uarch" => cmd_uarch(&args),
+        "events" => cmd_events(&args),
         "partition" => cmd_partition(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
@@ -159,12 +184,12 @@ fn main() {
     }
 }
 
-fn net_of(args: &Args) -> snn_dse::snn::NetDef {
-    let mut net = table1_net(args.get_or("net", "net1"));
+fn net_of(args: &Args) -> anyhow::Result<snn_dse::snn::NetDef> {
+    let mut net = by_name(args.get_or("net", "net1"))?;
     if let Some(t) = args.get("t") {
         net.t_steps = t.parse().expect("--t expects an integer");
     }
-    net
+    Ok(net)
 }
 
 fn hw_of(args: &Args, net: &snn_dse::snn::NetDef) -> HwConfig {
@@ -179,7 +204,7 @@ fn artifacts_dir(args: &Args) -> PathBuf {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let net = net_of(args);
+    let net = net_of(args)?;
     let hw = hw_of(args, &net);
     let seed = args.usize_or("seed", 42) as u64;
     let p = dse::evaluate(&net, &hw, &EvalMode::Activity { seed }, &CostModel::default());
@@ -199,7 +224,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_resources(args: &Args) -> anyhow::Result<()> {
-    let net = net_of(args);
+    let net = net_of(args)?;
     let hw = hw_of(args, &net);
     let cfg = ExperimentConfig::new(net.clone(), hw.clone())?;
     let est = estimate(&cfg);
@@ -218,7 +243,7 @@ fn cmd_resources(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_dse(args: &Args) -> anyhow::Result<()> {
-    let net = net_of(args);
+    let net = net_of(args)?;
     let max_lhr = args.usize_or("max-lhr", 32);
     let cap = args.usize_or("cap", 256);
     let threads = args.usize_or("threads", 8);
@@ -250,7 +275,7 @@ fn cmd_dse(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_explore(args: &Args) -> anyhow::Result<()> {
-    let net = net_of(args);
+    let net = net_of(args)?;
     // --model: co-explore (T, population) with the hardware lattice,
     // scoring accuracy from the trained manifest's LUT when it exists
     // and the calibrated stand-in curve otherwise
@@ -306,6 +331,7 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
         uarch: args.flag("uarch"),
         partition: args.flag("partition"),
         model,
+        events: args.flag("events"),
     };
     let costs = CostModel::default();
     let mut explorer = snn_dse::dse::Explorer::resume_or_new(&net, cfg)?;
@@ -365,7 +391,7 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
 fn cmd_uarch(args: &Args) -> anyhow::Result<()> {
     use snn_dse::uarch::{stall_table, UarchConfig, UarchSim};
 
-    let net = net_of(args);
+    let net = net_of(args)?;
     let hw = hw_of(args, &net);
     let seed = args.usize_or("seed", 42) as u64;
     let ucfg = UarchConfig {
@@ -412,13 +438,183 @@ fn cmd_uarch(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Build the `events` subcommand's deterministic report: stream stats,
+/// binning, the adaptive-vs-static controller comparison, and the
+/// per-burst uarch stall table. Pure function of the CLI args — `--smoke`
+/// regenerates it and requires byte identity.
+fn events_report(args: &Args) -> anyhow::Result<String> {
+    use snn_dse::events::{
+        aggressiveness_threshold, burst_stall_rows, event_driven_activity, lhr_budget,
+        parse_pattern, render_burst_table, run_adaptive, synthetic_stream, AdaptiveLhrConfig,
+        EventWorkload, StreamSpec,
+    };
+    use snn_dse::uarch::{record_activity, UarchConfig};
+    use std::fmt::Write as _;
+
+    let net = net_of(args)?;
+    let hw = hw_of(args, &net);
+    let seed = args.usize_or("seed", 42) as u64;
+    let pattern = parse_pattern(args.get_or("pattern", "storm")).map_err(|e| anyhow::anyhow!(e))?;
+    let window = args.usize_or("window", 8).max(1) as u64;
+    let spec = StreamSpec {
+        n_bits: net.input_bits,
+        duration: net.t_steps as u64 * dse::EVENTS_TICKS_PER_STEP,
+        mean_rate: args.f64_or("rate", 12.0),
+        pattern,
+        seed,
+        ..StreamSpec::default()
+    };
+    let stream = synthetic_stream(&spec);
+    let wl = EventWorkload::new(&stream, window);
+    let counts = wl.input_counts();
+    let activity = event_driven_activity(&net, &counts, seed);
+
+    let mut s = String::new();
+    let _ = writeln!(s, "network   : {} ({})", net.name, net.topology_string());
+    let _ = writeln!(s, "LHR       : {}", hw.label());
+    let _ = writeln!(
+        s,
+        "stream    : {} pattern, {} ticks x {} bits, {} events ({:.2}/tick)",
+        pattern.label(),
+        stream.duration,
+        stream.n_bits,
+        commas(stream.n_events() as u64),
+        stream.mean_rate()
+    );
+    let _ = writeln!(
+        s,
+        "binning   : window {} ticks -> {} steps ({:.1} events/step mean)",
+        window,
+        counts.len(),
+        if counts.is_empty() { 0.0 } else { stream.n_events() as f64 / counts.len() as f64 }
+    );
+
+    let all_fc = net.layers.iter().all(|l| matches!(l, snn_dse::snn::Layer::Fc { .. }));
+    if all_fc {
+        let aggr = args.usize_or("aggressiveness", 2);
+        let budget = args.usize_or("budget", lhr_budget(&net, &hw.lhr));
+        let acfg = AdaptiveLhrConfig {
+            threshold: aggressiveness_threshold(aggr),
+            ..AdaptiveLhrConfig::new(budget)
+        };
+        let r = run_adaptive(&net, &activity, &acfg, &CostModel::default())?;
+        let _ = writeln!(
+            s,
+            "adaptive  : budget {} units, window {} steps, aggressiveness {} ({})",
+            r.budget,
+            acfg.window,
+            aggr,
+            match acfg.threshold {
+                None => "controller off".to_string(),
+                Some(t) => format!("threshold {t:.2}"),
+            }
+        );
+        let _ = writeln!(
+            s,
+            "  static  : {} cycles (global mean-rate allocation)",
+            commas(r.static_cycles)
+        );
+        let _ = writeln!(
+            s,
+            "  adaptive: {} cycles (x{:.3} vs static; {} reallocs, {} reconfig cycles charged)",
+            commas(r.adaptive_cycles),
+            r.speedup(),
+            r.realloc_events,
+            commas(r.reconfig_charged)
+        );
+    } else {
+        let kind = net
+            .layers
+            .iter()
+            .find(|l| !matches!(l, snn_dse::snn::Layer::Fc { .. }))
+            .map(|l| l.kind_str())
+            .unwrap_or("?");
+        let _ = writeln!(
+            s,
+            "adaptive  : skipped — the runtime LHR controller is FC-only and {} has a {} layer",
+            net.name, kind
+        );
+    }
+
+    let ucfg = UarchConfig {
+        fifo_depth: args.usize_or("fifo-depth", 2),
+        mem_ports: args.usize_or("ports", 1),
+        banks: args.usize_or("banks", 2),
+    };
+    let factor = args.f64_or("burst-threshold", 2.0);
+    let cfg = ExperimentConfig::new(net.clone(), hw.clone())?;
+    let mut sim = NetworkSim::cost_only(&cfg, CostModel::default());
+    let traces = record_activity(&mut sim, &activity);
+    let rows = burst_stall_rows(&traces, &counts, &ucfg, factor);
+    let _ = writeln!(
+        s,
+        "bursts    : {} segment(s) above {:.1}x the mean step rate under uarch {}",
+        rows.len(),
+        factor,
+        ucfg.label()
+    );
+    s.push_str(&render_burst_table(&rows));
+    Ok(s)
+}
+
+fn cmd_events(args: &Args) -> anyhow::Result<()> {
+    let report = events_report(args)?;
+    print!("{report}");
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, &report)?;
+        println!("wrote {path}");
+    }
+    if args.flag("smoke") {
+        // the report must be a pure function of the args: regenerate the
+        // whole pipeline (stream, binning, controller, burst replay) and
+        // require byte identity
+        let again = events_report(args)?;
+        anyhow::ensure!(
+            report == again,
+            "event report is not deterministic across regenerations"
+        );
+        // golden invariant: with the controller off, the adaptive run is
+        // exactly the static allocation
+        let net = net_of(args)?;
+        if net.layers.iter().all(|l| matches!(l, snn_dse::snn::Layer::Fc { .. })) {
+            use snn_dse::events::{
+                event_driven_activity, lhr_budget, run_adaptive, synthetic_stream,
+                AdaptiveLhrConfig, EventWorkload, StreamSpec,
+            };
+            let hw = hw_of(args, &net);
+            let seed = args.usize_or("seed", 42) as u64;
+            let stream = synthetic_stream(&StreamSpec {
+                n_bits: net.input_bits,
+                duration: net.t_steps as u64 * dse::EVENTS_TICKS_PER_STEP,
+                seed,
+                ..StreamSpec::default()
+            });
+            let wl = EventWorkload::new(&stream, 8);
+            let activity = event_driven_activity(&net, &wl.input_counts(), seed);
+            let off = AdaptiveLhrConfig {
+                threshold: None,
+                ..AdaptiveLhrConfig::new(lhr_budget(&net, &hw.lhr))
+            };
+            let r = run_adaptive(&net, &activity, &off, &CostModel::default())?;
+            anyhow::ensure!(
+                r.adaptive_cycles == r.static_cycles,
+                "controller-off run {} cycles != static allocation {} cycles",
+                r.adaptive_cycles,
+                r.static_cycles
+            );
+        }
+        println!("SMOKE OK (event report deterministic, {} bytes)", report.len());
+    }
+    Ok(())
+}
+
 fn cmd_partition(args: &Args) -> anyhow::Result<()> {
     use snn_dse::data::ActivityModel;
     use snn_dse::partition::{partition, ChipBudget, LinkConfig, PartitionOptions};
     use snn_dse::sim::PartitionedNetworkSim;
     use snn_dse::util::rng::Rng;
 
-    let net = net_of(args);
+    let net = net_of(args)?;
     let hw = hw_of(args, &net);
     let seed = args.usize_or("seed", 42) as u64;
     let budget_of = |key: &str| -> Option<f64> {
@@ -580,7 +776,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     use snn_dse::sim::BatchKernel;
 
-    let net = net_of(args);
+    let net = net_of(args)?;
     let smoke = args.flag("smoke");
     let slo_us = args.get("slo-us").map(|v| {
         v.parse::<f64>()
@@ -829,7 +1025,7 @@ fn cmd_table1(args: &Args) -> anyhow::Result<()> {
     let seed = args.usize_or("seed", 42) as u64;
     let art_root = artifacts_dir(args);
     for name in nets {
-        let net = table1_net(&name);
+        let net = by_name(&name)?;
         let configs: Vec<HwConfig> = dse::table1_lhr_sets(&name)
             .into_iter()
             .map(HwConfig::with_lhr)
@@ -980,7 +1176,7 @@ fn cmd_firing(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     // Architecture Generation Phase: emit the structural netlist/RTL stub.
-    let net = net_of(args);
+    let net = net_of(args)?;
     let hw = hw_of(args, &net);
     let cfg = ExperimentConfig::new(net.clone(), hw.clone())?;
     let nl = snn_dse::arch::generate(&cfg);
@@ -999,7 +1195,7 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_auto(args: &Args) -> anyhow::Result<()> {
     // Constraint-driven automated DSE (Evaluation Phase loop).
-    let net = net_of(args);
+    let net = net_of(args)?;
     let constraints = snn_dse::dse::Constraints {
         max_lut: args.get("max-lut").map(|v| v.parse().expect("--max-lut")),
         max_cycles: args.get("max-cycles").map(|v| v.parse().expect("--max-cycles")),
@@ -1021,7 +1217,7 @@ fn cmd_auto(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_dynamic(args: &Args) -> anyhow::Result<()> {
     // Future-work ablation: run-time sparsity-aware neuron allocation.
-    let net = net_of(args);
+    let net = net_of(args)?;
     let budget = args.usize_or("budget", 64);
     let seed = args.usize_or("seed", 42) as u64;
     let model = snn_dse::data::ActivityModel::for_net(&net);

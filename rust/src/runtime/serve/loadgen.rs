@@ -331,4 +331,37 @@ mod tests {
         let err = parse_scenario("tsunami").unwrap_err();
         assert!(err.contains("tsunami"), "{err}");
     }
+
+    #[test]
+    fn preset_table_matches_the_documented_constants() {
+        // The named presets are part of the CLI/bench contract: changing a
+        // constant silently would invalidate committed bench baselines, so
+        // pin every parameter to its documented value.
+        let diurnal = Scenario::Diurnal { period_cycles: 2_000_000, amplitude: 0.8 };
+        let burst = Scenario::Burst { burst_factor: 8.0, p_enter: 0.05, p_exit: 0.25 };
+        let pareto = SizeDist::BoundedPareto { alpha: 1.3, max_scale: 8.0 };
+        let expected = [
+            ("steady", Scenario::Steady, SizeDist::Fixed),
+            ("diurnal", diurnal, SizeDist::Fixed),
+            ("burst", burst, SizeDist::Fixed),
+            ("heavy", Scenario::Steady, pareto),
+            ("storm", burst, pareto),
+        ];
+        for (name, scenario, size) in expected {
+            let (s, d) = parse_scenario(name).unwrap();
+            assert_eq!(s, scenario, "{name}: arrival shape");
+            assert_eq!(d, size, "{name}: size distribution");
+        }
+    }
+
+    #[test]
+    fn preset_errors_name_the_rejected_preset_and_the_valid_set() {
+        for bad in ["", "Steady", "burst2", "paretto"] {
+            let err = parse_scenario(bad).unwrap_err();
+            assert!(err.contains(&format!("'{bad}'")), "{err}");
+            for valid in ["steady", "diurnal", "burst", "heavy", "storm"] {
+                assert!(err.contains(valid), "error must list '{valid}': {err}");
+            }
+        }
+    }
 }

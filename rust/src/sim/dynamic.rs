@@ -67,8 +67,10 @@ impl DynamicAllocator {
 }
 
 /// Per-step cost of one FC layer under an explicit unit count (the
-/// cost-only FC formula with per_unit = ceil(n/units)).
-fn fc_step_cost(
+/// cost-only FC formula with per_unit = ceil(n/units)). Public so the
+/// runtime LHR controller in [`crate::events::adaptive`] prices steps
+/// with exactly the ablation's formula.
+pub fn fc_step_cost(
     n_pre: usize,
     n: usize,
     units: usize,

@@ -38,7 +38,7 @@ pub mod stats;
 
 pub use batch_kernel::{selects_sliced, BatchKernel, SLICED_AUTO_MIN_BATCH};
 pub use costs::CostModel;
-pub use dynamic::{compare_static_dynamic, DynamicAllocator, DynamicResult};
+pub use dynamic::{compare_static_dynamic, fc_step_cost, DynamicAllocator, DynamicResult};
 pub use ecu::{EcuFsm, EcuState};
 pub use engine::{
     advance_finish, ActivityWorkload, BatchDecodeProbe, BatchWorkload, Engine, NullProbe, Probe,

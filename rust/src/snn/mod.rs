@@ -9,7 +9,7 @@ pub mod topology;
 pub use bitmat::BitMat;
 pub use bitvec::BitVec;
 pub use lif::LifState;
-pub use topology::{fc_net, table1_net, Layer, NetDef, TABLE1_NETS};
+pub use topology::{by_name, fc_net, table1_net, Layer, NetDef, TABLE1_NETS};
 
 /// A full spike train: one `BitVec` per time step.
 pub type SpikeTrain = Vec<BitVec>;

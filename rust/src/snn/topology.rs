@@ -157,10 +157,12 @@ pub fn fc_net(
     }
 }
 
-/// The Table-I networks. Population sizes from the "Pop. Cod." column;
-/// net-5 is the paper's full 128x128 DVS topology.
-pub fn table1_net(name: &str) -> NetDef {
-    match name {
+/// The Table-I networks by name, as a fallible lookup: an unknown name
+/// is a descriptive error listing the valid names (CLI and config paths
+/// surface it instead of panicking). Infallible callers that pass only
+/// registry names use [`table1_net`].
+pub fn by_name(name: &str) -> anyhow::Result<NetDef> {
+    Ok(match name {
         "net1" => fc_net("net1", "mnist", &[784, 500, 500, 300], 10, 30, 0.9, 25),
         "net2" => fc_net(
             "net2",
@@ -242,8 +244,17 @@ pub fn table1_net(name: &str) -> NetDef {
             0.9,
             25,
         ),
-        other => panic!("unknown network '{other}' (net1..net5, net600)"),
-    }
+        other => anyhow::bail!(
+            "unknown network '{other}' (valid names: net1, net2, net3, net4, net5, net600)"
+        ),
+    })
+}
+
+/// The Table-I networks. Population sizes from the "Pop. Cod." column;
+/// net-5 is the paper's full 128x128 DVS topology. Panics on unknown
+/// names — use [`by_name`] where the name comes from user input.
+pub fn table1_net(name: &str) -> NetDef {
+    by_name(name).unwrap_or_else(|e| panic!("{e}"))
 }
 
 pub const TABLE1_NETS: [&str; 5] = ["net1", "net2", "net3", "net4", "net5"];
@@ -295,5 +306,15 @@ mod tests {
     #[should_panic(expected = "unknown network")]
     fn unknown_net_panics() {
         table1_net("net9");
+    }
+
+    #[test]
+    fn by_name_error_lists_valid_names() {
+        let err = by_name("net9").unwrap_err().to_string();
+        assert!(err.contains("net9"), "error must name the input: {err}");
+        for valid in ["net1", "net2", "net3", "net4", "net5", "net600"] {
+            assert!(err.contains(valid), "error must list {valid}: {err}");
+        }
+        assert_eq!(by_name("net1").unwrap().name, "net1");
     }
 }

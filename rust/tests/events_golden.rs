@@ -1,0 +1,155 @@
+//! Golden tests for the event-driven workload subsystem.
+//!
+//! Three contracts are pinned here, end-to-end through the public API:
+//!
+//! 1. **Rate-coded equivalence** — a spike train lifted into an
+//!    [`EventStream`] and binned back at the same window drives the
+//!    unified engine *byte-identically* to `SpikeTrainWorkload`: same
+//!    cycles, same output counts, same per-layer per-step traces.
+//! 2. **Stationary convergence** — under a stationary stream the
+//!    adaptive LHR controller's boot allocation equals the static
+//!    mean-rate allocation, so it never reallocates and its cycle count
+//!    equals the static baseline exactly, whatever `reconfig_cycles` is.
+//! 3. **Charge identity** — on genuinely bursty streams every
+//!    reallocation charges `reconfig_cycles` to all layers:
+//!    `reconfig_charged == realloc_events * n_layers * reconfig_cycles`.
+
+use snn_dse::config::{ExperimentConfig, HwConfig};
+use snn_dse::events::{
+    bin_events, event_driven_activity, run_adaptive, synthetic_stream, AdaptiveLhrConfig,
+    EventStream, EventWorkload, StreamSpec,
+};
+use snn_dse::sim::{random_spike_train, CostModel, NetworkSim, SpikeTrainWorkload, TraceProbe};
+use snn_dse::snn::{table1_net, NetDef};
+use snn_dse::util::rng::Rng;
+
+/// Table-I nets with a workload-tractable train length for the conv
+/// topology (the equivalence property is per-step, so a short net5 train
+/// is just as strict as the full T=124).
+fn golden_nets() -> Vec<NetDef> {
+    let mut nets: Vec<NetDef> = ["net1", "net2", "net3", "net4"]
+        .iter()
+        .map(|n| table1_net(n))
+        .collect();
+    let mut net5 = table1_net("net5");
+    net5.t_steps = 6;
+    nets.push(net5);
+    nets
+}
+
+#[test]
+fn event_workload_replays_rate_coded_trains_byte_identically() {
+    for net in golden_nets() {
+        let n = net.parametric_layers().len();
+        let cfg = ExperimentConfig::new(net.clone(), HwConfig::fully_parallel(n)).unwrap();
+        let mut rng = Rng::new(0xE7E7);
+        let rate = match net.dataset.as_str() {
+            "dvs" => 135.0 / net.input_bits as f64,
+            _ => 0.12,
+        };
+        let train = random_spike_train(net.input_bits, net.t_steps, rate, &mut rng);
+        for window in [1u64, 3, 8] {
+            let stream = EventStream::from_spike_train(&train, window);
+            assert_eq!(
+                bin_events(&stream, window),
+                train,
+                "{} window {window}: bin round-trip",
+                net.name
+            );
+
+            let mut ref_sim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+            let mut ref_wl = SpikeTrainWorkload::new(&train);
+            let mut ref_probe = TraceProbe::new(ref_sim.layers.len(), train.len());
+            let ref_r = ref_sim.run_engine(&mut ref_wl, &mut ref_probe);
+
+            let mut sim = NetworkSim::with_random_weights(&cfg, 7, CostModel::default());
+            let mut wl = EventWorkload::new(&stream, window);
+            let mut probe = TraceProbe::new(sim.layers.len(), train.len());
+            let r = sim.run_engine(&mut wl, &mut probe);
+
+            assert_eq!(r.total_cycles, ref_r.total_cycles, "{} total_cycles", net.name);
+            assert_eq!(r.serial_cycles, ref_r.serial_cycles, "{} serial_cycles", net.name);
+            assert_eq!(r.output_counts, ref_r.output_counts, "{} output_counts", net.name);
+            assert_eq!(probe.traces, ref_probe.traces, "{} layer traces", net.name);
+        }
+    }
+}
+
+#[test]
+fn stationary_stream_converges_to_the_static_allocation() {
+    // Constant per-step counts: every sliding-window mean equals the
+    // global mean, so the boot allocation *is* the static allocation and
+    // the controller never fires — exact equality at any reconfig cost.
+    let net = table1_net("net1");
+    let activity: Vec<Vec<usize>> =
+        [120usize, 90, 70, 25].iter().map(|&c| vec![c; 48]).collect();
+    for reconfig_cycles in [0u64, 8, 64] {
+        let cfg = AdaptiveLhrConfig {
+            reconfig_cycles,
+            ..AdaptiveLhrConfig::new(96)
+        };
+        let r = run_adaptive(&net, &activity, &cfg, &CostModel::default()).unwrap();
+        assert_eq!(
+            r.adaptive_cycles, r.static_cycles,
+            "reconfig_cycles {reconfig_cycles}"
+        );
+        assert_eq!(r.realloc_events, 0);
+        assert_eq!(r.reconfig_charged, 0);
+    }
+}
+
+#[test]
+fn controller_off_replays_static_on_a_real_burst_stream() {
+    // Threshold None disables the controller entirely; even on a bursty
+    // synthetic stream the run must be the static baseline, bit-for-bit.
+    let net = table1_net("net1");
+    let spec = StreamSpec {
+        n_bits: net.input_bits,
+        duration: net.t_steps as u64 * 8,
+        mean_rate: 12.0,
+        seed: 0xE11E,
+        ..StreamSpec::default()
+    };
+    let stream = synthetic_stream(&spec);
+    let wl = EventWorkload::new(&stream, 8);
+    let activity = event_driven_activity(&net, &wl.input_counts(), spec.seed);
+
+    let off = AdaptiveLhrConfig {
+        threshold: None,
+        ..AdaptiveLhrConfig::new(64)
+    };
+    let r = run_adaptive(&net, &activity, &off, &CostModel::default()).unwrap();
+    assert_eq!(r.adaptive_cycles, r.static_cycles);
+    assert_eq!(r.realloc_events, 0);
+    assert_eq!(r.reconfig_charged, 0);
+
+    // and the fully-aggressive controller obeys the charge identity
+    let aggressive = AdaptiveLhrConfig {
+        threshold: Some(0.0),
+        ..AdaptiveLhrConfig::new(64)
+    };
+    let r2 = run_adaptive(&net, &activity, &aggressive, &CostModel::default()).unwrap();
+    assert_eq!(
+        r2.reconfig_charged,
+        r2.realloc_events * net.layers.len() as u64 * aggressive.reconfig_cycles,
+        "charge identity"
+    );
+}
+
+#[test]
+fn synthetic_streams_are_prefix_invariant() {
+    // The determinism contract: a shorter stream is a strict prefix of a
+    // longer one with the same seed (chain draws are per-tick, content
+    // draws are per-(seed, tick) forks — neither depends on duration).
+    let short = synthetic_stream(&StreamSpec {
+        duration: 60,
+        ..StreamSpec::default()
+    });
+    let long = synthetic_stream(&StreamSpec {
+        duration: 200,
+        ..StreamSpec::default()
+    });
+    let cut: Vec<_> = long.events.iter().filter(|e| e.t < 60).cloned().collect();
+    assert_eq!(short.events, cut);
+    assert!(short.n_events() > 0, "default spec must produce events");
+}
